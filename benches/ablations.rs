@@ -1,0 +1,139 @@
+//! Ablation studies over OPIMA's design choices (DESIGN.md §7).
+//!
+//! Each ablation removes or varies one architectural mechanism and shows
+//! its contribution on ResNet18/MobileNet (4-bit):
+//!   A1 — in-waveguide optical accumulation (the PIM "accumulate")
+//!   A2 — MDM degree (cross-bank parallelism)
+//!   A3 — subarray grouping (vs. single-group COMET-style access)
+//!   A4 — MLC write latency (the writeback wall)
+//!   A5 — writeback lane budget
+//!   A6 — the 1×1 serialization hazard (what if it didn't exist?)
+
+use opima::analyzer::analyze_model;
+use opima::cnn::{build_model, Model};
+use opima::util::bench::{black_box, measure, table_header, table_row};
+use opima::OpimaConfig;
+
+fn total_ms(cfg: &OpimaConfig, m: Model) -> f64 {
+    analyze_model(cfg, &build_model(m).unwrap(), 4)
+        .unwrap()
+        .total_ms()
+}
+
+fn main() {
+    let base = OpimaConfig::paper();
+
+    // A1: optical accumulation depth.
+    table_header(
+        "A1: in-waveguide optical accumulation (products per readout)",
+        &["optical_accum", "resnet18 (ms)", "Δ vs paper"],
+    );
+    let paper_rn = total_ms(&base, Model::ResNet18);
+    for accum in [1usize, 2, 4] {
+        let mut cfg = base.clone();
+        cfg.pim.optical_accum = accum;
+        let t = total_ms(&cfg, Model::ResNet18);
+        table_row(&[
+            format!("{accum}"),
+            format!("{t:.3}"),
+            format!("{:+.1}%", 100.0 * (t - paper_rn) / paper_rn),
+        ]);
+    }
+
+    // A2: MDM degree (banks bounded by modes).
+    table_header(
+        "A2: MDM degree → concurrent banks",
+        &["modes/banks", "resnet18 (ms)", "peak TMAC/s"],
+    );
+    for banks in [1usize, 2, 4] {
+        let mut cfg = base.clone();
+        cfg.geometry.banks = banks;
+        cfg.geometry.mdm_degree = banks.max(1);
+        let t = total_ms(&cfg, Model::ResNet18);
+        let p = opima::pim::group::evaluate(&cfg, cfg.geometry.subarray_groups).unwrap();
+        table_row(&[
+            format!("{banks}"),
+            format!("{t:.3}"),
+            format!("{:.2}", p.mac_throughput / 1e12),
+        ]);
+    }
+
+    // A3: single group (COMET-style: no concurrent PIM/memory split).
+    table_header(
+        "A3: subarray grouping",
+        &["groups", "resnet18 (ms)", "rows free for memory"],
+    );
+    for groups in [1usize, 16] {
+        let mut cfg = base.clone();
+        cfg.geometry.subarray_groups = groups;
+        let t = total_ms(&cfg, Model::ResNet18);
+        table_row(&[
+            format!("{groups}"),
+            format!("{t:.3}"),
+            format!("{}", cfg.geometry.subarray_rows - groups),
+        ]);
+    }
+
+    // A4: MLC write latency sweep — the writeback wall of Fig. 9.
+    table_header(
+        "A4: OPCM MLC write latency (the writeback wall)",
+        &["write_ns", "resnet18 total (ms)", "writeback share"],
+    );
+    for wns in [100.0, 500.0, 1000.0, 2000.0] {
+        let mut cfg = base.clone();
+        cfg.timing.write_ns = wns;
+        let a = analyze_model(&cfg, &build_model(Model::ResNet18).unwrap(), 4).unwrap();
+        table_row(&[
+            format!("{wns}"),
+            format!("{:.3}", a.total_ms()),
+            format!("{:.0}%", 100.0 * a.writeback_ms / a.total_ms()),
+        ]);
+    }
+
+    // A5: writeback lane budget.
+    table_header(
+        "A5: concurrent MLC write lanes",
+        &["lanes", "vgg16 total (ms)"],
+    );
+    for lanes in [128usize, 512, 2048] {
+        let mut cfg = base.clone();
+        cfg.pim.writeback_lanes = lanes;
+        table_row(&[format!("{lanes}"), format!("{:.1}", total_ms(&cfg, Model::Vgg16))]);
+    }
+
+    // A6: hypothetical fix of the 1×1 hazard (MobileNet's pain).
+    table_header(
+        "A6: 1×1-kernel serialization (guarded lanes per bank)",
+        &["lanes/bank", "mobilenet proc (ms)", "mobilenet total (ms)"],
+    );
+    for lanes in [2usize, 8, 64, 256] {
+        let mut cfg = base.clone();
+        cfg.pim.one_by_one_lanes_per_bank = lanes;
+        let a = analyze_model(&cfg, &build_model(Model::MobileNet).unwrap(), 4).unwrap();
+        table_row(&[
+            format!("{lanes}"),
+            format!("{:.3}", a.processing_ms),
+            format!("{:.3}", a.total_ms()),
+        ]);
+    }
+
+    // Sanity: the paper's mechanisms must each matter.
+    {
+        let mut no_accum = base.clone();
+        no_accum.pim.optical_accum = 1;
+        assert!(total_ms(&no_accum, Model::ResNet18) >= paper_rn);
+        let mut one_bank = base.clone();
+        one_bank.geometry.banks = 1;
+        one_bank.geometry.mdm_degree = 1;
+        assert!(total_ms(&one_bank, Model::ResNet18) > paper_rn);
+        let mut fixed_1x1 = base.clone();
+        fixed_1x1.pim.one_by_one_lanes_per_bank = 256;
+        let mob_paper = total_ms(&base, Model::MobileNet);
+        assert!(total_ms(&fixed_1x1, Model::MobileNet) < mob_paper / 1.5);
+    }
+    println!("\nablation sanity checks passed");
+
+    measure("ablations/full_suite_one_point", 2, 20, || {
+        black_box(total_ms(&base, Model::ResNet18));
+    });
+}

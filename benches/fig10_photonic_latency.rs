@@ -1,0 +1,60 @@
+//! Paper Fig. 10: inference latency across the photonic architectures
+//! OPIMA (O), CrossLight (C) and PhPIM (P) for the four CNN workloads.
+//!
+//! Paper shapes: the OPCM architectures (OPIMA, PhPIM) beat CrossLight;
+//! OPIMA and PhPIM are comparable with OPIMA lower on average (the
+//! abstract's ~3× throughput advantage).
+
+use opima::analyzer::metrics::geomean_ratio;
+use opima::baselines::{crosslight::CrossLight, evaluate_opima, phpim::PhPim};
+use opima::cnn::{build_model, Model, ALL_MODELS};
+use opima::util::bench::{black_box, measure, table_header, table_row};
+use opima::OpimaConfig;
+
+fn main() {
+    let cfg = OpimaConfig::paper();
+    let models: Vec<Model> = ALL_MODELS
+        .iter()
+        .copied()
+        .filter(|m| *m != Model::Vgg16)
+        .collect();
+    table_header(
+        "Fig. 10: latency (ms) across photonic architectures",
+        &["model", "OPIMA (O)", "CrossLight (C)", "PhPIM (P)"],
+    );
+    let mut opima_l = Vec::new();
+    let mut cl_l = Vec::new();
+    let mut ph_l = Vec::new();
+    for m in &models {
+        let net = build_model(*m).unwrap();
+        let o = evaluate_opima(&cfg, &net, 4).unwrap();
+        let c = CrossLight::default().evaluate(&net, 4);
+        let p = PhPim::new(&cfg).evaluate(&net, 4);
+        table_row(&[
+            m.name().to_string(),
+            format!("{:.3}", o.latency_ms),
+            format!("{:.3}", c.latency_ms),
+            format!("{:.3}", p.latency_ms),
+        ]);
+        opima_l.push(o.latency_ms);
+        cl_l.push(c.latency_ms);
+        ph_l.push(p.latency_ms);
+    }
+    let vs_cl = geomean_ratio(&cl_l, &opima_l);
+    let vs_ph = geomean_ratio(&ph_l, &opima_l);
+    println!("\ngeomean latency vs OPIMA: CrossLight {vs_cl:.2}×, PhPIM {vs_ph:.2}×");
+    println!("(paper: OPCM architectures beat CrossLight; OPIMA ~3× PhPIM throughput)");
+    assert!(vs_cl > 1.0, "CrossLight must be slower than OPIMA on average");
+    assert!(vs_ph > 1.0, "OPIMA must have lower average latency than PhPIM");
+    assert!(
+        vs_cl > vs_ph,
+        "CrossLight is the slowest photonic platform in Fig. 10"
+    );
+
+    let net = build_model(Model::ResNet18).unwrap();
+    measure("fig10/three_platform_eval", 3, 50, || {
+        black_box(evaluate_opima(&cfg, &net, 4).unwrap());
+        black_box(CrossLight::default().evaluate(&net, 4));
+        black_box(PhPim::new(&cfg).evaluate(&net, 4));
+    });
+}

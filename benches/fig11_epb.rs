@@ -1,0 +1,62 @@
+//! Paper Fig. 11: energy-per-bit comparison across the seven platforms.
+//!
+//! Paper geomeans (OPIMA advantage): NP100 78.3×, E7742 157.5×, ORIN
+//! 1.7×, PRIME 4.4×, CrossLight 2.2×, PhPIM 137×. Accounting
+//! conventions and the ORIN deviation are documented in EXPERIMENTS.md.
+
+use opima::analyzer::metrics::{geomean_ratio, workload_bits};
+use opima::baselines::evaluate_all;
+use opima::cnn::{build_model, Model, ALL_MODELS};
+use opima::util::bench::{black_box, measure, table_header, table_row};
+use opima::OpimaConfig;
+
+fn main() {
+    let cfg = OpimaConfig::paper();
+    let models: Vec<Model> = ALL_MODELS
+        .iter()
+        .copied()
+        .filter(|m| *m != Model::Vgg16)
+        .collect();
+
+    table_header(
+        "Fig. 11: EPB (pJ/bit) per platform per model (4-bit workloads)",
+        &["model", "OPIMA", "NP100", "E7742", "ORIN", "PRIME", "CrossLight", "PhPIM"],
+    );
+    let mut ratios = vec![Vec::new(); 6];
+    for m in &models {
+        let net = build_model(*m).unwrap();
+        let bits = workload_bits(&net, 4);
+        let rs = evaluate_all(&cfg, &net, 4).unwrap();
+        table_row(
+            &std::iter::once(m.name().to_string())
+                .chain(rs.iter().map(|r| format!("{:.3}", r.epb_pj(bits))))
+                .collect::<Vec<_>>(),
+        );
+        for (i, r) in rs.iter().enumerate().skip(1) {
+            ratios[i - 1].push(r.epb_pj(bits) / rs[0].epb_pj(bits));
+        }
+    }
+
+    let paper = [78.3, 157.5, 1.7, 4.4, 2.2, 137.0];
+    let names = ["NP100", "E7742", "ORIN", "PRIME", "CrossLight", "PhPIM"];
+    println!("\ngeomean OPIMA advantage (ours vs paper):");
+    let ones = vec![1.0; models.len()];
+    for i in 0..6 {
+        let ours = geomean_ratio(&ratios[i], &ones);
+        println!("  {:<11} {:8.1}×   (paper {:.1}×)", names[i], ours, paper[i]);
+        // Ordering: OPIMA must win everywhere (ratio > 1).
+        assert!(ours > 1.0, "{} must have worse EPB than OPIMA", names[i]);
+    }
+    // PIM-class platforms must land near the paper's ratios.
+    let prime = geomean_ratio(&ratios[3], &ones);
+    let cl = geomean_ratio(&ratios[4], &ones);
+    let ph = geomean_ratio(&ratios[5], &ones);
+    assert!((2.0..9.0).contains(&prime), "PRIME ratio {prime}");
+    assert!((1.1..5.0).contains(&cl), "CrossLight ratio {cl}");
+    assert!(ph > 50.0, "PhPIM must be in the 100×-class: {ph}");
+
+    let net = build_model(Model::ResNet18).unwrap();
+    measure("fig11/evaluate_all_platforms", 3, 50, || {
+        black_box(evaluate_all(&cfg, &net, 4).unwrap());
+    });
+}

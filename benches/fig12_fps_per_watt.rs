@@ -1,0 +1,62 @@
+//! Paper Fig. 12: throughput efficiency (FPS/W) across the seven
+//! platforms. Paper geomeans (OPIMA advantage): NP100 6.7×, E7742
+//! 15.2×, ORIN 8.2×, PRIME 5.7×, CrossLight 1.8×, PhPIM 11.9×.
+
+use opima::analyzer::metrics::geomean_ratio;
+use opima::baselines::evaluate_all;
+use opima::cnn::{build_model, Model, ALL_MODELS};
+use opima::util::bench::{black_box, measure, table_header, table_row};
+use opima::OpimaConfig;
+
+fn main() {
+    let cfg = OpimaConfig::paper();
+    let models: Vec<Model> = ALL_MODELS
+        .iter()
+        .copied()
+        .filter(|m| *m != Model::Vgg16)
+        .collect();
+
+    table_header(
+        "Fig. 12: FPS/W per platform per model (4-bit workloads)",
+        &["model", "OPIMA", "NP100", "E7742", "ORIN", "PRIME", "CrossLight", "PhPIM"],
+    );
+    let mut ratios = vec![Vec::new(); 6];
+    for m in &models {
+        let net = build_model(*m).unwrap();
+        let rs = evaluate_all(&cfg, &net, 4).unwrap();
+        table_row(
+            &std::iter::once(m.name().to_string())
+                .chain(rs.iter().map(|r| format!("{:.2}", r.fps_per_w())))
+                .collect::<Vec<_>>(),
+        );
+        for (i, r) in rs.iter().enumerate().skip(1) {
+            ratios[i - 1].push(rs[0].fps_per_w() / r.fps_per_w());
+        }
+    }
+
+    let paper = [6.7, 15.2, 8.2, 5.7, 1.8, 11.9];
+    let names = ["NP100", "E7742", "ORIN", "PRIME", "CrossLight", "PhPIM"];
+    println!("\ngeomean OPIMA advantage (ours vs paper):");
+    let ones = vec![1.0; models.len()];
+    for i in 0..6 {
+        let ours = geomean_ratio(&ratios[i], &ones);
+        println!("  {:<11} {:6.2}×   (paper {:.1}×)", names[i], ours, paper[i]);
+        assert!(ours > 1.0, "{} must have worse FPS/W than OPIMA", names[i]);
+        // Factors within ~2.5× of the paper's reported values.
+        assert!(
+            ours / paper[i] < 2.5 && paper[i] / ours < 2.5,
+            "{}: {ours:.2} vs paper {}",
+            names[i],
+            paper[i]
+        );
+    }
+    // Ordering check: E7742 worst, CrossLight closest (as in the paper).
+    let gm: Vec<f64> = (0..6).map(|i| geomean_ratio(&ratios[i], &ones)).collect();
+    assert!(gm[1] > gm[0], "E7742 worse than NP100");
+    assert!(gm[4] < gm[3] && gm[4] < gm[0], "CrossLight closest to OPIMA");
+
+    let net = build_model(Model::MobileNet).unwrap();
+    measure("fig12/evaluate_all_platforms", 3, 50, || {
+        black_box(evaluate_all(&cfg, &net, 4).unwrap());
+    });
+}

@@ -1,0 +1,63 @@
+//! Paper Fig. 2: GST OPCM cell design-space exploration.
+//!
+//! Regenerates the three panels (ΔT_s crystalline, ΔT_s amorphous, ΔT
+//! contrast) over the width × thickness grid and reports the selected
+//! optimum against the paper's (0.48 µm, 20 nm, ΔT ≈ 96%).
+
+use opima::phys::dse::{run, DseSweep};
+use opima::util::bench::{black_box, measure, table_header, table_row};
+
+fn main() {
+    let sweep = DseSweep::default();
+    let r = run(&sweep);
+
+    table_header(
+        "Fig. 2(a,b): ΔT_s (%) at selected widths (rows: thickness nm)",
+        &["t (nm)", "w=0.40 cryst", "w=0.48 cryst", "w=0.56 cryst", "w=0.48 amorph"],
+    );
+    let wi = |w: f64| {
+        r.widths_um
+            .iter()
+            .position(|x| (x - w).abs() < 1e-9)
+            .unwrap()
+    };
+    let (w40, w48, w56) = (wi(0.40), wi(0.48), wi(0.56));
+    for (ti, t) in r.thicknesses_nm.iter().enumerate() {
+        table_row(&[
+            format!("{t:.0}"),
+            format!("{:.1}", 100.0 * r.grid[ti][w40].dts_crystalline),
+            format!("{:.1}", 100.0 * r.grid[ti][w48].dts_crystalline),
+            format!("{:.1}", 100.0 * r.grid[ti][w56].dts_crystalline),
+            format!("{:.1}", 100.0 * r.grid[ti][w48].dts_amorphous),
+        ]);
+    }
+
+    table_header(
+        "Fig. 2(c): ΔT contrast (%) along w=0.48 µm",
+        &["t (nm)", "ΔT (%)", "feasible (ΔT_s<5%)"],
+    );
+    for (ti, t) in r.thicknesses_nm.iter().enumerate() {
+        let p = &r.grid[ti][w48];
+        table_row(&[
+            format!("{t:.0}"),
+            format!("{:.1}", 100.0 * p.contrast),
+            format!(
+                "{}",
+                p.dts_crystalline < 0.05 && p.dts_amorphous < 0.05
+            ),
+        ]);
+    }
+
+    println!(
+        "\noptimum: w={:.2} µm t={:.0} nm ΔT={:.1}%  (paper: 0.48 µm, 20 nm, ~96%)",
+        r.optimum.width_um,
+        r.optimum.thickness_nm,
+        100.0 * r.optimum.contrast
+    );
+    assert!((r.optimum.width_um - 0.48).abs() < 1e-9);
+    assert!((r.optimum.thickness_nm - 20.0).abs() < 1e-9);
+
+    measure("fig2/full_dse_sweep", 3, 30, || {
+        black_box(run(&sweep));
+    });
+}

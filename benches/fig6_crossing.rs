@@ -1,0 +1,41 @@
+//! Paper Fig. 6: inverse-designed waveguide crossing — C-band loss
+//! profile and crosstalk. Paper: <0.001% insertion loss, ≤ −40 dB
+//! crosstalk across the C-band.
+
+use opima::phys::crossing::{c_band_profile, chain_loss_db, CENTER_NM};
+use opima::util::bench::{black_box, measure, table_header, table_row};
+
+fn main() {
+    table_header(
+        "Fig. 6: crossing response over the C-band",
+        &["λ (nm)", "insertion loss (%)", "crosstalk (dB)"],
+    );
+    let profile = c_band_profile(15);
+    for p in &profile {
+        table_row(&[
+            format!("{:.1}", p.wavelength_nm),
+            format!("{:.6}", 100.0 * p.insertion_loss),
+            format!("{:.1}", p.crosstalk_db),
+        ]);
+    }
+    let worst_loss = profile
+        .iter()
+        .map(|p| p.insertion_loss)
+        .fold(0.0f64, f64::max);
+    let worst_xtalk = profile
+        .iter()
+        .map(|p| p.crosstalk_db)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!("\nworst insertion loss: {:.6}% (paper: <0.001%)", 100.0 * worst_loss);
+    println!("worst crosstalk: {worst_xtalk:.1} dB (paper: ≤ -40 dB)");
+    println!(
+        "512-crossing chain loss at band center: {:.4} dB",
+        chain_loss_db(512, CENTER_NM)
+    );
+    assert!(worst_loss < 1e-5);
+    assert!(worst_xtalk <= -40.0);
+
+    measure("fig6/c_band_profile_1024pts", 5, 50, || {
+        black_box(c_band_profile(1024));
+    });
+}

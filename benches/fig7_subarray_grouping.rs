@@ -1,0 +1,46 @@
+//! Paper Fig. 7: subarray-group selection — normalized power, MAC
+//! throughput and rows available for memory vs. group count; the MAC/W
+//! optimum must land on 16 groups.
+
+use opima::pim::group::{select_optimal, sweep};
+use opima::util::bench::{black_box, measure, table_header, table_row};
+use opima::OpimaConfig;
+
+fn main() {
+    let cfg = OpimaConfig::paper();
+    let choices = [1usize, 2, 4, 8, 16, 32, 64];
+    let pts = sweep(&cfg, &choices).unwrap();
+    let max_power = pts.iter().map(|p| p.power_w).fold(0.0f64, f64::max);
+    let max_tp = pts.iter().map(|p| p.mac_throughput).fold(0.0f64, f64::max);
+
+    table_header(
+        "Fig. 7: subarray grouping sweep (normalized, as in the paper)",
+        &[
+            "groups",
+            "norm. power",
+            "norm. MAC throughput",
+            "rows free",
+            "GMAC/s/W",
+        ],
+    );
+    for p in &pts {
+        table_row(&[
+            format!("{}", p.groups),
+            format!("{:.2}", p.power_w / max_power),
+            format!("{:.2}", p.mac_throughput / max_tp),
+            format!("{}", p.rows_available),
+            format!("{:.1}", p.macs_per_watt / 1e9),
+        ]);
+    }
+    let best = select_optimal(&cfg).unwrap();
+    println!(
+        "\nMAC/W optimum: {} groups at {:.1} GMAC/s/W (paper: 16 groups)",
+        best.groups,
+        best.macs_per_watt / 1e9
+    );
+    assert_eq!(best.groups, 16);
+
+    measure("fig7/grouping_sweep", 5, 100, || {
+        black_box(sweep(&cfg, &choices).unwrap());
+    });
+}

@@ -1,0 +1,35 @@
+//! Paper Fig. 8: power breakdown for concurrent PIM + main-memory
+//! operation. Paper: 55.9 W total, dominated by the MDL array and the
+//! electrical-optical interface.
+
+use opima::analyzer::power::power_breakdown;
+use opima::util::bench::{black_box, measure, table_header, table_row};
+use opima::OpimaConfig;
+
+fn main() {
+    let cfg = OpimaConfig::paper();
+    let b = power_breakdown(&cfg);
+    table_header(
+        "Fig. 8: OPIMA power breakdown",
+        &["component", "watts", "share (%)"],
+    );
+    let total = b.total_w();
+    for c in &b.components {
+        table_row(&[
+            c.name.to_string(),
+            format!("{:.2}", c.watts),
+            format!("{:.1}", 100.0 * c.watts / total),
+        ]);
+    }
+    println!("\ntotal: {total:.1} W (paper: 55.9 W)");
+    println!("dominant: {} ({:.1} W)", b.dominant().name, b.dominant().watts);
+    assert!((total - 55.9).abs() / 55.9 < 0.15, "within 15% of paper");
+    assert!(
+        b.dominant().name == "mdl_array" || b.dominant().name == "eo_interface",
+        "paper: MDL array / E-O interface dominate"
+    );
+
+    measure("fig8/power_breakdown", 10, 1000, || {
+        black_box(power_breakdown(&cfg));
+    });
+}

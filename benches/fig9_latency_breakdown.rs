@@ -1,0 +1,54 @@
+//! Paper Fig. 9: OPIMA latency breakdown (processing vs writeback) for
+//! the 4-bit and 8-bit variants of each model.
+//!
+//! Paper shapes checked here:
+//!   - writeback dominates ResNet18 / SqueezeNet / VGG16;
+//!   - MobileNet's processing exceeds its writeback (1×1 serialization);
+//!   - InceptionV2 and MobileNet have higher processing than ResNet18;
+//!   - InceptionV2's total is below ResNet18's;
+//!   - 8-bit variants cost ~4× processing and ~2× writeback.
+
+use opima::analyzer::analyze_model;
+use opima::cnn::{build_model, ALL_MODELS};
+use opima::util::bench::{black_box, measure, table_header, table_row};
+use opima::OpimaConfig;
+
+fn main() {
+    let cfg = OpimaConfig::paper();
+    table_header(
+        "Fig. 9: latency breakdown (ms)",
+        &["model", "processing", "writeback", "total"],
+    );
+    let mut by_name = std::collections::BTreeMap::new();
+    for m in ALL_MODELS {
+        let net = build_model(m).unwrap();
+        for bits in [4u32, 8] {
+            let a = analyze_model(&cfg, &net, bits).unwrap();
+            table_row(&[
+                a.name.clone(),
+                format!("{:.3}", a.processing_ms),
+                format!("{:.3}", a.writeback_ms),
+                format!("{:.3}", a.total_ms()),
+            ]);
+            by_name.insert(a.name.clone(), a);
+        }
+    }
+
+    // Paper-shape assertions.
+    let g = |n: &str| by_name.get(n).unwrap();
+    assert!(g("resnet18_4b").writeback_ms > g("resnet18_4b").processing_ms);
+    assert!(g("squeezenet_4b").writeback_ms > 0.0);
+    assert!(g("vgg16_4b").writeback_ms > g("vgg16_4b").processing_ms);
+    assert!(g("mobilenet_4b").processing_ms > g("mobilenet_4b").writeback_ms);
+    assert!(g("inceptionv2_4b").processing_ms > g("resnet18_4b").processing_ms);
+    assert!(g("mobilenet_4b").processing_ms > g("resnet18_4b").processing_ms);
+    assert!(g("inceptionv2_4b").total_ms() < g("resnet18_4b").total_ms());
+    let ratio = g("resnet18_8b").processing_ms / g("resnet18_4b").processing_ms;
+    assert!((3.0..5.0).contains(&ratio), "8b/4b processing ratio {ratio}");
+    println!("\nall Fig. 9 shape checks passed");
+
+    let net = build_model(opima::cnn::Model::ResNet18).unwrap();
+    measure("fig9/analyze_resnet18_4b", 3, 50, || {
+        black_box(analyze_model(&cfg, &net, 4).unwrap());
+    });
+}

@@ -1,0 +1,96 @@
+//! Hot-path micro/macro benchmarks (§Perf): the components on the
+//! serving and analysis critical paths, plus the end-to-end PJRT
+//! execution of the AOT artifacts.
+
+use std::time::Instant;
+
+use opima::analyzer::analyze_model;
+use opima::cnn::{build_model, Model};
+use opima::coordinator::batcher::DynamicBatcher;
+use opima::coordinator::request::{InferenceRequest, Variant};
+use opima::coordinator::router::Router;
+use opima::mapper::map_network;
+use opima::memory::MemoryController;
+use opima::pim::PimScheduler;
+use opima::runtime::{Executor, Manifest};
+use opima::util::bench::{black_box, measure};
+use opima::util::prng::Rng;
+use opima::OpimaConfig;
+
+fn main() {
+    let cfg = OpimaConfig::paper();
+
+    // --- analyzer path --------------------------------------------------
+    let nets: Vec<_> = [Model::ResNet18, Model::Vgg16]
+        .iter()
+        .map(|&m| build_model(m).unwrap())
+        .collect();
+    for net in &nets {
+        measure(&format!("analyze/{}_4b", net.name), 3, 100, || {
+            black_box(analyze_model(&cfg, net, 4).unwrap());
+        });
+    }
+    measure("mapper/map_resnet18", 3, 200, || {
+        black_box(map_network(&cfg, &nets[0], 4).unwrap());
+    });
+    let mapped = map_network(&cfg, &nets[0], 4).unwrap();
+    let sched = PimScheduler::new(&cfg).unwrap();
+    measure("scheduler/cost_network_resnet18", 3, 200, || {
+        black_box(sched.cost_network(&mapped.works).unwrap());
+    });
+
+    // --- memory simulator hot loop ---------------------------------------
+    let mut mem = MemoryController::new(&cfg).unwrap();
+    let data = vec![0xA5u8; 128];
+    let mut addr = 0u64;
+    measure("memory/write128_read128", 10, 2000, || {
+        addr = (addr + 4096) % (1 << 28);
+        mem.write(addr, &data).unwrap();
+        black_box(mem.read(addr, 128).unwrap());
+    });
+
+    // --- coordinator components ------------------------------------------
+    let mut rng = Rng::new(1);
+    measure("batcher/push_flush_batch8", 10, 2000, || {
+        let mut b = DynamicBatcher::new(8, std::time::Duration::from_millis(2));
+        for id in 0..8u64 {
+            let out = b.push(InferenceRequest {
+                id,
+                image: vec![rng.f64() as f32; 4],
+                variant: Variant::Int4,
+                arrival: Instant::now(),
+            });
+            if id == 7 {
+                assert!(out.is_some());
+                black_box(out);
+            }
+        }
+    });
+    measure("router/dispatch_1k", 5, 500, || {
+        let mut r = Router::new(4);
+        for i in 0..1000 {
+            black_box(r.dispatch(i as f64, 1.5));
+        }
+    });
+
+    // --- PJRT end-to-end ---------------------------------------------------
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let mut ex = Executor::new(Manifest::load(&dir).unwrap()).unwrap();
+        let info = ex.manifest().get("photonic_mac_4b").unwrap().clone();
+        let a: Vec<f32> = (0..info.input_elems(0)).map(|i| (i % 16) as f32).collect();
+        let w: Vec<f32> = (0..info.input_elems(1)).map(|i| (i % 16) as f32).collect();
+        ex.run_f32("photonic_mac_4b", &[&a, &w]).unwrap(); // compile outside timing
+        measure("pjrt/photonic_mac_4b_64x128x64", 5, 200, || {
+            black_box(ex.run_f32("photonic_mac_4b", &[&a, &w]).unwrap());
+        });
+        let cnn = ex.manifest().get("cnn_int4_b8").unwrap().clone();
+        let x = vec![0.5f32; cnn.input_elems(0)];
+        ex.run_f32("cnn_int4_b8", &[&x]).unwrap();
+        measure("pjrt/cnn_int4_b8_batch8", 5, 100, || {
+            black_box(ex.run_f32("cnn_int4_b8", &[&x]).unwrap());
+        });
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+    }
+}

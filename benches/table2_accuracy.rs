@@ -1,0 +1,76 @@
+//! Paper Table II: model zoo parameter counts and the quantization
+//! accuracy shape (fp32 ≥ int8 ≥ int4 with a modest int4 drop).
+//!
+//! Parameter counts come from our model definitions and are compared to
+//! the paper's reported values. The accuracy evidence is the measured
+//! sweep from the Python photonic pipeline (artifacts/table2_accuracy.json,
+//! produced by `make artifacts`: a CNN trained on the synthetic dataset
+//! and evaluated through the 5-bit-ADC photonic path).
+
+use std::path::Path;
+
+use opima::cnn::quant::MeasuredAccuracy;
+use opima::cnn::{build_model, ALL_MODELS};
+use opima::util::bench::{black_box, measure, table_header, table_row};
+
+fn main() {
+    table_header(
+        "Table II: parameter counts (ours vs paper)",
+        &["model", "dataset", "params (ours)", "params (paper)", "delta"],
+    );
+    for m in ALL_MODELS {
+        let net = build_model(m).unwrap();
+        let ours = net.params();
+        let paper = m.paper_params();
+        let delta = 100.0 * (ours as f64 - paper as f64) / paper as f64;
+        table_row(&[
+            m.name().to_string(),
+            m.dataset().to_string(),
+            format!("{ours}"),
+            format!("{paper}"),
+            format!("{delta:+.2}%"),
+        ]);
+        assert!(delta.abs() < 10.0, "{}: {delta:+.2}%", m.name());
+    }
+
+    table_header(
+        "Table II: paper accuracies (%, for reference)",
+        &["model", "fp32", "int8", "int4"],
+    );
+    for m in ALL_MODELS {
+        let (a, b, c) = m.paper_accuracy();
+        table_row(&[
+            m.name().to_string(),
+            format!("{a}"),
+            format!("{b}"),
+            format!("{c}"),
+        ]);
+        assert!(a >= b && b >= c, "paper rows are monotone");
+    }
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/table2_accuracy.json");
+    if path.exists() {
+        let acc = MeasuredAccuracy::load(&path).unwrap();
+        println!(
+            "\nmeasured sweep (small CNN through the photonic pipeline, 5-bit ADC):"
+        );
+        println!(
+            "  fp32 {:.1}%   int8 {:.1}%   int4 {:.1}%   ({} params)",
+            100.0 * acc.fp32,
+            100.0 * acc.int8,
+            100.0 * acc.int4,
+            acc.parameter_count
+        );
+        assert!(acc.is_monotone(), "fp32 ≥ int8 ≥ int4 must hold");
+        assert!(acc.int4 > 0.5, "int4 must stay usable");
+        println!("Table II shape reproduced: fp32 ≥ int8 ≥ int4 with usable int4");
+    } else {
+        println!("\n(measured sweep missing — run `make artifacts`)");
+    }
+
+    measure("table2/build_all_models", 3, 50, || {
+        for m in ALL_MODELS {
+            black_box(build_model(m).unwrap());
+        }
+    });
+}

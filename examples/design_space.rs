@@ -1,0 +1,75 @@
+//! Architecture design-space exploration beyond the paper's defaults.
+//!
+//! Sweeps the main architectural knobs (subarray groups, optical
+//! accumulation depth, cell bit density, clock) and reports throughput /
+//! power / latency trade-offs for ResNet18 — the kind of study a
+//! downstream user runs before committing to a configuration.
+//!
+//! Run: cargo run --release --example design_space
+
+use opima::analyzer::{analyze_model, power_breakdown};
+use opima::cnn::{build_model, Model};
+use opima::pim::group;
+use opima::OpimaConfig;
+
+fn main() -> opima::Result<()> {
+    let net = build_model(Model::ResNet18)?;
+
+    println!("## Subarray groups (Fig. 7 axis) — ResNet18 4-bit\n");
+    println!("| groups | TMAC/s | power (W) | latency (ms) | GMAC/s/W |");
+    println!("|---|---|---|---|---|");
+    for groups in [2, 4, 8, 16, 32] {
+        let mut cfg = OpimaConfig::paper();
+        cfg.geometry.subarray_groups = groups;
+        let p = group::evaluate(&cfg, groups)?;
+        let a = analyze_model(&cfg, &net, 4)?;
+        println!(
+            "| {} | {:.2} | {:.1} | {:.3} | {:.1} |",
+            groups,
+            p.mac_throughput / 1e12,
+            power_breakdown(&cfg).total_w(),
+            a.total_ms(),
+            p.macs_per_watt / 1e9
+        );
+    }
+
+    println!("\n## Optical accumulation depth (in-waveguide products per readout)\n");
+    println!("| accum | lanes | latency (ms) | dynamic mJ |");
+    println!("|---|---|---|---|");
+    for accum in [1, 2, 4] {
+        let mut cfg = OpimaConfig::paper();
+        cfg.pim.optical_accum = accum;
+        let a = analyze_model(&cfg, &net, 4)?;
+        let p = group::evaluate(&cfg, cfg.geometry.subarray_groups)?;
+        println!(
+            "| {} | {} | {:.3} | {:.2} |",
+            accum,
+            p.macs_per_cycle,
+            a.total_ms(),
+            a.dynamic_mj
+        );
+    }
+
+    println!("\n## Cell bit density (TDM steps for 8-bit operands)\n");
+    println!("| bits/cell | 8-bit latency (ms) | 8-bit dynamic mJ |");
+    println!("|---|---|---|");
+    for bpc in [2u32, 4, 8] {
+        let mut cfg = OpimaConfig::paper();
+        cfg.geometry.bits_per_cell = bpc;
+        let a = analyze_model(&cfg, &net, 8)?;
+        println!("| {} | {:.3} | {:.2} |", bpc, a.total_ms(), a.dynamic_mj);
+    }
+
+    println!("\n## Clock rate\n");
+    println!("| GHz | processing (ms) | total (ms) |");
+    println!("|---|---|---|");
+    for ghz in [1.0, 2.5, 5.0, 10.0] {
+        let mut cfg = OpimaConfig::paper();
+        cfg.timing.clock_ghz = ghz;
+        let a = analyze_model(&cfg, &net, 4)?;
+        println!("| {} | {:.4} | {:.3} |", ghz, a.processing_ms, a.total_ms());
+    }
+
+    println!("\ndesign_space OK");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Quickstart: the OPIMA stack in one file.
+//!
+//! 1. Build the paper configuration and inspect the architecture.
+//! 2. Use it as a main memory (write → read round-trip with timing and
+//!    energy from Table I).
+//! 3. Run a CNN through the PIM cost model.
+//! 4. Execute the AOT-compiled photonic MAC kernel on PJRT — the same
+//!    binary path the serving coordinator uses (requires
+//!    `make artifacts` to have been run).
+//!
+//! Run: cargo run --release --example quickstart
+
+use opima::analyzer::{analyze_model, power_breakdown};
+use opima::cnn::{build_model, Model};
+use opima::memory::MemoryController;
+use opima::runtime::{Executor, Manifest};
+use opima::OpimaConfig;
+
+fn main() -> opima::Result<()> {
+    // --- 1. the architecture ------------------------------------------
+    let cfg = OpimaConfig::paper();
+    let g = &cfg.geometry;
+    println!(
+        "OPIMA: {} banks, {}x{} subarrays, {} GiB, {} subarray groups",
+        g.banks,
+        g.subarray_rows,
+        g.subarray_cols,
+        g.capacity_bytes() >> 30,
+        g.subarray_groups
+    );
+    println!(
+        "power envelope: {:.1} W (paper: 55.9 W)\n",
+        power_breakdown(&cfg).total_w()
+    );
+
+    // --- 2. main-memory mode -------------------------------------------
+    let mut mem = MemoryController::new(&cfg)?;
+    let payload: Vec<u8> = (0..256u32).map(|i| (i % 256) as u8).collect();
+    let w = mem.write(0x1000, &payload)?;
+    let r = mem.read(0x1000, payload.len() as u64)?;
+    assert_eq!(r.data.as_deref(), Some(payload.as_slice()));
+    println!("memory mode: 256 B round-trip OK");
+    println!(
+        "  write: {:.1} ns, {:.1} nJ   read: {:.1} ns, {:.2} nJ\n",
+        w.latency_ns,
+        w.energy_pj / 1e3,
+        r.latency_ns,
+        r.energy_pj / 1e3
+    );
+
+    // --- 3. PIM mode: a whole CNN through the cost model ----------------
+    let net = build_model(Model::ResNet18)?;
+    let a = analyze_model(&cfg, &net, 4)?;
+    println!("ResNet18 (4-bit) on OPIMA:");
+    println!(
+        "  processing {:.3} ms + writeback {:.3} ms = {:.3} ms  ({:.0} FPS)",
+        a.processing_ms,
+        a.writeback_ms,
+        a.total_ms(),
+        a.fps()
+    );
+    println!(
+        "  dynamic energy {:.2} mJ over {} MACs\n",
+        a.dynamic_mj, a.macs
+    );
+
+    // --- 4. the functional kernel on PJRT -------------------------------
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(skipping PJRT demo: run `make artifacts` first)");
+        return Ok(());
+    }
+    let mut ex = Executor::new(Manifest::load(&dir)?)?;
+    let info = ex.manifest().get("photonic_mac_4b")?.clone();
+    let (m, k) = (info.input_shapes[0][0], info.input_shapes[0][1]);
+    let n = info.input_shapes[1][1];
+    let a_lv: Vec<f32> = (0..m * k).map(|i| ((i * 3) % 16) as f32).collect();
+    let w_lv: Vec<f32> = (0..k * n).map(|i| ((i * 11) % 16) as f32).collect();
+    let out = ex.run_f32("photonic_mac_4b", &[&a_lv, &w_lv])?;
+    println!(
+        "photonic MAC kernel on {}: {}x{}x{} -> out[0..4] = {:?}",
+        ex.platform(),
+        m,
+        k,
+        n,
+        &out[..4]
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! End-to-end serving driver (deliverable E11, the headline workload):
+//! load the trained small CNN's AOT artifacts, serve a Poisson stream of
+//! classification requests through the coordinator (dynamic batching +
+//! least-loaded routing), verify functional accuracy against the dataset
+//! labels, and report latency/throughput plus the simulated OPIMA
+//! hardware cost. The measured numbers are recorded in EXPERIMENTS.md.
+//!
+//! Run: make artifacts && cargo run --release --example serve_inference
+
+use std::time::Instant;
+
+use opima::coordinator::{InferenceRequest, Server, ServerConfig, Variant};
+use opima::runtime::Manifest;
+use opima::util::prng::Rng;
+
+/// Synthetic dataset generator — mirrors python/compile/data.py so we can
+/// check the served predictions against ground-truth labels.
+/// (Class patterns: 0 horizontal stripes, 1 vertical, 2 diagonal,
+/// 3 checkerboard; period-2/3 phases; additive Gaussian noise.)
+fn make_image(rng: &mut Rng, size: usize) -> (Vec<f32>, usize) {
+    let cls = rng.index(4);
+    let phase = rng.index(6);
+    let noise = 0.45;
+    let mut img = Vec::with_capacity(size * size);
+    for r in 0..size {
+        for c in 0..size {
+            let v = match cls {
+                0 => ((r + phase) / 2) % 2,
+                1 => ((c + phase) / 2) % 2,
+                2 => ((r + c + phase) / 3) % 2,
+                _ => (((r + phase) / 3) + ((c + phase) / 3)) % 2,
+            } as f64;
+            img.push((v + noise * rng.normal()) as f32);
+        }
+    }
+    (img, cls)
+}
+
+fn main() -> opima::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let image_size = manifest.image_size;
+    let n_requests = 512usize;
+    let rate_per_s = 2000.0; // Poisson arrival rate
+
+    for (variant, min_acc) in [
+        (Variant::Fp32, 0.90),
+        (Variant::Int8, 0.80),
+        (Variant::Int4, 0.65),
+    ] {
+        let mut server = Server::new(
+            ServerConfig::default(),
+            Manifest::load(&Manifest::default_dir())?,
+        )?;
+        let mut rng = Rng::new(20240710);
+        let mut labels = Vec::with_capacity(n_requests);
+        let t0 = Instant::now();
+        let mut next_arrival = 0.0f64;
+        for id in 0..n_requests as u64 {
+            let (image, label) = make_image(&mut rng, image_size);
+            labels.push(label);
+            // Poisson process: sleep until the scheduled arrival.
+            next_arrival += rng.exponential(rate_per_s);
+            let target = std::time::Duration::from_secs_f64(next_arrival);
+            if let Some(wait) = target.checked_sub(t0.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            server.submit(InferenceRequest {
+                id,
+                image,
+                variant,
+                arrival: Instant::now(),
+            })?;
+        }
+        server.flush()?;
+
+        // Functional accuracy against ground truth.
+        let mut correct = 0usize;
+        for r in server.responses() {
+            if r.predicted == labels[r.id as usize] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / n_requests as f64;
+        let s = server.stats();
+        println!("\n=== variant {variant:?} ===");
+        println!(
+            "served {} requests, {} batches, accuracy {:.1}% (threshold {:.0}%)",
+            s.served,
+            s.batches,
+            100.0 * acc,
+            100.0 * min_acc
+        );
+        println!(
+            "  wall {:.0} ms  throughput {:.0} req/s  p50 {:.2} ms  p99 {:.2} ms  mean exec {:.3} ms",
+            s.wall_ms, s.throughput_rps, s.p50_total_ms, s.p99_total_ms, s.mean_exec_ms
+        );
+        println!(
+            "  simulated OPIMA hw: makespan {:.2} ms, dynamic energy {:.3} mJ",
+            s.sim_makespan_ms, s.sim_energy_mj
+        );
+        assert!(
+            acc >= min_acc,
+            "accuracy {acc} below threshold {min_acc} for {variant:?}"
+        );
+    }
+    println!("\nserve_inference OK — all variants above accuracy thresholds");
+    Ok(())
+}

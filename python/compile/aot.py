@@ -1,0 +1,143 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts emitted (all lowered with return_tuple=True; the Rust side
+unwraps with to_tuple1):
+  photonic_mac_4b.hlo.txt  — standalone L1 kernel, 4-bit levels, (64,128)x(128,64)
+  photonic_mac_8b.hlo.txt  — standalone L1 kernel, 8-bit levels
+  cnn_fp32_b<batch>.hlo.txt — fp32 CNN forward, params baked as constants
+  cnn_int8_b<batch>.hlo.txt — photonic-path CNN forward (8-bit, ADC on)
+  cnn_int4_b<batch>.hlo.txt — photonic-path CNN forward (4-bit, ADC on)
+  manifest.json            — shapes/dtypes per artifact for the Rust loader
+
+Usage: python -m compile.aot --outdir ../artifacts [--steps 400] [--batch 8]
+Training is cached: params.npz is reused if present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.photonic_mac import PhotonicConfig, photonic_matmul
+from .model import IMAGE_SIZE, forward_fp32, forward_photonic
+from .train import load_params, quantization_sweep, save_params, train
+
+MAC_M, MAC_K, MAC_N = 64, 128, 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    print_large_constants=True is essential: the default printer elides
+    dense constants as ``{...}``, which the consuming parser silently
+    reads back as ZEROS — baked model weights would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def emit(fn, example_args, path: str) -> dict:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+    return {
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest: dict = {"artifacts": {}}
+
+    # --- L1 standalone kernel artifacts -----------------------------------
+    spec_a = jax.ShapeDtypeStruct((MAC_M, MAC_K), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((MAC_K, MAC_N), jnp.float32)
+    for bits in (4, 8):
+        cfg = PhotonicConfig(bits_a=bits, bits_w=bits)
+
+        def mac_fn(a, w, cfg=cfg):
+            return (photonic_matmul(a, w, cfg),)
+
+        name = f"photonic_mac_{bits}b"
+        info = emit(mac_fn, (spec_a, spec_w), os.path.join(args.outdir, f"{name}.hlo.txt"))
+        info["output_shape"] = [MAC_M, MAC_N]
+        info["bits"] = bits
+        manifest["artifacts"][name] = info
+
+    # --- Train (or reuse) the small CNN ------------------------------------
+    params_path = os.path.join(args.outdir, "params.npz")
+    if os.path.exists(params_path):
+        params = load_params(params_path)
+        print(f"reusing {params_path}")
+        test_x = test_y = None
+    else:
+        params, _, (test_x, test_y) = train(steps=args.steps)
+        save_params(params, params_path)
+
+    # Table II sweep (cached alongside params).
+    acc_path = os.path.join(args.outdir, "table2_accuracy.json")
+    if not os.path.exists(acc_path):
+        if test_x is None:
+            from .data import make_dataset
+
+            test_x, test_y = make_dataset(jax.random.PRNGKey(7), 512)
+        results = quantization_sweep(params, test_x, test_y)
+        with open(acc_path, "w") as f:
+            json.dump(results, f, indent=2)
+        print("table2_accuracy:", results)
+
+    # --- L2 CNN artifacts (params baked as constants) ----------------------
+    spec_x = jax.ShapeDtypeStruct((args.batch, IMAGE_SIZE, IMAGE_SIZE, 1), jnp.float32)
+
+    def cnn_fp32(x):
+        return (forward_fp32(params, x),)
+
+    name = f"cnn_fp32_b{args.batch}"
+    info = emit(cnn_fp32, (spec_x,), os.path.join(args.outdir, f"{name}.hlo.txt"))
+    info["output_shape"] = [args.batch, 4]
+    manifest["artifacts"][name] = info
+
+    for bits in (8, 4):
+        cfg = PhotonicConfig(bits_a=bits, bits_w=bits)
+
+        def cnn_q(x, bits=bits, cfg=cfg):
+            return (forward_photonic(params, x, bits=bits, cfg=cfg, use_pallas=True),)
+
+        name = f"cnn_int{bits}_b{args.batch}"
+        info = emit(cnn_q, (spec_x,), os.path.join(args.outdir, f"{name}.hlo.txt"))
+        info["output_shape"] = [args.batch, 4]
+        info["bits"] = bits
+        manifest["artifacts"][name] = info
+
+    manifest["batch"] = args.batch
+    manifest["image_size"] = IMAGE_SIZE
+    manifest["mac_shape"] = [MAC_M, MAC_K, MAC_N]
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("manifest written")
+
+
+if __name__ == "__main__":
+    main()

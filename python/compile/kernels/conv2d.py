@@ -1,0 +1,63 @@
+"""Convolution on the photonic MAC: im2col lowering.
+
+OPIMA maps convolutional layers to MVM with an input-stationary dataflow
+(paper §IV.D): the feature map stays resident in the OPCM subarrays while
+kernel rows are driven through as MDL wavelength vectors. Functionally the
+computation is a matmul between im2col patches and the flattened kernels,
+which is exactly what this module lowers to — the L3 mapper models the
+*physical* dataflow (sharding across subarrays, stride walks, 1x1-kernel
+serialization); this module models the *numerics*.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quant import quantized_matmul
+from .photonic_mac import PhotonicConfig
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1, padding: int = 0):
+    """NHWC image -> (N*OH*OW, KH*KW*C) patch matrix.
+
+    Returns (patches, (n, oh, ow)).
+    """
+    n, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+        h, w = h + 2 * padding, w + 2 * padding
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    # Gather patches: (N, OH, OW, KH, KW, C)
+    rows = []
+    for i in range(kh):
+        cols = []
+        for j in range(kw):
+            cols.append(x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :])
+        rows.append(jnp.stack(cols, axis=3))  # (N, OH, OW, KW, C)
+    patches = jnp.stack(rows, axis=3)  # (N, OH, OW, KH, KW, C)
+    return patches.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
+
+
+def conv2d_fp32(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, padding: int = 0):
+    """Reference fp32 conv. x: NHWC, w: (KH, KW, C, F) -> NHWC."""
+    kh, kw, _, f = w.shape
+    patches, (n, oh, ow) = im2col(x, kh, kw, stride, padding)
+    out = patches @ w.reshape(-1, f)
+    return out.reshape(n, oh, ow, f)
+
+
+def conv2d_photonic(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bits: int,
+    cfg: PhotonicConfig | None = None,
+    stride: int = 1,
+    padding: int = 0,
+    use_pallas: bool = True,
+):
+    """Quantized conv through the photonic MAC pipeline."""
+    kh, kw, _, f = w.shape
+    patches, (n, oh, ow) = im2col(x, kh, kw, stride, padding)
+    out = quantized_matmul(patches, w.reshape(-1, f), bits, cfg, use_pallas=use_pallas)
+    return out.reshape(n, oh, ow, f)

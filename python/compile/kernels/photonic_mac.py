@@ -1,0 +1,228 @@
+"""L1 Pallas kernel: OPIMA's photonic analog MAC pipeline.
+
+This kernel is the functional model of OPIMA's in-memory compute primitive
+(paper §IV.C-D). The physical pipeline it emulates:
+
+  1. CNN parameters are stored as unsigned *levels* in 4-bit/cell OPCM
+     multi-level cells (16 transmission levels per cell, paper Fig. 2).
+  2. Wider operands (8-bit, ...) are decomposed into 4-bit nibbles and
+     processed by time-division multiplexing (TDM, challenge (4) in §IV.C),
+     recombined with shift-and-add in the aggregation unit.
+  3. Each wavelength carries one activation x weight product; signals of the
+     same wavelength from subarrays of the same *subarray group* interfere in
+     the shared readout waveguide, summing `group_size` products optically
+     (the in-waveguide accumulation of §IV.D).
+  4. A photodetector + 5-bit ADC digitizes each accumulated analog value
+     ("5-bit ADCs so that the data can be translated to the electrical domain
+     with any carries", §IV.C.4). Further accumulation is digital (exact) in
+     the aggregation unit's shift-add + SRAM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the WDM lane dimension
+maps to the kernel's minor (lane) axis, the in-waveguide group accumulation
+becomes an in-VMEM accumulator, the TDM nibble loop is a static loop inside
+the block, and the K-reduction is a grid axis with revisiting-output
+accumulation. interpret=True everywhere: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NIBBLE_BITS = 4
+NIBBLE_BASE = 1 << NIBBLE_BITS  # 16 transmission levels per OPCM cell
+MAX_NIBBLE_PRODUCT = (NIBBLE_BASE - 1) ** 2  # 225
+
+
+@dataclasses.dataclass(frozen=True)
+class PhotonicConfig:
+    """Parameters of the analog MAC pipeline.
+
+    Attributes:
+      bits_a: activation bit-width (must be a multiple of 4).
+      bits_w: weight bit-width (must be a multiple of 4).
+      group_size: number of products summed optically in the shared readout
+        waveguide before the ADC (subarrays per group row sharing a
+        wavelength; 2 in the paper's worked example, §IV.D).
+      adc_bits: ADC resolution at the aggregation unit (5 in the paper).
+      enable_adc: model ADC quantization of the analog partial sums. When
+        False the pipeline is exact and equals an integer matmul.
+    """
+
+    bits_a: int = 4
+    bits_w: int = 4
+    group_size: int = 2
+    adc_bits: int = 5
+    enable_adc: bool = True
+
+    def __post_init__(self):
+        if self.bits_a % NIBBLE_BITS or self.bits_a <= 0:
+            raise ValueError(f"bits_a must be a positive multiple of 4, got {self.bits_a}")
+        if self.bits_w % NIBBLE_BITS or self.bits_w <= 0:
+            raise ValueError(f"bits_w must be a positive multiple of 4, got {self.bits_w}")
+        if self.group_size <= 0:
+            raise ValueError("group_size must be positive")
+        if self.adc_bits <= 0:
+            raise ValueError("adc_bits must be positive")
+
+    @property
+    def nibbles_a(self) -> int:
+        return self.bits_a // NIBBLE_BITS
+
+    @property
+    def nibbles_w(self) -> int:
+        return self.bits_w // NIBBLE_BITS
+
+    @property
+    def adc_step(self) -> float:
+        """ADC LSB in nibble-product units: full scale is `group_size` maximal
+        nibble products interfering in the waveguide."""
+        return self.group_size * MAX_NIBBLE_PRODUCT / (1 << self.adc_bits)
+
+
+def adc_quantize(x: jnp.ndarray, cfg: PhotonicConfig) -> jnp.ndarray:
+    """Photodetector + ADC readout of an in-waveguide accumulated signal."""
+    if not cfg.enable_adc:
+        return x
+    step = jnp.float32(cfg.adc_step)
+    return jnp.round(x / step) * step
+
+
+def extract_nibble(levels: jnp.ndarray, i: int) -> jnp.ndarray:
+    """i-th 4-bit nibble (little-endian) of an unsigned level tensor."""
+    return jnp.floor_divide(levels, NIBBLE_BASE**i) % NIBBLE_BASE
+
+
+def _segment_mac(a_nib: jnp.ndarray, w_nib: jnp.ndarray, cfg: PhotonicConfig) -> jnp.ndarray:
+    """One TDM step: nibble x nibble MAC with per-group ADC readout.
+
+    a_nib: (bm, bk) float32 nibble levels; w_nib: (bk, bn). bk must be a
+    multiple of cfg.group_size. Returns the (bm, bn) digital partial sum.
+    """
+    bm, bk = a_nib.shape
+    bn = w_nib.shape[1]
+    g = cfg.group_size
+    s = bk // g
+    # (S, bm, G) x (S, G, bn) batched matmul: each batch element is one
+    # in-waveguide accumulation of G products (same wavelength, same group).
+    a_seg = a_nib.reshape(bm, s, g).transpose(1, 0, 2)
+    w_seg = w_nib.reshape(s, g, bn)
+    seg = jax.lax.dot_general(
+        a_seg,
+        w_seg,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # (S, bm, bn): analog accumulations
+    seg = adc_quantize(seg, cfg)  # PD + 5-bit ADC per waveguide readout
+    return seg.sum(axis=0)  # digital accumulation (aggregation-unit SRAM)
+
+
+def _photonic_matmul_kernel(a_ref, w_ref, o_ref, *, cfg: PhotonicConfig):
+    """Pallas kernel body. Grid = (M/bm, N/bn, K/bk); K is innermost so the
+    output block is revisited and accumulated across K steps (the digital
+    aggregation across subarray groups)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_lv = a_ref[...].astype(jnp.float32)
+    w_lv = w_ref[...].astype(jnp.float32)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    # TDM loop over nibble pairs, recombined via shift-and-add.
+    for i in range(cfg.nibbles_a):
+        a_nib = extract_nibble(a_lv, i)
+        for j in range(cfg.nibbles_w):
+            w_nib = extract_nibble(w_lv, j)
+            shift = float(NIBBLE_BASE ** (i + j))
+            acc = acc + shift * _segment_mac(a_nib, w_nib, cfg)
+    o_ref[...] += acc
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "block_m", "block_n", "block_k", "interpret")
+)
+def photonic_matmul(
+    a_levels: jnp.ndarray,
+    w_levels: jnp.ndarray,
+    cfg: PhotonicConfig = PhotonicConfig(),
+    *,
+    # block_m=128 / block_k=32 measured fastest on the CPU-PJRT path
+    # (EXPERIMENTS.md §Perf): tall im2col matmuls amortize grid overhead
+    # at bm=128; small operands clamp to their own size anyway.
+    block_m: int = 128,
+    block_n: int = 64,
+    block_k: int = 32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """OPIMA photonic MAC: (M,K) x (K,N) over unsigned quantization levels.
+
+    Inputs are integer *levels* in [0, 2**bits) (any integer or float dtype
+    holding integral values). Output is float32 holding the (possibly
+    ADC-quantized) integer-valued result. With cfg.enable_adc=False this is
+    exactly ``a_levels @ w_levels``.
+    """
+    if a_levels.ndim != 2 or w_levels.ndim != 2:
+        raise ValueError("photonic_matmul expects 2-D operands")
+    m, k = a_levels.shape
+    k2, n = w_levels.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    if block_k % cfg.group_size:
+        raise ValueError("block_k must be a multiple of cfg.group_size")
+
+    a_f = a_levels.astype(jnp.float32)
+    w_f = w_levels.astype(jnp.float32)
+    # Zero-pad to block multiples; zero levels contribute zero products and
+    # ADC(0) == 0, so padding is exact.
+    bm = min(block_m, _ceil_mult(m, 8))
+    bn = min(block_n, _ceil_mult(n, 8))
+    bk = min(block_k, _ceil_mult(k, cfg.group_size))
+    a_f = _pad_to(_pad_to(a_f, 0, bm), 1, bk)
+    w_f = _pad_to(_pad_to(w_f, 0, bk), 1, bn)
+    mp, kp = a_f.shape
+    np_ = w_f.shape[1]
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_photonic_matmul_kernel, cfg=cfg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_f, w_f)
+    return out[:m, :n]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """Estimated VMEM bytes for one grid step (DESIGN.md §Perf): A block,
+    W block, output accumulator, plus the transient segment tensor."""
+    f32 = 4
+    a = block_m * block_k * f32
+    w = block_k * block_n * f32
+    o = block_m * block_n * f32
+    seg = block_k * block_m * block_n * f32  # worst case S*bm*bn with G=1
+    return a + w + o + seg

@@ -1,0 +1,76 @@
+"""Pure-jnp correctness oracle for the photonic MAC kernel.
+
+Implements the identical OPIMA analog pipeline (nibble TDM, per-group
+in-waveguide accumulation, ADC readout, digital shift-and-add) without
+Pallas, with the full K dimension handled in one shot. The Pallas kernel's
+K blocks are multiples of the group size, so segment boundaries (and thus
+every ADC readout) line up exactly; the only permitted difference is f32
+summation order across K blocks, which matters one ulp (~1e-7 relative)
+when ADC-quantized 8-bit totals exceed 2^24 step units. Tests therefore
+compare bit-exact with ADC off and at rtol=1e-6 with ADC on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .photonic_mac import (
+    NIBBLE_BASE,
+    PhotonicConfig,
+    adc_quantize,
+    extract_nibble,
+)
+
+
+def photonic_matmul_ref(
+    a_levels: jnp.ndarray,
+    w_levels: jnp.ndarray,
+    cfg: PhotonicConfig = PhotonicConfig(),
+) -> jnp.ndarray:
+    """Reference photonic MAC over unsigned levels. Returns float32."""
+    a = a_levels.astype(jnp.float32)
+    w = w_levels.astype(jnp.float32)
+    m, k = a.shape
+    _, n = w.shape
+    g = cfg.group_size
+    kp = ((k + g - 1) // g) * g
+    a = jnp.pad(a, ((0, 0), (0, kp - k)))
+    w = jnp.pad(w, ((0, kp - k), (0, 0)))
+    s = kp // g
+
+    out = jnp.zeros((m, n), jnp.float32)
+    for i in range(cfg.nibbles_a):
+        a_nib = extract_nibble(a, i)
+        for j in range(cfg.nibbles_w):
+            w_nib = extract_nibble(w, j)
+            a_seg = a_nib.reshape(m, s, g).transpose(1, 0, 2)  # (S, m, G)
+            w_seg = w_nib.reshape(s, g, n)  # (S, G, n)
+            seg = jax.lax.dot_general(
+                a_seg,
+                w_seg,
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            )
+            seg = adc_quantize(seg, cfg)
+            out = out + float(NIBBLE_BASE ** (i + j)) * seg.sum(axis=0)
+    return out
+
+
+def exact_matmul_ref(a_levels: jnp.ndarray, w_levels: jnp.ndarray) -> jnp.ndarray:
+    """Ideal (no-ADC) integer matmul over levels, float32."""
+    return a_levels.astype(jnp.float32) @ w_levels.astype(jnp.float32)
+
+
+def adc_error_bound(k: int, cfg: PhotonicConfig) -> float:
+    """Worst-case |photonic - exact| per output element: each of the
+    ceil(K/G) segments contributes at most step/2 of rounding error,
+    recombined with shift weights summed over nibble pairs."""
+    segs = (k + cfg.group_size - 1) // cfg.group_size
+    per_pair = segs * cfg.adc_step / 2.0
+    shift_sum = sum(
+        float(NIBBLE_BASE ** (i + j))
+        for i in range(cfg.nibbles_a)
+        for j in range(cfg.nibbles_w)
+    )
+    return per_pair * shift_sum

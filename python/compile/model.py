@@ -1,0 +1,114 @@
+"""L2: JAX model — a small CNN exercised through the photonic MAC pipeline.
+
+This is the functional model used to (a) validate that OPIMA's analog
+pipeline (4-bit cells + nibble TDM + 5-bit ADC) preserves classification
+accuracy (paper Table II's fp32/int8/int4 sweep), and (b) produce the AOT
+HLO artifacts the Rust coordinator executes on the request path.
+
+Forward paths:
+  forward_fp32      — float reference (also the training path).
+  forward_photonic  — every conv/fc runs as quantized levels through the
+                      L1 Pallas kernel (or its jnp oracle), with digital
+                      zero-point correction, matching OPIMA end to end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv2d import conv2d_fp32, conv2d_photonic
+from .kernels.photonic_mac import PhotonicConfig
+from .quant import quantized_matmul
+
+IMAGE_SIZE = 12
+NUM_CLASSES = 4
+
+# (name, kind, params) — kind: conv(kh, kw, cin, cout, stride, pad) | fc(i, o)
+ARCH = [
+    ("conv1", "conv", (3, 3, 1, 8, 1, 1)),
+    ("conv2", "conv", (3, 3, 8, 16, 1, 1)),
+    ("fc", "fc", (3 * 3 * 16, NUM_CLASSES)),
+]
+
+
+def init_params(key: jax.Array) -> dict:
+    """He-initialized parameters for the small CNN."""
+    params = {}
+    for name, kind, spec in ARCH:
+        key, sub = jax.random.split(key)
+        if kind == "conv":
+            kh, kw, cin, cout, _, _ = spec
+            fan_in = kh * kw * cin
+            params[name] = {
+                "w": jax.random.normal(sub, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in),
+                "b": jnp.zeros((cout,)),
+            }
+        else:
+            i, o = spec
+            params[name] = {
+                "w": jax.random.normal(sub, (i, o)) * jnp.sqrt(2.0 / i),
+                "b": jnp.zeros((o,)),
+            }
+    return params
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max pooling, NHWC."""
+    n, h, w, c = x.shape
+    x = x[:, : h - h % 2, : w - w % 2, :]
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def forward_fp32(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Float forward. x: (N, 12, 12, 1) -> logits (N, 4)."""
+    h = conv2d_fp32(x, params["conv1"]["w"], padding=1) + params["conv1"]["b"]
+    h = maxpool2(jax.nn.relu(h))
+    h = conv2d_fp32(h, params["conv2"]["w"], padding=1) + params["conv2"]["b"]
+    h = maxpool2(jax.nn.relu(h))
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def forward_photonic(
+    params: dict,
+    x: jnp.ndarray,
+    bits: int = 4,
+    cfg: PhotonicConfig | None = None,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """OPIMA-path forward: all MACs through the photonic pipeline.
+
+    Non-linearities, pooling and bias adds are performed digitally at the
+    E-O-E controller (paper Fig. 3) and are exact.
+    """
+    if cfg is None:
+        cfg = PhotonicConfig(bits_a=bits, bits_w=bits)
+    h = (
+        conv2d_photonic(x, params["conv1"]["w"], bits, cfg, padding=1, use_pallas=use_pallas)
+        + params["conv1"]["b"]
+    )
+    h = maxpool2(jax.nn.relu(h))
+    h = (
+        conv2d_photonic(h, params["conv2"]["w"], bits, cfg, padding=1, use_pallas=use_pallas)
+        + params["conv2"]["b"]
+    )
+    h = maxpool2(jax.nn.relu(h))
+    h = h.reshape(h.shape[0], -1)
+    h = quantized_matmul(h, params["fc"]["w"], bits, cfg, use_pallas=use_pallas)
+    return h + params["fc"]["b"]
+
+
+def loss_fn(params: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logits = forward_fp32(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(logits: jnp.ndarray, y: jnp.ndarray) -> float:
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == y))
+
+
+def param_count(params: dict) -> int:
+    return int(sum(p.size for layer in params.values() for p in layer.values()))

@@ -1,0 +1,97 @@
+"""Post-training uniform quantization for the OPIMA photonic path.
+
+OPCM cells hold unsigned transmission levels, so both activations and
+weights are quantized to *asymmetric unsigned* levels (zero-point +
+scale). The optical MAC computes sum(a_lv * w_lv); the zero-point
+correction terms are digital and exact (performed in the aggregation
+unit / E-O-E controller in the paper's architecture):
+
+  sum (a-za)*sa * (w-zw)*sw
+    = sa*sw * [ sum a*w  - zw * sum a  - za * sum w  + K*za*zw ]
+
+Only the first term runs through the photonic (ADC-quantized) pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .kernels.photonic_mac import PhotonicConfig, photonic_matmul
+from .kernels.ref import photonic_matmul_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Affine quantization: real = scale * (level - zero_point).
+
+    Fields hold jnp scalars so parameter selection stays traceable under
+    jax.jit (activation ranges are data-dependent at AOT-lowering time).
+    """
+
+    scale: jnp.ndarray
+    zero_point: jnp.ndarray
+    bits: int
+
+
+def choose_qparams(x: jnp.ndarray, bits: int) -> QuantParams:
+    """Min/max asymmetric quantization parameters for a tensor (traceable)."""
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    hi = jnp.where(hi <= lo, lo + 1e-8, hi)
+    nlevels = (1 << bits) - 1
+    scale = (hi - lo) / nlevels
+    zero_point = jnp.clip(jnp.round(-lo / scale), 0, nlevels)
+    return QuantParams(scale=scale, zero_point=zero_point, bits=bits)
+
+
+def quantize(x: jnp.ndarray, qp: QuantParams) -> jnp.ndarray:
+    """Real tensor -> unsigned integer levels (float32-held)."""
+    nlevels = (1 << qp.bits) - 1
+    lv = jnp.round(x / qp.scale + qp.zero_point)
+    return jnp.clip(lv, 0, nlevels).astype(jnp.float32)
+
+
+def dequantize(levels: jnp.ndarray, qp: QuantParams) -> jnp.ndarray:
+    return (levels - qp.zero_point) * qp.scale
+
+
+def quantized_matmul(
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    bits: int,
+    cfg: PhotonicConfig | None = None,
+    *,
+    use_pallas: bool = True,
+    a_qp: QuantParams | None = None,
+    w_qp: QuantParams | None = None,
+) -> jnp.ndarray:
+    """Approximate a @ w through the OPIMA photonic pipeline.
+
+    a: (M, K) real activations; w: (K, N) real weights. Quantizes both to
+    `bits` unsigned levels, performs the level-domain MAC photonic-style
+    (nibble TDM + group accumulation + ADC), applies the exact digital
+    zero-point corrections, and dequantizes.
+    """
+    if cfg is None:
+        cfg = PhotonicConfig(bits_a=bits, bits_w=bits)
+    a_qp = a_qp or choose_qparams(a, bits)
+    w_qp = w_qp or choose_qparams(w, bits)
+    a_lv = quantize(a, a_qp)
+    w_lv = quantize(w, w_qp)
+
+    if use_pallas:
+        lvl_prod = photonic_matmul(a_lv, w_lv, cfg)
+    else:
+        lvl_prod = photonic_matmul_ref(a_lv, w_lv, cfg)
+
+    k = a.shape[1]
+    # Digital (exact) zero-point corrections — aggregation unit / controller.
+    corr = (
+        lvl_prod
+        - w_qp.zero_point * jnp.sum(a_lv, axis=1, keepdims=True)
+        - a_qp.zero_point * jnp.sum(w_lv, axis=0, keepdims=True)
+        + k * a_qp.zero_point * w_qp.zero_point
+    )
+    return a_qp.scale * w_qp.scale * corr

@@ -1,0 +1,6 @@
+"""Ensure the python/ directory (containing the `compile` package) is importable."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

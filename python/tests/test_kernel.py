@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas photonic_mac vs pure-jnp oracle.
+
+This is the core correctness signal for the compute layer: the Pallas
+kernel (blocked, grid-accumulated) must agree with the unblocked
+reference — bit-for-bit when ADC is off (integer sums), within one ulp of
+f32 summation-order freedom when ADC quantization is on — and with ADC
+disabled both must equal the exact integer matmul.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.photonic_mac import (
+    MAX_NIBBLE_PRODUCT,
+    NIBBLE_BASE,
+    PhotonicConfig,
+    adc_quantize,
+    extract_nibble,
+    photonic_matmul,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import adc_error_bound, exact_matmul_ref, photonic_matmul_ref
+
+
+def rand_levels(rng, shape, bits):
+    return jnp.asarray(rng.integers(0, 1 << bits, size=shape), jnp.float32)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("adc", [False, True])
+def test_kernel_matches_ref_basic(bits, adc):
+    rng = np.random.default_rng(0)
+    cfg = PhotonicConfig(bits_a=bits, bits_w=bits, enable_adc=adc)
+    a = rand_levels(rng, (32, 48), bits)
+    w = rand_levels(rng, (48, 24), bits)
+    got = photonic_matmul(a, w, cfg)
+    want = photonic_matmul_ref(a, w, cfg)
+    # ADC-on 8-bit totals exceed 2^24 ADC-step units, so f32 summation
+    # order (which differs between the blocked kernel and the one-shot
+    # reference) costs ~1e-7 relative; ADC-off sums are exact integers.
+    np.testing.assert_allclose(got, want, rtol=1e-6 if adc else 0, atol=0)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_adc_off_equals_exact_matmul(bits):
+    rng = np.random.default_rng(1)
+    cfg = PhotonicConfig(bits_a=bits, bits_w=bits, enable_adc=False)
+    a = rand_levels(rng, (16, 40), bits)
+    w = rand_levels(rng, (40, 12), bits)
+    got = photonic_matmul(a, w, cfg)
+    np.testing.assert_allclose(got, exact_matmul_ref(a, w), rtol=0, atol=0)
+
+
+def test_adc_error_is_bounded():
+    rng = np.random.default_rng(2)
+    cfg = PhotonicConfig(bits_a=8, bits_w=8, enable_adc=True)
+    a = rand_levels(rng, (8, 64), 8)
+    w = rand_levels(rng, (64, 8), 8)
+    got = photonic_matmul(a, w, cfg)
+    exact = exact_matmul_ref(a, w)
+    bound = adc_error_bound(64, cfg)
+    assert float(jnp.max(jnp.abs(got - exact))) <= bound
+
+
+def test_mixed_bitwidths():
+    """8-bit activations against 4-bit weights (challenge (4), TDM)."""
+    rng = np.random.default_rng(3)
+    cfg = PhotonicConfig(bits_a=8, bits_w=4, enable_adc=False)
+    a = rand_levels(rng, (8, 20), 8)
+    w = rand_levels(rng, (20, 8), 4)
+    got = photonic_matmul(a, w, cfg)
+    np.testing.assert_allclose(got, exact_matmul_ref(a, w), rtol=0, atol=0)
+
+
+def test_nibble_decomposition_roundtrip():
+    lv = jnp.arange(256, dtype=jnp.float32)
+    recomposed = sum(
+        extract_nibble(lv, i) * float(NIBBLE_BASE**i) for i in range(2)
+    )
+    np.testing.assert_array_equal(recomposed, lv)
+
+
+def test_adc_quantize_properties():
+    cfg = PhotonicConfig()
+    x = jnp.linspace(0.0, cfg.group_size * MAX_NIBBLE_PRODUCT, 97)
+    q = adc_quantize(x, cfg)
+    # Quantized to the step grid, error <= step/2, zero fixed point.
+    assert float(jnp.max(jnp.abs(q - x))) <= cfg.adc_step / 2 + 1e-5
+    steps = q / cfg.adc_step
+    np.testing.assert_allclose(steps, jnp.round(steps), atol=1e-5)
+    assert float(adc_quantize(jnp.zeros(()), cfg)) == 0.0
+
+
+def test_block_shape_independence():
+    """Result must not depend on the blocking (segment alignment holds)."""
+    rng = np.random.default_rng(4)
+    cfg = PhotonicConfig(bits_a=4, bits_w=4, enable_adc=True)
+    a = rand_levels(rng, (24, 60), 4)
+    w = rand_levels(rng, (60, 20), 4)
+    ref = photonic_matmul_ref(a, w, cfg)
+    for bm, bn, bk in [(8, 8, 8), (16, 32, 16), (64, 64, 64), (24, 20, 60)]:
+        got = photonic_matmul(a, w, cfg, block_m=bm, block_n=bn, block_k=bk)
+        np.testing.assert_allclose(got, ref, rtol=1e-6, atol=0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 70),
+    n=st.integers(1, 40),
+    bits_a=st.sampled_from([4, 8]),
+    bits_w=st.sampled_from([4, 8]),
+    adc=st.booleans(),
+    group=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_vs_ref_hypothesis(m, k, n, bits_a, bits_w, adc, group, seed):
+    """Property sweep: arbitrary shapes/bit-widths/groupings agree with ref."""
+    rng = np.random.default_rng(seed)
+    cfg = PhotonicConfig(bits_a=bits_a, bits_w=bits_w, enable_adc=adc, group_size=group)
+    a = rand_levels(rng, (m, k), bits_a)
+    w = rand_levels(rng, (k, n), bits_w)
+    got = photonic_matmul(a, w, cfg)
+    want = photonic_matmul_ref(a, w, cfg)
+    np.testing.assert_allclose(got, want, rtol=1e-6 if adc else 0, atol=0)
+    if not adc:
+        np.testing.assert_allclose(got, exact_matmul_ref(a, w), rtol=0, atol=0)
+
+
+def test_invalid_configs_rejected():
+    with pytest.raises(ValueError):
+        PhotonicConfig(bits_a=3)
+    with pytest.raises(ValueError):
+        PhotonicConfig(bits_w=0)
+    with pytest.raises(ValueError):
+        PhotonicConfig(group_size=0)
+    with pytest.raises(ValueError):
+        photonic_matmul(jnp.zeros((2, 3)), jnp.zeros((4, 2)))
+
+
+def test_vmem_footprint_estimate():
+    # 64x64x64 f32 blocks must fit comfortably in a 16 MiB VMEM budget.
+    assert vmem_footprint_bytes(64, 64, 64) < 4 * 1024 * 1024

@@ -1,0 +1,122 @@
+"""L2 model: shapes, conv lowering, photonic forward, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.data import make_dataset
+from compile.kernels.conv2d import conv2d_fp32, conv2d_photonic, im2col
+from compile.kernels.photonic_mac import PhotonicConfig
+from compile.model import (
+    IMAGE_SIZE,
+    NUM_CLASSES,
+    accuracy,
+    forward_fp32,
+    forward_photonic,
+    init_params,
+    loss_fn,
+    maxpool2,
+    param_count,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0))
+
+
+def test_im2col_matches_lax_conv():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 3)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 3, 5)), jnp.float32)
+    got = conv2d_fp32(x, w, stride=1, padding=1)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)], dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(4, 10),
+    kh=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    c=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_shapes_hypothesis(h, kh, stride, c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, h, h, c)), jnp.float32)
+    patches, (n, oh, ow) = im2col(x, kh, kh, stride=stride, padding=0)
+    assert n == 1
+    assert oh == (h - kh) // stride + 1
+    assert patches.shape == (oh * ow, kh * kh * c)
+
+
+def test_maxpool2():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    out = maxpool2(x)
+    np.testing.assert_array_equal(out[0, :, :, 0], [[5, 7], [13, 15]])
+
+
+def test_forward_shapes(params):
+    x = jnp.zeros((5, IMAGE_SIZE, IMAGE_SIZE, 1))
+    assert forward_fp32(params, x).shape == (5, NUM_CLASSES)
+    out = forward_photonic(params, x, bits=4, use_pallas=False)
+    assert out.shape == (5, NUM_CLASSES)
+
+
+def test_photonic_forward_close_to_fp32_at_8bit(params):
+    x, _ = make_dataset(jax.random.PRNGKey(1), 16)
+    ref = forward_fp32(params, x)
+    q8 = forward_photonic(
+        params, x, bits=8, cfg=PhotonicConfig(bits_a=8, bits_w=8, enable_adc=False),
+        use_pallas=False,
+    )
+    # Logit agreement: argmax should mostly match at 8-bit.
+    agree = float(jnp.mean(jnp.argmax(ref, 1) == jnp.argmax(q8, 1)))
+    assert agree >= 0.75
+
+
+def test_conv_photonic_matches_quantized_ref():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 6, 6, 2)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 2, 4)), jnp.float32)
+    cfg = PhotonicConfig()
+    via_pallas = conv2d_photonic(x, w, 4, cfg, padding=1, use_pallas=True)
+    via_ref = conv2d_photonic(x, w, 4, cfg, padding=1, use_pallas=False)
+    np.testing.assert_allclose(via_pallas, via_ref, rtol=0, atol=1e-4)
+
+
+def test_loss_decreases_with_training(params):
+    x, y = make_dataset(jax.random.PRNGKey(3), 128)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    p = params
+    l0, _ = grad_fn(p, x, y)
+    for _ in range(30):
+        _, g = grad_fn(p, x, y)
+        p = jax.tree.map(lambda a, b: a - 0.1 * b, p, g)
+    l1, _ = grad_fn(p, x, y)
+    assert float(l1) < float(l0)
+
+
+def test_dataset_determinism_and_balance():
+    x1, y1 = make_dataset(jax.random.PRNGKey(5), 256)
+    x2, y2 = make_dataset(jax.random.PRNGKey(5), 256)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2))
+    counts = np.bincount(np.asarray(y1), minlength=NUM_CLASSES)
+    assert counts.min() > 0.15 * 256
+
+
+def test_param_count(params):
+    # conv1: 3*3*1*8+8; conv2: 3*3*8*16+16; fc: 144*4+4
+    assert param_count(params) == (72 + 8) + (1152 + 16) + (576 + 4)
+
+
+def test_accuracy_fn():
+    logits = jnp.asarray([[1.0, 0.0], [0.0, 1.0]])
+    y = jnp.asarray([0, 0])
+    assert accuracy(logits, y) == 0.5

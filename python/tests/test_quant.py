@@ -1,0 +1,104 @@
+"""Quantization layer: qparams, round-trips, photonic quantized matmul."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.photonic_mac import PhotonicConfig
+from compile.quant import choose_qparams, dequantize, quantize, quantized_matmul
+
+
+def test_qparams_cover_range():
+    x = jnp.asarray([-2.0, 0.0, 3.0])
+    for bits in (4, 8):
+        qp = choose_qparams(x, bits)
+        lv = quantize(x, qp)
+        assert float(lv.min()) >= 0
+        assert float(lv.max()) <= (1 << bits) - 1
+        back = dequantize(lv, qp)
+        # Round-trip error bounded by one step.
+        assert float(jnp.max(jnp.abs(back - x))) <= float(qp.scale) * 1.01
+
+
+def test_constant_tensor_does_not_blow_up():
+    x = jnp.full((4, 4), 3.25)
+    qp = choose_qparams(x, 4)
+    lv = quantize(x, qp)
+    assert np.isfinite(np.asarray(dequantize(lv, qp))).all()
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantized_matmul_approximates_fp32(bits):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    exact = a @ w
+    cfg = PhotonicConfig(bits_a=bits, bits_w=bits, enable_adc=False)
+    approx = quantized_matmul(a, w, bits, cfg, use_pallas=False)
+    # Relative Frobenius error shrinks with more bits.
+    rel = float(jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact))
+    assert rel < (0.35 if bits == 4 else 0.05)
+
+
+def test_adc_on_close_to_adc_off():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(12, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 6)), jnp.float32)
+    on = quantized_matmul(a, w, 4, PhotonicConfig(enable_adc=True), use_pallas=False)
+    off = quantized_matmul(a, w, 4, PhotonicConfig(enable_adc=False), use_pallas=False)
+    # ADC adds bounded analog readout error on top of quantization.
+    denom = float(jnp.linalg.norm(off)) + 1e-9
+    assert float(jnp.linalg.norm(on - off)) / denom < 0.5
+
+
+def test_pallas_and_ref_paths_agree():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    cfg = PhotonicConfig()
+    via_pallas = quantized_matmul(a, w, 4, cfg, use_pallas=True)
+    via_ref = quantized_matmul(a, w, 4, cfg, use_pallas=False)
+    np.testing.assert_allclose(via_pallas, via_ref, rtol=0, atol=1e-4)
+
+
+def test_traceable_under_jit():
+    """choose_qparams/quantized_matmul must trace (needed for AOT)."""
+
+    @jax.jit
+    def f(a, w):
+        return quantized_matmul(a, w, 4, PhotonicConfig(), use_pallas=False)
+
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    out = f(a, w)
+    assert out.shape == (4, 4)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(2, 32),
+    n=st.integers(1, 12),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantized_matmul_error_scales_with_bits(m, k, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    exact = a @ w
+    cfg = PhotonicConfig(bits_a=bits, bits_w=bits, enable_adc=False)
+    approx = quantized_matmul(a, w, bits, cfg, use_pallas=False)
+    scale_a = (float(a.max()) - float(a.min())) / ((1 << bits) - 1)
+    scale_w = (float(w.max()) - float(w.min())) / ((1 << bits) - 1)
+    # Generous analytic bound: per-element error can reach a full step of
+    # each operand (0.5 from value rounding + 0.5 from the zero-point
+    # rounding shifting the whole grid), propagated through the product.
+    amax = float(jnp.max(jnp.abs(a))) + scale_a
+    wmax = float(jnp.max(jnp.abs(w))) + scale_w
+    bound = 2.0 * k * (scale_a * wmax + scale_w * amax + scale_a * scale_w) + 1e-5
+    assert float(jnp.max(jnp.abs(approx - exact))) <= bound

@@ -1,0 +1,97 @@
+//! Per-inference energy roll-up on OPIMA.
+
+use crate::analyzer::latency::ModelAnalysis;
+use crate::analyzer::power::power_breakdown;
+use crate::config::OpimaConfig;
+
+/// Energy breakdown for one inference (all in mJ).
+#[derive(Debug, Clone)]
+pub struct EnergyBreakdown {
+    /// OPCM cell reads (5 pJ × one per nibble MAC).
+    pub reads_mj: f64,
+    /// MDL lasers (wall-plug while lit + drive DACs).
+    pub mdl_mj: f64,
+    /// Aggregation unit (ADC + SRAM + shift-add + DAC/VCSEL regen).
+    pub aggregation_mj: f64,
+    /// Output feature-map writeback (250 pJ OPCM writes).
+    pub writeback_mj: f64,
+    /// Static envelope × latency (the full-power accounting used for
+    /// cross-platform comparisons that meter at the wall).
+    pub static_mj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Dynamic (activity-proportional) energy.
+    pub fn dynamic_mj(&self) -> f64 {
+        self.reads_mj + self.mdl_mj + self.aggregation_mj + self.writeback_mj
+    }
+
+    /// Wall energy (dynamic + static envelope over the run).
+    pub fn wall_mj(&self) -> f64 {
+        self.dynamic_mj() + self.static_mj
+    }
+}
+
+/// Compute the energy breakdown for an analyzed model.
+pub fn energy_breakdown(cfg: &OpimaConfig, analysis: &ModelAnalysis) -> EnergyBreakdown {
+    let reads_mj = analysis.layer_costs.iter().map(|c| c.read_pj).sum::<f64>() / 1e9;
+    let mdl_mj = analysis.layer_costs.iter().map(|c| c.mdl_pj).sum::<f64>() / 1e9;
+    let aggregation_mj = analysis
+        .layer_costs
+        .iter()
+        .map(|c| c.aggregation_pj)
+        .sum::<f64>()
+        / 1e9;
+    let writeback_mj = analysis
+        .layer_costs
+        .iter()
+        .map(|c| c.writeback_pj)
+        .sum::<f64>()
+        / 1e9;
+    let static_mj = power_breakdown(cfg).total_w() * analysis.total_ms() * 1e-3 * 1e3;
+    EnergyBreakdown {
+        reads_mj,
+        mdl_mj,
+        aggregation_mj,
+        writeback_mj,
+        static_mj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::latency::analyze_model;
+    use crate::cnn::models::{build_model, Model};
+
+    #[test]
+    fn read_energy_matches_table1_figure() {
+        let cfg = OpimaConfig::paper();
+        let net = build_model(Model::ResNet18).unwrap();
+        let a = analyze_model(&cfg, &net, 4).unwrap();
+        let e = energy_breakdown(&cfg, &a);
+        // 5 pJ per MAC at 4-bit (one TDM step).
+        let expect = net.macs() as f64 * 5.0 / 1e9;
+        assert!((e.reads_mj - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn components_positive_and_sum() {
+        let cfg = OpimaConfig::paper();
+        let net = build_model(Model::InceptionV2).unwrap();
+        let a = analyze_model(&cfg, &net, 4).unwrap();
+        let e = energy_breakdown(&cfg, &a);
+        assert!(e.reads_mj > 0.0 && e.mdl_mj > 0.0);
+        assert!(e.aggregation_mj > 0.0 && e.writeback_mj > 0.0);
+        assert!(e.wall_mj() > e.dynamic_mj());
+    }
+
+    #[test]
+    fn eight_bit_costs_more_energy() {
+        let cfg = OpimaConfig::paper();
+        let net = build_model(Model::ResNet18).unwrap();
+        let e4 = energy_breakdown(&cfg, &analyze_model(&cfg, &net, 4).unwrap());
+        let e8 = energy_breakdown(&cfg, &analyze_model(&cfg, &net, 8).unwrap());
+        assert!(e8.dynamic_mj() > 2.0 * e4.dynamic_mj());
+    }
+}

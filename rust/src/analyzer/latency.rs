@@ -1,0 +1,133 @@
+//! Per-model latency/energy analysis on OPIMA (Figs. 9 & 10 substrate).
+
+use crate::cnn::graph::Network;
+use crate::config::OpimaConfig;
+use crate::error::Result;
+use crate::mapper::plan::map_network;
+use crate::pim::scheduler::{LayerCost, PimScheduler};
+
+/// Full analysis of one (model, bit-width) pair on OPIMA.
+#[derive(Debug, Clone)]
+pub struct ModelAnalysis {
+    pub name: String,
+    pub bits: u32,
+    pub layer_costs: Vec<LayerCost>,
+    /// In-memory processing time (MACs + aggregation), ms.
+    pub processing_ms: f64,
+    /// Non-linearity + OPCM write-back time, ms.
+    pub writeback_ms: f64,
+    /// Dynamic energy per inference, mJ.
+    pub dynamic_mj: f64,
+    /// Total MACs.
+    pub macs: u64,
+}
+
+impl ModelAnalysis {
+    pub fn total_ms(&self) -> f64 {
+        self.processing_ms + self.writeback_ms
+    }
+
+    pub fn fps(&self) -> f64 {
+        1e3 / self.total_ms()
+    }
+}
+
+/// Analyze a network at the given operand width on OPIMA.
+pub fn analyze_model(cfg: &OpimaConfig, net: &Network, bits: u32) -> Result<ModelAnalysis> {
+    let mapped = map_network(cfg, net, bits)?;
+    let sched = PimScheduler::new(cfg)?;
+    let layer_costs = sched.cost_network(&mapped.works)?;
+    let processing_ms = layer_costs.iter().map(|c| c.processing_ns).sum::<f64>() / 1e6;
+    let writeback_ms = layer_costs.iter().map(|c| c.writeback_ns).sum::<f64>() / 1e6;
+    let dynamic_mj = layer_costs.iter().map(|c| c.dynamic_pj()).sum::<f64>() / 1e9;
+    Ok(ModelAnalysis {
+        name: mapped.name,
+        bits,
+        layer_costs,
+        processing_ms,
+        writeback_ms,
+        dynamic_mj,
+        macs: net.macs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::models::{build_model, Model};
+
+    fn analyze(m: Model, bits: u32) -> ModelAnalysis {
+        let cfg = OpimaConfig::paper();
+        analyze_model(&cfg, &build_model(m).unwrap(), bits).unwrap()
+    }
+
+    #[test]
+    fn latencies_are_millisecond_class() {
+        // Fig. 9's y-axis is milliseconds.
+        for m in [Model::ResNet18, Model::InceptionV2, Model::MobileNet] {
+            let a = analyze(m, 4);
+            assert!(
+                (0.05..50.0).contains(&a.total_ms()),
+                "{}: {} ms",
+                a.name,
+                a.total_ms()
+            );
+        }
+    }
+
+    #[test]
+    fn writeback_dominates_resnet18() {
+        // Fig. 9 discussion: "the latency for the OPCM write operations
+        // ... far outweighs the latency savings from the PIM operations".
+        let a = analyze(Model::ResNet18, 4);
+        assert!(a.writeback_ms > 2.0 * a.processing_ms, "{a:?}");
+    }
+
+    #[test]
+    fn mobilenet_processing_exceeds_writeback() {
+        // Fig. 9 discussion: "MobileNet has lower writeback latency than
+        // processing latency" (1×1 serialization).
+        let a = analyze(Model::MobileNet, 4);
+        assert!(a.processing_ms > a.writeback_ms, "{a:?}");
+    }
+
+    #[test]
+    fn one_by_one_models_have_higher_processing_than_resnet() {
+        // "Both models have higher processing latencies [than ResNet18]".
+        let rn = analyze(Model::ResNet18, 4).processing_ms;
+        assert!(analyze(Model::InceptionV2, 4).processing_ms > rn);
+        assert!(analyze(Model::MobileNet, 4).processing_ms > rn);
+    }
+
+    #[test]
+    fn inception_total_below_resnet_total() {
+        // "why InceptionV2 has an overall lower latency than ResNet18".
+        let rn = analyze(Model::ResNet18, 4);
+        let inc = analyze(Model::InceptionV2, 4);
+        assert!(inc.total_ms() < rn.total_ms());
+    }
+
+    #[test]
+    fn eight_bit_slower_than_four_bit() {
+        for m in [Model::ResNet18, Model::MobileNet] {
+            let a4 = analyze(m, 4);
+            let a8 = analyze(m, 8);
+            assert!(a8.processing_ms > 3.0 * a4.processing_ms);
+            assert!(a8.writeback_ms > 1.8 * a4.writeback_ms);
+        }
+    }
+
+    #[test]
+    fn vgg16_is_slowest() {
+        let vgg = analyze(Model::Vgg16, 4).total_ms();
+        for m in [Model::ResNet18, Model::InceptionV2, Model::MobileNet, Model::SqueezeNet] {
+            assert!(vgg > analyze(m, 4).total_ms());
+        }
+    }
+
+    #[test]
+    fn dynamic_energy_millijoule_class() {
+        let a = analyze(Model::ResNet18, 4);
+        assert!((0.5..50.0).contains(&a.dynamic_mj), "{} mJ", a.dynamic_mj);
+    }
+}

@@ -1,0 +1,89 @@
+//! Cross-platform comparison metrics: EPB and FPS/W (Figs. 11 & 12).
+//!
+//! Accounting conventions (see EXPERIMENTS.md §Figs 11–12 for the
+//! rationale): *PIM/photonic* platforms (OPIMA, PhPIM, CrossLight, PRIME)
+//! are metered by their modeled dynamic energy — matching how such
+//! simulator-based papers report themselves — while *electronic*
+//! platforms (GPU/CPU) are metered at the wall (power envelope ×
+//! latency), matching how real systems are measured. Bits processed is a
+//! workload property (2 operands × MACs × quantized width), identical
+//! across platforms for a given model.
+
+use crate::cnn::graph::Network;
+
+/// Result of running one model on one platform.
+#[derive(Debug, Clone)]
+pub struct PlatformResult {
+    pub platform: String,
+    pub model: String,
+    pub latency_ms: f64,
+    pub power_w: f64,
+    /// Energy per inference under the platform's accounting convention.
+    pub energy_mj: f64,
+}
+
+impl PlatformResult {
+    pub fn fps(&self) -> f64 {
+        1e3 / self.latency_ms
+    }
+
+    pub fn fps_per_w(&self) -> f64 {
+        self.fps() / self.power_w
+    }
+
+    /// Energy per processed bit (pJ/bit) for a given workload bit count.
+    pub fn epb_pj(&self, workload_bits: u64) -> f64 {
+        self.energy_mj * 1e9 / workload_bits as f64
+    }
+}
+
+/// Bits processed by one inference of a quantized model: two operands
+/// per MAC at the quantized width.
+pub fn workload_bits(net: &Network, bits: u32) -> u64 {
+    2 * net.macs() * bits as u64
+}
+
+/// Geometric-mean ratio of `xs` over `ys` (how the paper reports "N×
+/// better on average").
+pub fn geomean_ratio(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let log_sum: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (x / y).ln())
+        .sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::models::{build_model, Model};
+
+    #[test]
+    fn derived_metrics() {
+        let r = PlatformResult {
+            platform: "x".into(),
+            model: "m".into(),
+            latency_ms: 2.0,
+            power_w: 100.0,
+            energy_mj: 200.0,
+        };
+        assert!((r.fps() - 500.0).abs() < 1e-9);
+        assert!((r.fps_per_w() - 5.0).abs() < 1e-9);
+        assert!((r.epb_pj(1_000_000_000) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workload_bits_scale() {
+        let net = build_model(Model::ResNet18).unwrap();
+        assert_eq!(workload_bits(&net, 8), 2 * workload_bits(&net, 4));
+    }
+
+    #[test]
+    fn geomean() {
+        assert!((geomean_ratio(&[4.0, 16.0], &[1.0, 1.0]) - 8.0).abs() < 1e-9);
+        assert!((geomean_ratio(&[2.0], &[4.0]) - 0.5).abs() < 1e-9);
+    }
+}

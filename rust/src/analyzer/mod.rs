@@ -1,0 +1,16 @@
+//! The performance analyzer — the paper's "Python-based performance
+//! analyzer" substitute.
+//!
+//! Rolls the PIM scheduler's per-layer costs into the quantities the
+//! paper reports: latency breakdowns (Fig. 9/10), the power envelope
+//! (Fig. 8), energy-per-bit (Fig. 11) and FPS/W (Fig. 12).
+
+pub mod energy;
+pub mod latency;
+pub mod metrics;
+pub mod power;
+pub mod report;
+
+pub use latency::{analyze_model, ModelAnalysis};
+pub use metrics::PlatformResult;
+pub use power::{power_breakdown, PowerBreakdown};

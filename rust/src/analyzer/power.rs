@@ -1,0 +1,139 @@
+//! Power-envelope breakdown (paper Fig. 8).
+//!
+//! Components for concurrent PIM + main-memory operation. The paper
+//! reports a maximum of 55.9 W dominated by the MDL array and the
+//! electrical-optical interface.
+
+use crate::config::OpimaConfig;
+use crate::pim::group::{active_mdls, ADC_ACTIVITY, DAC_ACTIVITY};
+
+/// One Fig. 8 slice.
+#[derive(Debug, Clone)]
+pub struct PowerComponent {
+    pub name: &'static str,
+    pub watts: f64,
+}
+
+/// Full breakdown.
+#[derive(Debug, Clone)]
+pub struct PowerBreakdown {
+    pub components: Vec<PowerComponent>,
+}
+
+impl PowerBreakdown {
+    pub fn total_w(&self) -> f64 {
+        self.components.iter().map(|c| c.watts).sum()
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.components
+            .iter()
+            .find(|c| c.name == name)
+            .map(|c| c.watts)
+            .unwrap_or(0.0)
+    }
+
+    /// The dominant component.
+    pub fn dominant(&self) -> &PowerComponent {
+        self.components
+            .iter()
+            .max_by(|a, b| a.watts.total_cmp(&b.watts))
+            .expect("non-empty")
+    }
+}
+
+/// Compute the Fig. 8 breakdown for a configuration (PIM + memory
+/// concurrently active — the paper's "maximum power consumption" case).
+pub fn power_breakdown(cfg: &OpimaConfig) -> PowerBreakdown {
+    let g = &cfg.geometry;
+    let f_hz = cfg.timing.clock_ghz * 1e9;
+    let groups = g.subarray_groups;
+
+    // MDL arrays: one active subarray row slice per group per bank.
+    let mdl_w = active_mdls(g, groups, cfg.pim.optical_accum) as f64
+        * cfg.power.mdl_wallplug_mw
+        / 1e3;
+
+    // E-O interface: ADC + DAC arrays at their duty factor, VCSEL
+    // regeneration channels, and the E-O-E controller electronics.
+    let channels = (g.banks * groups * g.cols_per_subarray) as f64;
+    let adc_w = channels
+        * cfg.energy.adc_conversion_pj(cfg.pim.adc_bits)
+        * 1e-12
+        * f_hz
+        * ADC_ACTIVITY;
+    // DAC regeneration fires per group output channel (16 per group),
+    // not per λ lane.
+    let dac_w = (g.banks * groups * 16) as f64
+        * cfg.energy.dac_conversion_pj(g.bits_per_cell)
+        * 1e-12
+        * f_hz
+        * DAC_ACTIVITY;
+    let vcsel_w = (g.banks * groups) as f64 * 16.0 * cfg.power.vcsel_mw / 1e3;
+    let eo_interface_w = adc_w + dac_w + vcsel_w + cfg.power.controller_w;
+
+    // External laser driving concurrent main-memory traffic.
+    let laser_w = cfg.power.external_laser_w;
+
+    // SOA stages: per bank, amplification on the memory data paths (one
+    // SOA per subarray column line) plus aggregation-path boosters.
+    let soa_count = g.banks * (g.subarray_cols + groups);
+    let soa_w = soa_count as f64 * cfg.power.soa_bias_mw / 1e3;
+
+    // EO-tuned MR access rings on all PIM-active + memory-active rows.
+    let active_rings = g.banks * (groups * cfg.pim.optical_accum + 1) * g.cols_per_subarray * 2;
+    let mr_w = active_rings as f64 * cfg.power.mr_tuning_mw / 1e3;
+
+    // Aggregation-unit digital logic (shift-add + SRAM) per bank.
+    let agg_w = cfg.power.aggregation_logic_w * g.banks as f64 * (groups as f64 / 16.0).max(0.25);
+
+    PowerBreakdown {
+        components: vec![
+            PowerComponent { name: "mdl_array", watts: mdl_w },
+            PowerComponent { name: "eo_interface", watts: eo_interface_w },
+            PowerComponent { name: "external_laser", watts: laser_w },
+            PowerComponent { name: "soa", watts: soa_w },
+            PowerComponent { name: "mr_tuning", watts: mr_w },
+            PowerComponent { name: "aggregation_logic", watts: agg_w },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_near_paper_55_9w() {
+        let b = power_breakdown(&OpimaConfig::paper());
+        let total = b.total_w();
+        assert!(
+            (47.5..64.3).contains(&total),
+            "total {total} W vs paper 55.9 W ± 15%"
+        );
+    }
+
+    #[test]
+    fn mdl_and_eo_interface_dominate() {
+        // Fig. 8: "maximum power consumption is contributed by the MDL
+        // array and the electrical-optical interface".
+        let b = power_breakdown(&OpimaConfig::paper());
+        let mdl = b.get("mdl_array");
+        let eo = b.get("eo_interface");
+        for c in &b.components {
+            if c.name != "mdl_array" && c.name != "eo_interface" {
+                assert!(mdl > c.watts, "mdl {} vs {} {}", mdl, c.name, c.watts);
+                assert!(eo > c.watts, "eo {} vs {} {}", eo, c.name, c.watts);
+            }
+        }
+    }
+
+    #[test]
+    fn power_scales_with_groups() {
+        let mut cfg = OpimaConfig::paper();
+        let p16 = power_breakdown(&cfg).total_w();
+        cfg.geometry.subarray_groups = 4;
+        let p4 = power_breakdown(&cfg).total_w();
+        assert!(p16 > p4);
+    }
+}

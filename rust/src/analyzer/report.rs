@@ -1,0 +1,86 @@
+//! Paper-style table/series printers (markdown) used by CLI and benches.
+
+use crate::analyzer::latency::ModelAnalysis;
+use crate::analyzer::metrics::PlatformResult;
+use crate::analyzer::power::PowerBreakdown;
+
+/// Fig. 9-style latency breakdown rows.
+pub fn latency_table(analyses: &[ModelAnalysis]) -> String {
+    let mut out = String::from(
+        "| model | processing (ms) | writeback (ms) | total (ms) |\n|---|---|---|---|\n",
+    );
+    for a in analyses {
+        out.push_str(&format!(
+            "| {} | {:.3} | {:.3} | {:.3} |\n",
+            a.name,
+            a.processing_ms,
+            a.writeback_ms,
+            a.total_ms()
+        ));
+    }
+    out
+}
+
+/// Fig. 8-style power breakdown.
+pub fn power_table(b: &PowerBreakdown) -> String {
+    let mut out = String::from("| component | watts | share |\n|---|---|---|\n");
+    let total = b.total_w();
+    for c in &b.components {
+        out.push_str(&format!(
+            "| {} | {:.2} | {:.1}% |\n",
+            c.name,
+            c.watts,
+            100.0 * c.watts / total
+        ));
+    }
+    out.push_str(&format!("| **total** | **{total:.1}** | 100% |\n"));
+    out
+}
+
+/// Fig. 11/12-style cross-platform rows for one model.
+pub fn comparison_table(results: &[PlatformResult], workload_bits: u64) -> String {
+    let mut out = String::from(
+        "| platform | latency (ms) | power (W) | energy (mJ) | EPB (pJ/b) | FPS | FPS/W |\n|---|---|---|---|---|---|---|\n",
+    );
+    for r in results {
+        out.push_str(&format!(
+            "| {} | {:.3} | {:.1} | {:.2} | {:.3} | {:.1} | {:.2} |\n",
+            r.platform,
+            r.latency_ms,
+            r.power_w,
+            r.energy_mj,
+            r.epb_pj(workload_bits),
+            r.fps(),
+            r.fps_per_w()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::latency::analyze_model;
+    use crate::analyzer::power::power_breakdown;
+    use crate::cnn::models::{build_model, Model};
+    use crate::config::OpimaConfig;
+
+    #[test]
+    fn tables_render() {
+        let cfg = OpimaConfig::paper();
+        let a = analyze_model(&cfg, &build_model(Model::ResNet18).unwrap(), 4).unwrap();
+        let t = latency_table(&[a]);
+        assert!(t.contains("resnet18_4b"));
+        let p = power_table(&power_breakdown(&cfg));
+        assert!(p.contains("mdl_array") && p.contains("total"));
+        let r = PlatformResult {
+            platform: "OPIMA".into(),
+            model: "resnet18".into(),
+            latency_ms: 1.0,
+            power_w: 55.9,
+            energy_mj: 5.0,
+            };
+        let c = comparison_table(&[r], 1_000_000);
+        assert!(c.contains("OPIMA"));
+    }
+}

@@ -1,0 +1,88 @@
+//! CrossLight (DAC'21): silicon-photonic CNN accelerator baseline.
+//!
+//! CrossLight computes MVMs in MR weight banks (broadcast-and-weight) but
+//! is *not* a PIM: weights and activations live in external DDR5 DRAM and
+//! every layer's operands cross the memory interface. Its energy story:
+//! photonic MACs are cheap, but thermo-optic weight-bank (re)tuning and
+//! DRAM traffic add up; its latency is capped by the MR bank count.
+
+use crate::analyzer::metrics::PlatformResult;
+use crate::cnn::graph::Network;
+use crate::phys::params::EnergyParams;
+
+#[derive(Debug, Clone)]
+pub struct CrossLight {
+    /// Sustained photonic MAC throughput (MAC/s): MR banks × WDM × rate.
+    pub sustained_macs_per_s: f64,
+    /// Photonic MAC energy (pJ/MAC): laser + modulation share.
+    pub mac_energy_pj: f64,
+    /// Thermo-optic retuning energy per weight programming event
+    /// (pJ/weight): TO heaters hold mW-class power for µs-class lock
+    /// times, so per-weight programming is ~0.5 nJ.
+    pub tune_energy_pj: f64,
+    /// DDR5 interface bandwidth (bits/s) — 4800 MT/s × 64 bit.
+    pub dram_bits_per_s: f64,
+    /// Accelerator power envelope (W).
+    pub power_w: f64,
+}
+
+impl Default for CrossLight {
+    fn default() -> Self {
+        Self {
+            sustained_macs_per_s: 0.023e12,
+            mac_energy_pj: 1.7,
+            tune_energy_pj: 500.0,
+            dram_bits_per_s: 4800e6 * 64.0,
+            power_w: 24.0,
+        }
+    }
+}
+
+impl CrossLight {
+    pub fn evaluate(&self, net: &Network, bits: u32) -> PlatformResult {
+        let e = EnergyParams::default();
+        let macs = net.macs() as f64;
+        let passes = (bits as f64 / 4.0).max(1.0).powi(2); // heterogeneous-quant TDM
+        // All weights + activations cross the DRAM interface each
+        // inference (no PIM): that traffic overlaps compute imperfectly.
+        let moved_bits = ((net.params() + 2 * net.activation_elems()) * bits as u64) as f64;
+        let dram_ms = moved_bits / self.dram_bits_per_s * 1e3;
+        let compute_ms = macs * passes / self.sustained_macs_per_s * 1e3;
+        let latency_ms = compute_ms + 0.6 * dram_ms + 0.05;
+        let energy_mj = macs * passes * self.mac_energy_pj / 1e9
+            + net.params() as f64 * self.tune_energy_pj / 1e9
+            + moved_bits * e.dram_access_pj_per_bit / 1e9;
+        PlatformResult {
+            platform: "CrossLight".into(),
+            model: net.name.clone(),
+            latency_ms,
+            power_w: self.power_w,
+            energy_mj,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::models::{build_model, Model};
+
+    #[test]
+    fn dram_traffic_matters_for_big_models() {
+        let cl = CrossLight::default();
+        let vgg = build_model(Model::Vgg16).unwrap();
+        let r = cl.evaluate(&vgg, 4);
+        // VGG16 weights alone are 134M × 4 bits = 67 MB — a large DRAM
+        // bill at 38.4 GB/s.
+        assert!(r.latency_ms > 100.0, "{}", r.latency_ms);
+    }
+
+    #[test]
+    fn small_model_sane() {
+        let cl = CrossLight::default();
+        let net = build_model(Model::ResNet18).unwrap();
+        let r = cl.evaluate(&net, 4);
+        assert!((10.0..60.0).contains(&r.latency_ms), "{}", r.latency_ms);
+        assert!(r.energy_mj > 0.5);
+    }
+}

@@ -1,0 +1,51 @@
+//! Comparison platforms (paper §V): electronic rooflines (NVIDIA P100,
+//! AMD EPYC 7742, Jetson ORIN), the ReRAM PIM PRIME, and the photonic
+//! platforms CrossLight and PhPIM.
+//!
+//! The paper measured/modeled these systems directly; we cannot, so each
+//! baseline is an analytical model with a mechanistic structure (peak
+//! throughput × sustained utilization + memory-traffic terms + the
+//! platform's characteristic energy story) whose constants are set from
+//! datasheets and, where only relative results are published, calibrated
+//! to the paper's reported ratios. DESIGN.md §2 records the argument;
+//! EXPERIMENTS.md records paper-vs-measured for every ratio.
+
+pub mod crosslight;
+pub mod electronic;
+pub mod phpim;
+pub mod prime;
+
+use crate::analyzer::energy::energy_breakdown;
+use crate::analyzer::latency::analyze_model;
+use crate::analyzer::metrics::PlatformResult;
+use crate::analyzer::power::power_breakdown;
+use crate::cnn::graph::Network;
+use crate::config::OpimaConfig;
+use crate::error::Result;
+
+/// Evaluate OPIMA itself as a platform row (dynamic-energy accounting,
+/// envelope power for FPS/W — see `analyzer::metrics`).
+pub fn evaluate_opima(cfg: &OpimaConfig, net: &Network, bits: u32) -> Result<PlatformResult> {
+    let a = analyze_model(cfg, net, bits)?;
+    let e = energy_breakdown(cfg, &a);
+    Ok(PlatformResult {
+        platform: "OPIMA".into(),
+        model: net.name.clone(),
+        latency_ms: a.total_ms(),
+        power_w: power_breakdown(cfg).total_w(),
+        energy_mj: e.dynamic_mj(),
+    })
+}
+
+/// All seven platforms of Figs. 11/12, OPIMA first.
+pub fn evaluate_all(cfg: &OpimaConfig, net: &Network, bits: u32) -> Result<Vec<PlatformResult>> {
+    Ok(vec![
+        evaluate_opima(cfg, net, bits)?,
+        electronic::np100().evaluate(net, bits),
+        electronic::e7742().evaluate(net, bits),
+        electronic::orin().evaluate(net, bits),
+        prime::Prime::default().evaluate(net, bits),
+        crosslight::CrossLight::default().evaluate(net, bits),
+        phpim::PhPim::new(cfg).evaluate(net, bits),
+    ])
+}

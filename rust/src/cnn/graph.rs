@@ -1,0 +1,278 @@
+//! Shape-tracking network builder and the finished [`Network`].
+//!
+//! The builder maintains the current activation shape and appends bound
+//! [`LayerInstance`]s. Branch/concat (inception modules) and residual
+//! blocks are expressed by building branches from the current shape and
+//! merging: all compute layers land in one flat instance list — exactly
+//! what the OPIMA mapper needs (layer execution is sequential because
+//! each layer consumes its predecessor's written-back feature maps).
+
+use crate::cnn::layer::{Layer, LayerInstance, TensorShape};
+use crate::error::{Error, Result};
+
+/// A finished network.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub input: TensorShape,
+    pub layers: Vec<LayerInstance>,
+    pub output: TensorShape,
+}
+
+impl Network {
+    pub fn params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Compute layers only (conv/fc).
+    pub fn compute_layers(&self) -> impl Iterator<Item = &LayerInstance> {
+        self.layers.iter().filter(|l| l.layer.is_compute())
+    }
+
+    /// MACs carried by accumulation-free (1×1) kernels — the workloads
+    /// that lose OPIMA's WDM parallelism (paper §V.C).
+    pub fn one_by_one_macs(&self) -> u64 {
+        self.compute_layers()
+            .filter(|l| l.layer.spatial_accum() == 1)
+            .map(|l| l.macs())
+            .sum()
+    }
+
+    /// Total activation elements written back across layers.
+    pub fn activation_elems(&self) -> u64 {
+        self.compute_layers().map(|l| l.out_shape.elems()).sum()
+    }
+}
+
+/// Incremental builder.
+#[derive(Debug, Clone)]
+pub struct NetworkBuilder {
+    name: String,
+    input: TensorShape,
+    cur: TensorShape,
+    layers: Vec<LayerInstance>,
+    counter: usize,
+}
+
+impl NetworkBuilder {
+    pub fn new(name: &str, input: TensorShape) -> Self {
+        Self {
+            name: name.to_string(),
+            input,
+            cur: input,
+            layers: Vec::new(),
+            counter: 0,
+        }
+    }
+
+    pub fn current_shape(&self) -> TensorShape {
+        self.cur
+    }
+
+    fn push(&mut self, tag: &str, layer: Layer) -> Result<&mut Self> {
+        let out = layer.out_shape(self.cur)?;
+        self.counter += 1;
+        self.layers.push(LayerInstance {
+            name: format!("{}{}_{}", tag, self.counter, self.name),
+            layer,
+            in_shape: self.cur,
+            out_shape: out,
+        });
+        self.cur = out;
+        Ok(self)
+    }
+
+    /// Standard convolution (+ bias), followed by an implicit ReLU.
+    pub fn conv(
+        &mut self,
+        kh: usize,
+        kw: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Result<&mut Self> {
+        self.push(
+            "conv",
+            Layer::Conv {
+                kh,
+                kw,
+                cout,
+                stride,
+                pad,
+                groups: 1,
+                bias: true,
+            },
+        )
+    }
+
+    /// Depthwise convolution (groups = channels).
+    pub fn dwconv(&mut self, k: usize, stride: usize) -> Result<&mut Self> {
+        let c = self.cur.c;
+        self.push(
+            "dwconv",
+            Layer::Conv {
+                kh: k,
+                kw: k,
+                cout: c,
+                stride,
+                pad: k / 2,
+                groups: c,
+                bias: true,
+            },
+        )
+    }
+
+    /// Pointwise (1×1) convolution.
+    pub fn pwconv(&mut self, cout: usize) -> Result<&mut Self> {
+        self.conv(1, 1, cout, 1, 0)
+    }
+
+    pub fn pool(&mut self, k: usize, stride: usize) -> Result<&mut Self> {
+        self.push("pool", Layer::Pool { k, stride })
+    }
+
+    pub fn global_pool(&mut self) -> Result<&mut Self> {
+        self.push("gap", Layer::GlobalPool)
+    }
+
+    pub fn fc(&mut self, out: usize) -> Result<&mut Self> {
+        self.push("fc", Layer::Fc { out, bias: true })
+    }
+
+    /// Inception-style module: every branch starts from the current
+    /// shape; outputs must agree spatially and concatenate channel-wise.
+    /// Each branch is a list of (kh, kw, cout, stride, pad) convs; an
+    /// empty branch is a channel passthrough (pool-projection branches
+    /// should include their 1×1 projection conv).
+    pub fn inception(&mut self, branches: &[Vec<(usize, usize, usize, usize, usize)>]) -> Result<&mut Self> {
+        if branches.is_empty() {
+            return Err(Error::Model("inception needs branches".into()));
+        }
+        let entry = self.cur;
+        let mut spatial: Option<(usize, usize)> = None;
+        let mut channels = 0usize;
+        for branch in branches {
+            self.cur = entry;
+            if branch.is_empty() {
+                channels += entry.c;
+                spatial.get_or_insert((entry.h, entry.w));
+                continue;
+            }
+            for &(kh, kw, cout, stride, pad) in branch {
+                self.conv(kh, kw, cout, stride, pad)?;
+            }
+            let out = self.cur;
+            match spatial {
+                None => spatial = Some((out.h, out.w)),
+                Some(s) if s == (out.h, out.w) => {}
+                Some(s) => {
+                    return Err(Error::Model(format!(
+                        "inception branch spatial mismatch: {:?} vs {:?}",
+                        s,
+                        (out.h, out.w)
+                    )))
+                }
+            }
+            channels += out.c;
+        }
+        let (h, w) = spatial.unwrap();
+        self.cur = TensorShape::new(h, w, channels);
+        Ok(self)
+    }
+
+    /// Residual basic block (ResNet-18 style): two 3×3 convs; a 1×1
+    /// projection shortcut when stride ≠ 1 or channels change (the
+    /// projection is itself a 1×1 conv and is priced as such).
+    pub fn basic_block(&mut self, cout: usize, stride: usize) -> Result<&mut Self> {
+        let entry = self.cur;
+        self.conv(3, 3, cout, stride, 1)?;
+        self.conv(3, 3, cout, 1, 1)?;
+        if stride != 1 || entry.c != cout {
+            let exit = self.cur;
+            self.cur = entry;
+            self.conv(1, 1, cout, stride, 0)?; // projection shortcut
+            if self.cur != exit {
+                return Err(Error::Model("projection shape mismatch".into()));
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn build(self) -> Network {
+        Network {
+            name: self.name,
+            input: self.input,
+            output: self.cur,
+            layers: self.layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_shapes_track() {
+        let mut b = NetworkBuilder::new("t", TensorShape::new(32, 32, 3));
+        b.conv(3, 3, 16, 1, 1)
+            .unwrap()
+            .pool(2, 2)
+            .unwrap()
+            .conv(3, 3, 32, 1, 1)
+            .unwrap()
+            .global_pool()
+            .unwrap()
+            .fc(10)
+            .unwrap();
+        let n = b.build();
+        assert_eq!(n.output, TensorShape::new(1, 1, 10));
+        // conv1: 3*3*3*16+16; conv2: 3*3*16*32+32; fc: 32*10+10
+        assert_eq!(n.params(), (432 + 16) + (4608 + 32) + (320 + 10));
+    }
+
+    #[test]
+    fn inception_concatenates() {
+        let mut b = NetworkBuilder::new("t", TensorShape::new(16, 16, 32));
+        b.inception(&[
+            vec![(1, 1, 8, 1, 0)],
+            vec![(1, 1, 4, 1, 0), (3, 3, 16, 1, 1)],
+            vec![(1, 1, 4, 1, 0)],
+        ])
+        .unwrap();
+        assert_eq!(b.current_shape(), TensorShape::new(16, 16, 28));
+    }
+
+    #[test]
+    fn inception_rejects_spatial_mismatch() {
+        let mut b = NetworkBuilder::new("t", TensorShape::new(16, 16, 32));
+        let r = b.inception(&[
+            vec![(1, 1, 8, 1, 0)],
+            vec![(3, 3, 8, 2, 1)], // stride 2 shrinks
+        ]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn basic_block_with_projection() {
+        let mut b = NetworkBuilder::new("t", TensorShape::new(32, 32, 64));
+        b.basic_block(128, 2).unwrap();
+        let n = b.build();
+        assert_eq!(n.output, TensorShape::new(16, 16, 128));
+        // Projection shortcut is a 1×1 layer.
+        assert_eq!(n.one_by_one_macs(), 16 * 16 * 128 * 64);
+    }
+
+    #[test]
+    fn one_by_one_macs_counted() {
+        let mut b = NetworkBuilder::new("t", TensorShape::new(8, 8, 16));
+        b.pwconv(32).unwrap().conv(3, 3, 32, 1, 1).unwrap();
+        let n = b.build();
+        assert_eq!(n.one_by_one_macs(), 8 * 8 * 32 * 16);
+        assert!(n.macs() > n.one_by_one_macs());
+    }
+}

@@ -1,0 +1,268 @@
+//! Layer descriptors: shape, parameter and MAC arithmetic.
+
+use crate::error::{Error, Result};
+
+/// A (height, width, channels) activation shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl TensorShape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c }
+    }
+
+    pub fn elems(&self) -> u64 {
+        (self.h * self.w * self.c) as u64
+    }
+}
+
+/// A layer kind.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// 2-D convolution. `groups` > 1 models grouped/depthwise convs
+    /// (depthwise: groups == cin == cout).
+    Conv {
+        kh: usize,
+        kw: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        bias: bool,
+    },
+    /// Fully connected over the flattened input.
+    Fc { out: usize, bias: bool },
+    /// Max/avg pooling (no params, no MACs in our accounting).
+    Pool { k: usize, stride: usize },
+    /// Global average pooling to 1×1.
+    GlobalPool,
+    /// Element-wise activation (applied at the E-O-E controller; free).
+    Relu,
+}
+
+impl Layer {
+    /// Output shape given the input shape.
+    pub fn out_shape(&self, input: TensorShape) -> Result<TensorShape> {
+        match *self {
+            Layer::Conv {
+                kh,
+                kw,
+                cout,
+                stride,
+                pad,
+                groups,
+                ..
+            } => {
+                if stride == 0 || groups == 0 {
+                    return Err(Error::Model("stride/groups must be positive".into()));
+                }
+                if input.c % groups != 0 || cout % groups != 0 {
+                    return Err(Error::Model(format!(
+                        "channels {} / cout {} not divisible by groups {}",
+                        input.c, cout, groups
+                    )));
+                }
+                if input.h + 2 * pad < kh || input.w + 2 * pad < kw {
+                    return Err(Error::Model("kernel larger than padded input".into()));
+                }
+                Ok(TensorShape::new(
+                    (input.h + 2 * pad - kh) / stride + 1,
+                    (input.w + 2 * pad - kw) / stride + 1,
+                    cout,
+                ))
+            }
+            Layer::Fc { out, .. } => Ok(TensorShape::new(1, 1, out)),
+            Layer::Pool { k, stride } => {
+                if stride == 0 || input.h < k || input.w < k {
+                    return Err(Error::Model("bad pool geometry".into()));
+                }
+                Ok(TensorShape::new(
+                    (input.h - k) / stride + 1,
+                    (input.w - k) / stride + 1,
+                    input.c,
+                ))
+            }
+            Layer::GlobalPool => Ok(TensorShape::new(1, 1, input.c)),
+            Layer::Relu => Ok(input),
+        }
+    }
+
+    /// Trainable parameter count.
+    pub fn params(&self, input: TensorShape) -> u64 {
+        match *self {
+            Layer::Conv {
+                kh,
+                kw,
+                cout,
+                groups,
+                bias,
+                ..
+            } => {
+                let weights = (kh * kw * (input.c / groups) * cout) as u64;
+                weights + if bias { cout as u64 } else { 0 }
+            }
+            Layer::Fc { out, bias } => {
+                input.elems() * out as u64 + if bias { out as u64 } else { 0 }
+            }
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate operations for one inference.
+    pub fn macs(&self, input: TensorShape) -> Result<u64> {
+        match *self {
+            Layer::Conv {
+                kh, kw, groups, ..
+            } => {
+                let out = self.out_shape(input)?;
+                Ok(out.elems() * (kh * kw * (input.c / groups)) as u64)
+            }
+            Layer::Fc { out, .. } => Ok(input.elems() * out as u64),
+            _ => Ok(0),
+        }
+    }
+
+    /// Spatial accumulation depth available to OPIMA's in-waveguide sum:
+    /// kernel rows pair across subarrays (paper §IV.D). 1×1 kernels have
+    /// no partner (the serialization hazard); FC layers chunk their long
+    /// reductions into pairable row-vectors.
+    pub fn spatial_accum(&self) -> usize {
+        match *self {
+            Layer::Conv { kh, .. } => kh,
+            Layer::Fc { .. } => 2,
+            _ => 0,
+        }
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Layer::Conv { .. } | Layer::Fc { .. })
+    }
+}
+
+/// A layer bound to concrete input/output shapes inside a network.
+#[derive(Debug, Clone)]
+pub struct LayerInstance {
+    pub name: String,
+    pub layer: Layer,
+    pub in_shape: TensorShape,
+    pub out_shape: TensorShape,
+}
+
+impl LayerInstance {
+    pub fn params(&self) -> u64 {
+        self.layer.params(self.in_shape)
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.layer.macs(self.in_shape).expect("validated at build")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_and_params() {
+        let l = Layer::Conv {
+            kh: 3,
+            kw: 3,
+            cout: 64,
+            stride: 1,
+            pad: 1,
+            groups: 1,
+            bias: true,
+        };
+        let inp = TensorShape::new(32, 32, 3);
+        assert_eq!(l.out_shape(inp).unwrap(), TensorShape::new(32, 32, 64));
+        assert_eq!(l.params(inp), 3 * 3 * 3 * 64 + 64);
+        assert_eq!(l.macs(inp).unwrap(), 32 * 32 * 64 * 27);
+        assert_eq!(l.spatial_accum(), 3);
+    }
+
+    #[test]
+    fn strided_conv_shape() {
+        let l = Layer::Conv {
+            kh: 3,
+            kw: 3,
+            cout: 128,
+            stride: 2,
+            pad: 1,
+            groups: 1,
+            bias: false,
+        };
+        let out = l.out_shape(TensorShape::new(32, 32, 64)).unwrap();
+        assert_eq!(out, TensorShape::new(16, 16, 128));
+    }
+
+    #[test]
+    fn depthwise_conv() {
+        let l = Layer::Conv {
+            kh: 3,
+            kw: 3,
+            cout: 64,
+            stride: 1,
+            pad: 1,
+            groups: 64,
+            bias: false,
+        };
+        let inp = TensorShape::new(16, 16, 64);
+        assert_eq!(l.params(inp), 3 * 3 * 64);
+        assert_eq!(l.macs(inp).unwrap(), 16 * 16 * 64 * 9);
+    }
+
+    #[test]
+    fn fc_counts() {
+        let l = Layer::Fc {
+            out: 100,
+            bias: true,
+        };
+        let inp = TensorShape::new(1, 1, 512);
+        assert_eq!(l.params(inp), 512 * 100 + 100);
+        assert_eq!(l.macs(inp).unwrap(), 51_200);
+        assert_eq!(l.spatial_accum(), 2);
+    }
+
+    #[test]
+    fn pool_and_global_pool() {
+        let p = Layer::Pool { k: 2, stride: 2 };
+        assert_eq!(
+            p.out_shape(TensorShape::new(32, 32, 64)).unwrap(),
+            TensorShape::new(16, 16, 64)
+        );
+        assert_eq!(p.params(TensorShape::new(32, 32, 64)), 0);
+        let g = Layer::GlobalPool;
+        assert_eq!(
+            g.out_shape(TensorShape::new(7, 7, 512)).unwrap(),
+            TensorShape::new(1, 1, 512)
+        );
+    }
+
+    #[test]
+    fn invalid_geometry_rejected() {
+        let l = Layer::Conv {
+            kh: 5,
+            kw: 5,
+            cout: 8,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            bias: false,
+        };
+        assert!(l.out_shape(TensorShape::new(3, 3, 1)).is_err());
+        let l = Layer::Conv {
+            kh: 1,
+            kw: 1,
+            cout: 7,
+            stride: 1,
+            pad: 0,
+            groups: 2,
+            bias: false,
+        };
+        assert!(l.out_shape(TensorShape::new(8, 8, 4)).is_err());
+    }
+}

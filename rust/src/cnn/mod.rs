@@ -1,0 +1,21 @@
+//! CNN graph IR and the paper's evaluation model zoo (Table II).
+//!
+//! - [`layer`] — conv/fc/pool layer descriptors with exact shape, MAC and
+//!   parameter arithmetic.
+//! - [`graph`] — a shape-tracking network builder (sequential spine with
+//!   inception-style branch/concat and residual blocks) producing the
+//!   per-layer workload stream the mapper consumes.
+//! - [`models`] — ResNet18, InceptionV2(-S), MobileNet, SqueezeNet and
+//!   VGG16 as evaluated in the paper, with parameter counts checked
+//!   against Table II.
+//! - [`quant`] — model bit-width variants (fp32/int8/int4) and the
+//!   accuracy table loaded from the Python training artifact.
+
+pub mod graph;
+pub mod layer;
+pub mod models;
+pub mod quant;
+
+pub use graph::{Network, NetworkBuilder};
+pub use layer::{Layer, LayerInstance, TensorShape};
+pub use models::{build_model, Model, ALL_MODELS};

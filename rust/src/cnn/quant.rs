@@ -1,0 +1,106 @@
+//! Model quantization variants and the measured accuracy artifact.
+//!
+//! The paper evaluates 4-bit (the cell-native width) and 8-bit variants
+//! of each model (Fig. 9). Our functional accuracy evidence comes from
+//! the Python layer: `make artifacts` trains a small CNN and sweeps
+//! fp32/int8/int4 through the photonic pipeline, writing
+//! `artifacts/table2_accuracy.json`, which this module loads.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// A bit-width variant of a model (paper Fig. 9's "4b"/"8b").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BitVariant {
+    Int4,
+    Int8,
+}
+
+impl BitVariant {
+    pub fn bits(&self) -> u32 {
+        match self {
+            BitVariant::Int4 => 4,
+            BitVariant::Int8 => 8,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BitVariant::Int4 => "4b",
+            BitVariant::Int8 => "8b",
+        }
+    }
+}
+
+pub const BIT_VARIANTS: [BitVariant; 2] = [BitVariant::Int4, BitVariant::Int8];
+
+/// Measured quantization sweep from the Python artifact (our Table II
+/// substitution: a small CNN trained on the synthetic dataset, executed
+/// through the photonic pipeline with the 5-bit ADC model).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredAccuracy {
+    pub parameter_count: u64,
+    pub fp32: f64,
+    pub int8: f64,
+    pub int4: f64,
+}
+
+impl MeasuredAccuracy {
+    /// Load from `artifacts/table2_accuracy.json`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text)?;
+        let f = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Json(format!("missing field {k}")))
+        };
+        Ok(Self {
+            parameter_count: f("parameter_count")? as u64,
+            fp32: f("fp32")?,
+            int8: f("int8")?,
+            int4: f("int4")?,
+        })
+    }
+
+    /// The Table II shape: fp32 ≥ int8 ≥ int4.
+    pub fn is_monotone(&self) -> bool {
+        self.fp32 >= self.int8 - 1e-9 && self.int8 >= self.int4 - 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants() {
+        assert_eq!(BitVariant::Int4.bits(), 4);
+        assert_eq!(BitVariant::Int8.bits(), 8);
+        assert_eq!(BitVariant::Int4.label(), "4b");
+    }
+
+    #[test]
+    fn load_accuracy_artifact() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/table2_accuracy.json");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let acc = MeasuredAccuracy::load(&path).unwrap();
+        assert!(acc.is_monotone(), "fp32 ≥ int8 ≥ int4 must hold: {acc:?}");
+        assert!(acc.fp32 > 0.9, "trained model should classify well");
+        assert!(acc.int4 > 0.5, "int4 must stay usable");
+    }
+
+    #[test]
+    fn malformed_artifact_rejected() {
+        let dir = std::env::temp_dir().join("opima_quant_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, "{\"fp32\": 1.0}").unwrap();
+        assert!(MeasuredAccuracy::load(&p).is_err());
+    }
+}

@@ -1,0 +1,496 @@
+//! Central configuration for the OPIMA architecture.
+//!
+//! Geometry defaults follow the paper's evaluation configuration (§V):
+//! 4 banks, 64×64 subarrays per bank, 256 MDLs per subarray, 256×512 OPCM
+//! elements per subarray, 4 bits/cell, 16 subarray groups. Device loss and
+//! energy parameters are the paper's Table I. Everything is `serde`-
+//! (de)serializable so experiments can be driven from TOML files.
+
+
+
+use crate::error::{Error, Result};
+use crate::phys::params::{EnergyParams, LossParams};
+
+/// Memory/PIM geometry (paper §V first paragraph).
+#[derive(Debug, Clone, PartialEq)]
+
+pub struct Geometry {
+    /// Number of banks. Bounded by the MDM degree (4 modes → 4 banks,
+    /// paper §IV.C.1).
+    pub banks: usize,
+    /// Subarray grid: rows of subarrays per bank.
+    pub subarray_rows: usize,
+    /// Subarray grid: columns of subarrays per bank.
+    pub subarray_cols: usize,
+    /// OPCM cell rows per subarray.
+    pub rows_per_subarray: usize,
+    /// OPCM cell columns per subarray (= WDM degree = MDL count; the paper
+    /// gives 256 MDLs per subarray, "reflecting the column number").
+    pub cols_per_subarray: usize,
+    /// Bits stored per OPCM multi-level cell (16 transmission levels → 4).
+    pub bits_per_cell: u32,
+    /// Number of subarray groups for PIM (16 chosen in Fig. 7).
+    pub subarray_groups: usize,
+    /// MDM degree: concurrently excited waveguide modes (max 4, §IV.C.1).
+    pub mdm_degree: usize,
+}
+
+impl Default for Geometry {
+    fn default() -> Self {
+        Self {
+            banks: 4,
+            subarray_rows: 64,
+            subarray_cols: 64,
+            rows_per_subarray: 512,
+            cols_per_subarray: 256,
+            bits_per_cell: 4,
+            subarray_groups: 16,
+            mdm_degree: 4,
+        }
+    }
+}
+
+impl Geometry {
+    /// Total OPCM cells in the memory.
+    pub fn total_cells(&self) -> u64 {
+        self.banks as u64
+            * self.subarrays_per_bank() as u64
+            * self.cells_per_subarray() as u64
+    }
+
+    pub fn subarrays_per_bank(&self) -> usize {
+        self.subarray_rows * self.subarray_cols
+    }
+
+    pub fn cells_per_subarray(&self) -> usize {
+        self.rows_per_subarray * self.cols_per_subarray
+    }
+
+    /// Memory capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.total_cells() * self.bits_per_cell as u64 / 8
+    }
+
+    /// Subarray rows per group (64 subarray rows / 16 groups = 4).
+    pub fn subarray_rows_per_group(&self) -> usize {
+        self.subarray_rows / self.subarray_groups
+    }
+
+    /// Peak MAC lanes per cycle: per bank, one subarray row per group is
+    /// PIM-active; each active subarray contributes `cols_per_subarray`
+    /// wavelength lanes (paper §IV.C.2).
+    pub fn peak_mac_lanes(&self) -> u64 {
+        (self.banks * self.subarray_groups * self.subarray_cols * self.cols_per_subarray)
+            as u64
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.banks == 0 || self.banks > self.mdm_degree {
+            return Err(Error::Config(format!(
+                "banks ({}) must be in 1..=mdm_degree ({}): each bank needs a \
+                 dedicated waveguide mode (paper §IV.C.1)",
+                self.banks, self.mdm_degree
+            )));
+        }
+        if self.mdm_degree == 0 || self.mdm_degree > 4 {
+            return Err(Error::Config(
+                "mdm_degree must be 1..=4: >4 modes need impractically wide \
+                 waveguides and suffer intermodal crosstalk (paper §IV.C.1)"
+                    .into(),
+            ));
+        }
+        if self.subarray_groups == 0 || self.subarray_groups > self.subarray_rows {
+            return Err(Error::Config(format!(
+                "subarray_groups ({}) must be in 1..=subarray_rows ({})",
+                self.subarray_groups, self.subarray_rows
+            )));
+        }
+        if self.subarray_rows % self.subarray_groups != 0 {
+            return Err(Error::Config(format!(
+                "subarray_rows ({}) must be divisible by subarray_groups ({})",
+                self.subarray_rows, self.subarray_groups
+            )));
+        }
+        if self.bits_per_cell == 0 || self.bits_per_cell > 8 {
+            return Err(Error::Config(format!(
+                "bits_per_cell ({}) out of the physically plausible 1..=8",
+                self.bits_per_cell
+            )));
+        }
+        if self.rows_per_subarray == 0
+            || self.cols_per_subarray == 0
+            || self.subarray_rows == 0
+            || self.subarray_cols == 0
+        {
+            return Err(Error::Config("geometry dimensions must be nonzero".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Timing parameters (clock + OPCM access latencies).
+#[derive(Debug, Clone, PartialEq)]
+
+pub struct Timing {
+    /// Photonic MAC/memory clock in GHz (MDL modulation rate; COMET-class
+    /// OPCM memories run a 5 GHz optical clock).
+    pub clock_ghz: f64,
+    /// OPCM read latency in ns (laser settle + propagation + PD/ADC).
+    pub read_ns: f64,
+    /// OPCM MLC write latency in ns. Multi-level programming is an
+    /// iterative pulse-and-verify train (partial crystallization must hit
+    /// one of 16 transmission targets), putting MLC writes in the µs
+    /// class — this is what makes writeback dominate CNN inference
+    /// latency in the paper's Fig. 9.
+    pub write_ns: f64,
+    /// Aggregation-unit pipeline latency in ns (PD + ADC + shift-add).
+    pub aggregation_ns: f64,
+    /// E-O-E controller round-trip for writeback staging, per tile, in ns.
+    pub writeback_overhead_ns: f64,
+}
+
+impl Default for Timing {
+    fn default() -> Self {
+        Self {
+            clock_ghz: 5.0,
+            read_ns: 0.8,
+            write_ns: 1000.0,
+            aggregation_ns: 1.2,
+            writeback_overhead_ns: 4.0,
+        }
+    }
+}
+
+impl Timing {
+    pub fn cycle_ns(&self) -> f64 {
+        1.0 / self.clock_ghz
+    }
+}
+
+/// Power-model parameters not covered by Table I.
+#[derive(Debug, Clone, PartialEq)]
+
+pub struct PowerModel {
+    /// Wall-plug power per active microdisk laser, in mW.
+    pub mdl_wallplug_mw: f64,
+    /// External (main-memory) laser wall-plug power, in W.
+    pub external_laser_w: f64,
+    /// Per-SOA bias power, in mW.
+    pub soa_bias_mw: f64,
+    /// EO MR tuning power per active ring, in mW (free-carrier injection).
+    pub mr_tuning_mw: f64,
+    /// VCSEL regeneration power per active channel, in mW.
+    pub vcsel_mw: f64,
+    /// Aggregation-unit SRAM + shift-add logic per bank, in W.
+    pub aggregation_logic_w: f64,
+    /// E-O-E controller (serdes, caching, command decode), in W.
+    pub controller_w: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        Self {
+            mdl_wallplug_mw: 0.6,
+            external_laser_w: 4.0,
+            soa_bias_mw: 12.0,
+            mr_tuning_mw: 0.04,
+            vcsel_mw: 2.5,
+            aggregation_logic_w: 0.45,
+            controller_w: 5.2,
+        }
+    }
+}
+
+/// PIM datapath parameters.
+#[derive(Debug, Clone, PartialEq)]
+
+pub struct PimParams {
+    /// ADC resolution at the aggregation unit (5 bits, paper §IV.C.4).
+    pub adc_bits: u32,
+    /// Products optically summed per readout (in-waveguide accumulation
+    /// group; 2 in the paper's worked example).
+    pub optical_accum: usize,
+    /// Clean λ lanes per bank for accumulation-free (1×1-kernel) layers:
+    /// lone products cannot share a readout bus with anything (§V.C), so
+    /// parallelism collapses to a couple of guarded lanes per bank.
+    pub one_by_one_lanes_per_bank: usize,
+    /// Concurrent MLC write lanes for activation writeback across the
+    /// whole memory (optical write power budget bounds how many µs-class
+    /// program-and-verify trains can run at once).
+    pub writeback_lanes: usize,
+}
+
+impl Default for PimParams {
+    fn default() -> Self {
+        Self {
+            adc_bits: 5,
+            optical_accum: 2,
+            one_by_one_lanes_per_bank: 2,
+            writeback_lanes: 512,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+
+pub struct OpimaConfig {
+    pub geometry: Geometry,
+    pub timing: Timing,
+    pub power: PowerModel,
+    pub pim: PimParams,
+    pub losses: LossParams,
+    pub energy: EnergyParams,
+}
+
+impl OpimaConfig {
+    /// The paper's evaluation configuration.
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.geometry.validate()?;
+        if self.timing.clock_ghz <= 0.0 {
+            return Err(Error::Config("clock_ghz must be positive".into()));
+        }
+        if self.timing.write_ns < self.timing.read_ns {
+            return Err(Error::Config(
+                "OPCM writes are multi-pulse phase transitions and cannot be \
+                 faster than reads"
+                    .into(),
+            ));
+        }
+        if self.pim.adc_bits == 0 || self.pim.adc_bits > 16 {
+            return Err(Error::Config("adc_bits must be 1..=16".into()));
+        }
+        if self.pim.optical_accum == 0 {
+            return Err(Error::Config("optical_accum must be positive".into()));
+        }
+        if self.pim.one_by_one_lanes_per_bank == 0 || self.pim.writeback_lanes == 0 {
+            return Err(Error::Config(
+                "one_by_one_lanes_per_bank and writeback_lanes must be positive".into(),
+            ));
+        }
+        self.losses.validate()?;
+        self.energy.validate()?;
+        Ok(())
+    }
+
+    /// Load from a TOML(-subset) file; unspecified keys keep paper defaults.
+    pub fn from_toml_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML(-subset) text over paper defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = crate::util::tomlite::Doc::parse(text)?;
+        let mut cfg = Self::default();
+        {
+            let g = &mut cfg.geometry;
+            g.banks = doc.usize_or("geometry.banks", g.banks);
+            g.subarray_rows = doc.usize_or("geometry.subarray_rows", g.subarray_rows);
+            g.subarray_cols = doc.usize_or("geometry.subarray_cols", g.subarray_cols);
+            g.rows_per_subarray = doc.usize_or("geometry.rows_per_subarray", g.rows_per_subarray);
+            g.cols_per_subarray = doc.usize_or("geometry.cols_per_subarray", g.cols_per_subarray);
+            g.bits_per_cell = doc.usize_or("geometry.bits_per_cell", g.bits_per_cell as usize) as u32;
+            g.subarray_groups = doc.usize_or("geometry.subarray_groups", g.subarray_groups);
+            g.mdm_degree = doc.usize_or("geometry.mdm_degree", g.mdm_degree);
+        }
+        {
+            let t = &mut cfg.timing;
+            t.clock_ghz = doc.f64_or("timing.clock_ghz", t.clock_ghz);
+            t.read_ns = doc.f64_or("timing.read_ns", t.read_ns);
+            t.write_ns = doc.f64_or("timing.write_ns", t.write_ns);
+            t.aggregation_ns = doc.f64_or("timing.aggregation_ns", t.aggregation_ns);
+            t.writeback_overhead_ns =
+                doc.f64_or("timing.writeback_overhead_ns", t.writeback_overhead_ns);
+        }
+        {
+            let p = &mut cfg.power;
+            p.mdl_wallplug_mw = doc.f64_or("power.mdl_wallplug_mw", p.mdl_wallplug_mw);
+            p.external_laser_w = doc.f64_or("power.external_laser_w", p.external_laser_w);
+            p.soa_bias_mw = doc.f64_or("power.soa_bias_mw", p.soa_bias_mw);
+            p.mr_tuning_mw = doc.f64_or("power.mr_tuning_mw", p.mr_tuning_mw);
+            p.vcsel_mw = doc.f64_or("power.vcsel_mw", p.vcsel_mw);
+            p.aggregation_logic_w = doc.f64_or("power.aggregation_logic_w", p.aggregation_logic_w);
+            p.controller_w = doc.f64_or("power.controller_w", p.controller_w);
+        }
+        {
+            let p = &mut cfg.pim;
+            p.adc_bits = doc.usize_or("pim.adc_bits", p.adc_bits as usize) as u32;
+            p.optical_accum = doc.usize_or("pim.optical_accum", p.optical_accum);
+            p.one_by_one_lanes_per_bank =
+                doc.usize_or("pim.one_by_one_lanes_per_bank", p.one_by_one_lanes_per_bank);
+            p.writeback_lanes = doc.usize_or("pim.writeback_lanes", p.writeback_lanes);
+        }
+        {
+            let l = &mut cfg.losses;
+            l.directional_coupler_db =
+                doc.f64_or("losses.directional_coupler_db", l.directional_coupler_db);
+            l.mr_drop_db = doc.f64_or("losses.mr_drop_db", l.mr_drop_db);
+            l.mr_through_db = doc.f64_or("losses.mr_through_db", l.mr_through_db);
+            l.propagation_db_per_cm =
+                doc.f64_or("losses.propagation_db_per_cm", l.propagation_db_per_cm);
+            l.bend_db_per_90 = doc.f64_or("losses.bend_db_per_90", l.bend_db_per_90);
+            l.eo_mr_drop_db = doc.f64_or("losses.eo_mr_drop_db", l.eo_mr_drop_db);
+            l.eo_mr_through_db = doc.f64_or("losses.eo_mr_through_db", l.eo_mr_through_db);
+            l.soa_gain_db = doc.f64_or("losses.soa_gain_db", l.soa_gain_db);
+            l.gst_switch_db = doc.f64_or("losses.gst_switch_db", l.gst_switch_db);
+            l.mode_converter_db = doc.f64_or("losses.mode_converter_db", l.mode_converter_db);
+            l.crossing_db = doc.f64_or("losses.crossing_db", l.crossing_db);
+            l.crossing_crosstalk_db =
+                doc.f64_or("losses.crossing_crosstalk_db", l.crossing_crosstalk_db);
+        }
+        {
+            let e = &mut cfg.energy;
+            e.opcm_read_pj = doc.f64_or("energy.opcm_read_pj", e.opcm_read_pj);
+            e.opcm_write_pj = doc.f64_or("energy.opcm_write_pj", e.opcm_write_pj);
+            e.epcm_write_nj = doc.f64_or("energy.epcm_write_nj", e.epcm_write_nj);
+            e.dram_access_pj_per_bit =
+                doc.f64_or("energy.dram_access_pj_per_bit", e.dram_access_pj_per_bit);
+            e.adc_fj_per_step = doc.f64_or("energy.adc_fj_per_step", e.adc_fj_per_step);
+            e.dac_pj_per_bit = doc.f64_or("energy.dac_pj_per_bit", e.dac_pj_per_bit);
+            e.sram_pj_per_bit = doc.f64_or("energy.sram_pj_per_bit", e.sram_pj_per_bit);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to TOML(-subset) text.
+    pub fn to_toml(&self) -> String {
+        use crate::util::tomlite::Value as V;
+        use std::collections::BTreeMap;
+        let mut sections: BTreeMap<String, BTreeMap<String, V>> = BTreeMap::new();
+        let g = &self.geometry;
+        sections.insert(
+            "geometry".into(),
+            BTreeMap::from([
+                ("banks".into(), V::Int(g.banks as i64)),
+                ("subarray_rows".into(), V::Int(g.subarray_rows as i64)),
+                ("subarray_cols".into(), V::Int(g.subarray_cols as i64)),
+                ("rows_per_subarray".into(), V::Int(g.rows_per_subarray as i64)),
+                ("cols_per_subarray".into(), V::Int(g.cols_per_subarray as i64)),
+                ("bits_per_cell".into(), V::Int(g.bits_per_cell as i64)),
+                ("subarray_groups".into(), V::Int(g.subarray_groups as i64)),
+                ("mdm_degree".into(), V::Int(g.mdm_degree as i64)),
+            ]),
+        );
+        let t = &self.timing;
+        sections.insert(
+            "timing".into(),
+            BTreeMap::from([
+                ("clock_ghz".into(), V::Float(t.clock_ghz)),
+                ("read_ns".into(), V::Float(t.read_ns)),
+                ("write_ns".into(), V::Float(t.write_ns)),
+                ("aggregation_ns".into(), V::Float(t.aggregation_ns)),
+                ("writeback_overhead_ns".into(), V::Float(t.writeback_overhead_ns)),
+            ]),
+        );
+        let p = &self.power;
+        sections.insert(
+            "power".into(),
+            BTreeMap::from([
+                ("mdl_wallplug_mw".into(), V::Float(p.mdl_wallplug_mw)),
+                ("external_laser_w".into(), V::Float(p.external_laser_w)),
+                ("soa_bias_mw".into(), V::Float(p.soa_bias_mw)),
+                ("mr_tuning_mw".into(), V::Float(p.mr_tuning_mw)),
+                ("vcsel_mw".into(), V::Float(p.vcsel_mw)),
+                ("aggregation_logic_w".into(), V::Float(p.aggregation_logic_w)),
+                ("controller_w".into(), V::Float(p.controller_w)),
+            ]),
+        );
+        let pi = &self.pim;
+        sections.insert(
+            "pim".into(),
+            BTreeMap::from([
+                ("adc_bits".into(), V::Int(pi.adc_bits as i64)),
+                ("optical_accum".into(), V::Int(pi.optical_accum as i64)),
+                ("one_by_one_lanes_per_bank".into(), V::Int(pi.one_by_one_lanes_per_bank as i64)),
+                ("writeback_lanes".into(), V::Int(pi.writeback_lanes as i64)),
+            ]),
+        );
+        let l = &self.losses;
+        sections.insert(
+            "losses".into(),
+            BTreeMap::from([
+                ("directional_coupler_db".into(), V::Float(l.directional_coupler_db)),
+                ("mr_drop_db".into(), V::Float(l.mr_drop_db)),
+                ("mr_through_db".into(), V::Float(l.mr_through_db)),
+                ("propagation_db_per_cm".into(), V::Float(l.propagation_db_per_cm)),
+                ("bend_db_per_90".into(), V::Float(l.bend_db_per_90)),
+                ("eo_mr_drop_db".into(), V::Float(l.eo_mr_drop_db)),
+                ("eo_mr_through_db".into(), V::Float(l.eo_mr_through_db)),
+                ("soa_gain_db".into(), V::Float(l.soa_gain_db)),
+                ("gst_switch_db".into(), V::Float(l.gst_switch_db)),
+                ("mode_converter_db".into(), V::Float(l.mode_converter_db)),
+                ("crossing_db".into(), V::Float(l.crossing_db)),
+                ("crossing_crosstalk_db".into(), V::Float(l.crossing_crosstalk_db)),
+            ]),
+        );
+        let e = &self.energy;
+        sections.insert(
+            "energy".into(),
+            BTreeMap::from([
+                ("opcm_read_pj".into(), V::Float(e.opcm_read_pj)),
+                ("opcm_write_pj".into(), V::Float(e.opcm_write_pj)),
+                ("epcm_write_nj".into(), V::Float(e.epcm_write_nj)),
+                ("dram_access_pj_per_bit".into(), V::Float(e.dram_access_pj_per_bit)),
+                ("adc_fj_per_step".into(), V::Float(e.adc_fj_per_step)),
+                ("dac_pj_per_bit".into(), V::Float(e.dac_pj_per_bit)),
+                ("sram_pj_per_bit".into(), V::Float(e.sram_pj_per_bit)),
+            ]),
+        );
+        crate::util::tomlite::to_string(&sections)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_valid() {
+        OpimaConfig::paper().validate().unwrap();
+    }
+
+    #[test]
+    fn paper_geometry_capacity() {
+        let g = Geometry::default();
+        // 4 banks × 4096 subarrays × 131072 cells × 4 bits = 1 GiB.
+        assert_eq!(g.capacity_bytes(), 1 << 30);
+        assert_eq!(g.subarrays_per_bank(), 4096);
+        assert_eq!(g.subarray_rows_per_group(), 4);
+    }
+
+    #[test]
+    fn invalid_geometries_rejected() {
+        let mut g = Geometry {
+            banks: 5,
+            ..Default::default()
+        };
+        assert!(g.validate().is_err(), "banks > mdm_degree");
+        g.banks = 4;
+        g.subarray_groups = 60; // not a divisor of 64
+        assert!(g.validate().is_err());
+        g.subarray_groups = 16;
+        g.bits_per_cell = 0;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn write_slower_than_read_enforced() {
+        let mut c = OpimaConfig::paper();
+        c.timing.write_ns = 0.1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = OpimaConfig::paper();
+        let text = cfg.to_toml();
+        let back = OpimaConfig::from_toml(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+}

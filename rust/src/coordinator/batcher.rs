@@ -1,0 +1,170 @@
+//! Dynamic batching: group same-variant requests up to the artifact
+//! batch size, flushing on size or deadline (vLLM-router-style policy,
+//! specialized to fixed-shape AOT artifacts).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::{InferenceRequest, Variant};
+
+/// A flushed batch (all one variant, ≤ `max_batch` requests).
+#[derive(Debug)]
+pub struct Batch {
+    pub variant: Variant,
+    pub requests: Vec<InferenceRequest>,
+    pub formed_at: Instant,
+}
+
+/// Size/deadline-triggered batcher with per-variant queues.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    max_batch: usize,
+    max_wait: Duration,
+    queues: Vec<(Variant, VecDeque<InferenceRequest>)>,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Self {
+            max_batch,
+            max_wait,
+            queues: vec![
+                (Variant::Fp32, VecDeque::new()),
+                (Variant::Int8, VecDeque::new()),
+                (Variant::Int4, VecDeque::new()),
+            ],
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Enqueue a request; returns a batch if the size trigger fired.
+    pub fn push(&mut self, req: InferenceRequest) -> Option<Batch> {
+        let variant = req.variant;
+        let q = self.queue_mut(variant);
+        q.push_back(req);
+        if q.len() >= self.max_batch {
+            return self.take(variant);
+        }
+        None
+    }
+
+    /// Flush any queue whose oldest request has exceeded the deadline.
+    pub fn poll(&mut self, now: Instant) -> Vec<Batch> {
+        let expired: Vec<Variant> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                q.front()
+                    .is_some_and(|r| now.duration_since(r.arrival) >= self.max_wait)
+            })
+            .map(|(v, _)| *v)
+            .collect();
+        expired.into_iter().filter_map(|v| self.take(v)).collect()
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let variants: Vec<Variant> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(v, _)| *v)
+            .collect();
+        variants.into_iter().filter_map(|v| self.take(v)).collect()
+    }
+
+    /// Outstanding (unbatched) requests.
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    fn queue_mut(&mut self, v: Variant) -> &mut VecDeque<InferenceRequest> {
+        &mut self
+            .queues
+            .iter_mut()
+            .find(|(qv, _)| *qv == v)
+            .expect("all variants present")
+            .1
+    }
+
+    fn take(&mut self, v: Variant) -> Option<Batch> {
+        let max = self.max_batch;
+        let q = self.queue_mut(v);
+        if q.is_empty() {
+            return None;
+        }
+        let n = q.len().min(max);
+        let requests: Vec<InferenceRequest> = q.drain(..n).collect();
+        Some(Batch {
+            variant: v,
+            requests,
+            formed_at: Instant::now(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, v: Variant) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            image: vec![0.0; 4],
+            variant: v,
+            arrival: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn size_trigger() {
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(10));
+        assert!(b.push(req(0, Variant::Int4)).is_none());
+        assert!(b.push(req(1, Variant::Int4)).is_none());
+        let batch = b.push(req(2, Variant::Int4)).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.variant, Variant::Int4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn variants_do_not_mix() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        assert!(b.push(req(0, Variant::Int4)).is_none());
+        assert!(b.push(req(1, Variant::Int8)).is_none());
+        assert_eq!(b.pending(), 2);
+        let batch = b.push(req(2, Variant::Int4)).unwrap();
+        assert!(batch.requests.iter().all(|r| r.variant == Variant::Int4));
+    }
+
+    #[test]
+    fn deadline_trigger() {
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(0));
+        b.push(req(0, Variant::Fp32));
+        let batches = b.poll(Instant::now() + Duration::from_millis(1));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 1);
+    }
+
+    #[test]
+    fn deadline_not_yet() {
+        let mut b = DynamicBatcher::new(100, Duration::from_secs(60));
+        b.push(req(0, Variant::Fp32));
+        assert!(b.poll(Instant::now()).is_empty());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn drain_flushes_all() {
+        let mut b = DynamicBatcher::new(100, Duration::from_secs(60));
+        b.push(req(0, Variant::Fp32));
+        b.push(req(1, Variant::Int4));
+        let batches = b.drain();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+}

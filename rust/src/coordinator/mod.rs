@@ -1,0 +1,21 @@
+//! The serving coordinator: OPIMA as an inference appliance.
+//!
+//! A thread-based event loop (request queue → dynamic batcher → router →
+//! PJRT-backed workers) that serves CNN classification requests. The
+//! functional result comes from executing the AOT HLO artifacts through
+//! PJRT; the *architectural* cost of each batch (what the OPIMA hardware
+//! would have spent) is metered by the simulator stack and reported with
+//! every response.
+//!
+//! - [`request`] — request/response types and the model-variant registry.
+//! - [`batcher`] — dynamic batching: size- and deadline-triggered.
+//! - [`router`] — least-outstanding-work routing across PIM instances.
+//! - [`server`] — the serving loop, workers and aggregate statistics.
+
+pub mod batcher;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use request::{InferenceRequest, InferenceResponse, Variant};
+pub use server::{Server, ServerConfig, ServerStats};

@@ -1,0 +1,107 @@
+//! Request/response types for the serving path.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+/// Which CNN variant serves the request (precision ↔ artifact).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Fp32,
+    Int8,
+    Int4,
+}
+
+impl Variant {
+    /// Artifact name for a given serving batch size.
+    pub fn artifact(&self, batch: usize) -> String {
+        match self {
+            Variant::Fp32 => format!("cnn_fp32_b{batch}"),
+            Variant::Int8 => format!("cnn_int8_b{batch}"),
+            Variant::Int4 => format!("cnn_int4_b{batch}"),
+        }
+    }
+
+    /// Operand width on the PIM substrate (fp32 is served as int8 after
+    /// PTQ; OPIMA has no float datapath).
+    pub fn pim_bits(&self) -> u32 {
+        match self {
+            Variant::Fp32 | Variant::Int8 => 8,
+            Variant::Int4 => 4,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Variant> {
+        match s {
+            "fp32" => Ok(Variant::Fp32),
+            "int8" => Ok(Variant::Int8),
+            "int4" => Ok(Variant::Int4),
+            other => Err(Error::Serving(format!("unknown variant '{other}'"))),
+        }
+    }
+}
+
+/// One classification request.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Flattened image (image_size² × channels, NHWC).
+    pub image: Vec<f32>,
+    pub variant: Variant,
+    pub arrival: Instant,
+}
+
+/// Architectural cost metered by the simulator for the batch that
+/// carried this request.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimMetering {
+    /// What the OPIMA hardware would have taken for the batch (ms).
+    pub hw_latency_ms: f64,
+    /// Dynamic energy of the batch (mJ).
+    pub hw_energy_mj: f64,
+}
+
+/// One classification response.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    /// Wall time spent queued before execution (ms).
+    pub queue_ms: f64,
+    /// Wall time of the PJRT execution, amortized over the batch (ms).
+    pub exec_ms: f64,
+    /// Simulated OPIMA hardware cost.
+    pub sim: SimMetering,
+    /// Which worker/instance served it.
+    pub instance: usize,
+}
+
+impl InferenceResponse {
+    pub fn total_ms(&self) -> f64 {
+        self.queue_ms + self.exec_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(Variant::Fp32.artifact(8), "cnn_fp32_b8");
+        assert_eq!(Variant::Int4.artifact(8), "cnn_int4_b8");
+    }
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!(Variant::parse("int4").unwrap(), Variant::Int4);
+        assert!(Variant::parse("int2").is_err());
+    }
+
+    #[test]
+    fn pim_bits() {
+        assert_eq!(Variant::Int4.pim_bits(), 4);
+        assert_eq!(Variant::Fp32.pim_bits(), 8);
+    }
+}

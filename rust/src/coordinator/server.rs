@@ -1,0 +1,327 @@
+//! The serving loop: queue → batcher → router → PJRT worker.
+//!
+//! Functional answers come from the AOT HLO artifacts executed on PJRT;
+//! architectural cost per batch comes from the OPIMA simulator (the
+//! small served CNN analyzed per variant at startup). Single worker
+//! thread owns the PJRT client; the router load-balances the *simulated*
+//! hardware across instances.
+
+use std::time::{Duration, Instant};
+
+use crate::analyzer::latency::analyze_model;
+use crate::cnn::graph::NetworkBuilder;
+use crate::cnn::layer::TensorShape;
+use crate::config::OpimaConfig;
+use crate::coordinator::batcher::{Batch, DynamicBatcher};
+use crate::coordinator::request::{
+    InferenceRequest, InferenceResponse, SimMetering, Variant,
+};
+use crate::coordinator::router::Router;
+use crate::error::{Error, Result};
+use crate::runtime::{Executor, Manifest};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Simulated OPIMA instances behind the router.
+    pub instances: usize,
+    /// Batch deadline for the dynamic batcher.
+    pub max_wait: Duration,
+    /// OPIMA hardware configuration for the metering simulator.
+    pub hw: OpimaConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            instances: 1,
+            max_wait: Duration::from_millis(2),
+            hw: OpimaConfig::paper(),
+        }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub served: u64,
+    pub batches: u64,
+    pub wall_ms: f64,
+    pub mean_queue_ms: f64,
+    pub mean_exec_ms: f64,
+    pub p50_total_ms: f64,
+    pub p99_total_ms: f64,
+    pub throughput_rps: f64,
+    /// Simulated hardware energy across all batches (mJ).
+    pub sim_energy_mj: f64,
+    /// Simulated hardware makespan (ms) — what the OPIMA modules spent.
+    pub sim_makespan_ms: f64,
+}
+
+/// The OPIMA inference server.
+pub struct Server {
+    pub cfg: ServerConfig,
+    executor: Executor,
+    batcher: DynamicBatcher,
+    router: Router,
+    /// Per-variant simulated cost of one served batch: (latency_ms, mJ).
+    sim_costs: Vec<(Variant, f64, f64)>,
+    epoch: Instant,
+    responses: Vec<InferenceResponse>,
+}
+
+/// The served model: must match python/compile/model.py's ARCH.
+fn served_network() -> Result<crate::cnn::graph::Network> {
+    let mut b = NetworkBuilder::new("served_cnn", TensorShape::new(12, 12, 1));
+    b.conv(3, 3, 8, 1, 1)?
+        .pool(2, 2)?
+        .conv(3, 3, 16, 1, 1)?
+        .pool(2, 2)?
+        .fc(4)?;
+    Ok(b.build())
+}
+
+impl Server {
+    /// Build a server over an artifact manifest.
+    pub fn new(cfg: ServerConfig, manifest: Manifest) -> Result<Self> {
+        cfg.hw.validate()?;
+        let batch = manifest.batch;
+        let executor = Executor::new(manifest)?;
+        let net = served_network()?;
+        // Pre-compute the simulated per-batch cost of each variant.
+        let mut sim_costs = Vec::new();
+        for v in [Variant::Fp32, Variant::Int8, Variant::Int4] {
+            let a = analyze_model(&cfg.hw, &net, v.pim_bits())?;
+            sim_costs.push((v, a.total_ms() * batch as f64, a.dynamic_mj * batch as f64));
+        }
+        Ok(Self {
+            batcher: DynamicBatcher::new(batch, cfg.max_wait),
+            router: Router::new(cfg.instances),
+            cfg,
+            executor,
+            sim_costs,
+            epoch: Instant::now(),
+            responses: Vec::new(),
+        })
+    }
+
+    /// Submit one request; executes a batch when the batcher flushes.
+    pub fn submit(&mut self, req: InferenceRequest) -> Result<()> {
+        if req.image.len() != self.image_elems() {
+            return Err(Error::Serving(format!(
+                "image has {} elems, artifact wants {}",
+                req.image.len(),
+                self.image_elems()
+            )));
+        }
+        if let Some(batch) = self.batcher.push(req) {
+            self.execute(batch)?;
+        }
+        // Deadline-triggered flushes.
+        for batch in self.batcher.poll(Instant::now()) {
+            self.execute(batch)?;
+        }
+        Ok(())
+    }
+
+    /// Flush all pending requests (end of stream).
+    pub fn flush(&mut self) -> Result<()> {
+        for batch in self.batcher.drain() {
+            self.execute(batch)?;
+        }
+        Ok(())
+    }
+
+    /// Responses so far (in completion order).
+    pub fn responses(&self) -> &[InferenceResponse] {
+        &self.responses
+    }
+
+    pub fn image_elems(&self) -> usize {
+        let s = self.executor.manifest().image_size;
+        s * s
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batcher.max_batch()
+    }
+
+    fn sim_cost(&self, v: Variant) -> (f64, f64) {
+        self.sim_costs
+            .iter()
+            .find(|(sv, _, _)| *sv == v)
+            .map(|(_, l, e)| (*l, *e))
+            .expect("all variants precomputed")
+    }
+
+    fn execute(&mut self, batch: Batch) -> Result<()> {
+        let bsz = self.batcher.max_batch();
+        let elems = self.image_elems();
+        // Pack (and zero-pad) the fixed-shape batch input.
+        let mut input = vec![0f32; bsz * elems];
+        for (i, r) in batch.requests.iter().enumerate() {
+            input[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+        }
+        let artifact = batch.variant.artifact(bsz);
+        let t0 = Instant::now();
+        let logits = self.executor.run_f32(&artifact, &[&input])?;
+        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let classes = logits.len() / bsz;
+
+        // Simulated hardware cost, routed to the least-loaded instance.
+        let now_ms = self.epoch.elapsed().as_secs_f64() * 1e3;
+        let (sim_lat, sim_mj) = self.sim_cost(batch.variant);
+        let (instance, start, end) = self.router.dispatch(now_ms, sim_lat);
+        let _ = (start, end);
+
+        let done = Instant::now();
+        for (i, r) in batch.requests.iter().enumerate() {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let predicted = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(c, _)| c)
+                .unwrap_or(0);
+            self.responses.push(InferenceResponse {
+                id: r.id,
+                logits: row.to_vec(),
+                predicted,
+                queue_ms: done
+                    .duration_since(r.arrival)
+                    .as_secs_f64()
+                    .mul_add(1e3, -exec_ms)
+                    .max(0.0),
+                exec_ms: exec_ms / batch.requests.len() as f64,
+                sim: SimMetering {
+                    hw_latency_ms: sim_lat,
+                    hw_energy_mj: sim_mj,
+                },
+                instance,
+            });
+        }
+        Ok(())
+    }
+
+    /// Aggregate statistics over everything served so far.
+    pub fn stats(&self) -> ServerStats {
+        let n = self.responses.len();
+        if n == 0 {
+            return ServerStats::default();
+        }
+        let mut totals: Vec<f64> = self.responses.iter().map(|r| r.total_ms()).collect();
+        totals.sort_by(|a, b| a.total_cmp(b));
+        let wall_ms = self.epoch.elapsed().as_secs_f64() * 1e3;
+        let batches: u64 = self.router.load().iter().sum();
+        ServerStats {
+            served: n as u64,
+            batches,
+            wall_ms,
+            mean_queue_ms: self.responses.iter().map(|r| r.queue_ms).sum::<f64>() / n as f64,
+            mean_exec_ms: self.responses.iter().map(|r| r.exec_ms).sum::<f64>() / n as f64,
+            p50_total_ms: totals[n / 2],
+            p99_total_ms: totals[(n * 99 / 100).min(n - 1)],
+            throughput_rps: n as f64 / (wall_ms / 1e3).max(1e-9),
+            sim_energy_mj: self
+                .responses
+                .iter()
+                .map(|r| r.sim.hw_energy_mj)
+                .sum::<f64>()
+                / self.batch_size() as f64,
+            sim_makespan_ms: self.router.makespan_ms(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn server(instances: usize) -> Option<Server> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        let cfg = ServerConfig {
+            instances,
+            ..Default::default()
+        };
+        Some(Server::new(cfg, manifest).unwrap())
+    }
+
+    fn req(id: u64, elems: usize, v: Variant) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            image: (0..elems).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect(),
+            variant: v,
+            arrival: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn serves_full_batches() {
+        let Some(mut s) = server(1) else { return };
+        let elems = s.image_elems();
+        let bsz = s.batch_size();
+        for i in 0..(2 * bsz as u64) {
+            s.submit(req(i, elems, Variant::Int4)).unwrap();
+        }
+        s.flush().unwrap();
+        assert_eq!(s.responses().len(), 2 * bsz);
+        let stats = s.stats();
+        assert_eq!(stats.served, 2 * bsz as u64);
+        assert_eq!(stats.batches, 2);
+        assert!(stats.sim_energy_mj > 0.0);
+        assert!(stats.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn partial_batch_flushes() {
+        let Some(mut s) = server(1) else { return };
+        let elems = s.image_elems();
+        for i in 0..3u64 {
+            s.submit(req(i, elems, Variant::Fp32)).unwrap();
+        }
+        s.flush().unwrap();
+        assert_eq!(s.responses().len(), 3);
+        // All responses carry finite logits and a class in range.
+        for r in s.responses() {
+            assert!(r.logits.iter().all(|v| v.is_finite()));
+            assert!(r.predicted < r.logits.len());
+        }
+    }
+
+    #[test]
+    fn multi_instance_routing_balances() {
+        let Some(mut s) = server(2) else { return };
+        let elems = s.image_elems();
+        let bsz = s.batch_size();
+        for i in 0..(4 * bsz as u64) {
+            s.submit(req(i, elems, Variant::Int8)).unwrap();
+        }
+        s.flush().unwrap();
+        let mut seen = [0u64; 2];
+        for r in s.responses() {
+            seen[r.instance] += 1;
+        }
+        assert!(seen[0] > 0 && seen[1] > 0, "both instances used: {seen:?}");
+    }
+
+    #[test]
+    fn wrong_image_size_rejected() {
+        let Some(mut s) = server(1) else { return };
+        assert!(s.submit(req(0, 3, Variant::Int4)).is_err());
+    }
+
+    #[test]
+    fn int4_sim_cost_below_int8() {
+        let Some(s) = server(1) else { return };
+        let (l4, e4) = s.sim_cost(Variant::Int4);
+        let (l8, e8) = s.sim_cost(Variant::Int8);
+        assert!(l4 < l8, "TDM: 8-bit costs more time");
+        assert!(e4 < e8);
+    }
+}

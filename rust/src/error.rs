@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for the OPIMA stack.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Configuration failed validation (geometry, parameters, ...).
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// A physical address fell outside the memory's capacity.
+    #[error("address out of range: {addr:#x} (capacity {capacity} bytes)")]
+    AddressRange { addr: u64, capacity: u64 },
+
+    /// A memory or PIM command was malformed or not executable.
+    #[error("command error: {0}")]
+    Command(String),
+
+    /// CNN graph construction/validation failure.
+    #[error("model error: {0}")]
+    Model(String),
+
+    /// CNN → PIM mapping failure (e.g. kernel wider than a subarray row).
+    #[error("mapping error: {0}")]
+    Mapping(String),
+
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Serving-path failure (queue closed, request rejected, ...).
+    #[error("serving error: {0}")]
+    Serving(String),
+
+    /// I/O error (artifact files, config files).
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// JSON parse error (manifest, result export).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// TOML config parse error.
+    #[error("config parse error: {0}")]
+    Toml(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

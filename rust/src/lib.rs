@@ -1,0 +1,48 @@
+//! # OPIMA — Optical Processing-In-Memory for CNN Acceleration
+//!
+//! Full-system reproduction of *"OPIMA: Optical Processing-In-Memory for
+//! Convolutional Neural Network Acceleration"* (Sunny et al., cs.AR 2024).
+//!
+//! OPIMA is a photonic PIM architecture built inside an optically-programmed
+//! phase-change (OPCM) main memory. This crate implements the entire
+//! evaluation stack the paper ran — the authors' own substrate was a modified
+//! NVMain 2.0 plus a Python performance analyzer; ours is a cycle-approximate
+//! Rust simulator with the same device parameters (paper Table I) — together
+//! with a serving-style coordinator that executes the *functional* model
+//! (JAX/Pallas, AOT-lowered to HLO) through PJRT on the request path.
+//!
+//! Layer map (see `DESIGN.md`):
+//! - [`phys`] — photonic device library, GST OPCM cell surrogate physics
+//!   (paper Fig. 2), inverse-designed crossing surrogate (Fig. 6), MDM
+//!   analysis, link budgets.
+//! - [`memory`] — the OPCM main-memory simulator (banks, subarrays, cells,
+//!   command scheduling; the NVMain substitute).
+//! - [`pim`] — the PIM engine: subarray groups, MDL arrays, WDM/MDM MAC
+//!   scheduling, aggregation unit, TDM bit-width bridging (paper §IV.C).
+//! - [`cnn`] — CNN graph IR and the five evaluation models (Table II).
+//! - [`mapper`] — CNN → PIM mapping: input-stationary convs,
+//!   weight-stationary FC, 1×1-kernel serialization (paper §IV.D).
+//! - [`analyzer`] — latency/energy/power roll-up, EPB and FPS/W metrics
+//!   (Figs. 7–12).
+//! - [`baselines`] — NP100 / E7742 / ORIN rooflines, PRIME, CrossLight,
+//!   PhPIM comparison models (paper §V).
+//! - [`coordinator`] — async inference server: router + dynamic batcher
+//!   driving the PJRT functional model with simulator metering.
+//! - [`runtime`] — PJRT artifact loading/execution (`xla` crate).
+
+// modules added incrementally below
+pub mod analyzer;
+pub mod baselines;
+pub mod cnn;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod mapper;
+pub mod memory;
+pub mod phys;
+pub mod pim;
+pub mod runtime;
+pub mod util;
+
+pub use config::OpimaConfig;
+pub use error::{Error, Result};

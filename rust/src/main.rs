@@ -1,0 +1,367 @@
+//! OPIMA CLI — the leader entrypoint.
+//!
+//! Subcommands map to the paper's experiments:
+//!   info                      configuration + capacity summary
+//!   dse                       Fig. 2  GST cell design-space exploration
+//!   crossing                  Fig. 6  waveguide-crossing C-band profile
+//!   groups                    Fig. 7  subarray-group selection sweep
+//!   power                     Fig. 8  power breakdown
+//!   latency  [--bits 4|8] [--model NAME]   Fig. 9 latency breakdown
+//!   compare  [--bits 4|8]     Figs. 10–12 cross-platform comparison
+//!   memtest  [--ops N]        memory-mode self-test (read/write sweep)
+//!   serve    [--requests N] [--variant v] [--instances K]  serving demo
+//!   config                    print the active TOML configuration
+//!
+//! Global flag: --config <file.toml> loads overrides over paper defaults.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use opima::analyzer::metrics::{geomean_ratio, workload_bits};
+use opima::analyzer::report;
+use opima::analyzer::{analyze_model, power_breakdown};
+use opima::baselines::evaluate_all;
+use opima::cnn::{build_model, Model, ALL_MODELS};
+use opima::coordinator::{InferenceRequest, Server, ServerConfig, Variant};
+use opima::error::{Error, Result};
+use opima::phys::{crossing, dse};
+use opima::pim::group;
+use opima::runtime::Manifest;
+use opima::util::prng::Rng;
+use opima::OpimaConfig;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "info".to_string());
+        let mut flags = Vec::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --flag, got '{k}'")))?
+                .to_string();
+            let val = it
+                .next()
+                .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+            flags.push((key, val));
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} wants an integer, got '{v}'"))),
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<OpimaConfig> {
+    match args.get("config") {
+        Some(path) => OpimaConfig::from_toml_file(&PathBuf::from(path)),
+        None => Ok(OpimaConfig::paper()),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    let cfg = load_config(&args)?;
+    match args.cmd.as_str() {
+        "info" => cmd_info(&cfg),
+        "dse" => cmd_dse(),
+        "crossing" => cmd_crossing(),
+        "groups" => cmd_groups(&cfg),
+        "power" => cmd_power(&cfg),
+        "latency" => cmd_latency(&cfg, &args),
+        "compare" => cmd_compare(&cfg, &args),
+        "memtest" => cmd_memtest(&cfg, &args),
+        "serve" => cmd_serve(&cfg, &args),
+        "config" => {
+            print!("{}", cfg.to_toml());
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown command '{other}' (try: info dse crossing groups power \
+             latency compare memtest serve config)"
+        ))),
+    }
+}
+
+fn cmd_info(cfg: &OpimaConfig) -> Result<()> {
+    let g = &cfg.geometry;
+    println!("OPIMA configuration (paper §V defaults unless overridden)");
+    println!(
+        "  geometry : {} banks × {}×{} subarrays × {}×{} cells × {} b/cell",
+        g.banks,
+        g.subarray_rows,
+        g.subarray_cols,
+        g.rows_per_subarray,
+        g.cols_per_subarray,
+        g.bits_per_cell
+    );
+    println!(
+        "  capacity : {:.2} GiB   groups: {}   MDM degree: {}",
+        g.capacity_bytes() as f64 / (1u64 << 30) as f64,
+        g.subarray_groups,
+        g.mdm_degree
+    );
+    let p = group::evaluate(cfg, g.subarray_groups)?;
+    println!(
+        "  peak PIM : {} MACs/cycle = {:.2} TMAC/s @ {} GHz",
+        p.macs_per_cycle,
+        p.mac_throughput / 1e12,
+        cfg.timing.clock_ghz
+    );
+    println!(
+        "  power    : {:.1} W (Fig. 8 envelope)",
+        power_breakdown(cfg).total_w()
+    );
+    Ok(())
+}
+
+fn cmd_dse() -> Result<()> {
+    let r = dse::run(&dse::DseSweep::default());
+    println!("GST OPCM cell design-space exploration (paper Fig. 2)");
+    println!(
+        "optimum: width {:.2} µm, thickness {:.0} nm  (ΔT = {:.1}%, ΔT_s cryst {:.1}%, amorph {:.1}%)\n",
+        r.optimum.width_um,
+        r.optimum.thickness_nm,
+        100.0 * r.optimum.contrast,
+        100.0 * r.optimum.dts_crystalline,
+        100.0 * r.optimum.dts_amorphous
+    );
+    println!("ΔT (%) over thickness (rows, nm) × width (cols, µm):");
+    print!("      ");
+    for w in r.widths_um.iter().step_by(2) {
+        print!("{w:>6.2}");
+    }
+    println!();
+    for (ti, t) in r.thicknesses_nm.iter().enumerate() {
+        print!("{t:>5.0} ");
+        for p in r.grid[ti].iter().step_by(2) {
+            let feasible =
+                p.dts_crystalline < r.dts_threshold && p.dts_amorphous < r.dts_threshold;
+            if feasible {
+                print!("{:>6.1}", 100.0 * p.contrast);
+            } else {
+                print!("{:>6}", "·");
+            }
+        }
+        println!();
+    }
+    println!("(· = infeasible: ΔT_s ≥ 5%)");
+    Ok(())
+}
+
+fn cmd_crossing() -> Result<()> {
+    println!("Inverse-designed waveguide crossing, C-band profile (paper Fig. 6)");
+    println!("| λ (nm) | insertion loss (%) | crosstalk (dB) |");
+    println!("|---|---|---|");
+    for p in crossing::c_band_profile(15) {
+        println!(
+            "| {:.1} | {:.6} | {:.1} |",
+            p.wavelength_nm,
+            100.0 * p.insertion_loss,
+            p.crosstalk_db
+        );
+    }
+    Ok(())
+}
+
+fn cmd_groups(cfg: &OpimaConfig) -> Result<()> {
+    println!("Subarray group selection (paper Fig. 7)");
+    println!("| groups | MAC/cycle | TMAC/s | power (W) | rows free | GMAC/s/W |");
+    println!("|---|---|---|---|---|---|");
+    for p in group::sweep(cfg, &[1, 2, 4, 8, 16, 32, 64])? {
+        println!(
+            "| {} | {} | {:.2} | {:.1} | {} | {:.1} |",
+            p.groups,
+            p.macs_per_cycle,
+            p.mac_throughput / 1e12,
+            p.power_w,
+            p.rows_available,
+            p.macs_per_watt / 1e9
+        );
+    }
+    let best = group::select_optimal(cfg)?;
+    println!("\nMAC/W optimum: {} groups (paper: 16)", best.groups);
+    Ok(())
+}
+
+fn cmd_power(cfg: &OpimaConfig) -> Result<()> {
+    println!("Power breakdown (paper Fig. 8; paper total 55.9 W)\n");
+    print!("{}", report::power_table(&power_breakdown(cfg)));
+    Ok(())
+}
+
+fn parse_models(args: &Args) -> Result<Vec<Model>> {
+    match args.get("model") {
+        None => Ok(ALL_MODELS.to_vec()),
+        Some(name) => Model::from_name(name)
+            .map(|m| vec![m])
+            .ok_or_else(|| Error::Config(format!("unknown model '{name}'"))),
+    }
+}
+
+fn cmd_latency(cfg: &OpimaConfig, args: &Args) -> Result<()> {
+    let models = parse_models(args)?;
+    let bits_list: Vec<u32> = match args.get("bits") {
+        Some(b) => vec![b.parse().map_err(|_| Error::Config("bad --bits".into()))?],
+        None => vec![4, 8],
+    };
+    println!("OPIMA latency breakdown (paper Fig. 9)\n");
+    let mut analyses = Vec::new();
+    for m in &models {
+        let net = build_model(*m)?;
+        for &bits in &bits_list {
+            analyses.push(analyze_model(cfg, &net, bits)?);
+        }
+    }
+    print!("{}", report::latency_table(&analyses));
+    Ok(())
+}
+
+fn cmd_compare(cfg: &OpimaConfig, args: &Args) -> Result<()> {
+    let bits: u32 = args
+        .get("bits")
+        .unwrap_or("4")
+        .parse()
+        .map_err(|_| Error::Config("bad --bits".into()))?;
+    // Figs. 10–12 use the four CNN workloads (§V.C); VGG16 is Table-II-only.
+    let models: Vec<Model> = ALL_MODELS
+        .iter()
+        .copied()
+        .filter(|m| *m != Model::Vgg16)
+        .collect();
+    let mut epb = vec![Vec::new(); 6];
+    let mut fpsw = vec![Vec::new(); 6];
+    for m in &models {
+        let net = build_model(*m)?;
+        let rs = evaluate_all(cfg, &net, bits)?;
+        let bits_w = workload_bits(&net, bits);
+        println!("\n### {} ({}-bit)\n", m.name(), bits);
+        print!("{}", report::comparison_table(&rs, bits_w));
+        let o = &rs[0];
+        for (i, r) in rs.iter().enumerate().skip(1) {
+            epb[i - 1].push(r.epb_pj(bits_w) / o.epb_pj(bits_w));
+            fpsw[i - 1].push(o.fps_per_w() / r.fps_per_w());
+        }
+    }
+    println!("\n### Geometric-mean advantage of OPIMA (paper Fig. 11 / Fig. 12)\n");
+    println!("| vs | EPB (ours) | EPB (paper) | FPS/W (ours) | FPS/W (paper) |");
+    println!("|---|---|---|---|---|");
+    let paper = [
+        ("NP100", 78.3, 6.7),
+        ("E7742", 157.5, 15.2),
+        ("ORIN", 1.7, 8.2),
+        ("PRIME", 4.4, 5.7),
+        ("CrossLight", 2.2, 1.8),
+        ("PhPIM", 137.0, 11.9),
+    ];
+    let ones = vec![1.0; models.len()];
+    for (i, (name, p_epb, p_fpsw)) in paper.iter().enumerate() {
+        println!(
+            "| {} | {:.1}× | {}× | {:.1}× | {}× |",
+            name,
+            geomean_ratio(&epb[i], &ones),
+            p_epb,
+            geomean_ratio(&fpsw[i], &ones),
+            p_fpsw
+        );
+    }
+    Ok(())
+}
+
+fn cmd_memtest(cfg: &OpimaConfig, args: &Args) -> Result<()> {
+    use opima::memory::MemoryController;
+    let ops = args.usize_or("ops", 2000)?;
+    let mut ctl = MemoryController::new(cfg)?;
+    let mut rng = Rng::new(42);
+    let cap = ctl.capacity_bytes();
+    let t0 = Instant::now();
+    let mut verified = 0u64;
+    for i in 0..ops {
+        let len = 16usize << rng.index(5); // 16..256 B
+        let addr = (rng.next_u64() % (cap - len as u64)) / 16 * 16;
+        let data: Vec<u8> = (0..len).map(|j| ((i + j) % 251) as u8).collect();
+        ctl.write(addr, &data)?;
+        let back = ctl.read(addr, len as u64)?.data.unwrap();
+        if back != data {
+            return Err(Error::Command(format!("MISMATCH at {addr:#x}")));
+        }
+        verified += len as u64;
+    }
+    let s = ctl.stats();
+    println!("memtest OK: {ops} write/read pairs, {verified} bytes verified");
+    println!(
+        "  simulated: {:.1} µs busy, {:.2} µJ ({:.1} pJ/B write, {:.1} pJ/B read)",
+        s.busy_ns / 1e3,
+        s.total_energy_pj() / 1e6,
+        s.write_energy_pj / s.bytes_written as f64,
+        s.read_energy_pj / s.bytes_read as f64
+    );
+    println!("  wall time: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
+    let n = args.usize_or("requests", 256)?;
+    let instances = args.usize_or("instances", 1)?;
+    let variant = Variant::parse(args.get("variant").unwrap_or("int4"))?;
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let mut server = Server::new(
+        ServerConfig {
+            instances,
+            hw: cfg.clone(),
+            ..Default::default()
+        },
+        manifest,
+    )?;
+    let elems = server.image_elems();
+    let mut rng = Rng::new(7);
+    println!("serving {n} requests (variant {variant:?}, {instances} instance(s)) ...");
+    for id in 0..n as u64 {
+        let image: Vec<f32> = (0..elems).map(|_| rng.f64() as f32).collect();
+        server.submit(InferenceRequest {
+            id,
+            image,
+            variant,
+            arrival: Instant::now(),
+        })?;
+    }
+    server.flush()?;
+    let s = server.stats();
+    println!("served {} requests in {} batches", s.served, s.batches);
+    println!(
+        "  wall: {:.1} ms   throughput: {:.0} req/s   p50 {:.2} ms   p99 {:.2} ms",
+        s.wall_ms, s.throughput_rps, s.p50_total_ms, s.p99_total_ms
+    );
+    println!(
+        "  simulated OPIMA hardware: {:.2} ms makespan, {:.2} mJ dynamic energy",
+        s.sim_makespan_ms, s.sim_energy_mj
+    );
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Input-stationary convolution mapping (paper §IV.D).
+//!
+//! The feature map stays in its native OPCM locations; kernels stream in
+//! as MDL wavelength vectors. Kernel row k_i multiplies feature row f_j
+//! inside one subarray; same-λ products from `optical_accum` subarrays of
+//! the group interfere in the shared bus, summing vertically adjacent
+//! kernel-row contributions — the paper's worked 2×2 example.
+
+use crate::cnn::layer::{Layer, LayerInstance};
+use crate::config::Geometry;
+use crate::error::{Error, Result};
+
+/// Placement of one conv layer on the PIM substrate.
+#[derive(Debug, Clone)]
+pub struct ConvMapping {
+    /// Feature-map rows per subarray (input-stationary shards).
+    pub feature_rows_per_subarray: usize,
+    /// Wavelengths occupied by one kernel-row vector tile.
+    pub lambdas_per_kernel_row: usize,
+    /// Input-channel tiles a kernel row is split into when wider than the
+    /// WDM degree (partial sums recombine digitally in the aggregation
+    /// SRAM — "the parameters can be stored within the SRAM cache ... for
+    /// additional accumulation operations if needed", §IV.C.4).
+    pub channel_tiles: usize,
+    /// Kernel instances that fit concurrently in one subarray row's WDM
+    /// budget ("we will be able to drive several kernels simultaneously").
+    pub kernels_per_row: usize,
+    /// Subarrays needed to hold one input feature map shard set.
+    pub subarrays_for_feature_map: usize,
+    /// Whether the layer is accumulation-free (1×1) and serializes.
+    pub one_by_one: bool,
+}
+
+/// Map one conv layer; errors only if a single kernel row's spatial width
+/// alone exceeds the WDM degree (the paper: "if the kernel sizes do not
+/// exceed the subarray row size"). Wide channel counts tile.
+pub fn map_conv(geom: &Geometry, inst: &LayerInstance) -> Result<ConvMapping> {
+    let Layer::Conv {
+        kh,
+        kw,
+        groups,
+        ..
+    } = inst.layer
+    else {
+        return Err(Error::Mapping("map_conv on non-conv layer".into()));
+    };
+    if kw > geom.cols_per_subarray {
+        return Err(Error::Mapping(format!(
+            "kernel width {kw} exceeds subarray row ({} λ) — layer {}",
+            geom.cols_per_subarray, inst.name
+        )));
+    }
+    let cin_per_group = inst.in_shape.c / groups;
+    let channels_per_tile = (geom.cols_per_subarray / kw).min(cin_per_group).max(1);
+    let channel_tiles = cin_per_group.div_ceil(channels_per_tile);
+    let lambdas_per_kernel_row = kw * channels_per_tile;
+    let kernels_per_row = (geom.cols_per_subarray / lambdas_per_kernel_row).max(1);
+
+    // Feature map rows (h × c elements per row) shard across subarrays;
+    // each subarray cell row holds cols_per_subarray elements.
+    let elems_per_feature_row = inst.in_shape.w * cin_per_group;
+    let cell_rows_per_feature_row = elems_per_feature_row.div_ceil(geom.cols_per_subarray);
+    let feature_rows_per_subarray =
+        (geom.rows_per_subarray / cell_rows_per_feature_row.max(1)).max(1);
+    let subarrays_for_feature_map = (inst.in_shape.h * groups)
+        .div_ceil(feature_rows_per_subarray)
+        .max(1);
+
+    Ok(ConvMapping {
+        feature_rows_per_subarray,
+        lambdas_per_kernel_row,
+        channel_tiles,
+        kernels_per_row,
+        subarrays_for_feature_map,
+        one_by_one: kh == 1 && kw == 1,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::layer::TensorShape;
+
+    fn conv_inst(kh: usize, kw: usize, cin: usize, cout: usize, hw: usize) -> LayerInstance {
+        let layer = Layer::Conv {
+            kh,
+            kw,
+            cout,
+            stride: 1,
+            pad: kh / 2,
+            groups: 1,
+            bias: true,
+        };
+        let in_shape = TensorShape::new(hw, hw, cin);
+        let out_shape = layer.out_shape(in_shape).unwrap();
+        LayerInstance {
+            name: "t".into(),
+            layer,
+            in_shape,
+            out_shape,
+        }
+    }
+
+    #[test]
+    fn small_kernel_fits_many_per_row() {
+        let geom = Geometry::default();
+        let m = map_conv(&geom, &conv_inst(3, 3, 16, 32, 32)).unwrap();
+        assert_eq!(m.lambdas_per_kernel_row, 48);
+        assert_eq!(m.kernels_per_row, 5); // 256 / 48
+        assert!(!m.one_by_one);
+    }
+
+    #[test]
+    fn one_by_one_flagged() {
+        let geom = Geometry::default();
+        let m = map_conv(&geom, &conv_inst(1, 1, 64, 128, 16)).unwrap();
+        assert!(m.one_by_one);
+    }
+
+    #[test]
+    fn wide_channel_kernels_tile() {
+        let geom = Geometry::default();
+        // kw × cin = 3 × 512 = 1536 λ > 256 → tiles of 85 channels.
+        let m = map_conv(&geom, &conv_inst(3, 3, 512, 512, 8)).unwrap();
+        assert_eq!(m.channel_tiles, 512usize.div_ceil(256 / 3));
+        assert!(m.lambdas_per_kernel_row <= geom.cols_per_subarray);
+    }
+
+    #[test]
+    fn absurd_kernel_width_rejected() {
+        let mut geom = Geometry::default();
+        geom.cols_per_subarray = 4;
+        assert!(map_conv(&geom, &conv_inst(5, 5, 1, 4, 16)).is_err());
+    }
+
+    #[test]
+    fn feature_map_sharding_counts() {
+        let geom = Geometry::default();
+        // 32×32×16: one feature row = 32 × 16 = 512 elems = 2 cell rows.
+        let m = map_conv(&geom, &conv_inst(3, 3, 16, 32, 32)).unwrap();
+        assert_eq!(m.feature_rows_per_subarray, 256); // 512 rows / 2
+        assert_eq!(m.subarrays_for_feature_map, 1);
+    }
+}

@@ -1,0 +1,95 @@
+//! Weight-stationary fully-connected mapping (paper §IV.D).
+//!
+//! The weight matrix distributes across subarrays (each cell row holds a
+//! chunk of one output neuron's weight vector); the input activation
+//! vector drives the MDLs. Long reductions chunk into row-vectors whose
+//! same-λ partial products pair across subarrays of a group, so FC layers
+//! keep the full in-waveguide accumulation parallelism.
+
+use crate::cnn::layer::{Layer, LayerInstance};
+use crate::config::Geometry;
+use crate::error::{Error, Result};
+
+/// Placement of one FC layer.
+#[derive(Debug, Clone)]
+pub struct FcMapping {
+    /// Weight-vector chunks per output neuron (reduction tiling).
+    pub chunks_per_neuron: usize,
+    /// Output neurons whose weights fit in one subarray.
+    pub neurons_per_subarray: usize,
+    /// Subarrays needed to hold the full weight matrix.
+    pub subarrays_for_weights: usize,
+}
+
+pub fn map_fc(geom: &Geometry, inst: &LayerInstance) -> Result<FcMapping> {
+    let Layer::Fc { out, .. } = inst.layer else {
+        return Err(Error::Mapping("map_fc on non-fc layer".into()));
+    };
+    let in_elems = inst.in_shape.elems() as usize;
+    let chunks_per_neuron = in_elems.div_ceil(geom.cols_per_subarray).max(1);
+    let rows_per_neuron = chunks_per_neuron; // one cell row per chunk
+    let neurons_per_subarray = (geom.rows_per_subarray / rows_per_neuron).max(1);
+    let subarrays_for_weights = out.div_ceil(neurons_per_subarray).max(1);
+    // Capacity sanity: the whole matrix must fit in the memory.
+    let total_subarrays = geom.banks * geom.subarrays_per_bank();
+    if subarrays_for_weights > total_subarrays {
+        return Err(Error::Mapping(format!(
+            "FC weight matrix needs {subarrays_for_weights} subarrays, \
+             memory has {total_subarrays} — layer {}",
+            inst.name
+        )));
+    }
+    Ok(FcMapping {
+        chunks_per_neuron,
+        neurons_per_subarray,
+        subarrays_for_weights,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::layer::TensorShape;
+
+    fn fc_inst(inf: usize, out: usize) -> LayerInstance {
+        let layer = Layer::Fc { out, bias: true };
+        let in_shape = TensorShape::new(1, 1, inf);
+        let out_shape = layer.out_shape(in_shape).unwrap();
+        LayerInstance {
+            name: "t".into(),
+            layer,
+            in_shape,
+            out_shape,
+        }
+    }
+
+    #[test]
+    fn small_fc_fits_one_subarray() {
+        let geom = Geometry::default();
+        let m = map_fc(&geom, &fc_inst(512, 100)).unwrap();
+        assert_eq!(m.chunks_per_neuron, 2); // 512 / 256 λ
+        assert_eq!(m.neurons_per_subarray, 256); // 512 rows / 2
+        assert_eq!(m.subarrays_for_weights, 1);
+    }
+
+    #[test]
+    fn vgg_fc1_spreads_subarrays() {
+        let geom = Geometry::default();
+        // 25088 → 4096: 98 chunks/neuron, 5 neurons/subarray.
+        let m = map_fc(&geom, &fc_inst(25_088, 4_096)).unwrap();
+        assert_eq!(m.chunks_per_neuron, 98);
+        assert_eq!(m.neurons_per_subarray, 5);
+        assert_eq!(m.subarrays_for_weights, 820);
+    }
+
+    #[test]
+    fn impossible_fc_rejected() {
+        let mut geom = Geometry::default();
+        geom.subarray_rows = 2;
+        geom.subarray_cols = 2;
+        geom.subarray_groups = 2;
+        geom.rows_per_subarray = 4;
+        geom.cols_per_subarray = 4;
+        assert!(map_fc(&geom, &fc_inst(1 << 14, 1 << 14)).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! CNN → PIM mapping (paper §IV.D).
+//!
+//! - [`conv`] — input-stationary convolution mapping: feature-map rows
+//!   shard across subarrays of a group, kernel rows become MDL wavelength
+//!   vectors, stride walks reuse the stationary map.
+//! - [`fc`] — weight-stationary fully-connected mapping: weight matrix
+//!   rows distribute across subarrays, activations drive the MDLs.
+//! - [`plan`] — turns a [`crate::cnn::Network`] into the
+//!   [`crate::pim::LayerWork`] stream the PIM scheduler prices, with
+//!   placement validation against the geometry.
+
+pub mod conv;
+pub mod fc;
+pub mod plan;
+
+pub use plan::{map_network, MappedNetwork};

@@ -1,0 +1,124 @@
+//! Network-level mapping: [`crate::cnn::Network`] → PIM workload stream.
+
+use crate::cnn::graph::Network;
+use crate::cnn::layer::Layer;
+use crate::config::OpimaConfig;
+use crate::error::Result;
+use crate::mapper::{conv, fc};
+use crate::pim::LayerWork;
+
+/// A network mapped onto the PIM substrate.
+#[derive(Debug, Clone)]
+pub struct MappedNetwork {
+    pub name: String,
+    /// Per-compute-layer work items, in execution order.
+    pub works: Vec<LayerWork>,
+    /// Total subarrays touched by stationary operands (capacity check).
+    pub subarrays_used: usize,
+}
+
+/// Map a network at a given operand bit-width (activations and weights
+/// share the width in the paper's 4b/8b variants).
+pub fn map_network(cfg: &OpimaConfig, net: &Network, bits: u32) -> Result<MappedNetwork> {
+    let geom = &cfg.geometry;
+    let mut works = Vec::new();
+    let mut subarrays_used = 0usize;
+    for inst in net.compute_layers() {
+        match inst.layer {
+            Layer::Conv { kh, .. } => {
+                let m = conv::map_conv(geom, inst)?;
+                subarrays_used += m.subarrays_for_feature_map;
+                works.push(LayerWork {
+                    name: inst.name.clone(),
+                    macs: inst.macs(),
+                    spatial_accum: if m.one_by_one { 1 } else { kh },
+                    act_bits: bits,
+                    weight_bits: bits,
+                    out_elems: inst.out_shape.elems(),
+                    weight_elems: inst.params(),
+                });
+            }
+            Layer::Fc { .. } => {
+                let m = fc::map_fc(geom, inst)?;
+                subarrays_used += m.subarrays_for_weights;
+                works.push(LayerWork {
+                    name: inst.name.clone(),
+                    macs: inst.macs(),
+                    spatial_accum: inst.layer.spatial_accum(),
+                    act_bits: bits,
+                    weight_bits: bits,
+                    out_elems: inst.out_shape.elems(),
+                    weight_elems: inst.params(),
+                });
+            }
+            _ => {}
+        }
+    }
+    Ok(MappedNetwork {
+        name: format!("{}_{}b", net.name, bits),
+        works,
+        subarrays_used,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::models::{build_model, Model, ALL_MODELS};
+
+    #[test]
+    fn all_models_map_at_both_widths() {
+        let cfg = OpimaConfig::paper();
+        for m in ALL_MODELS {
+            let net = build_model(m).unwrap();
+            for bits in [4, 8] {
+                let mapped = map_network(&cfg, &net, bits).unwrap();
+                assert!(!mapped.works.is_empty(), "{}", m.name());
+                // MACs preserved through the mapping.
+                let total: u64 = mapped.works.iter().map(|w| w.macs).sum();
+                assert_eq!(total, net.macs(), "{}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn one_by_one_layers_flagged() {
+        let cfg = OpimaConfig::paper();
+        let net = build_model(Model::MobileNet).unwrap();
+        let mapped = map_network(&cfg, &net, 4).unwrap();
+        let serialized: u64 = mapped
+            .works
+            .iter()
+            .filter(|w| w.spatial_accum == 1)
+            .map(|w| w.macs)
+            .sum();
+        assert_eq!(serialized, net.one_by_one_macs());
+    }
+
+    #[test]
+    fn capacity_fits_paper_memory() {
+        // Every model's stationary operands must fit in the 16384
+        // subarrays of the paper configuration.
+        let cfg = OpimaConfig::paper();
+        let total = cfg.geometry.banks * cfg.geometry.subarrays_per_bank();
+        for m in ALL_MODELS {
+            let net = build_model(m).unwrap();
+            let mapped = map_network(&cfg, &net, 8).unwrap();
+            assert!(
+                mapped.subarrays_used <= total,
+                "{} uses {} of {total}",
+                m.name(),
+                mapped.subarrays_used
+            );
+        }
+    }
+
+    #[test]
+    fn bits_propagate() {
+        let cfg = OpimaConfig::paper();
+        let net = build_model(Model::ResNet18).unwrap();
+        let mapped = map_network(&cfg, &net, 8).unwrap();
+        assert!(mapped.works.iter().all(|w| w.act_bits == 8 && w.weight_bits == 8));
+        assert!(mapped.name.ends_with("_8b"));
+    }
+}

@@ -1,0 +1,140 @@
+//! Bank state: GST routing, busy windows, PIM row reservations.
+//!
+//! Each bank owns a GST-switch column that routes the external WDM signal
+//! to exactly one subarray row at a time for memory traffic (paper
+//! §IV.C.2); switching rows costs a reconfiguration delay. PIM work does
+//! not use this path — it runs on per-subarray MDL arrays — but the
+//! subarray rows lent to PIM (one per group) are unavailable to memory
+//! commands while reserved.
+
+use crate::config::Geometry;
+use crate::error::{Error, Result};
+use crate::memory::timing::GST_SWITCH_RECONFIG_NS;
+
+/// Per-bank dynamic state.
+#[derive(Debug, Clone)]
+pub struct BankState {
+    /// Which subarray row the GST switch column currently targets.
+    pub routed_row: Option<usize>,
+    /// Time (ns) until which the bank datapath is busy.
+    pub busy_until_ns: f64,
+    /// Subarray rows currently reserved by the PIM engine.
+    pub pim_reserved: Vec<bool>,
+    subarray_rows: usize,
+}
+
+impl BankState {
+    pub fn new(geom: &Geometry) -> Self {
+        Self {
+            routed_row: None,
+            busy_until_ns: 0.0,
+            pim_reserved: vec![false; geom.subarray_rows],
+            subarray_rows: geom.subarray_rows,
+        }
+    }
+
+    /// Number of subarray rows usable by memory traffic right now.
+    pub fn rows_available(&self) -> usize {
+        self.pim_reserved.iter().filter(|r| !**r).count()
+    }
+
+    /// Reserve a subarray row for PIM. Errors if already reserved.
+    pub fn reserve(&mut self, row: usize) -> Result<()> {
+        if row >= self.subarray_rows {
+            return Err(Error::Command(format!(
+                "subarray row {row} out of range (0..{})",
+                self.subarray_rows
+            )));
+        }
+        if self.pim_reserved[row] {
+            return Err(Error::Command(format!("subarray row {row} already reserved")));
+        }
+        self.pim_reserved[row] = true;
+        Ok(())
+    }
+
+    /// Release a PIM reservation.
+    pub fn release(&mut self, row: usize) -> Result<()> {
+        if row >= self.subarray_rows || !self.pim_reserved[row] {
+            return Err(Error::Command(format!("subarray row {row} not reserved")));
+        }
+        self.pim_reserved[row] = false;
+        Ok(())
+    }
+
+    /// Route the GST switch column to `row`, returning the earliest time
+    /// the datapath is usable given current routing and busy window.
+    pub fn route_to(&mut self, row: usize, now_ns: f64) -> Result<f64> {
+        if row >= self.subarray_rows {
+            return Err(Error::Command(format!("subarray row {row} out of range")));
+        }
+        if self.pim_reserved[row] {
+            return Err(Error::Command(format!(
+                "subarray row {row} is lent to the PIM engine"
+            )));
+        }
+        let start = now_ns.max(self.busy_until_ns);
+        let ready = if self.routed_row == Some(row) {
+            start
+        } else {
+            self.routed_row = Some(row);
+            start + GST_SWITCH_RECONFIG_NS
+        };
+        Ok(ready)
+    }
+
+    /// Mark the datapath busy until `until_ns`.
+    pub fn occupy(&mut self, until_ns: f64) {
+        self.busy_until_ns = self.busy_until_ns.max(until_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bank() -> BankState {
+        BankState::new(&Geometry::default())
+    }
+
+    #[test]
+    fn routing_same_row_is_free_different_row_costs() {
+        let mut b = bank();
+        let t0 = b.route_to(5, 0.0).unwrap();
+        assert_eq!(t0, GST_SWITCH_RECONFIG_NS);
+        b.occupy(t0);
+        let t1 = b.route_to(5, t0).unwrap();
+        assert_eq!(t1, t0, "same-row access needs no reconfig");
+        let t2 = b.route_to(6, t1).unwrap();
+        assert_eq!(t2, t1 + GST_SWITCH_RECONFIG_NS);
+    }
+
+    #[test]
+    fn reservations_block_memory_routing() {
+        let mut b = bank();
+        b.reserve(10).unwrap();
+        assert!(b.route_to(10, 0.0).is_err());
+        assert_eq!(b.rows_available(), 63);
+        b.release(10).unwrap();
+        assert!(b.route_to(10, 0.0).is_ok());
+        assert_eq!(b.rows_available(), 64);
+    }
+
+    #[test]
+    fn double_reserve_and_bad_release_rejected() {
+        let mut b = bank();
+        b.reserve(3).unwrap();
+        assert!(b.reserve(3).is_err());
+        assert!(b.release(4).is_err());
+        assert!(b.reserve(999).is_err());
+    }
+
+    #[test]
+    fn busy_window_serializes() {
+        let mut b = bank();
+        let t0 = b.route_to(1, 0.0).unwrap();
+        b.occupy(t0 + 100.0);
+        let t1 = b.route_to(1, 0.0).unwrap();
+        assert_eq!(t1, t0 + 100.0);
+    }
+}

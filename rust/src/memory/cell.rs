@@ -1,0 +1,153 @@
+//! OPCM cell and subarray storage.
+//!
+//! A cell stores one of 2^bits transmission levels (16 for the paper's
+//! 4-bit MLC). Storage is sparse per subarray: a fully populated paper
+//! configuration holds 2³¹ cells, so subarray backing vectors are
+//! allocated on first touch. Endurance is tracked per subarray (GST
+//! crystallization cycles are finite; the simulator reports wear).
+
+use std::collections::HashMap;
+
+use crate::config::Geometry;
+
+/// Sparse cell storage for one bank.
+#[derive(Debug, Default)]
+pub struct CellStore {
+    /// (subarray_row, subarray_col) → cell levels, row-major.
+    subarrays: HashMap<(usize, usize), Vec<u8>>,
+    rows_per_subarray: usize,
+    cols_per_subarray: usize,
+    /// Total cell writes (endurance proxy).
+    pub write_count: u64,
+}
+
+impl CellStore {
+    pub fn new(geom: &Geometry) -> Self {
+        Self {
+            subarrays: HashMap::new(),
+            rows_per_subarray: geom.rows_per_subarray,
+            cols_per_subarray: geom.cols_per_subarray,
+            write_count: 0,
+        }
+    }
+
+    fn backing(&mut self, sr: usize, sc: usize) -> &mut Vec<u8> {
+        let (r, c) = (self.rows_per_subarray, self.cols_per_subarray);
+        self.subarrays
+            .entry((sr, sc))
+            .or_insert_with(|| vec![0u8; r * c])
+    }
+
+    /// Read `n` consecutive cell levels starting at (row, col).
+    pub fn read(&self, sr: usize, sc: usize, row: usize, col: usize, n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n);
+        self.read_into(sr, sc, row, col, n, &mut out);
+        out
+    }
+
+    /// Allocation-free read: append `n` levels into `out`.
+    pub fn read_into(
+        &self,
+        sr: usize,
+        sc: usize,
+        row: usize,
+        col: usize,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) {
+        debug_assert!(col + n <= self.cols_per_subarray);
+        match self.subarrays.get(&(sr, sc)) {
+            Some(cells) => {
+                let start = row * self.cols_per_subarray + col;
+                out.extend_from_slice(&cells[start..start + n]);
+            }
+            None => out.resize(out.len() + n, 0), // untouched reads as erased
+        }
+    }
+
+    /// Write consecutive cell levels starting at (row, col).
+    pub fn write(&mut self, sr: usize, sc: usize, row: usize, col: usize, levels: &[u8]) {
+        debug_assert!(col + levels.len() <= self.cols_per_subarray);
+        let cols = self.cols_per_subarray;
+        let cells = self.backing(sr, sc);
+        let start = row * cols + col;
+        cells[start..start + levels.len()].copy_from_slice(levels);
+        self.write_count += levels.len() as u64;
+    }
+
+    /// Number of subarrays with allocated (touched) backing.
+    pub fn touched_subarrays(&self) -> usize {
+        self.subarrays.len()
+    }
+}
+
+/// Pack bytes into cell levels (little-endian nibble order for 4-bit cells).
+pub fn bytes_to_levels(bytes: &[u8], bits_per_cell: u32) -> Vec<u8> {
+    assert!(matches!(bits_per_cell, 1 | 2 | 4 | 8));
+    let per_byte = (8 / bits_per_cell) as usize;
+    let mask = ((1u16 << bits_per_cell) - 1) as u8;
+    let mut levels = Vec::with_capacity(bytes.len() * per_byte);
+    for &b in bytes {
+        for i in 0..per_byte {
+            levels.push((b >> (i as u32 * bits_per_cell)) & mask);
+        }
+    }
+    levels
+}
+
+/// Inverse of [`bytes_to_levels`].
+pub fn levels_to_bytes(levels: &[u8], bits_per_cell: u32) -> Vec<u8> {
+    assert!(matches!(bits_per_cell, 1 | 2 | 4 | 8));
+    let per_byte = (8 / bits_per_cell) as usize;
+    assert_eq!(levels.len() % per_byte, 0);
+    levels
+        .chunks(per_byte)
+        .map(|chunk| {
+            chunk
+                .iter()
+                .enumerate()
+                .fold(0u8, |acc, (i, &lv)| acc | (lv << (i as u32 * bits_per_cell)))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn untouched_reads_zero() {
+        let store = CellStore::new(&Geometry::default());
+        assert_eq!(store.read(3, 7, 100, 10, 4), vec![0, 0, 0, 0]);
+        assert_eq!(store.touched_subarrays(), 0);
+    }
+
+    #[test]
+    fn write_then_read() {
+        let mut store = CellStore::new(&Geometry::default());
+        store.write(1, 2, 5, 10, &[3, 15, 0, 7]);
+        assert_eq!(store.read(1, 2, 5, 10, 4), vec![3, 15, 0, 7]);
+        assert_eq!(store.read(1, 2, 5, 9, 1), vec![0]);
+        assert_eq!(store.touched_subarrays(), 1);
+        assert_eq!(store.write_count, 4);
+    }
+
+    #[test]
+    fn levels_roundtrip_4bit() {
+        let bytes = vec![0xAB, 0x00, 0xFF, 0x5C];
+        let levels = bytes_to_levels(&bytes, 4);
+        assert_eq!(levels, vec![0xB, 0xA, 0x0, 0x0, 0xF, 0xF, 0xC, 0x5]);
+        assert_eq!(levels_to_bytes(&levels, 4), bytes);
+    }
+
+    #[test]
+    fn levels_roundtrip_all_densities() {
+        let bytes: Vec<u8> = (0..=255).collect();
+        for bits in [1u32, 2, 4, 8] {
+            let levels = bytes_to_levels(&bytes, bits);
+            assert_eq!(levels.len(), bytes.len() * (8 / bits as usize));
+            assert!(levels.iter().all(|&l| (l as u16) < (1 << bits)));
+            assert_eq!(levels_to_bytes(&levels, bits), bytes);
+        }
+    }
+}

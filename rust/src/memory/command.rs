@@ -1,0 +1,33 @@
+//! Memory command descriptors.
+
+/// What a command does.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CommandKind {
+    /// Read `len` bytes starting at `addr`.
+    Read { addr: u64, len: u64 },
+    /// Write the payload starting at `addr`.
+    Write { addr: u64, data: Vec<u8> },
+}
+
+/// A queued memory command.
+#[derive(Debug, Clone)]
+pub struct MemCommand {
+    pub id: u64,
+    pub kind: CommandKind,
+    /// Issue timestamp (ns).
+    pub issued_ns: f64,
+}
+
+/// Completion record for a command.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    /// When the command finished (ns).
+    pub finished_ns: f64,
+    /// Total latency including queueing (ns).
+    pub latency_ns: f64,
+    /// Energy consumed (pJ).
+    pub energy_pj: f64,
+    /// Data returned (reads only).
+    pub data: Option<Vec<u8>>,
+}

@@ -1,0 +1,24 @@
+//! OPCM main-memory simulator — the NVMain 2.0 substitute (paper §V).
+//!
+//! Models OPIMA's memory organization: `banks → subarray grid → R×C OPCM
+//! cells`, with GST-switch subarray routing, EO-MR row access, per-level
+//! MLC write pulse trains, and read/write energy from Table I. The
+//! simulator is cycle-approximate: commands carry nanosecond timestamps
+//! and banks/subarrays track busy windows; functional contents are stored
+//! sparsely (a fully populated memory is 2³¹ cells).
+//!
+//! PIM interacts with the memory through *group reservations*
+//! ([`controller::MemoryController::reserve_pim_rows`]): one subarray row
+//! per group is lent to the PIM engine while the remaining rows continue
+//! to serve ordinary reads/writes (paper §IV.C.2).
+
+pub mod address;
+pub mod bank;
+pub mod cell;
+pub mod command;
+pub mod controller;
+pub mod timing;
+
+pub use address::{AddressMap, DecodedAddr};
+pub use command::{CommandKind, MemCommand};
+pub use controller::{MemStats, MemoryController};

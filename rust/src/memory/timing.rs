@@ -1,0 +1,70 @@
+//! Access-timing model for the OPCM memory.
+//!
+//! Reads are single-pass optical transits (laser settle + propagation +
+//! PD/ADC); writes are multi-pulse partial-crystallization trains whose
+//! duration grows with the target level distance (MLC programming).
+//! Switching a bank's GST routing to a different subarray row costs a
+//! reconfiguration delay (amorphous↔crystalline transition of the switch).
+
+use crate::config::Timing;
+
+/// GST waveguide-switch reconfiguration time (ns): a partial phase
+/// transition, far faster than a full MLC data write but not free.
+pub const GST_SWITCH_RECONFIG_NS: f64 = 10.0;
+
+/// Latency of a row read burst of `cells` cells (they stream on WDM
+/// signals in parallel; the transit is one shot, ADC conversion is
+/// pipelined per cell batch).
+pub fn read_latency_ns(t: &Timing, cells: usize) -> f64 {
+    // One optical transit + pipelined ADC batches (32 λ per ADC bank).
+    let batches = cells.div_ceil(32) as f64;
+    t.read_ns + t.cycle_ns() * batches
+}
+
+/// Latency of writing `cells` cells in one row (pulse trains run
+/// concurrently across the row's wavelengths; duration is set by the
+/// worst-case level transition, i.e. the full write_ns figure).
+pub fn write_latency_ns(t: &Timing, cells: usize) -> f64 {
+    if cells == 0 {
+        return 0.0;
+    }
+    // The optical power budget limits concurrent MLC programming to a
+    // quarter-row per pulse train (write power ≫ read power).
+    let quarter = 64usize;
+    let waves = cells.div_ceil(quarter) as f64;
+    waves * t.write_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Timing;
+
+    #[test]
+    fn read_much_faster_than_write() {
+        let t = Timing::default();
+        assert!(read_latency_ns(&t, 256) * 10.0 < write_latency_ns(&t, 256));
+    }
+
+    #[test]
+    fn read_scales_sublinearly() {
+        let t = Timing::default();
+        let r1 = read_latency_ns(&t, 32);
+        let r8 = read_latency_ns(&t, 256);
+        assert!(r8 < 8.0 * r1, "WDM parallel read: {r1} vs {r8}");
+    }
+
+    #[test]
+    fn write_zero_cells_is_free() {
+        let t = Timing::default();
+        assert_eq!(write_latency_ns(&t, 0), 0.0);
+    }
+
+    #[test]
+    fn write_scales_with_row_quarters() {
+        let t = Timing::default();
+        assert_eq!(write_latency_ns(&t, 64), t.write_ns);
+        assert_eq!(write_latency_ns(&t, 65), 2.0 * t.write_ns);
+        assert_eq!(write_latency_ns(&t, 256), 4.0 * t.write_ns);
+    }
+}

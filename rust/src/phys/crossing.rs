@@ -1,0 +1,125 @@
+//! Inverse-designed waveguide crossing surrogate (paper §IV.C.3, Fig. 6).
+//!
+//! The paper optimized the crossing geometry with Lumerical FDTD + LumOpt,
+//! reporting <0.001% insertion loss at C-band center and ≤ −40 dB crosstalk
+//! across the C-band. The computation waveguides cross the data-out
+//! waveguides many times (Fig. 5(b)), so these two figures gate how many
+//! MAC results can cross the array without corrupting memory readouts.
+//!
+//! Surrogate: a broadband Lorentzian response centered at 1550 nm whose
+//! floor values are the published ones.
+
+
+
+/// C-band limits (nm).
+pub const C_BAND_MIN_NM: f64 = 1530.0;
+pub const C_BAND_MAX_NM: f64 = 1565.0;
+/// Design center of the inverse-designed crossing (nm).
+pub const CENTER_NM: f64 = 1550.0;
+
+/// Fractional insertion loss floor at band center: <0.001% (Fig. 6).
+const LOSS_FLOOR: f64 = 8.0e-6;
+/// Loss growth half-width (nm): the response stays flat across C-band.
+const LOSS_HALF_WIDTH_NM: f64 = 60.0;
+/// Crosstalk floor at band center (dB).
+const XTALK_FLOOR_DB: f64 = -41.5;
+/// Crosstalk degradation rate away from center (dB/nm²).
+const XTALK_CURVE_DB_PER_NM2: f64 = 3.0e-4;
+
+/// One sampled point of the crossing response.
+#[derive(Debug, Clone, Copy)]
+pub struct CrossingPoint {
+    pub wavelength_nm: f64,
+    /// Power transmission of the through path (fraction of input).
+    pub transmission: f64,
+    /// Fractional insertion loss (1 − transmission).
+    pub insertion_loss: f64,
+    /// Crosstalk into the orthogonal waveguide (dB, negative).
+    pub crosstalk_db: f64,
+}
+
+/// Fractional insertion loss at a wavelength (Lorentzian broadening).
+pub fn insertion_loss(wavelength_nm: f64) -> f64 {
+    let d = (wavelength_nm - CENTER_NM) / LOSS_HALF_WIDTH_NM;
+    LOSS_FLOOR * (1.0 + d * d)
+}
+
+/// Through-path power transmission.
+pub fn transmission(wavelength_nm: f64) -> f64 {
+    1.0 - insertion_loss(wavelength_nm)
+}
+
+/// Crosstalk (dB) into the crossing waveguide.
+pub fn crosstalk_db(wavelength_nm: f64) -> f64 {
+    let d = wavelength_nm - CENTER_NM;
+    XTALK_FLOOR_DB + XTALK_CURVE_DB_PER_NM2 * d * d
+}
+
+/// Sample the full C-band response (Fig. 6, right).
+pub fn c_band_profile(n_points: usize) -> Vec<CrossingPoint> {
+    assert!(n_points >= 2);
+    (0..n_points)
+        .map(|i| {
+            let wl = C_BAND_MIN_NM
+                + (C_BAND_MAX_NM - C_BAND_MIN_NM) * i as f64 / (n_points - 1) as f64;
+            CrossingPoint {
+                wavelength_nm: wl,
+                transmission: transmission(wl),
+                insertion_loss: insertion_loss(wl),
+                crosstalk_db: crosstalk_db(wl),
+            }
+        })
+        .collect()
+}
+
+/// Accumulated loss (dB) of a signal traversing `n` crossings.
+pub fn chain_loss_db(n: usize, wavelength_nm: f64) -> f64 {
+    -10.0 * (transmission(wavelength_nm).powi(n as i32)).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insertion_loss_below_paper_figure_across_c_band() {
+        // Fig. 6: "less than 0.001% of the input optical signal being lost".
+        for p in c_band_profile(64) {
+            assert!(
+                p.insertion_loss < 1.0e-5,
+                "{} nm: loss {}",
+                p.wavelength_nm,
+                p.insertion_loss
+            );
+        }
+    }
+
+    #[test]
+    fn crosstalk_at_most_minus_40db_across_c_band() {
+        for p in c_band_profile(64) {
+            assert!(
+                p.crosstalk_db <= -40.0,
+                "{} nm: {} dB",
+                p.wavelength_nm,
+                p.crosstalk_db
+            );
+        }
+    }
+
+    #[test]
+    fn maximum_transmission_at_band_center() {
+        let t_center = transmission(CENTER_NM);
+        for wl in [1530.0, 1540.0, 1560.0, 1565.0] {
+            assert!(t_center >= transmission(wl));
+        }
+    }
+
+    #[test]
+    fn chain_loss_is_additive_in_db() {
+        let one = chain_loss_db(1, CENTER_NM);
+        let hundred = chain_loss_db(100, CENTER_NM);
+        assert!((hundred - 100.0 * one).abs() < 1e-9);
+        // Even 512 crossings (a full subarray column) stay below 0.05 dB.
+        assert!(chain_loss_db(512, CENTER_NM) < 0.05);
+    }
+}

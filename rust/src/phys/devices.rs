@@ -1,0 +1,115 @@
+//! Photonic device primitives and their loss contributions.
+//!
+//! Each device on an optical path contributes an insertion loss (or gain,
+//! for SOAs) drawn from the paper's Table I. Paths are composed as ordered
+//! device lists and reduced to a total dB figure by [`path_loss_db`].
+
+
+
+use super::params::LossParams;
+
+/// A photonic element along an optical path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Device {
+    /// Directional coupler (e.g. MDL → subarray input coupling).
+    DirectionalCoupler,
+    /// Passive MR, drop port (wavelength filtered onto a branch).
+    MrDrop,
+    /// Passive MR, through port (wavelength passes a non-resonant ring).
+    MrThrough,
+    /// EO-tuned MR, drop port (access-control rings of the OPCM cell).
+    EoMrDrop,
+    /// EO-tuned MR, through port.
+    EoMrThrough,
+    /// Straight waveguide propagation over a length in µm.
+    Waveguide { length_um: f64 },
+    /// A 90° bend.
+    Bend,
+    /// GST waveguide switch (subarray access routing, §IV.C.2).
+    GstSwitch,
+    /// Inverse-designed waveguide crossing (computation waveguides).
+    Crossing,
+    /// Mode converter (MDM group aggregation).
+    ModeConverter,
+    /// Semiconductor optical amplifier (gain element).
+    Soa,
+    /// The OPCM memory cell itself at a given stored transmission.
+    OpcmCell { transmission: f64 },
+}
+
+impl Device {
+    /// Signed loss contribution in dB (positive = loss, negative = gain).
+    pub fn loss_db(&self, p: &LossParams) -> f64 {
+        match *self {
+            Device::DirectionalCoupler => p.directional_coupler_db,
+            Device::MrDrop => p.mr_drop_db,
+            Device::MrThrough => p.mr_through_db,
+            Device::EoMrDrop => p.eo_mr_drop_db,
+            Device::EoMrThrough => p.eo_mr_through_db,
+            Device::Waveguide { length_um } => p.propagation_db_per_cm * length_um / 1e4,
+            Device::Bend => p.bend_db_per_90,
+            Device::GstSwitch => p.gst_switch_db,
+            Device::Crossing => p.crossing_db,
+            Device::ModeConverter => p.mode_converter_db,
+            Device::Soa => -p.soa_gain_db,
+            Device::OpcmCell { transmission } => {
+                debug_assert!((0.0..=1.0).contains(&transmission));
+                -10.0 * transmission.max(1e-12).log10()
+            }
+        }
+    }
+}
+
+/// Total loss of an ordered device path in dB (gains subtract).
+pub fn path_loss_db(path: &[Device], p: &LossParams) -> f64 {
+    path.iter().map(|d| d.loss_db(p)).sum()
+}
+
+/// Remaining optical power (mW) after a path, given launch power (mW).
+pub fn output_power_mw(launch_mw: f64, path: &[Device], p: &LossParams) -> f64 {
+    launch_mw * 10f64.powf(-path_loss_db(path, p) / 10.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_losses_flow_through() {
+        let p = LossParams::default();
+        assert_eq!(Device::DirectionalCoupler.loss_db(&p), 0.02);
+        assert_eq!(Device::MrDrop.loss_db(&p), 0.5);
+        assert_eq!(Device::EoMrDrop.loss_db(&p), 1.6);
+        assert_eq!(Device::Soa.loss_db(&p), -20.0);
+        // 1 cm of waveguide = 0.1 dB.
+        assert!((Device::Waveguide { length_um: 10_000.0 }.loss_db(&p) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn opcm_cell_loss_reflects_transmission() {
+        let p = LossParams::default();
+        let dark = Device::OpcmCell { transmission: 0.02 }.loss_db(&p);
+        let bright = Device::OpcmCell { transmission: 0.97 }.loss_db(&p);
+        assert!(dark > 16.0 && dark < 18.0); // ~17 dB
+        assert!(bright < 0.2);
+    }
+
+    #[test]
+    fn path_composition() {
+        let p = LossParams::default();
+        let path = [
+            Device::DirectionalCoupler,
+            Device::GstSwitch,
+            Device::Waveguide { length_um: 500.0 },
+            Device::EoMrDrop,
+            Device::OpcmCell { transmission: 0.5 },
+            Device::EoMrDrop,
+            Device::Soa,
+        ];
+        let total = path_loss_db(&path, &p);
+        // 0.02 + 0.05 + 0.005 + 1.6 + 3.01 + 1.6 − 20 ≈ −13.7 dB (net gain).
+        assert!(total < 0.0, "SOA should more than recover losses: {total}");
+        let out = output_power_mw(1.0, &path, &p);
+        assert!(out > 1.0);
+    }
+}

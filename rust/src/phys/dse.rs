@@ -1,0 +1,158 @@
+//! Design-space exploration of the GST OPCM cell (paper Fig. 2).
+//!
+//! Sweeps GST width × thickness, evaluating the scattering change ΔT_s in
+//! both phases and the controlled contrast ΔT, and selects the optimum the
+//! way the paper does: maximize ΔT subject to ΔT_s < 5% in both states.
+
+
+
+use super::gst::{contrast, delta_t_scatter, GstGeometry, GstState};
+
+/// One evaluated design point.
+#[derive(Debug, Clone, Copy)]
+pub struct DsePoint {
+    pub width_um: f64,
+    pub thickness_nm: f64,
+    /// ΔT_s in the crystalline state (Fig. 2(a)).
+    pub dts_crystalline: f64,
+    /// ΔT_s in the amorphous state (Fig. 2(b)).
+    pub dts_amorphous: f64,
+    /// Controlled contrast ΔT = T_a − T_c (Fig. 2(c)).
+    pub contrast: f64,
+}
+
+/// Full sweep result.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub widths_um: Vec<f64>,
+    pub thicknesses_nm: Vec<f64>,
+    /// Row-major [thickness][width] grid of evaluated points.
+    pub grid: Vec<Vec<DsePoint>>,
+    /// The selected optimum (max ΔT subject to ΔT_s < threshold).
+    pub optimum: DsePoint,
+    /// The ΔT_s feasibility threshold (0.05 in the paper).
+    pub dts_threshold: f64,
+}
+
+/// Sweep parameters matching the paper's Fig. 2 axes.
+#[derive(Debug, Clone)]
+pub struct DseSweep {
+    pub width_min_um: f64,
+    pub width_max_um: f64,
+    pub width_step_um: f64,
+    pub thickness_min_nm: f64,
+    pub thickness_max_nm: f64,
+    pub thickness_step_nm: f64,
+    pub dts_threshold: f64,
+}
+
+impl Default for DseSweep {
+    fn default() -> Self {
+        Self {
+            width_min_um: 0.30,
+            width_max_um: 0.70,
+            width_step_um: 0.02,
+            thickness_min_nm: 5.0,
+            thickness_max_nm: 50.0,
+            thickness_step_nm: 5.0,
+            dts_threshold: 0.05,
+        }
+    }
+}
+
+fn frange(min: f64, max: f64, step: f64) -> Vec<f64> {
+    let n = ((max - min) / step).round() as usize + 1;
+    (0..n).map(|i| min + i as f64 * step).collect()
+}
+
+/// Evaluate a single geometry.
+pub fn evaluate(width_um: f64, thickness_nm: f64) -> DsePoint {
+    let g = GstGeometry::new(width_um, thickness_nm);
+    DsePoint {
+        width_um,
+        thickness_nm,
+        dts_crystalline: delta_t_scatter(&g, GstState::Crystalline),
+        dts_amorphous: delta_t_scatter(&g, GstState::Amorphous),
+        contrast: contrast(&g),
+    }
+}
+
+/// Run the full design-space exploration (Fig. 2).
+pub fn run(sweep: &DseSweep) -> DseResult {
+    let widths = frange(sweep.width_min_um, sweep.width_max_um, sweep.width_step_um);
+    let thicknesses = frange(
+        sweep.thickness_min_nm,
+        sweep.thickness_max_nm,
+        sweep.thickness_step_nm,
+    );
+    let grid: Vec<Vec<DsePoint>> = thicknesses
+        .iter()
+        .map(|&t| widths.iter().map(|&w| evaluate(w, t)).collect())
+        .collect();
+
+    let optimum = grid
+        .iter()
+        .flatten()
+        .filter(|p| {
+            p.dts_crystalline < sweep.dts_threshold && p.dts_amorphous < sweep.dts_threshold
+        })
+        .max_by(|a, b| a.contrast.total_cmp(&b.contrast))
+        .copied()
+        .unwrap_or_else(|| evaluate(0.48, 20.0));
+
+    DseResult {
+        widths_um: widths,
+        thicknesses_nm: thicknesses,
+        grid,
+        optimum,
+        dts_threshold: sweep.dts_threshold,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimum_matches_paper_design_point() {
+        let r = run(&DseSweep::default());
+        // Paper Fig. 2(c): optimum at width 0.48 µm, thickness 20 nm.
+        assert!(
+            (r.optimum.width_um - 0.48).abs() < 1e-9,
+            "width = {}",
+            r.optimum.width_um
+        );
+        assert!(
+            (r.optimum.thickness_nm - 20.0).abs() < 1e-9,
+            "thickness = {}",
+            r.optimum.thickness_nm
+        );
+        assert!(r.optimum.contrast > 0.92, "ΔT = {}", r.optimum.contrast);
+        assert!(r.optimum.dts_crystalline < 0.05);
+        assert!(r.optimum.dts_amorphous < 0.05);
+    }
+
+    #[test]
+    fn grid_dimensions_consistent() {
+        let r = run(&DseSweep::default());
+        assert_eq!(r.grid.len(), r.thicknesses_nm.len());
+        assert!(r.grid.iter().all(|row| row.len() == r.widths_um.len()));
+        // 0.30..0.70 step 0.02 → 21 widths; 5..50 step 5 → 10 thicknesses.
+        assert_eq!(r.widths_um.len(), 21);
+        assert_eq!(r.thicknesses_nm.len(), 10);
+    }
+
+    #[test]
+    fn infeasible_region_exists() {
+        // Thick films must violate the ΔT_s constraint — otherwise the
+        // constraint is vacuous and the sweep proves nothing.
+        let r = run(&DseSweep::default());
+        let infeasible = r
+            .grid
+            .iter()
+            .flatten()
+            .filter(|p| p.dts_crystalline >= 0.05 || p.dts_amorphous >= 0.05)
+            .count();
+        assert!(infeasible > 0);
+    }
+}

@@ -1,0 +1,234 @@
+//! GST OPCM cell surrogate physics (paper §IV.A, Fig. 2).
+//!
+//! The paper ran an FDTD design-space exploration of a 2-µm-long GST patch
+//! on a silicon waveguide, sweeping GST width and thickness, and selected
+//! the geometry that (a) keeps the *scattering/back-reflection* transmission
+//! change ΔT_s below 5% in both phases and (b) maximizes the *controlled*
+//! amorphous↔crystalline transmission contrast ΔT (96% at w = 0.48 µm,
+//! t = 20 nm), which supports 16 transmission levels → 4 bits/cell.
+//!
+//! Surrogate model (Eq. 2 of the paper: T_out = T_in − ΔT_s − P_abs):
+//!
+//! * **Absorption** follows Beer–Lambert with a confinement factor
+//!   Γ(w, t): the guided mode's overlap with the GST film grows with film
+//!   thickness (saturating) and peaks at the mode-matched width.
+//!   P_abs = 1 − exp(−α_state · Γ · L) with α_c ≫ α_a (crystalline GST is
+//!   strongly absorbing at 1550 nm, amorphous is nearly transparent).
+//! * **Scattering/back-reflection** at the waveguide/GST index
+//!   discontinuity grows quadratically with film thickness (Fresnel-like
+//!   step reflection ∝ interface area) and is minimized at the
+//!   mode-matched width; the crystalline state scatters more (larger Δn).
+//!
+//! Constants are calibrated so the published design point is reproduced:
+//! at (0.48 µm, 20 nm): ΔT_s < 5% in both states and ΔT ≈ 96%.
+
+
+
+/// GST phase state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GstState {
+    /// Melt-quenched, high-transmission state (binary 1 ↔ low absorption).
+    Amorphous,
+    /// Annealed, low-transmission state (strong absorption at 1550 nm).
+    Crystalline,
+}
+
+/// Geometry of the GST patch on the waveguide.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GstGeometry {
+    /// GST width in µm (across the waveguide).
+    pub width_um: f64,
+    /// GST film thickness in nm.
+    pub thickness_nm: f64,
+    /// GST length along the waveguide in µm (2 µm in the paper).
+    pub length_um: f64,
+}
+
+impl GstGeometry {
+    pub fn new(width_um: f64, thickness_nm: f64) -> Self {
+        Self {
+            width_um,
+            thickness_nm,
+            length_um: 2.0,
+        }
+    }
+
+    /// The paper's chosen design point (Fig. 2(c), marked '×').
+    pub fn paper_optimum() -> Self {
+        Self::new(0.48, 20.0)
+    }
+}
+
+/// Calibrated surrogate constants (see module docs).
+mod cal {
+    /// Mode-matched GST width (µm): scattering minimum & confinement peak.
+    pub const W_OPT_UM: f64 = 0.48;
+    /// Width tolerance of the confinement peak (µm).
+    pub const W_SIGMA_UM: f64 = 0.20;
+    /// Thickness half-saturation constant for the confinement factor (nm).
+    pub const T_HALF_NM: f64 = 10.0;
+    /// Crystalline absorption rate (µm⁻¹, per unit confinement).
+    pub const ALPHA_C: f64 = 3.0;
+    /// Amorphous absorption rate (µm⁻¹, per unit confinement).
+    pub const ALPHA_A: f64 = 0.010;
+    /// Crystalline scattering coefficient at reference geometry.
+    pub const R_C: f64 = 0.040;
+    /// Amorphous scattering coefficient at reference geometry (smaller Δn).
+    pub const R_A: f64 = 0.015;
+    /// Reference thickness for scattering normalization (nm).
+    pub const T_REF_NM: f64 = 20.0;
+    /// Width sensitivity of the scattering mismatch term (µm⁻¹).
+    pub const W_SCATTER_SENS: f64 = 10.0;
+}
+
+/// Confinement factor Γ(w, t) ∈ (0, 1): modal overlap with the GST film.
+pub fn confinement(geom: &GstGeometry) -> f64 {
+    let dw = (geom.width_um - cal::W_OPT_UM) / cal::W_SIGMA_UM;
+    let width_term = (-dw * dw).exp();
+    let thick_term = geom.thickness_nm / (geom.thickness_nm + cal::T_HALF_NM);
+    width_term * thick_term
+}
+
+/// Transmission change due to scattering and back-reflections, ΔT_s
+/// (fraction of input power, paper Fig. 2(a)/(b)).
+pub fn delta_t_scatter(geom: &GstGeometry, state: GstState) -> f64 {
+    let r0 = match state {
+        GstState::Crystalline => cal::R_C,
+        GstState::Amorphous => cal::R_A,
+    };
+    let thick = (geom.thickness_nm / cal::T_REF_NM).powi(2);
+    let dw = geom.width_um - cal::W_OPT_UM;
+    let width = 1.0 + (cal::W_SCATTER_SENS * dw).powi(2);
+    (r0 * thick * width).min(1.0)
+}
+
+/// Fraction of power absorbed in the GST patch (P_abs of Eq. 2).
+pub fn absorbed_fraction(geom: &GstGeometry, state: GstState) -> f64 {
+    let alpha = match state {
+        GstState::Crystalline => cal::ALPHA_C,
+        GstState::Amorphous => cal::ALPHA_A,
+    };
+    1.0 - (-alpha * confinement(geom) * geom.length_um).exp()
+}
+
+/// Output transmission T_out = T_in − ΔT_s − P_abs (T_in = 1), clamped.
+pub fn transmission(geom: &GstGeometry, state: GstState) -> f64 {
+    let t = (1.0 - delta_t_scatter(geom, state)) * (1.0 - absorbed_fraction(geom, state));
+    t.clamp(0.0, 1.0)
+}
+
+/// Controlled optical transmission contrast ΔT = T_a − T_c (Fig. 2(c)).
+pub fn contrast(geom: &GstGeometry) -> f64 {
+    transmission(geom, GstState::Amorphous) - transmission(geom, GstState::Crystalline)
+}
+
+/// Transmission of a partially crystallized cell storing `level` out of
+/// `n_levels` (multi-level cell): linear interpolation between the two
+/// phase extremes, which is how MLC programming targets are set.
+pub fn mlc_transmission(geom: &GstGeometry, level: u32, n_levels: u32) -> f64 {
+    assert!(n_levels >= 2 && level < n_levels);
+    let t_c = transmission(geom, GstState::Crystalline);
+    let t_a = transmission(geom, GstState::Amorphous);
+    let frac = level as f64 / (n_levels - 1) as f64;
+    t_c + frac * (t_a - t_c)
+}
+
+/// Maximum bit density supported by a geometry: levels must be separated
+/// by more than the scattering-induced uncertainty (the paper's read-error
+/// argument for why ΔT_s must be small).
+pub fn max_bits_per_cell(geom: &GstGeometry) -> u32 {
+    let dt = contrast(geom);
+    let noise = delta_t_scatter(geom, GstState::Amorphous)
+        .max(delta_t_scatter(geom, GstState::Crystalline));
+    if dt <= 0.0 || noise <= 0.0 {
+        return 0;
+    }
+    // Need 2^b levels with spacing dt/(2^b - 1) > 2*noise-margin heuristic.
+    let mut bits = 0u32;
+    while bits < 8 {
+        let levels = 1u64 << (bits + 1);
+        let spacing = dt / (levels - 1) as f64;
+        if spacing <= noise * 0.5 {
+            break;
+        }
+        bits += 1;
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const OPT: GstGeometry = GstGeometry {
+        width_um: 0.48,
+        thickness_nm: 20.0,
+        length_um: 2.0,
+    };
+
+    #[test]
+    fn paper_design_point_scattering_below_5pct() {
+        // Fig. 2(a)/(b): ΔT_s < 5% in both states at the chosen point.
+        assert!(delta_t_scatter(&OPT, GstState::Crystalline) < 0.05);
+        assert!(delta_t_scatter(&OPT, GstState::Amorphous) < 0.05);
+    }
+
+    #[test]
+    fn paper_design_point_contrast_near_96pct() {
+        // Fig. 2(c): ΔT ≈ 96% at (0.48 µm, 20 nm).
+        let dt = contrast(&OPT);
+        assert!((0.92..=0.99).contains(&dt), "ΔT = {dt}");
+    }
+
+    #[test]
+    fn supports_16_levels_at_optimum() {
+        assert!(max_bits_per_cell(&OPT) >= 4, "paper stores 4 bits/cell");
+    }
+
+    #[test]
+    fn crystalline_darker_than_amorphous() {
+        for w in [0.3, 0.4, 0.5, 0.6, 0.7] {
+            for t in [5.0, 15.0, 25.0, 40.0] {
+                let g = GstGeometry::new(w, t);
+                assert!(
+                    transmission(&g, GstState::Amorphous)
+                        > transmission(&g, GstState::Crystalline),
+                    "at ({w}, {t})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scattering_grows_with_thickness() {
+        let thin = GstGeometry::new(0.48, 10.0);
+        let thick = GstGeometry::new(0.48, 40.0);
+        assert!(
+            delta_t_scatter(&thick, GstState::Crystalline)
+                > delta_t_scatter(&thin, GstState::Crystalline)
+        );
+    }
+
+    #[test]
+    fn mlc_levels_monotone() {
+        let mut prev = -1.0;
+        for lv in 0..16 {
+            let t = mlc_transmission(&OPT, lv, 16);
+            assert!(t > prev, "levels must be strictly increasing");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn transmission_bounded() {
+        for w in [0.30, 0.48, 0.70] {
+            for t in [5.0, 20.0, 50.0] {
+                let g = GstGeometry::new(w, t);
+                for s in [GstState::Amorphous, GstState::Crystalline] {
+                    let tr = transmission(&g, s);
+                    assert!((0.0..=1.0).contains(&tr));
+                }
+            }
+        }
+    }
+}

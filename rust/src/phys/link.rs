@@ -1,0 +1,181 @@
+//! Optical link budgets for OPIMA's read/compute paths (paper §IV.B–C).
+//!
+//! Builds the canonical device paths (MDL → subarray → OPCM cell →
+//! computation waveguide → aggregation unit) from the geometry, computes
+//! their worst-case losses, determines where SOAs must be inserted
+//! ("row-wise loss-aware signal amplification", §IV.B), and solves the
+//! minimum per-wavelength laser power for a photodetector sensitivity
+//! target at a given cell bit density.
+
+
+
+use super::devices::{path_loss_db, Device};
+use super::params::LossParams;
+use crate::config::Geometry;
+
+/// Photodetector sensitivity (dBm) for reliable level discrimination at
+/// baseline (1-bit) readout. Each extra bit of cell density halves the
+/// level spacing, costing ~3 dB of required SNR.
+pub const PD_SENSITIVITY_DBM: f64 = -26.0;
+pub const SNR_PER_BIT_DB: f64 = 3.0;
+
+/// Physical pitch assumptions for path-length estimation (µm).
+const CELL_PITCH_UM: f64 = 12.0;
+const SUBARRAY_SPACING_UM: f64 = 150.0;
+
+/// A fully characterized optical path.
+#[derive(Debug, Clone)]
+pub struct LinkBudget {
+    /// Raw path loss before amplification (dB).
+    pub raw_loss_db: f64,
+    /// Number of SOAs inserted to keep the signal above sensitivity.
+    pub soa_count: usize,
+    /// Residual loss after amplification (dB; can be negative = net gain).
+    pub net_loss_db: f64,
+    /// Minimum launch power per wavelength (mW) for `bits_per_cell` readout.
+    pub min_launch_mw: f64,
+}
+
+/// Worst-case PIM read path inside one subarray: MDL launch, coupler, row
+/// access through the EO-MR pair, the OPCM cell, the full column of cells
+/// passed at through-ports, the coupling MR onto the computation
+/// waveguide, crossings across the subarray grid, and the mode converter
+/// into the aggregation bus.
+pub fn pim_read_path(geom: &Geometry) -> Vec<Device> {
+    let mut path = vec![
+        Device::DirectionalCoupler, // MDL → input waveguide
+        Device::GstSwitch,          // subarray select
+        Device::EoMrDrop,           // access-control ring (in)
+        Device::OpcmCell { transmission: 0.5 }, // mid-level cell (average)
+        Device::EoMrDrop,           // access-control ring (out)
+    ];
+    // Propagate along the subarray row; other columns' rings at through.
+    for _ in 0..(geom.cols_per_subarray - 1) {
+        path.push(Device::MrThrough);
+    }
+    path.push(Device::Waveguide {
+        length_um: geom.cols_per_subarray as f64 * CELL_PITCH_UM,
+    });
+    // Reroute onto the computation waveguide (coupling MR, §IV.C.3).
+    path.push(Device::MrDrop);
+    // Cross the data-out waveguides of the subarrays between here and the
+    // bank edge (worst case: a full subarray-column traversal).
+    for _ in 0..geom.subarray_rows {
+        path.push(Device::Crossing);
+    }
+    path.push(Device::Waveguide {
+        length_um: geom.subarray_rows as f64 * SUBARRAY_SPACING_UM,
+    });
+    // Group mode conversion before the aggregation demux.
+    path.push(Device::ModeConverter);
+    path.push(Device::Bend);
+    path.push(Device::Bend);
+    path
+}
+
+/// Main-memory read path: external laser through bank/subarray routing.
+/// The external comb laser couples on-chip, is mode-filtered to the bank,
+/// then rides the GST-switch column to the target subarray row (§IV.C.2:
+/// "GST-based waveguide switching, rather than splitting the WDM signal").
+pub fn memory_read_path(geom: &Geometry) -> Vec<Device> {
+    let mut path = vec![
+        Device::DirectionalCoupler, // laser → chip
+        Device::DirectionalCoupler, // chip → bank bus
+        Device::MrDrop,             // bank mode filter
+        Device::ModeConverter,
+    ];
+    // The signal passes every subarray row's GST switch on the way to the
+    // selected one (all-but-one at through state).
+    for _ in 0..geom.subarray_rows {
+        path.push(Device::GstSwitch);
+    }
+    path.push(Device::Waveguide {
+        length_um: geom.subarray_rows as f64 * SUBARRAY_SPACING_UM,
+    });
+    path.push(Device::EoMrDrop);
+    path.push(Device::OpcmCell { transmission: 0.5 });
+    path.push(Device::EoMrDrop);
+    for _ in 0..(geom.cols_per_subarray - 1) {
+        path.push(Device::MrThrough);
+    }
+    path.push(Device::Waveguide {
+        length_um: geom.cols_per_subarray as f64 * CELL_PITCH_UM,
+    });
+    path
+}
+
+/// Solve the link budget: insert SOAs until the arriving power at the PD
+/// exceeds the sensitivity needed for `bits_per_cell` discrimination.
+pub fn solve(path: &[Device], losses: &LossParams, bits_per_cell: u32, launch_mw: f64) -> LinkBudget {
+    let raw_loss_db = path_loss_db(path, losses);
+    let required_dbm = PD_SENSITIVITY_DBM + SNR_PER_BIT_DB * bits_per_cell as f64;
+    let launch_dbm = 10.0 * launch_mw.log10();
+
+    let mut soa_count = 0;
+    let mut net_loss_db = raw_loss_db;
+    while launch_dbm - net_loss_db < required_dbm && soa_count < 16 {
+        soa_count += 1;
+        net_loss_db -= losses.soa_gain_db;
+    }
+
+    // Minimum launch power with that many SOAs.
+    let min_launch_dbm = required_dbm + net_loss_db;
+    LinkBudget {
+        raw_loss_db,
+        soa_count,
+        net_loss_db,
+        min_launch_mw: 10f64.powf(min_launch_dbm / 10.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pim_path_closes_with_mdl_class_power() {
+        let geom = Geometry::default();
+        let losses = LossParams::default();
+        let path = pim_read_path(&geom);
+        let budget = solve(&path, &losses, geom.bits_per_cell, 1.0);
+        // The per-λ launch power must be in the MDL range (≲ a few mW),
+        // otherwise the local-laser design of §IV.C.2 would not work.
+        assert!(
+            budget.min_launch_mw < 5.0,
+            "PIM link needs {} mW",
+            budget.min_launch_mw
+        );
+    }
+
+    #[test]
+    fn memory_path_closes_with_soas() {
+        let geom = Geometry::default();
+        let losses = LossParams::default();
+        let path = memory_read_path(&geom);
+        // Per-wavelength launch power is ~1 mW: the external comb's output
+        // is divided across the WDM degree.
+        let budget = solve(&path, &losses, geom.bits_per_cell, 1.0);
+        assert!(budget.soa_count >= 1, "bank paths need SOA stages (§IV.B)");
+        assert!(budget.soa_count <= 4, "SOA chains must stay short");
+    }
+
+    #[test]
+    fn higher_bit_density_needs_more_power() {
+        let geom = Geometry::default();
+        let losses = LossParams::default();
+        let path = pim_read_path(&geom);
+        let b2 = solve(&path, &losses, 2, 1.0);
+        let b4 = solve(&path, &losses, 4, 1.0);
+        assert!(b4.min_launch_mw > b2.min_launch_mw);
+    }
+
+    #[test]
+    fn raw_loss_is_dominated_by_through_ports() {
+        // 255 through-port passes × 0.02 dB ≈ 5.1 dB — the dominant term,
+        // which is why the paper isolates cells and amplifies row-wise.
+        let geom = Geometry::default();
+        let losses = LossParams::default();
+        let raw = path_loss_db(&pim_read_path(&geom), &losses);
+        assert!(raw > 5.0 && raw < 20.0, "raw loss = {raw} dB");
+    }
+}

@@ -1,0 +1,55 @@
+//! Photonic physics layer: device models, GST OPCM cell surrogate physics,
+//! inverse-designed crossing surrogate, MDM analysis and link budgets.
+//!
+//! The paper obtained these numbers from Lumerical FDTD + LumOpt inverse
+//! design and fabricated-device characterization; this module provides
+//! calibrated analytical surrogates that reproduce the published design
+//! points and qualitative landscapes (see `DESIGN.md` §2 for the
+//! substitution argument).
+
+pub mod crossing;
+pub mod devices;
+pub mod dse;
+pub mod gst;
+pub mod link;
+pub mod mode;
+pub mod params;
+
+/// Convert a dB value to a linear power ratio.
+#[inline]
+pub fn db_to_linear(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Convert a linear power ratio to dB.
+#[inline]
+pub fn linear_to_db(ratio: f64) -> f64 {
+    10.0 * ratio.log10()
+}
+
+/// Convert dBm to milliwatts.
+#[inline]
+pub fn dbm_to_mw(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0)
+}
+
+/// Convert milliwatts to dBm.
+#[inline]
+pub fn mw_to_dbm(mw: f64) -> f64 {
+    10.0 * mw.log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn db_roundtrip() {
+        for &db in &[-40.0, -3.0, 0.0, 3.0, 20.0] {
+            assert!((linear_to_db(db_to_linear(db)) - db).abs() < 1e-9);
+        }
+        assert!((db_to_linear(3.0) - 1.9953).abs() < 1e-3);
+        assert!((dbm_to_mw(0.0) - 1.0).abs() < 1e-12);
+        assert!((mw_to_dbm(100.0) - 20.0).abs() < 1e-12);
+    }
+}

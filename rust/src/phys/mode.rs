@@ -1,0 +1,95 @@
+//! Mode-division multiplexing (MDM) analysis (paper §IV.C.1).
+//!
+//! OPIMA excites the first four TE modes of a multimode bus to parallelize
+//! across banks (and reuses them for the 16 subarray groups' aggregation
+//! paths). More modes need wider waveguides and suffer intermodal
+//! crosstalk from modal overlap — the paper's propagation analysis capped
+//! the MDM degree at 4. This module reproduces that trade-off.
+
+
+
+/// Minimum intermodal crosstalk suppression (dB) for reliable multi-level
+/// readout; below this the analog sums corrupt adjacent-mode channels.
+pub const XTALK_LIMIT_DB: f64 = -20.0;
+
+/// Single-mode silicon waveguide width at 1550 nm (µm).
+const BASE_WIDTH_UM: f64 = 0.45;
+/// Extra width needed per additional guided TE mode (µm).
+const WIDTH_PER_MODE_UM: f64 = 0.40;
+/// Crosstalk of a 2-mode bus (dB) and degradation per extra mode (dB).
+const XTALK_2MODE_DB: f64 = -32.0;
+const XTALK_SLOPE_DB_PER_MODE: f64 = 4.5;
+
+/// Characterization of an `n`-mode MDM bus.
+#[derive(Debug, Clone, Copy)]
+pub struct MdmBus {
+    pub modes: usize,
+    /// Required waveguide width (µm) to guide all modes.
+    pub width_um: f64,
+    /// Worst-pair intermodal crosstalk (dB; more negative = better).
+    pub crosstalk_db: f64,
+    /// Mode-converter insertion loss per conversion (dB).
+    pub converter_loss_db: f64,
+}
+
+/// Evaluate an MDM bus with `modes` concurrently excited TE modes.
+pub fn evaluate(modes: usize) -> MdmBus {
+    assert!(modes >= 1);
+    let width_um = BASE_WIDTH_UM + WIDTH_PER_MODE_UM * (modes as f64 - 1.0);
+    let crosstalk_db = if modes == 1 {
+        -60.0 // no intermodal partner; limited by fabrication disorder
+    } else {
+        XTALK_2MODE_DB + XTALK_SLOPE_DB_PER_MODE * (modes as f64 - 2.0)
+    };
+    MdmBus {
+        modes,
+        width_um,
+        crosstalk_db,
+        // Inverse-designed converters (ref [34]): compact, low, mildly
+        // increasing loss with mode order.
+        converter_loss_db: 0.08 + 0.015 * (modes as f64 - 1.0),
+    }
+}
+
+/// Does an `n`-mode bus keep crosstalk within the readout budget?
+pub fn is_reliable(modes: usize) -> bool {
+    evaluate(modes).crosstalk_db <= XTALK_LIMIT_DB
+}
+
+/// Largest reliable MDM degree — the paper's analysis yields 4.
+pub fn max_reliable_modes() -> usize {
+    let mut m = 1;
+    while is_reliable(m + 1) {
+        m += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mdm_degree_is_four() {
+        assert_eq!(max_reliable_modes(), 4);
+        assert!(is_reliable(4));
+        assert!(!is_reliable(5));
+    }
+
+    #[test]
+    fn width_grows_with_modes() {
+        let w4 = evaluate(4).width_um;
+        let w1 = evaluate(1).width_um;
+        assert!(w4 > 2.0 * w1, "4-mode buses are much wider: {w4} vs {w1}");
+    }
+
+    #[test]
+    fn crosstalk_monotonically_degrades() {
+        let mut prev = evaluate(2).crosstalk_db;
+        for m in 3..8 {
+            let x = evaluate(m).crosstalk_db;
+            assert!(x > prev, "mode {m} must be worse");
+            prev = x;
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Device loss and energy parameters — paper Table I, verbatim.
+//!
+//! Every value carries the unit in its name. These are the inputs the
+//! paper's own performance analyzer consumed; all downstream latency,
+//! energy and power numbers derive from them plus the geometry.
+
+
+
+use crate::error::{Error, Result};
+
+/// Optical loss parameters (Table I, left column).
+#[derive(Debug, Clone, PartialEq)]
+
+pub struct LossParams {
+    /// Directional coupler loss (dB). [42]
+    pub directional_coupler_db: f64,
+    /// Microring resonator drop-port loss (dB). [43]
+    pub mr_drop_db: f64,
+    /// Microring resonator through-port loss (dB). [44]
+    pub mr_through_db: f64,
+    /// Waveguide propagation loss (dB/cm). [45]
+    pub propagation_db_per_cm: f64,
+    /// Bending loss (dB per 90° bend). [46]
+    pub bend_db_per_90: f64,
+    /// EO-tuned MR drop-port loss (dB). [47]
+    pub eo_mr_drop_db: f64,
+    /// EO-tuned MR through-port loss (dB). [47]
+    pub eo_mr_through_db: f64,
+    /// Semiconductor optical amplifier gain (dB).
+    pub soa_gain_db: f64,
+    /// GST waveguide-switch insertion loss (dB) — "minimal losses"
+    /// (§IV.C.2); modeled like a directional-coupler-class element.
+    pub gst_switch_db: f64,
+    /// Mode converter insertion loss (dB) — inverse-designed, compact,
+    /// minimal loss (§IV.C.1).
+    pub mode_converter_db: f64,
+    /// Waveguide-crossing insertion loss (dB) — inverse-designed (Fig. 6,
+    /// <0.001% ⇒ ~4.3e-5 dB).
+    pub crossing_db: f64,
+    /// Crossing crosstalk floor (dB, negative) — Fig. 6 reports −40 dB.
+    pub crossing_crosstalk_db: f64,
+}
+
+impl Default for LossParams {
+    fn default() -> Self {
+        Self {
+            directional_coupler_db: 0.02,
+            mr_drop_db: 0.5,
+            mr_through_db: 0.02,
+            propagation_db_per_cm: 0.1,
+            bend_db_per_90: 0.01,
+            eo_mr_drop_db: 1.6,
+            eo_mr_through_db: 0.33,
+            soa_gain_db: 20.0,
+            gst_switch_db: 0.05,
+            mode_converter_db: 0.1,
+            crossing_db: 4.3e-5,
+            crossing_crosstalk_db: -40.0,
+        }
+    }
+}
+
+impl LossParams {
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("directional_coupler_db", self.directional_coupler_db),
+            ("mr_drop_db", self.mr_drop_db),
+            ("mr_through_db", self.mr_through_db),
+            ("propagation_db_per_cm", self.propagation_db_per_cm),
+            ("bend_db_per_90", self.bend_db_per_90),
+            ("eo_mr_drop_db", self.eo_mr_drop_db),
+            ("eo_mr_through_db", self.eo_mr_through_db),
+            ("gst_switch_db", self.gst_switch_db),
+            ("mode_converter_db", self.mode_converter_db),
+            ("crossing_db", self.crossing_db),
+        ] {
+            if v < 0.0 {
+                return Err(Error::Config(format!("{name} must be non-negative")));
+            }
+        }
+        if self.soa_gain_db <= 0.0 {
+            return Err(Error::Config("soa_gain_db must be positive".into()));
+        }
+        if self.crossing_crosstalk_db >= 0.0 {
+            return Err(Error::Config(
+                "crossing_crosstalk_db is a suppression figure and must be negative".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Energy parameters (Table I, right column).
+#[derive(Debug, Clone, PartialEq)]
+
+pub struct EnergyParams {
+    /// OPCM cell read energy (pJ). [23]
+    pub opcm_read_pj: f64,
+    /// OPCM cell write energy (pJ). [23]
+    pub opcm_write_pj: f64,
+    /// EPCM (electrically programmed PCM) write energy (nJ). [48] — used by
+    /// the PhPIM baseline's reprogramming path.
+    pub epcm_write_nj: f64,
+    /// DRAM access energy (pJ/bit). [49] — used by baselines with DDR5.
+    pub dram_access_pj_per_bit: f64,
+    /// ADC conversion energy (fJ/step). [50]
+    pub adc_fj_per_step: f64,
+    /// DAC conversion energy (pJ/bit). [51]
+    pub dac_pj_per_bit: f64,
+    /// SRAM access in the aggregation unit (pJ/bit) — CACTI-class figure.
+    pub sram_pj_per_bit: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        Self {
+            opcm_read_pj: 5.0,
+            opcm_write_pj: 250.0,
+            epcm_write_nj: 860.0,
+            dram_access_pj_per_bit: 20.0,
+            adc_fj_per_step: 24.4,
+            dac_pj_per_bit: 2.0,
+            sram_pj_per_bit: 0.05,
+        }
+    }
+}
+
+impl EnergyParams {
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("opcm_read_pj", self.opcm_read_pj),
+            ("opcm_write_pj", self.opcm_write_pj),
+            ("epcm_write_nj", self.epcm_write_nj),
+            ("dram_access_pj_per_bit", self.dram_access_pj_per_bit),
+            ("adc_fj_per_step", self.adc_fj_per_step),
+            ("dac_pj_per_bit", self.dac_pj_per_bit),
+            ("sram_pj_per_bit", self.sram_pj_per_bit),
+        ] {
+            if v <= 0.0 {
+                return Err(Error::Config(format!("{name} must be positive")));
+            }
+        }
+        if self.opcm_write_pj <= self.opcm_read_pj {
+            return Err(Error::Config(
+                "OPCM writes (phase transitions) must cost more than reads".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Energy of one n-bit ADC conversion in pJ (fJ/step × 2^bits steps).
+    pub fn adc_conversion_pj(&self, bits: u32) -> f64 {
+        self.adc_fj_per_step * (1u64 << bits) as f64 / 1000.0
+    }
+
+    /// Energy of one n-bit DAC conversion in pJ.
+    pub fn dac_conversion_pj(&self, bits: u32) -> f64 {
+        self.dac_pj_per_bit * bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults_match_paper() {
+        let l = LossParams::default();
+        assert_eq!(l.directional_coupler_db, 0.02);
+        assert_eq!(l.mr_drop_db, 0.5);
+        assert_eq!(l.mr_through_db, 0.02);
+        assert_eq!(l.propagation_db_per_cm, 0.1);
+        assert_eq!(l.bend_db_per_90, 0.01);
+        assert_eq!(l.eo_mr_drop_db, 1.6);
+        assert_eq!(l.eo_mr_through_db, 0.33);
+        assert_eq!(l.soa_gain_db, 20.0);
+        let e = EnergyParams::default();
+        assert_eq!(e.opcm_read_pj, 5.0);
+        assert_eq!(e.opcm_write_pj, 250.0);
+        assert_eq!(e.epcm_write_nj, 860.0);
+        assert_eq!(e.dram_access_pj_per_bit, 20.0);
+        assert_eq!(e.adc_fj_per_step, 24.4);
+        assert_eq!(e.dac_pj_per_bit, 2.0);
+        l.validate().unwrap();
+        e.validate().unwrap();
+    }
+
+    #[test]
+    fn adc_energy_scales_with_steps() {
+        let e = EnergyParams::default();
+        // 5-bit: 24.4 fJ × 32 steps = 780.8 fJ = 0.7808 pJ.
+        assert!((e.adc_conversion_pj(5) - 0.7808).abs() < 1e-9);
+        assert!(e.adc_conversion_pj(6) > e.adc_conversion_pj(5));
+    }
+
+    #[test]
+    fn epcm_vs_opcm_write_gap() {
+        // The 137× EPB story vs PhPIM hinges on nJ-vs-pJ write energies.
+        let e = EnergyParams::default();
+        let ratio = e.epcm_write_nj * 1000.0 / e.opcm_write_pj;
+        assert!(ratio > 3000.0, "EPCM/OPCM write ratio = {ratio}");
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        let mut l = LossParams::default();
+        l.soa_gain_db = -1.0;
+        assert!(l.validate().is_err());
+        let mut e = EnergyParams::default();
+        e.opcm_write_pj = 1.0;
+        assert!(e.validate().is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! The aggregation unit (paper §IV.C.3–4, Fig. 5(b)).
+//!
+//! Per bank: mode-demux → wavelength-selective photodetectors → 5-bit
+//! ADCs → shift-and-add logic → SRAM accumulation cache → DAC + VCSEL
+//! regeneration toward the E-O-E controller. The PD conversion also acts
+//! as a noise filter (wavelength-specific PDs disentangle crosstalk).
+//!
+//! This module prices aggregation events (energy) and models the
+//! pipeline latency contribution per MAC burst.
+
+use crate::config::OpimaConfig;
+
+/// Energy/latency cost of aggregating one burst of MAC results.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AggregationCost {
+    pub adc_pj: f64,
+    pub sram_pj: f64,
+    pub shift_add_pj: f64,
+    pub dac_pj: f64,
+    pub latency_ns: f64,
+}
+
+impl AggregationCost {
+    pub fn total_pj(&self) -> f64 {
+        self.adc_pj + self.sram_pj + self.shift_add_pj + self.dac_pj
+    }
+}
+
+/// Digital add energy (pJ) per shift-and-add op — standard-cell adder at
+/// the aggregation unit's word width (Horowitz-class figure).
+pub const SHIFT_ADD_PJ: f64 = 0.03;
+
+/// Accumulator word width (bits) held in the aggregation SRAM: wide
+/// enough for worst-case 32-bit recombinations with carries.
+pub const ACCUM_BITS: u32 = 40;
+
+/// Price one aggregation burst.
+///
+/// * `results` — number of analog MAC readouts digitized (ADC firings).
+/// * `shift_adds` — digital recombination ops (from the TDM plan).
+/// * `sram_accum_ops` — partial-sum read-modify-writes in the SRAM cache.
+/// * `regenerated` — output channels re-emitted via DAC + VCSEL for the
+///   trip to the E-O-E controller.
+pub fn cost(
+    cfg: &OpimaConfig,
+    results: u64,
+    shift_adds: u64,
+    sram_accum_ops: u64,
+    regenerated: u64,
+) -> AggregationCost {
+    let e = &cfg.energy;
+    let adc_pj = results as f64 * e.adc_conversion_pj(cfg.pim.adc_bits);
+    let sram_pj = sram_accum_ops as f64 * ACCUM_BITS as f64 * 2.0 * e.sram_pj_per_bit; // R+W
+    let shift_add_pj = shift_adds as f64 * SHIFT_ADD_PJ;
+    let dac_pj = regenerated as f64 * e.dac_conversion_pj(cfg.geometry.bits_per_cell);
+    // Pipelined: one aggregation pipeline latency per burst, plus a cycle
+    // per ADC batch beyond the first. The ADC array matches the λ-lane
+    // count (one converter per wavelength per group per bank), so batches
+    // are full-width.
+    let adc_channels = (cfg.geometry.banks
+        * cfg.geometry.subarray_groups
+        * cfg.geometry.cols_per_subarray) as u64;
+    let batches = results.div_ceil(adc_channels).max(1) as f64;
+    let latency_ns = cfg.timing.aggregation_ns + (batches - 1.0) * cfg.timing.cycle_ns();
+    AggregationCost {
+        adc_pj,
+        sram_pj,
+        shift_add_pj,
+        dac_pj,
+        latency_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adc_dominates_small_bursts() {
+        let cfg = OpimaConfig::paper();
+        let c = cost(&cfg, 256, 0, 0, 0);
+        // 256 × 0.7808 pJ ≈ 200 pJ.
+        assert!((c.adc_pj - 256.0 * 0.7808).abs() < 1e-6);
+        assert_eq!(c.total_pj(), c.adc_pj);
+    }
+
+    #[test]
+    fn costs_compose() {
+        let cfg = OpimaConfig::paper();
+        let c = cost(&cfg, 512, 384, 512, 64);
+        assert!(c.adc_pj > 0.0 && c.sram_pj > 0.0 && c.shift_add_pj > 0.0 && c.dac_pj > 0.0);
+        assert!(
+            (c.total_pj() - (c.adc_pj + c.sram_pj + c.shift_add_pj + c.dac_pj)).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn latency_grows_with_batches() {
+        let cfg = OpimaConfig::paper();
+        // ADC channels = 4 banks × 16 groups × 256 λ = 16 384.
+        let small = cost(&cfg, 16_384, 0, 0, 0);
+        let large = cost(&cfg, 10 * 16_384, 0, 0, 0);
+        assert!(large.latency_ns > small.latency_ns);
+        assert!((small.latency_ns - cfg.timing.aggregation_ns).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_burst_costs_pipeline_only() {
+        let cfg = OpimaConfig::paper();
+        let c = cost(&cfg, 0, 0, 0, 0);
+        assert_eq!(c.total_pj(), 0.0);
+        assert!(c.latency_ns > 0.0);
+    }
+}

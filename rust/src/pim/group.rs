@@ -1,0 +1,180 @@
+//! Subarray grouping (paper §IV.C.2 and Fig. 7).
+//!
+//! A bank's 64 subarray rows are divided into `G` groups. At any time one
+//! subarray row per group is lent to the PIM engine; the remaining rows
+//! keep serving main-memory traffic. More groups ⇒ more parallel MAC
+//! lanes but more laser/aggregation power and fewer memory-available
+//! rows. Fig. 7 sweeps G and picks 16 as the MAC/W optimum.
+
+use crate::config::{Geometry, OpimaConfig};
+use crate::error::{Error, Result};
+
+/// Static characterization of a grouping choice (one Fig. 7 x-axis point).
+#[derive(Debug, Clone, Copy)]
+pub struct GroupingPoint {
+    pub groups: usize,
+    /// Peak MAC operations per cycle across the whole memory.
+    pub macs_per_cycle: u64,
+    /// Peak MAC throughput (MAC/s).
+    pub mac_throughput: f64,
+    /// Total PIM-mode power (W): MDL + aggregation + interface.
+    pub power_w: f64,
+    /// Subarray rows per bank still available to memory traffic.
+    pub rows_available: usize,
+    /// Throughput efficiency (MAC/s per W) — Fig. 7's selection metric.
+    pub macs_per_watt: f64,
+}
+
+/// Multimode waveguides feeding each bank's aggregation demux (§V.A:
+/// "each of the four modes is assigned a separate multimode waveguide").
+pub const AGG_WAVEGUIDES: usize = 4;
+
+/// Groups whose results reach the aggregation unit concurrently: four
+/// modes × four multimode waveguides = 16 clean channels per bank. More
+/// groups than that must share channels and serialize their readouts, so
+/// effective throughput saturates — this is why Fig. 7's MAC/W peaks at
+/// 16 rather than growing monotonically.
+pub fn effective_groups(geom: &Geometry, groups: usize) -> usize {
+    groups.min(geom.mdm_degree * AGG_WAVEGUIDES)
+}
+
+/// Peak concurrent MAC lanes for a grouping: per bank, each *effective*
+/// group drives `optical_accum` subarrays of its active row concurrently,
+/// each contributing `cols_per_subarray` wavelength lanes whose products
+/// merge in the shared readout bus (the paper's in-waveguide
+/// accumulation).
+pub fn macs_per_cycle(geom: &Geometry, groups: usize, optical_accum: usize) -> u64 {
+    (geom.banks * effective_groups(geom, groups) * geom.cols_per_subarray * optical_accum)
+        as u64
+}
+
+/// Number of MDLs lit concurrently for a grouping.
+pub fn active_mdls(geom: &Geometry, groups: usize, optical_accum: usize) -> u64 {
+    (geom.banks * groups * optical_accum * geom.cols_per_subarray) as u64
+}
+
+/// Evaluate one grouping choice.
+pub fn evaluate(cfg: &OpimaConfig, groups: usize) -> Result<GroupingPoint> {
+    let geom = &cfg.geometry;
+    if groups == 0 || groups > geom.subarray_rows {
+        return Err(Error::Config(format!(
+            "groups must be 1..={}, got {groups}",
+            geom.subarray_rows
+        )));
+    }
+    let accum = cfg.pim.optical_accum;
+    let mpc = macs_per_cycle(geom, groups, accum);
+    let f_hz = cfg.timing.clock_ghz * 1e9;
+    let mac_throughput = mpc as f64 * f_hz;
+
+    // PIM power: lit MDLs + per-group aggregation interfaces + controller.
+    let mdl_w = active_mdls(geom, groups, accum) as f64 * cfg.power.mdl_wallplug_mw / 1e3;
+    // ADC/DAC interface energy at the achieved conversion rate: one ADC
+    // conversion per λ-lane result per cycle, one DAC regeneration per
+    // group output channel.
+    let adc_w = (geom.banks * groups * geom.cols_per_subarray) as f64
+        * cfg.energy.adc_conversion_pj(cfg.pim.adc_bits)
+        * 1e-12
+        * f_hz
+        * ADC_ACTIVITY;
+    // DAC/VCSEL regeneration runs per group output channel (16 per
+    // group), not per λ lane.
+    let dac_w = (geom.banks * groups * 16) as f64
+        * cfg.energy.dac_conversion_pj(cfg.geometry.bits_per_cell)
+        * 1e-12
+        * f_hz
+        * DAC_ACTIVITY;
+    let vcsel_w = (geom.banks * groups) as f64 * 16.0 * cfg.power.vcsel_mw / 1e3;
+    let agg_logic_w = cfg.power.aggregation_logic_w * (groups as f64 / 16.0).max(0.25)
+        * geom.banks as f64;
+    let power_w = mdl_w + adc_w + dac_w + vcsel_w + agg_logic_w + cfg.power.controller_w;
+
+    let rows_available = geom.subarray_rows - groups;
+    Ok(GroupingPoint {
+        groups,
+        macs_per_cycle: mpc,
+        mac_throughput,
+        power_w,
+        rows_available,
+        macs_per_watt: mac_throughput / power_w,
+    })
+}
+
+/// ADC/DAC duty factors: conversions fire on result-carrying cycles only
+/// (the TDM nibble loop and stride walks leave idle cycles); calibrated
+/// so the full-system power matches Fig. 8's 55.9 W envelope.
+pub const ADC_ACTIVITY: f64 = 0.15;
+pub const DAC_ACTIVITY: f64 = 0.15;
+
+/// Sweep groupings (Fig. 7's x-axis) and return the evaluated points.
+pub fn sweep(cfg: &OpimaConfig, choices: &[usize]) -> Result<Vec<GroupingPoint>> {
+    choices.iter().map(|&g| evaluate(cfg, g)).collect()
+}
+
+/// The MAC/W-optimal grouping among divisors of the subarray-row count,
+/// excluding the degenerate extremes (1 and all-rows), as the paper does.
+pub fn select_optimal(cfg: &OpimaConfig) -> Result<GroupingPoint> {
+    let rows = cfg.geometry.subarray_rows;
+    let candidates: Vec<usize> = (2..rows)
+        .filter(|g| rows % g == 0)
+        .collect();
+    let pts = sweep(cfg, &candidates)?;
+    pts.into_iter()
+        .max_by(|a, b| a.macs_per_watt.total_cmp(&b.macs_per_watt))
+        .ok_or_else(|| Error::Config("no grouping candidates".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configuration_peaks_at_16_groups() {
+        // Fig. 7: "16 subarray groups enable the maximum throughput
+        // efficiency (MAC/Watt)".
+        let cfg = OpimaConfig::paper();
+        let best = select_optimal(&cfg).unwrap();
+        assert_eq!(best.groups, 16, "MAC/W optimum must be 16 groups");
+    }
+
+    #[test]
+    fn throughput_grows_then_saturates_power_grows_rows_shrink() {
+        let cfg = OpimaConfig::paper();
+        let pts = sweep(&cfg, &[1, 2, 4, 8, 16, 32, 64]).unwrap();
+        for w in pts.windows(2) {
+            if w[1].groups <= 16 {
+                assert!(w[1].mac_throughput > w[0].mac_throughput);
+            } else {
+                // Beyond 16 groups the aggregation channels (4 modes × 4
+                // waveguides) are exhausted; readouts serialize.
+                assert_eq!(w[1].mac_throughput, w[0].mac_throughput);
+            }
+            assert!(w[1].power_w > w[0].power_w);
+            assert!(w[1].rows_available < w[0].rows_available);
+        }
+    }
+
+    #[test]
+    fn sixty_four_groups_starve_memory() {
+        let cfg = OpimaConfig::paper();
+        let p = evaluate(&cfg, 64).unwrap();
+        assert_eq!(p.rows_available, 0, "64 groups leave no memory rows");
+    }
+
+    #[test]
+    fn paper_grouping_peak_throughput() {
+        let cfg = OpimaConfig::paper();
+        let p = evaluate(&cfg, 16).unwrap();
+        // 4 banks × 16 groups × 256 λ × 2-way optical accumulation
+        assert_eq!(p.macs_per_cycle, 32_768);
+        // × 5 GHz = 163.84 TMAC/s peak.
+        assert!((p.mac_throughput - 163.84e12).abs() < 1e6);
+    }
+
+    #[test]
+    fn invalid_grouping_rejected() {
+        let cfg = OpimaConfig::paper();
+        assert!(evaluate(&cfg, 0).is_err());
+        assert!(evaluate(&cfg, 65).is_err());
+    }
+}

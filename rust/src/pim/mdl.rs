@@ -1,0 +1,119 @@
+//! Microdisk-laser (MDL) arrays (paper §IV.C.2).
+//!
+//! Each subarray carries `C` MDLs (one per column/wavelength) coupled
+//! onto its input waveguide by directional couplers. They let the PIM
+//! engine read any row without the external main-memory laser, and since
+//! the arrays are independent, many subarrays can be read concurrently.
+//! Kernel vectors are encoded as per-λ amplitudes via MDL drive DACs.
+
+use crate::config::OpimaConfig;
+use crate::error::{Error, Result};
+
+/// One subarray's MDL array state.
+#[derive(Debug, Clone)]
+pub struct MdlArray {
+    /// Number of lasers (= columns per subarray).
+    pub lanes: usize,
+    /// Current per-λ drive levels (quantized amplitudes), if lit.
+    levels: Option<Vec<u8>>,
+}
+
+impl MdlArray {
+    pub fn new(lanes: usize) -> Self {
+        Self { lanes, levels: None }
+    }
+
+    /// Program a kernel vector onto the array: one level per wavelength.
+    /// Values must fit the drive DAC resolution (= cell bit density, so a
+    /// one-shot multiply aligns operand precisions).
+    pub fn program(&mut self, levels: &[u8], bits: u32) -> Result<()> {
+        if levels.len() > self.lanes {
+            return Err(Error::Command(format!(
+                "kernel vector of {} exceeds {} MDL lanes",
+                levels.len(),
+                self.lanes
+            )));
+        }
+        let max = (1u16 << bits) as u8;
+        if let Some(&bad) = levels.iter().find(|&&l| l as u16 >= max as u16) {
+            return Err(Error::Command(format!(
+                "level {bad} exceeds {bits}-bit drive range"
+            )));
+        }
+        let mut v = levels.to_vec();
+        v.resize(self.lanes, 0); // unused lanes dark
+        self.levels = Some(v);
+        Ok(())
+    }
+
+    /// Lit lanes (nonzero drive).
+    pub fn lit_lanes(&self) -> usize {
+        self.levels
+            .as_ref()
+            .map(|v| v.iter().filter(|&&l| l > 0).count())
+            .unwrap_or(0)
+    }
+
+    /// Turn the array off (between PIM bursts).
+    pub fn dark(&mut self) {
+        self.levels = None;
+    }
+
+    pub fn is_lit(&self) -> bool {
+        self.levels.is_some()
+    }
+
+    /// Energy to (re)program the array: one DAC conversion per lane.
+    pub fn program_energy_pj(&self, cfg: &OpimaConfig, lanes: usize) -> f64 {
+        lanes as f64 * cfg.energy.dac_conversion_pj(cfg.geometry.bits_per_cell)
+    }
+
+    /// Wall-plug power while lit (mW).
+    pub fn power_mw(&self, cfg: &OpimaConfig) -> f64 {
+        if self.is_lit() {
+            self.lanes as f64 * cfg.power.mdl_wallplug_mw
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_and_query() {
+        let mut a = MdlArray::new(256);
+        a.program(&[1, 0, 15, 7], 4).unwrap();
+        assert!(a.is_lit());
+        assert_eq!(a.lit_lanes(), 3);
+        a.dark();
+        assert_eq!(a.lit_lanes(), 0);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let mut a = MdlArray::new(4);
+        assert!(a.program(&[16], 4).is_err(), "level 16 needs 5 bits");
+        assert!(a.program(&[1; 5], 4).is_err(), "too many lanes");
+        a.program(&[15], 4).unwrap();
+    }
+
+    #[test]
+    fn power_only_when_lit() {
+        let cfg = OpimaConfig::paper();
+        let mut a = MdlArray::new(256);
+        assert_eq!(a.power_mw(&cfg), 0.0);
+        a.program(&[1; 256], 4).unwrap();
+        assert!((a.power_mw(&cfg) - 256.0 * cfg.power.mdl_wallplug_mw).abs() < 1e-12);
+    }
+
+    #[test]
+    fn program_energy_uses_dac_figure() {
+        let cfg = OpimaConfig::paper();
+        let a = MdlArray::new(256);
+        // 2 pJ/bit × 4 bits × 256 lanes = 2048 pJ.
+        assert!((a.program_energy_pj(&cfg, 256) - 2048.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,24 @@
+//! The PIM engine — OPIMA's compute contribution (paper §IV.C).
+//!
+//! Submodules mirror the paper's four challenges:
+//! - [`group`] — subarray grouping: one subarray row per group does PIM
+//!   while the rest serve memory traffic (challenges 1 & 2).
+//! - [`mdl`] — per-subarray microdisk-laser arrays: memory-independent
+//!   PIM reads (challenge 2).
+//! - [`wdm`] — wavelength scheduling: in-waveguide accumulation pairing
+//!   and the 1×1-kernel serialization rule (challenge 3).
+//! - [`tdm`] — time-division nibble decomposition bridging parameter
+//!   bit-widths to the 4-bit cells (challenge 4).
+//! - [`aggregation`] — the per-bank aggregation unit: PD + 5-bit ADC +
+//!   shift-and-add + SRAM + DAC/VCSEL regeneration (challenges 3 & 4).
+//! - [`scheduler`] — composes all of the above into per-layer cycle and
+//!   energy costs; the quantity the analyzer rolls up into Figs. 7–12.
+
+pub mod aggregation;
+pub mod group;
+pub mod mdl;
+pub mod scheduler;
+pub mod tdm;
+pub mod wdm;
+
+pub use scheduler::{LayerCost, LayerWork, PimScheduler};

@@ -1,0 +1,261 @@
+//! PIM cost scheduler: per-layer cycle and energy accounting.
+//!
+//! This composes the grouping (parallel lanes), WDM accumulation rules
+//! (1×1 serialization), TDM bit-width bridging, aggregation-unit pricing
+//! and the OPCM writeback path into the per-layer numbers the analyzer
+//! rolls up into the paper's Figs. 7–12.
+
+use crate::config::OpimaConfig;
+use crate::error::Result;
+use crate::memory::timing::write_latency_ns;
+use crate::pim::{aggregation, tdm, wdm};
+
+/// A unit of CNN work as emitted by the mapper (one layer, one inference).
+#[derive(Debug, Clone)]
+pub struct LayerWork {
+    pub name: String,
+    /// MAC operations at full operand precision.
+    pub macs: u64,
+    /// Spatial accumulation depth: kernel rows that pair across subarrays
+    /// in a group (kh). 1 for 1×1 kernels and FC row-chunks that cannot
+    /// pair (the paper's serialization hazard).
+    pub spatial_accum: usize,
+    /// Activation operand width (bits).
+    pub act_bits: u32,
+    /// Weight operand width (bits).
+    pub weight_bits: u32,
+    /// Output feature elements produced.
+    pub out_elems: u64,
+    /// Weight parameters involved (for MDL programming counts).
+    pub weight_elems: u64,
+}
+
+/// Cost of one layer on the PIM substrate.
+#[derive(Debug, Clone, Default)]
+pub struct LayerCost {
+    pub name: String,
+    /// In-memory MAC + aggregation time (the paper's "processing").
+    pub processing_ns: f64,
+    /// Non-linearity application + OPCM write of output maps ("writeback").
+    pub writeback_ns: f64,
+    /// OPCM cell read energy (pJ).
+    pub read_pj: f64,
+    /// MDL laser energy: wall-plug power × lit time + programming DACs (pJ).
+    pub mdl_pj: f64,
+    /// Aggregation-unit energy (ADC+SRAM+shift-add+DAC regen) (pJ).
+    pub aggregation_pj: f64,
+    /// Writeback OPCM write energy (pJ).
+    pub writeback_pj: f64,
+    /// Number of PIM cycles consumed.
+    pub cycles: u64,
+    /// Effective MAC lanes used.
+    pub lanes: u64,
+}
+
+impl LayerCost {
+    pub fn total_ns(&self) -> f64 {
+        self.processing_ns + self.writeback_ns
+    }
+
+    pub fn dynamic_pj(&self) -> f64 {
+        self.read_pj + self.mdl_pj + self.aggregation_pj + self.writeback_pj
+    }
+}
+
+/// The scheduler: holds the configuration and prices layer work.
+#[derive(Debug, Clone)]
+pub struct PimScheduler {
+    cfg: OpimaConfig,
+}
+
+impl PimScheduler {
+    pub fn new(cfg: &OpimaConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self { cfg: cfg.clone() })
+    }
+
+    pub fn config(&self) -> &OpimaConfig {
+        &self.cfg
+    }
+
+    /// Effective parallel MAC lanes for a layer.
+    pub fn lanes_for(&self, spatial_accum: usize) -> u64 {
+        let g = &self.cfg.geometry;
+        if spatial_accum >= 2 {
+            (g.banks
+                * g.subarray_groups
+                * wdm::effective_lanes(
+                    g.cols_per_subarray,
+                    self.cfg.pim.optical_accum,
+                    spatial_accum,
+                )) as u64
+        } else {
+            // Accumulation-free products: a few guarded lanes per bank
+            // (λ sharing would corrupt the lone products).
+            (g.banks * self.cfg.pim.one_by_one_lanes_per_bank) as u64
+        }
+    }
+
+    /// Price one layer.
+    pub fn cost_layer(&self, work: &LayerWork) -> Result<LayerCost> {
+        let cfg = &self.cfg;
+        let plan = tdm::plan(work.act_bits, work.weight_bits, cfg.geometry.bits_per_cell)?;
+        let lanes = self.lanes_for(work.spatial_accum);
+        let nibble_macs = work.macs * plan.steps as u64;
+        let cycles = nibble_macs.div_ceil(lanes);
+        // MDL kernel-vector programming: each distinct weight digit vector
+        // is loaded once per TDM step; a program covers a full MDL array.
+        let programs = (work.weight_elems * plan.steps as u64)
+            .div_ceil(cfg.geometry.cols_per_subarray as u64);
+
+        // --- processing time -------------------------------------------
+        let agg = aggregation::cost(
+            cfg,
+            nibble_macs / cfg.pim.optical_accum.max(1) as u64,
+            work.out_elems * plan.shift_adds as u64,
+            work.out_elems * plan.steps as u64,
+            work.out_elems,
+        );
+        let processing_ns = cycles as f64 * cfg.timing.cycle_ns() + agg.latency_ns;
+
+        // --- energies ----------------------------------------------------
+        // One OPCM cell read per nibble MAC (input-stationary operand).
+        let read_pj = nibble_macs as f64 * cfg.energy.opcm_read_pj;
+        // MDL wall-plug while processing (lit lanes only) + program DACs.
+        let mdl_power_mw = lanes as f64 * cfg.power.mdl_wallplug_mw;
+        let mdl_pj = mdl_power_mw * 1e-3 * processing_ns * 1e-9 * 1e12
+            + programs as f64
+                * cfg.geometry.cols_per_subarray as f64
+                * cfg.energy.dac_conversion_pj(cfg.geometry.bits_per_cell);
+
+        // --- writeback: quantize outputs, write OPCM cells ---------------
+        let out_bits = work.out_elems * work.act_bits as u64;
+        let out_cells = out_bits.div_ceil(cfg.geometry.bits_per_cell as u64);
+        let lanes_wb = cfg.pim.writeback_lanes as u64;
+        let trains = out_cells.div_ceil(lanes_wb);
+        let writeback_ns = trains as f64 * write_latency_ns(&cfg.timing, 64)
+            + cfg.timing.writeback_overhead_ns * work.out_elems as f64
+                / lanes_wb.max(1) as f64;
+        let writeback_pj = out_cells as f64 * cfg.energy.opcm_write_pj;
+
+        Ok(LayerCost {
+            name: work.name.clone(),
+            processing_ns,
+            writeback_ns,
+            read_pj,
+            mdl_pj,
+            aggregation_pj: agg.total_pj(),
+            writeback_pj,
+            cycles,
+            lanes,
+        })
+    }
+
+    /// Price a whole network (sum of layers; layers execute sequentially
+    /// because each consumes its predecessor's written-back maps).
+    pub fn cost_network(&self, layers: &[LayerWork]) -> Result<Vec<LayerCost>> {
+        layers.iter().map(|w| self.cost_layer(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> PimScheduler {
+        PimScheduler::new(&OpimaConfig::paper()).unwrap()
+    }
+
+    fn conv_work(macs: u64, kh: usize, out_elems: u64) -> LayerWork {
+        LayerWork {
+            name: "conv".into(),
+            macs,
+            spatial_accum: kh,
+            act_bits: 4,
+            weight_bits: 4,
+            out_elems,
+            weight_elems: 1_000,
+        }
+    }
+
+    #[test]
+    fn four_bit_conv_uses_full_lanes() {
+        let s = sched();
+        let c = s.cost_layer(&conv_work(1_000_000, 3, 10_000)).unwrap();
+        assert_eq!(c.lanes, 32_768);
+        assert_eq!(c.cycles, 1_000_000u64.div_ceil(32_768));
+    }
+
+    #[test]
+    fn one_by_one_kernels_serialize() {
+        let s = sched();
+        let full = s.cost_layer(&conv_work(1_000_000, 3, 10_000)).unwrap();
+        let lone = s.cost_layer(&conv_work(1_000_000, 1, 10_000)).unwrap();
+        assert_eq!(lone.lanes, 8);
+        assert!(
+            lone.processing_ns > 100.0 * full.processing_ns,
+            "1×1: {} vs {}",
+            lone.processing_ns,
+            full.processing_ns
+        );
+    }
+
+    #[test]
+    fn eight_bit_quadruples_processing() {
+        let s = sched();
+        let mut w = conv_work(1_000_000, 3, 10_000);
+        let c4 = s.cost_layer(&w).unwrap();
+        w.act_bits = 8;
+        w.weight_bits = 8;
+        let c8 = s.cost_layer(&w).unwrap();
+        let ratio = c8.cycles as f64 / c4.cycles as f64;
+        assert!((3.9..=4.1).contains(&ratio), "TDM ratio = {ratio}");
+        // Writeback also doubles (8-bit activations).
+        assert!(c8.writeback_pj > 1.9 * c4.writeback_pj);
+    }
+
+    #[test]
+    fn writeback_dominates_typical_conv() {
+        // The Fig. 9 shape: for multi-row kernels, OPCM writeback latency
+        // far exceeds in-memory processing.
+        let s = sched();
+        let c = s.cost_layer(&conv_work(10_000_000, 3, 100_000)).unwrap();
+        assert!(c.writeback_ns > 5.0 * c.processing_ns);
+    }
+
+    #[test]
+    fn energy_breakdown_positive_and_consistent() {
+        let s = sched();
+        let c = s.cost_layer(&conv_work(500_000, 3, 5_000)).unwrap();
+        assert!(c.read_pj > 0.0);
+        assert!(c.mdl_pj > 0.0);
+        assert!(c.aggregation_pj > 0.0);
+        assert!(c.writeback_pj > 0.0);
+        // Table I: one 5 pJ read per nibble MAC.
+        assert!((c.read_pj - 500_000.0 * 5.0).abs() < 1e-6);
+        assert!((c.dynamic_pj()
+            - (c.read_pj + c.mdl_pj + c.aggregation_pj + c.writeback_pj))
+            .abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn network_costs_sum_layers() {
+        let s = sched();
+        let layers = vec![
+            conv_work(100_000, 3, 1_000),
+            conv_work(200_000, 1, 2_000),
+        ];
+        let costs = s.cost_network(&layers).unwrap();
+        assert_eq!(costs.len(), 2);
+        assert!(costs[1].processing_ns > costs[0].processing_ns);
+    }
+
+    #[test]
+    fn rejects_unsupported_bitwidths() {
+        let s = sched();
+        let mut w = conv_work(1000, 3, 100);
+        w.act_bits = 6;
+        assert!(s.cost_layer(&w).is_err());
+    }
+}

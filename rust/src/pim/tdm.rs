@@ -1,0 +1,91 @@
+//! TDM nibble decomposition (paper §IV.C.4, challenge 4).
+//!
+//! OPCM cells hold 4-bit levels; CNN parameters may be 4/8/16/32-bit.
+//! Wider operands are split into 4-bit nibbles and every nibble of one
+//! operand multiplies every nibble of the other across TDM steps, with
+//! shift-and-add recombination in the aggregation unit. This trades
+//! throughput for bit-width flexibility — the paper's 8-bit variants run
+//! 4× more MAC steps than the 4-bit ones.
+
+use crate::error::{Error, Result};
+
+/// Decomposition plan for one (activation bits × weight bits) pairing on
+/// cells of a given density.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TdmPlan {
+    /// Nibbles (cell-width digits) per activation operand.
+    pub act_digits: u32,
+    /// Nibbles per weight operand.
+    pub weight_digits: u32,
+    /// TDM steps = act_digits × weight_digits (MAC-op multiplier).
+    pub steps: u32,
+    /// Digital shift-and-add operations per output element.
+    pub shift_adds: u32,
+}
+
+/// Build a TDM plan. Operand widths must be multiples of the cell width.
+pub fn plan(act_bits: u32, weight_bits: u32, cell_bits: u32) -> Result<TdmPlan> {
+    if cell_bits == 0 {
+        return Err(Error::Config("cell_bits must be positive".into()));
+    }
+    for (name, bits) in [("activation", act_bits), ("weight", weight_bits)] {
+        if bits == 0 || bits % cell_bits != 0 {
+            return Err(Error::Mapping(format!(
+                "{name} width {bits} is not a positive multiple of the \
+                 {cell_bits}-bit cell density"
+            )));
+        }
+    }
+    let act_digits = act_bits / cell_bits;
+    let weight_digits = weight_bits / cell_bits;
+    let steps = act_digits * weight_digits;
+    Ok(TdmPlan {
+        act_digits,
+        weight_digits,
+        steps,
+        // Recombining S partial products needs S−1 adds (each with a shift).
+        shift_adds: steps.saturating_sub(1),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_bit_is_one_shot() {
+        let p = plan(4, 4, 4).unwrap();
+        assert_eq!(p.steps, 1);
+        assert_eq!(p.shift_adds, 0);
+    }
+
+    #[test]
+    fn eight_bit_quadruples_work() {
+        let p = plan(8, 8, 4).unwrap();
+        assert_eq!(p.steps, 4);
+        assert_eq!(p.shift_adds, 3);
+    }
+
+    #[test]
+    fn mixed_widths() {
+        let p = plan(8, 4, 4).unwrap();
+        assert_eq!(p.steps, 2);
+        let p = plan(16, 8, 4).unwrap();
+        assert_eq!(p.steps, 8);
+        let p = plan(32, 32, 4).unwrap();
+        assert_eq!(p.steps, 64);
+    }
+
+    #[test]
+    fn non_multiple_widths_rejected() {
+        assert!(plan(6, 4, 4).is_err());
+        assert!(plan(4, 10, 4).is_err());
+        assert!(plan(0, 4, 4).is_err());
+    }
+
+    #[test]
+    fn two_bit_cells() {
+        let p = plan(8, 8, 2).unwrap();
+        assert_eq!(p.steps, 16);
+    }
+}

@@ -1,0 +1,119 @@
+//! WDM scheduling and the in-waveguide accumulation rule (paper §IV.C.3,
+//! §IV.D).
+//!
+//! Products travelling on the *same wavelength* in a shared readout bus
+//! interfere and sum — that is the accumulate of the MAC. The scheduler
+//! must therefore ensure every λ in a bus carries only products that are
+//! *meant* to be summed. Kernels with spatial extent (K ≥ 2 rows)
+//! naturally pair rows across subarrays of a group; 1×1 kernels produce
+//! lone products with no accumulation partner, so their λ lanes cannot be
+//! shared — OPIMA loses most of its parallelism on such layers (the
+//! paper's InceptionV2/MobileNet observation).
+
+use crate::error::{Error, Result};
+
+/// Conflict-checked plan for one wavelength batch in one readout bus.
+#[derive(Debug, Clone)]
+pub struct WdmAssignment {
+    /// λ index → accumulation-group tag (products with equal tag sum).
+    pub lanes: Vec<Option<u32>>,
+}
+
+impl WdmAssignment {
+    pub fn new(wdm_degree: usize) -> Self {
+        Self {
+            lanes: vec![None; wdm_degree],
+        }
+    }
+
+    /// Assign a contiguous span of wavelengths to an accumulation group.
+    /// Errors if any lane is already carrying a different group's product
+    /// (that interference would corrupt both results).
+    pub fn assign(&mut self, start: usize, len: usize, tag: u32) -> Result<()> {
+        if start + len > self.lanes.len() {
+            return Err(Error::Mapping(format!(
+                "λ span {start}+{len} exceeds WDM degree {}",
+                self.lanes.len()
+            )));
+        }
+        for lane in &self.lanes[start..start + len] {
+            if let Some(existing) = lane {
+                if *existing != tag {
+                    return Err(Error::Mapping(format!(
+                        "λ conflict: lane already carries group {existing}"
+                    )));
+                }
+            }
+        }
+        for lane in &mut self.lanes[start..start + len] {
+            *lane = Some(tag);
+        }
+        Ok(())
+    }
+
+    pub fn used_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+}
+
+/// Effective parallel MAC lanes for a layer, given the kernel's
+/// accumulation depth.
+///
+/// * `wdm_degree` — λ lanes per subarray (= columns).
+/// * `optical_accum` — subarrays whose same-λ products merge in the bus.
+/// * `accum_len` — the layer's reduction length per output element.
+///
+/// Layers with `accum_len == 1` (1×1 convolutions) cannot share λ lanes:
+/// each product must travel alone, and concurrent unrelated products
+/// on the bus would corrupt it, so only one subarray of the group can
+/// drive each λ *and* adjacent λ reuse is restricted to keep the bus
+/// clean — an effective `ONE_BY_ONE_PENALTY`× serialization.
+pub fn effective_lanes(wdm_degree: usize, optical_accum: usize, accum_len: usize) -> usize {
+    if accum_len >= 2 {
+        wdm_degree * optical_accum
+    } else {
+        (wdm_degree / ONE_BY_ONE_PENALTY).max(1)
+    }
+}
+
+/// Serialization factor for accumulation-free (1×1) workloads; calibrated
+/// against the paper's Fig. 9 (MobileNet's processing latency exceeding
+/// ResNet18's despite 2.75× fewer parameters).
+pub const ONE_BY_ONE_PENALTY: usize = 16;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_conflicts_detected() {
+        let mut a = WdmAssignment::new(8);
+        a.assign(0, 4, 1).unwrap();
+        a.assign(4, 4, 2).unwrap();
+        // Same tag overlapping is fine (accumulation partners).
+        a.assign(0, 2, 1).unwrap();
+        // Different tag overlapping is interference.
+        assert!(a.assign(3, 2, 9).is_err());
+        assert_eq!(a.used_lanes(), 8);
+    }
+
+    #[test]
+    fn span_bounds_checked() {
+        let mut a = WdmAssignment::new(4);
+        assert!(a.assign(2, 3, 0).is_err());
+    }
+
+    #[test]
+    fn one_by_one_kernels_lose_parallelism() {
+        let full = effective_lanes(256, 2, 9); // 3×3 kernel
+        let lone = effective_lanes(256, 2, 1); // 1×1 kernel
+        assert_eq!(full, 512);
+        assert_eq!(lone, 16);
+        assert!(full / lone >= 32, "paper: 1×1 layers forfeit parallelism");
+    }
+
+    #[test]
+    fn minimum_one_lane() {
+        assert_eq!(effective_lanes(4, 2, 1), 1);
+    }
+}

@@ -1,0 +1,148 @@
+//! AOT artifact manifest (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Shape/dtype description of one artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    /// Input tensor shapes.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Output tensor shape (single output per artifact).
+    pub output_shape: Vec<usize>,
+    /// Operand bit-width for quantized artifacts (None for fp32).
+    pub bits: Option<u32>,
+}
+
+impl ArtifactInfo {
+    /// Element count of input `i`.
+    pub fn input_elems(&self, i: usize) -> usize {
+        self.input_shapes[i].iter().product()
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// The parsed manifest plus the directory it lives in.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub batch: usize,
+    pub image_size: usize,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = Json::parse(&text)?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Json("manifest missing 'artifacts'".into()))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, info) in arts {
+            let input_shapes = info
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Json(format!("{name}: missing inputs")))?
+                .iter()
+                .map(|inp| {
+                    inp.get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|s| s.iter().filter_map(|d| d.as_f64()).map(|d| d as usize).collect())
+                        .ok_or_else(|| Error::Json(format!("{name}: bad input shape")))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            let output_shape = info
+                .get("output_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Json(format!("{name}: missing output_shape")))?
+                .iter()
+                .filter_map(|d| d.as_f64())
+                .map(|d| d as usize)
+                .collect();
+            let bits = info.get("bits").and_then(Json::as_f64).map(|b| b as u32);
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    input_shapes,
+                    output_shape,
+                    bits,
+                },
+            );
+        }
+        let batch = v.get("batch").and_then(Json::as_f64).unwrap_or(8.0) as usize;
+        let image_size = v.get("image_size").and_then(Json::as_f64).unwrap_or(12.0) as usize;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            artifacts,
+            batch,
+            image_size,
+        })
+    }
+
+    /// Path of the HLO text file for an artifact.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in manifest")))
+    }
+
+    /// Default artifacts directory: `$OPIMA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("OPIMA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.contains_key("photonic_mac_4b"));
+        assert!(m.artifacts.contains_key("cnn_fp32_b8"));
+        let mac = m.get("photonic_mac_4b").unwrap();
+        assert_eq!(mac.input_shapes.len(), 2);
+        assert_eq!(mac.bits, Some(4));
+        assert!(m.hlo_path("photonic_mac_4b").exists());
+        let cnn = m.get("cnn_fp32_b8").unwrap();
+        assert_eq!(cnn.input_shapes[0], vec![8, 12, 12, 1]);
+        assert_eq!(cnn.output_shape, vec![8, 4]);
+        assert_eq!(cnn.output_elems(), 32);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("nonexistent").is_err());
+    }
+}

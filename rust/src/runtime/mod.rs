@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the Rust request path (Python never runs at serve time).
+//!
+//! - [`artifact`] — `artifacts/manifest.json` parsing and path
+//!   resolution for the HLO text files emitted by `python/compile/aot.py`.
+//! - [`executor`] — `xla` crate wrapper: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → compile (cached) → execute with
+//!   f32 buffers.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactInfo, Manifest};
+pub use executor::Executor;

@@ -1,0 +1,110 @@
+//! Criterion-style measurement harness for `cargo bench` targets.
+//!
+//! criterion is unavailable offline, so bench binaries (harness = false)
+//! use this: warmup, fixed sample count, mean/median/std reporting, and a
+//! `black_box` to defeat constant folding.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Re-exported black box.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Statistics of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+fn fmt_time(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Measure `f` with `warmup` unmeasured runs then `samples` timed runs.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Stats {
+    assert!(samples >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    times.sort_by(|a, b| a.total_cmp(b));
+    let mean = times.iter().sum::<f64>() / samples as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / samples as f64;
+    let stats = Stats {
+        name: name.to_string(),
+        samples,
+        mean_ns: mean,
+        median_ns: times[samples / 2],
+        std_ns: var.sqrt(),
+        min_ns: times[0],
+        max_ns: times[samples - 1],
+    };
+    println!(
+        "bench {:<44} mean {:>12}  median {:>12}  σ {:>10}  ({} samples)",
+        stats.name,
+        fmt_time(stats.mean_ns),
+        fmt_time(stats.median_ns),
+        fmt_time(stats.std_ns),
+        samples
+    );
+    stats
+}
+
+/// Print a markdown-style table header for paper-figure benches.
+pub fn table_header(title: &str, columns: &[&str]) {
+    println!("\n## {title}\n");
+    println!("| {} |", columns.join(" | "));
+    println!("|{}|", columns.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+}
+
+/// Print one table row.
+pub fn table_row(cells: &[String]) {
+    println!("| {} |", cells.join(" | "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_sane_stats() {
+        let mut acc = 0u64;
+        let s = measure("noop-ish", 2, 20, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(s.samples, 20);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
+        assert!(s.mean_ns > 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Self-contained utility substrates.
+//!
+//! This build environment is fully offline with a small vendored crate set
+//! (the `xla` closure + `anyhow`/`thiserror`), so the usual ecosystem
+//! crates (serde/serde_json/toml/rand/criterion/proptest) are unavailable.
+//! Per the reproduction ground rules we build the substrates we need:
+//!
+//! - [`json`] — minimal JSON parser/writer (artifact manifests, result
+//!   export).
+//! - [`tomlite`] — a TOML subset parser (flat `[section]` tables with
+//!   scalar values) for experiment configs.
+//! - [`prng`] — SplitMix64/Xoshiro256** deterministic PRNG (workloads,
+//!   property tests).
+//! - [`bench`] — a criterion-style measurement harness for `cargo bench`
+//!   targets (warmup, N samples, mean/median/stddev reporting).
+
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod tomlite;

@@ -1,0 +1,232 @@
+//! A TOML-subset parser ("tomlite") for experiment configs.
+//!
+//! Supports what our configs need: `[section]` and `[section.sub]`
+//! headers, `key = value` pairs with string / float / integer / boolean
+//! values, comments (`#`), and blank lines. No arrays-of-tables, no
+//! multi-line strings, no dotted keys.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key` → value (root keys have no dot).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Toml(format!("line {}: bad section", lineno + 1)))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(Error::Toml(format!("line {}: empty section", lineno + 1)));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Toml(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(Error::Toml(format!("line {}: empty key", lineno + 1)));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, parse_value(val.trim(), lineno + 1)?);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// Float lookup with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    /// Usize lookup with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    /// Keys not consumed by the caller can be detected for strictness.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value> {
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| Error::Toml(format!("line {lineno}: unterminated string")))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if !text.contains(['.', 'e', 'E']) {
+        if let Ok(i) = text.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    text.parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| Error::Toml(format!("line {lineno}: bad value '{text}'")))
+}
+
+/// Serialize section→(key→value) maps in deterministic order.
+pub fn to_string(sections: &BTreeMap<String, BTreeMap<String, Value>>) -> String {
+    let mut out = String::new();
+    for (section, kv) in sections {
+        if !section.is_empty() {
+            out.push_str(&format!("[{section}]\n"));
+        }
+        for (k, v) in kv {
+            let vs = match v {
+                Value::Str(s) => format!("\"{s}\""),
+                Value::Float(f) => {
+                    if f.fract() == 0.0 {
+                        format!("{f:.1}")
+                    } else {
+                        format!("{f}")
+                    }
+                }
+                Value::Int(i) => format!("{i}"),
+                Value::Bool(b) => format!("{b}"),
+            };
+            out.push_str(&format!("{k} = {vs}\n"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Doc::parse(
+            r#"
+# top comment
+title = "opima"
+
+[geometry]
+banks = 4            # inline comment
+bits_per_cell = 4
+
+[timing]
+clock_ghz = 5.0
+write_ns = 5e1
+fast = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("title").unwrap().as_str(), Some("opima"));
+        assert_eq!(doc.usize_or("geometry.banks", 0), 4);
+        assert_eq!(doc.f64_or("timing.clock_ghz", 0.0), 5.0);
+        assert_eq!(doc.f64_or("timing.write_ns", 0.0), 50.0);
+        assert_eq!(doc.get("timing.fast").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("k = \"unterminated").is_err());
+        assert!(Doc::parse("k = 1.2.3").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn roundtrip_via_to_string() {
+        let mut sections = BTreeMap::new();
+        let mut kv = BTreeMap::new();
+        kv.insert("banks".into(), Value::Int(4));
+        kv.insert("clock_ghz".into(), Value::Float(5.0));
+        sections.insert("geometry".into(), kv);
+        let text = to_string(&sections);
+        let doc = Doc::parse(&text).unwrap();
+        assert_eq!(doc.usize_or("geometry.banks", 0), 4);
+        assert_eq!(doc.f64_or("geometry.clock_ghz", 0.0), 5.0);
+    }
+}

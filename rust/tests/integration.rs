@@ -1,0 +1,250 @@
+//! Cross-module integration tests: the full simulator stack composed
+//! end to end, plus the PJRT serving path when artifacts are present.
+
+use std::path::Path;
+
+use opima::analyzer::energy::energy_breakdown;
+use opima::analyzer::metrics::workload_bits;
+use opima::analyzer::{analyze_model, power_breakdown};
+use opima::baselines::{evaluate_all, evaluate_opima};
+use opima::cnn::{build_model, Model, ALL_MODELS};
+use opima::mapper::map_network;
+use opima::memory::MemoryController;
+use opima::phys::{dse, link, mode};
+use opima::pim::group;
+use opima::runtime::Manifest;
+use opima::OpimaConfig;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn device_dse_feeds_architecture() {
+    // The phys layer's chosen cell must support the architecture's bit
+    // density — the cross-layer consistency the paper's §IV.A claims.
+    let cfg = OpimaConfig::paper();
+    let r = dse::run(&dse::DseSweep::default());
+    let geom = opima::phys::gst::GstGeometry::new(r.optimum.width_um, r.optimum.thickness_nm);
+    assert!(
+        opima::phys::gst::max_bits_per_cell(&geom) >= cfg.geometry.bits_per_cell,
+        "DSE optimum must support {} bits/cell",
+        cfg.geometry.bits_per_cell
+    );
+}
+
+#[test]
+fn mdm_bound_matches_bank_count() {
+    let cfg = OpimaConfig::paper();
+    assert_eq!(mode::max_reliable_modes(), cfg.geometry.mdm_degree);
+    assert!(cfg.geometry.banks <= cfg.geometry.mdm_degree);
+}
+
+#[test]
+fn link_budgets_close_for_paper_geometry() {
+    let cfg = OpimaConfig::paper();
+    let pim = link::solve(
+        &link::pim_read_path(&cfg.geometry),
+        &cfg.losses,
+        cfg.geometry.bits_per_cell,
+        1.0,
+    );
+    assert!(pim.min_launch_mw < 5.0, "MDL-class power: {}", pim.min_launch_mw);
+    let mem = link::solve(
+        &link::memory_read_path(&cfg.geometry),
+        &cfg.losses,
+        cfg.geometry.bits_per_cell,
+        1.0,
+    );
+    assert!(mem.soa_count >= 1 && mem.soa_count <= 4);
+}
+
+#[test]
+fn memory_and_pim_share_the_row_budget() {
+    // Fig. 7's "rows available" column must equal what the memory
+    // controller actually has left after PIM reservations.
+    let cfg = OpimaConfig::paper();
+    let mut mem = MemoryController::new(&cfg).unwrap();
+    let rows = mem.reserve_pim_rows().unwrap();
+    let point = group::evaluate(&cfg, cfg.geometry.subarray_groups).unwrap();
+    assert_eq!(mem.rows_available(), point.rows_available);
+    mem.release_pim_rows(&rows).unwrap();
+}
+
+#[test]
+fn every_model_flows_through_the_whole_stack() {
+    let cfg = OpimaConfig::paper();
+    for m in ALL_MODELS {
+        let net = build_model(m).unwrap();
+        for bits in [4u32, 8] {
+            let mapped = map_network(&cfg, &net, bits).unwrap();
+            let a = analyze_model(&cfg, &net, bits).unwrap();
+            assert_eq!(a.layer_costs.len(), mapped.works.len());
+            assert!(a.total_ms() > 0.0);
+            let e = energy_breakdown(&cfg, &a);
+            assert!(e.dynamic_mj() > 0.0);
+            assert!((a.dynamic_mj - e.dynamic_mj()).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn comparison_orderings_hold_paper_shape() {
+    // Fig. 11/12: OPIMA must win on both metrics against all platforms,
+    // per model, at 4-bit.
+    let cfg = OpimaConfig::paper();
+    for m in [Model::ResNet18, Model::InceptionV2, Model::MobileNet, Model::SqueezeNet] {
+        let net = build_model(m).unwrap();
+        let rs = evaluate_all(&cfg, &net, 4).unwrap();
+        let bits = workload_bits(&net, 4);
+        let o = &rs[0];
+        assert_eq!(o.platform, "OPIMA");
+        for r in rs.iter().skip(1) {
+            assert!(
+                r.epb_pj(bits) > o.epb_pj(bits),
+                "{}: {} EPB must exceed OPIMA",
+                m.name(),
+                r.platform
+            );
+        }
+        // FPS/W: OPIMA wins on geomean (asserted in the bench); per-model
+        // the paper itself notes P100 can out-run OPIMA on 1×1-heavy
+        // models, so no per-model assert here.
+    }
+}
+
+#[test]
+fn headline_throughput_vs_phpim() {
+    // Abstract: "2.98× higher throughput ... than the best-known prior
+    // work". Check the geomean latency advantage is in the right band.
+    let cfg = OpimaConfig::paper();
+    let mut ratios = Vec::new();
+    for m in [Model::ResNet18, Model::InceptionV2, Model::MobileNet, Model::SqueezeNet] {
+        let net = build_model(m).unwrap();
+        let o = evaluate_opima(&cfg, &net, 4).unwrap();
+        let p = opima::baselines::phpim::PhPim::new(&cfg).evaluate(&net, 4);
+        ratios.push(p.latency_ms / o.latency_ms);
+    }
+    let gm = opima::analyzer::metrics::geomean_ratio(&ratios, &vec![1.0; ratios.len()]);
+    assert!(
+        (1.5..6.0).contains(&gm),
+        "OPIMA vs PhPIM throughput advantage {gm:.2}× (paper 2.98×)"
+    );
+}
+
+#[test]
+fn power_envelope_stable_across_workloads() {
+    // Fig. 8 is a configuration property, not a workload property.
+    let cfg = OpimaConfig::paper();
+    let p = power_breakdown(&cfg).total_w();
+    assert!((47.5..64.3).contains(&p));
+}
+
+#[test]
+fn config_overrides_propagate_to_results() {
+    let base = OpimaConfig::paper();
+    let mut fast = base.clone();
+    fast.timing.write_ns = 100.0; // 10× faster MLC writes
+    let net = build_model(Model::ResNet18).unwrap();
+    let a_base = analyze_model(&base, &net, 4).unwrap();
+    let a_fast = analyze_model(&fast, &net, 4).unwrap();
+    assert!(a_fast.writeback_ms < a_base.writeback_ms / 5.0);
+    assert!((a_fast.processing_ms - a_base.processing_ms).abs() < 1e-9);
+}
+
+#[test]
+fn toml_config_file_roundtrip() {
+    let cfg = OpimaConfig::paper();
+    let dir = std::env::temp_dir().join("opima_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cfg.toml");
+    std::fs::write(&path, cfg.to_toml()).unwrap();
+    let back = OpimaConfig::from_toml_file(&path).unwrap();
+    assert_eq!(cfg, back);
+}
+
+// ---- PJRT-backed tests (need `make artifacts`) --------------------------
+
+#[test]
+fn serving_path_end_to_end() {
+    use opima::coordinator::{InferenceRequest, Server, ServerConfig, Variant};
+    use std::time::Instant;
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut server = Server::new(ServerConfig::default(), manifest).unwrap();
+    let elems = server.image_elems();
+    // Deterministic class-0 image (horizontal stripes, cf. data.py).
+    let mut image = vec![0f32; elems];
+    let size = (elems as f64).sqrt() as usize;
+    for r in 0..size {
+        for c in 0..size {
+            image[r * size + c] = (((r) / 2) % 2) as f32;
+        }
+    }
+    for id in 0..16u64 {
+        server
+            .submit(InferenceRequest {
+                id,
+                image: image.clone(),
+                variant: Variant::Fp32,
+                arrival: Instant::now(),
+            })
+            .unwrap();
+    }
+    server.flush().unwrap();
+    assert_eq!(server.responses().len(), 16);
+    // A clean class-0 pattern must classify as class 0 at fp32.
+    let correct = server.responses().iter().filter(|r| r.predicted == 0).count();
+    assert!(correct >= 15, "{correct}/16 classified as class 0");
+}
+
+#[test]
+fn quantized_artifacts_agree_with_fp32_mostly() {
+    use opima::runtime::Executor;
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let batch = manifest.batch;
+    let size = manifest.image_size;
+    let mut ex = Executor::new(manifest).unwrap();
+    // One clean image per class, then padding.
+    let mut input = vec![0f32; batch * size * size];
+    for (img, cls) in (0..batch).zip([0usize, 1, 2, 3].iter().cycle()) {
+        for r in 0..size {
+            for c in 0..size {
+                let v = match cls {
+                    0 => (r / 2) % 2,
+                    1 => (c / 2) % 2,
+                    2 => ((r + c) / 3) % 2,
+                    _ => ((r / 3) + (c / 3)) % 2,
+                };
+                input[img * size * size + r * size + c] = v as f32;
+            }
+        }
+    }
+    let fp = ex.run_f32(&format!("cnn_fp32_b{batch}"), &[&input]).unwrap();
+    let q8 = ex.run_f32(&format!("cnn_int8_b{batch}"), &[&input]).unwrap();
+    let classes = fp.len() / batch;
+    let argmax = |row: &[f32]| {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0
+    };
+    let mut agree = 0;
+    for i in 0..batch {
+        if argmax(&fp[i * classes..(i + 1) * classes])
+            == argmax(&q8[i * classes..(i + 1) * classes])
+        {
+            agree += 1;
+        }
+    }
+    assert!(agree * 10 >= batch * 7, "int8 agrees with fp32: {agree}/{batch}");
+}

@@ -1,0 +1,309 @@
+//! Property-based tests over the coordinator/simulator invariants.
+//!
+//! proptest is unavailable in this offline environment, so these use the
+//! in-repo deterministic PRNG with many random cases per property — the
+//! same randomized-invariant methodology, with seeds printed on failure.
+
+use opima::cnn::layer::{Layer, TensorShape};
+use opima::config::{Geometry, OpimaConfig};
+use opima::coordinator::batcher::DynamicBatcher;
+use opima::coordinator::request::{InferenceRequest, Variant};
+use opima::coordinator::router::Router;
+use opima::memory::address::AddressMap;
+use opima::memory::cell::{bytes_to_levels, levels_to_bytes};
+use opima::memory::MemoryController;
+use opima::pim::tdm;
+use opima::util::json::Json;
+use opima::util::prng::Rng;
+
+const CASES: usize = 300;
+
+/// PROPERTY: address decode is total, in-bounds, and row-encode-invertible
+/// for every address in capacity.
+#[test]
+fn prop_address_decode_bijective() {
+    let geoms = [
+        Geometry::default(),
+        Geometry {
+            banks: 2,
+            subarray_rows: 8,
+            subarray_cols: 4,
+            rows_per_subarray: 16,
+            cols_per_subarray: 32,
+            bits_per_cell: 4,
+            subarray_groups: 4,
+            mdm_degree: 4,
+        },
+        Geometry {
+            banks: 1,
+            subarray_rows: 4,
+            subarray_cols: 4,
+            rows_per_subarray: 8,
+            cols_per_subarray: 16,
+            bits_per_cell: 2,
+            subarray_groups: 2,
+            mdm_degree: 4,
+        },
+    ];
+    for (gi, geom) in geoms.iter().enumerate() {
+        geom.validate().unwrap();
+        let map = AddressMap::new(geom);
+        let mut rng = Rng::new(1000 + gi as u64);
+        let bpr = map.bytes_per_row() as u64;
+        for case in 0..CASES {
+            let row_addr = (rng.next_u64() % (map.capacity_bytes() / bpr)) * bpr;
+            let d = map.decode(row_addr).unwrap_or_else(|e| {
+                panic!("geom {gi} case {case}: decode({row_addr}) failed: {e}")
+            });
+            assert!(d.bank < geom.banks);
+            assert!(d.subarray_row < geom.subarray_rows);
+            assert!(d.subarray_col < geom.subarray_cols);
+            assert!(d.row < geom.rows_per_subarray);
+            assert_eq!(
+                map.encode_row(&d),
+                row_addr,
+                "geom {gi} case {case}: row roundtrip"
+            );
+        }
+    }
+}
+
+/// PROPERTY: memory write/read round-trips arbitrary payloads at
+/// arbitrary (aligned) addresses, including overlapping rewrites.
+#[test]
+fn prop_memory_roundtrip_random() {
+    let cfg = OpimaConfig::paper();
+    let mut mem = MemoryController::new(&cfg).unwrap();
+    let mut rng = Rng::new(7);
+    let cap = mem.capacity_bytes();
+    // Shadow model over a confined window so overlaps actually happen.
+    let window = 1u64 << 16;
+    let base = (rng.next_u64() % (cap - 2 * window)) / 16 * 16;
+    let mut shadow = vec![0u8; window as usize];
+    for case in 0..CASES {
+        let len = 1 + rng.index(512);
+        let off = rng.index(window as usize - len);
+        let aligned_off = off / 2 * 2; // cell alignment (4-bit cells)
+        let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        mem.write(base + aligned_off as u64, &data)
+            .unwrap_or_else(|e| panic!("case {case}: write: {e}"));
+        shadow[aligned_off..aligned_off + len].copy_from_slice(&data);
+        // Random readback window.
+        let rlen = 1 + rng.index(512);
+        let roff = rng.index(window as usize - rlen);
+        let got = mem
+            .read(base + roff as u64, rlen as u64)
+            .unwrap()
+            .data
+            .unwrap();
+        assert_eq!(
+            got,
+            &shadow[roff..roff + rlen],
+            "case {case}: read window mismatch"
+        );
+    }
+}
+
+/// PROPERTY: level packing/unpacking is a bijection for every density.
+#[test]
+fn prop_levels_roundtrip() {
+    let mut rng = Rng::new(13);
+    for _ in 0..CASES {
+        let len = 1 + rng.index(128);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        for bits in [1u32, 2, 4, 8] {
+            let levels = bytes_to_levels(&bytes, bits);
+            assert!(levels.iter().all(|&l| (l as u32) < (1 << bits)));
+            assert_eq!(levels_to_bytes(&levels, bits), bytes);
+        }
+    }
+}
+
+/// PROPERTY: the batcher never loses or duplicates a request, never
+/// exceeds the batch size, and never mixes variants.
+#[test]
+fn prop_batcher_conservation() {
+    let mut rng = Rng::new(21);
+    for case in 0..50 {
+        let max_batch = 1 + rng.index(16);
+        let n = 1 + rng.index(200);
+        let mut b = DynamicBatcher::new(max_batch, std::time::Duration::from_secs(3600));
+        let mut seen = Vec::new();
+        for id in 0..n as u64 {
+            let variant = match rng.index(3) {
+                0 => Variant::Fp32,
+                1 => Variant::Int8,
+                _ => Variant::Int4,
+            };
+            if let Some(batch) = b.push(InferenceRequest {
+                id,
+                image: vec![],
+                variant,
+                arrival: std::time::Instant::now(),
+            }) {
+                assert!(batch.requests.len() <= max_batch, "case {case}");
+                assert!(
+                    batch.requests.iter().all(|r| r.variant == batch.variant),
+                    "case {case}: mixed variants"
+                );
+                seen.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        for batch in b.drain() {
+            assert!(batch.requests.len() <= max_batch);
+            seen.extend(batch.requests.iter().map(|r| r.id));
+        }
+        seen.sort();
+        assert_eq!(
+            seen,
+            (0..n as u64).collect::<Vec<_>>(),
+            "case {case}: conservation"
+        );
+        assert_eq!(b.pending(), 0);
+    }
+}
+
+/// PROPERTY: the router conserves work, never double-books an instance,
+/// and its makespan is bounded by total/instances ≤ makespan ≤ total.
+#[test]
+fn prop_router_work_conservation() {
+    let mut rng = Rng::new(33);
+    for case in 0..CASES {
+        let instances = 1 + rng.index(8);
+        let mut r = Router::new(instances);
+        let n = 1 + rng.index(100);
+        let mut total = 0.0f64;
+        let mut intervals: Vec<Vec<(f64, f64)>> = vec![Vec::new(); instances];
+        for _ in 0..n {
+            let dur = 0.1 + rng.f64() * 10.0;
+            total += dur;
+            let (idx, start, end) = r.dispatch(0.0, dur);
+            assert!((end - start - dur).abs() < 1e-9);
+            intervals[idx].push((start, end));
+        }
+        // No overlapping reservations per instance.
+        for (i, iv) in intervals.iter_mut().enumerate() {
+            iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in iv.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].0 + 1e-9,
+                    "case {case}: instance {i} overlap {w:?}"
+                );
+            }
+        }
+        let makespan = r.makespan_ms();
+        assert!(makespan <= total + 1e-6, "case {case}");
+        assert!(
+            makespan + 1e-6 >= total / instances as f64,
+            "case {case}: makespan {makespan} < ideal {}",
+            total / instances as f64
+        );
+        assert_eq!(r.load().iter().sum::<u64>(), n as u64);
+    }
+}
+
+/// PROPERTY: TDM plans are exact multiplicative decompositions.
+#[test]
+fn prop_tdm_plan_consistency() {
+    let mut rng = Rng::new(55);
+    for _ in 0..CASES {
+        let cell = [1u32, 2, 4, 8][rng.index(4)];
+        let act = cell * (1 + rng.index(8) as u32);
+        let weight = cell * (1 + rng.index(8) as u32);
+        let p = tdm::plan(act, weight, cell).unwrap();
+        assert_eq!(p.steps, p.act_digits * p.weight_digits);
+        assert_eq!(p.act_digits * cell, act);
+        assert_eq!(p.weight_digits * cell, weight);
+        assert_eq!(p.shift_adds, p.steps - 1);
+    }
+}
+
+/// PROPERTY: conv layer shape algebra — output fits, params and MACs are
+/// consistent (macs = out_elems × k² × cin/groups).
+#[test]
+fn prop_conv_shape_algebra() {
+    let mut rng = Rng::new(77);
+    let mut checked = 0;
+    for _ in 0..CASES {
+        let h = 4 + rng.index(40);
+        let c = 1 + rng.index(64);
+        let k = [1usize, 3, 5, 7][rng.index(4)];
+        let stride = 1 + rng.index(2);
+        let cout = 1 + rng.index(128);
+        let layer = Layer::Conv {
+            kh: k,
+            kw: k,
+            cout,
+            stride,
+            pad: k / 2,
+            groups: 1,
+            bias: true,
+        };
+        let input = TensorShape::new(h, h, c);
+        let Ok(out) = layer.out_shape(input) else {
+            continue;
+        };
+        checked += 1;
+        let macs = layer.macs(input).unwrap();
+        assert_eq!(macs, out.elems() * (k * k * c) as u64);
+        assert_eq!(layer.params(input), (k * k * c * cout + cout) as u64);
+        assert!(out.h >= 1 && out.w >= 1);
+    }
+    assert!(checked > CASES / 2);
+}
+
+/// PROPERTY: JSON printer/parser round-trips random documents.
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.index(2) == 0),
+            2 => Json::Num((rng.next_u64() % 1_000_000) as f64 / 8.0),
+            3 => Json::Str(format!("s{}\"\\\n{}", rng.index(100), rng.index(100))),
+            4 => Json::Arr((0..rng.index(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.index(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(99);
+    for case in 0..CASES {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: reparse failed: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}");
+    }
+}
+
+/// PROPERTY: random valid configs round-trip through TOML and keep
+/// validating.
+#[test]
+fn prop_config_toml_roundtrip_random() {
+    let mut rng = Rng::new(111);
+    for case in 0..100 {
+        let mut cfg = OpimaConfig::paper();
+        cfg.geometry.banks = 1 + rng.index(4);
+        cfg.geometry.mdm_degree = cfg.geometry.banks.max(1 + rng.index(4));
+        if cfg.geometry.mdm_degree > 4 {
+            cfg.geometry.mdm_degree = 4;
+        }
+        if cfg.geometry.banks > cfg.geometry.mdm_degree {
+            cfg.geometry.banks = cfg.geometry.mdm_degree;
+        }
+        let rows = [16usize, 32, 64][rng.index(3)];
+        cfg.geometry.subarray_rows = rows;
+        let divisors: Vec<usize> = (1..=rows).filter(|g| rows % g == 0).collect();
+        cfg.geometry.subarray_groups = divisors[rng.index(divisors.len())];
+        cfg.timing.clock_ghz = 1.0 + rng.f64() * 9.0;
+        cfg.timing.write_ns = cfg.timing.read_ns + rng.f64() * 2000.0;
+        cfg.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let text = cfg.to_toml();
+        let back = OpimaConfig::from_toml(&text)
+            .unwrap_or_else(|e| panic!("case {case}: parse: {e}"));
+        assert_eq!(cfg, back, "case {case}");
+    }
+}
