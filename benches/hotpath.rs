@@ -80,14 +80,18 @@ fn main() {
         let info = ex.manifest().get("photonic_mac_4b").unwrap().clone();
         let a: Vec<f32> = (0..info.input_elems(0)).map(|i| (i % 16) as f32).collect();
         let w: Vec<f32> = (0..info.input_elems(1)).map(|i| (i % 16) as f32).collect();
+        // Label rows with the actual backend: without --features pjrt the
+        // executor silently resolves to the sim backend, and recording
+        // those timings as "pjrt/..." would misattribute them.
+        let plat = ex.platform();
         ex.run_f32("photonic_mac_4b", &[&a, &w]).unwrap(); // compile outside timing
-        measure("pjrt/photonic_mac_4b_64x128x64", 5, 200, || {
+        measure(&format!("{plat}/photonic_mac_4b_64x128x64"), 5, 200, || {
             black_box(ex.run_f32("photonic_mac_4b", &[&a, &w]).unwrap());
         });
         let cnn = ex.manifest().get("cnn_int4_b8").unwrap().clone();
         let x = vec![0.5f32; cnn.input_elems(0)];
         ex.run_f32("cnn_int4_b8", &[&x]).unwrap();
-        measure("pjrt/cnn_int4_b8_batch8", 5, 100, || {
+        measure(&format!("{plat}/cnn_int4_b8_batch8"), 5, 100, || {
             black_box(ex.run_f32("cnn_int4_b8", &[&x]).unwrap());
         });
     } else {

@@ -1,0 +1,152 @@
+//! Serving throughput scaling (§Perf): multi-producer closed-loop load
+//! through the pipelined engine at 1/2/4 workers, against a faithful
+//! replica of the seed's synchronous inline serving path.
+//!
+//! Uses the deterministic sim executor backend with a work factor that
+//! emulates a multi-millisecond model, so the scheduling behaviour —
+//! not PJRT kernel time on one particular host — dominates, and the
+//! bench runs without artifacts or the XLA native library.
+//!
+//! Run: cargo bench --bench serving_throughput
+
+use std::time::{Duration, Instant};
+
+use opima::coordinator::batcher::DynamicBatcher;
+use opima::coordinator::engine::{Engine, EngineConfig};
+use opima::coordinator::request::{InferenceRequest, Variant};
+use opima::runtime::{Executor, ExecutorSpec, Manifest};
+use opima::util::bench::{table_header, table_row};
+use opima::util::prng::Rng;
+
+/// Sim backend work factor: ~2 ms per batch on a laptop-class core, so
+/// a 512-request run keeps the worker pool genuinely busy.
+const WORK: u32 = 400;
+const N_REQUESTS: usize = 512;
+const PRODUCERS: usize = 4;
+const BATCH: usize = 8;
+const IMAGE: usize = 12;
+
+fn requests() -> Vec<InferenceRequest> {
+    let mut rng = Rng::new(4242);
+    (0..N_REQUESTS as u64)
+        .map(|id| {
+            let variant = match id % 3 {
+                0 => Variant::Fp32,
+                1 => Variant::Int8,
+                _ => Variant::Int4,
+            };
+            InferenceRequest {
+                id,
+                image: (0..IMAGE * IMAGE).map(|_| rng.f64() as f32).collect(),
+                variant,
+                arrival: Instant::now(),
+            }
+        })
+        .collect()
+}
+
+/// The seed's synchronous call-loop: one thread, batches executed inline
+/// on the submitting thread, deadline flushes piggybacking on submits.
+fn sync_seed_path(manifest: &Manifest) -> f64 {
+    let mut ex =
+        Executor::from_spec(ExecutorSpec::Sim { work_factor: WORK }, manifest.clone()).unwrap();
+    let mut batcher = DynamicBatcher::new(BATCH, Duration::from_millis(2));
+    let elems = IMAGE * IMAGE;
+    let mut served = 0usize;
+    let run = |ex: &mut Executor, batch: opima::coordinator::batcher::Batch| -> usize {
+        let mut input = vec![0f32; BATCH * elems];
+        for (i, r) in batch.requests.iter().enumerate() {
+            input[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+        }
+        let n = batch.requests.len();
+        ex.run_f32(&batch.variant.artifact(BATCH), &[&input]).unwrap();
+        n
+    };
+    let t0 = Instant::now();
+    for mut req in requests() {
+        req.arrival = Instant::now();
+        if let Some(batch) = batcher.push(req) {
+            served += run(&mut ex, batch);
+        }
+        for batch in batcher.poll(Instant::now()) {
+            served += run(&mut ex, batch);
+        }
+    }
+    for batch in batcher.drain() {
+        served += run(&mut ex, batch);
+    }
+    assert_eq!(served, N_REQUESTS);
+    served as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// The pipelined engine under a multi-producer closed loop.
+fn engine_path(manifest: &Manifest, workers: usize) -> f64 {
+    let mut engine = Engine::new(
+        EngineConfig {
+            workers,
+            queue_capacity: 256,
+            instances: workers,
+            max_wait: Duration::from_millis(2),
+            executor: ExecutorSpec::Sim { work_factor: WORK },
+            ..EngineConfig::default()
+        },
+        manifest.clone(),
+    )
+    .unwrap();
+    let reqs = requests();
+    let chunk = N_REQUESTS / PRODUCERS;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for slice in reqs.chunks(chunk) {
+            let eng = &engine;
+            s.spawn(move || {
+                for r in slice {
+                    let mut r = r.clone();
+                    r.arrival = Instant::now();
+                    eng.submit_blocking(r).unwrap();
+                }
+            });
+        }
+    });
+    engine.drain().unwrap();
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = engine.stats();
+    assert_eq!(stats.served as usize, N_REQUESTS);
+    engine.shutdown().unwrap();
+    stats.served as f64 / elapsed
+}
+
+fn main() {
+    let manifest = Manifest::synthetic(BATCH, IMAGE);
+    println!(
+        "serving throughput: {N_REQUESTS} mixed-variant requests, batch {BATCH}, \
+         {PRODUCERS} producers, sim work factor {WORK}"
+    );
+
+    let sync_rps = sync_seed_path(&manifest);
+    let mut rows: Vec<(String, f64)> = vec![("sync seed path (inline)".into(), sync_rps)];
+    for workers in [1usize, 2, 4] {
+        let rps = engine_path(&manifest, workers);
+        rows.push((format!("engine, {workers} worker(s)"), rps));
+    }
+
+    table_header("Serving throughput scaling", &["path", "req/s", "vs sync"]);
+    for (name, rps) in &rows {
+        table_row(&[
+            name.clone(),
+            format!("{rps:.0}"),
+            format!("{:.2}x", rps / sync_rps),
+        ]);
+    }
+    let best = rows[1..].iter().map(|(_, r)| *r).fold(0.0f64, f64::max);
+    // Report, don't assert: on 1-2 vCPU machines the pool can legitimately
+    // tie the zero-handoff inline loop, and a panic would eat the table.
+    if best > sync_rps {
+        println!("\nserving_throughput OK — pool peak {best:.0} req/s vs sync {sync_rps:.0} req/s");
+    } else {
+        println!(
+            "\nWARNING: pool peak {best:.0} req/s did not beat sync {sync_rps:.0} req/s \
+             (expected on boxes with too few cores for {PRODUCERS} producers + workers)"
+        );
+    }
+}

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 verification + lint gate. Run from the repo root.
+#
+# The default build uses the deterministic sim executor backend and is
+# dependency-free (works fully offline). The real PJRT backend needs an
+# XLA-equipped host AND a manifest edit: add `xla = "0.1"` under
+# [dependencies] in Cargo.toml (see the comment there), then run these
+# same steps with `--features pjrt`. Plain `--features pjrt` without the
+# dependency added will not compile — that is expected.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo clippy --all-targets -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "ci.sh OK"

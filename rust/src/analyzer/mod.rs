@@ -10,7 +10,9 @@ pub mod latency;
 pub mod metrics;
 pub mod power;
 pub mod report;
+pub mod simcost;
 
 pub use latency::{analyze_model, ModelAnalysis};
 pub use metrics::PlatformResult;
 pub use power::{power_breakdown, PowerBreakdown};
+pub use simcost::{SimCost, SimCostTable};

@@ -1,0 +1,124 @@
+//! Shared immutable per-batch simulated-cost table.
+//!
+//! The serving engine meters every executed batch with the OPIMA
+//! simulator. Running `analyze_model` on the request path would dominate
+//! serving latency, so the engine precomputes this table once at startup
+//! (one entry per distinct operand width, scaled to the serving batch
+//! size) and shares it read-only across all worker threads behind an
+//! `Arc` — no locking, no per-request analyzer work.
+
+use crate::analyzer::latency::analyze_model;
+use crate::cnn::graph::Network;
+use crate::config::OpimaConfig;
+use crate::error::Result;
+
+/// Simulated cost of serving one whole batch at a given operand width.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimCost {
+    /// Operand width on the PIM substrate (bits).
+    pub bits: u32,
+    /// Simulated OPIMA latency for the whole batch (ms).
+    pub latency_ms: f64,
+    /// Simulated dynamic energy for the whole batch (mJ).
+    pub energy_mj: f64,
+}
+
+/// Immutable cost table, safe to share across threads (`Arc<SimCostTable>`).
+#[derive(Debug, Clone)]
+pub struct SimCostTable {
+    batch: usize,
+    entries: Vec<SimCost>,
+}
+
+impl SimCostTable {
+    /// Analyze `net` once per distinct bit-width, scaled to `batch`
+    /// inferences per served batch.
+    pub fn build(
+        cfg: &OpimaConfig,
+        net: &Network,
+        batch: usize,
+        bit_widths: &[u32],
+    ) -> Result<Self> {
+        let mut entries: Vec<SimCost> = Vec::new();
+        for &bits in bit_widths {
+            if entries.iter().any(|e| e.bits == bits) {
+                continue;
+            }
+            let a = analyze_model(cfg, net, bits)?;
+            entries.push(SimCost {
+                bits,
+                latency_ms: a.total_ms() * batch as f64,
+                energy_mj: a.dynamic_mj * batch as f64,
+            });
+        }
+        Ok(Self { batch, entries })
+    }
+
+    /// Batch size the costs are scaled to.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Whole-batch `(latency_ms, energy_mj)` at operand width `bits`.
+    pub fn get(&self, bits: u32) -> Option<(f64, f64)> {
+        self.entries
+            .iter()
+            .find(|e| e.bits == bits)
+            .map(|e| (e.latency_ms, e.energy_mj))
+    }
+
+    /// All distinct entries.
+    pub fn entries(&self) -> &[SimCost] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::graph::NetworkBuilder;
+    use crate::cnn::layer::TensorShape;
+
+    fn small_net() -> Network {
+        let mut b = NetworkBuilder::new("t", TensorShape::new(12, 12, 1));
+        b.conv(3, 3, 8, 1, 1)
+            .unwrap()
+            .pool(2, 2)
+            .unwrap()
+            .fc(4)
+            .unwrap();
+        b.build()
+    }
+
+    #[test]
+    fn dedups_bit_widths() {
+        let cfg = OpimaConfig::paper();
+        let t = SimCostTable::build(&cfg, &small_net(), 8, &[8, 8, 4]).unwrap();
+        assert_eq!(t.entries().len(), 2);
+        assert_eq!(t.batch(), 8);
+        assert!(t.get(8).is_some() && t.get(4).is_some());
+        assert!(t.get(2).is_none());
+    }
+
+    #[test]
+    fn int4_cheaper_than_int8() {
+        let cfg = OpimaConfig::paper();
+        let t = SimCostTable::build(&cfg, &small_net(), 8, &[8, 4]).unwrap();
+        let (l8, e8) = t.get(8).unwrap();
+        let (l4, e4) = t.get(4).unwrap();
+        assert!(l4 < l8, "TDM: 8-bit costs more time ({l4} vs {l8})");
+        assert!(e4 < e8);
+        assert!(l4 > 0.0 && e4 > 0.0);
+    }
+
+    #[test]
+    fn scales_with_batch() {
+        let cfg = OpimaConfig::paper();
+        let t1 = SimCostTable::build(&cfg, &small_net(), 1, &[4]).unwrap();
+        let t8 = SimCostTable::build(&cfg, &small_net(), 8, &[4]).unwrap();
+        let (l1, e1) = t1.get(4).unwrap();
+        let (l8, e8) = t8.get(4).unwrap();
+        assert!((l8 - 8.0 * l1).abs() < 1e-9 * l8.max(1.0));
+        assert!((e8 - 8.0 * e1).abs() < 1e-9 * e8.max(1.0));
+    }
+}

@@ -82,6 +82,16 @@ impl DynamicBatcher {
         self.queues.iter().map(|(_, q)| q.len()).sum()
     }
 
+    /// Earliest instant at which a deadline flush becomes due, if any
+    /// request is pending — the batcher thread sizes its timer tick on
+    /// this so idle queues still flush on time.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .iter()
+            .filter_map(|(_, q)| q.front().map(|r| r.arrival + self.max_wait))
+            .min()
+    }
+
     fn queue_mut(&mut self, v: Variant) -> &mut VecDeque<InferenceRequest> {
         &mut self
             .queues
@@ -148,6 +158,28 @@ mod tests {
         let batches = b.poll(Instant::now() + Duration::from_millis(1));
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].requests.len(), 1);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_request() {
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(10));
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        b.push(InferenceRequest {
+            id: 0,
+            image: vec![],
+            variant: Variant::Int8,
+            arrival: t0,
+        });
+        b.push(InferenceRequest {
+            id: 1,
+            image: vec![],
+            variant: Variant::Fp32,
+            arrival: t0 + Duration::from_millis(5),
+        });
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+        let _ = b.drain();
+        assert!(b.next_deadline().is_none());
     }
 
     #[test]

@@ -1,21 +1,39 @@
 //! The serving coordinator: OPIMA as an inference appliance.
 //!
-//! A thread-based event loop (request queue → dynamic batcher → router →
-//! PJRT-backed workers) that serves CNN classification requests. The
-//! functional result comes from executing the AOT HLO artifacts through
-//! PJRT; the *architectural* cost of each batch (what the OPIMA hardware
-//! would have spent) is metered by the simulator stack and reported with
-//! every response.
+//! A multi-threaded pipelined engine serves CNN classification requests:
+//! a bounded ingress queue (non-blocking `submit` returns
+//! [`Backpressure`](crate::error::Error::Backpressure) when full), a
+//! dedicated batcher thread that owns the dynamic batcher and flushes on
+//! size **or** deadline via a timer tick (an idle queue still flushes on
+//! time), and a worker pool where each worker owns its own PJRT executor
+//! (compile caches warmed at startup) and pulls formed batches from a
+//! channel. Completed responses flow over a results channel into a
+//! shared stats sink; `shutdown` drains in-flight work before joining
+//! the pipeline threads.
+//!
+//! The functional result comes from executing the AOT HLO artifacts
+//! through PJRT (or the sim backend); the *architectural* cost of each
+//! batch (what the OPIMA hardware would have spent) is metered once per
+//! executed batch from a precomputed immutable cost table and reported
+//! with every response.
 //!
 //! - [`request`] — request/response types and the model-variant registry.
 //! - [`batcher`] — dynamic batching: size- and deadline-triggered.
-//! - [`router`] — least-outstanding-work routing across PIM instances.
-//! - [`server`] — the serving loop, workers and aggregate statistics.
+//! - [`engine`] — the pipelined engine: queue → batcher → worker pool →
+//!   stats sink; backpressure, drain and graceful shutdown.
+//! - [`worker`] — worker loop: execute a batch, meter it, report it.
+//! - [`router`] — least-outstanding-work dispatch of *real* worker
+//!   batches onto simulated OPIMA instance busy horizons.
+//! - [`server`] — the synchronous facade preserving the seed call-loop
+//!   API on top of the engine.
 
 pub mod batcher;
+pub mod engine;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod worker;
 
+pub use engine::{Engine, EngineConfig};
 pub use request::{InferenceRequest, InferenceResponse, Variant};
 pub use server::{Server, ServerConfig, ServerStats};

@@ -62,22 +62,37 @@ pub struct SimMetering {
 }
 
 /// One classification response.
+///
+/// Latency accounting uses one consistent convention: `queue_ms` covers
+/// arrival → start of the batch's execution, `exec_ms` covers the whole
+/// batch's execution, so `total_ms() = queue_ms + exec_ms` is the wall
+/// time from arrival to completion. `form_ms ≤ queue_ms` isolates the
+/// dynamic-batcher share of the queueing delay.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
     pub logits: Vec<f32>,
     pub predicted: usize,
-    /// Wall time spent queued before execution (ms).
+    /// Wall time from arrival to the start of the batch's execution
+    /// (batcher wait + dispatch queueing, ms).
     pub queue_ms: f64,
-    /// Wall time of the PJRT execution, amortized over the batch (ms).
+    /// Wall time of the execution of the whole batch that carried this
+    /// request (ms) — not an amortized per-request share.
     pub exec_ms: f64,
-    /// Simulated OPIMA hardware cost.
+    /// Wall time from arrival to batch formation (dynamic-batcher
+    /// latency, ms); the remainder of `queue_ms` is dispatch queueing.
+    pub form_ms: f64,
+    /// Simulated OPIMA hardware cost of the batch that carried this
+    /// request (full-batch numbers, not per-request shares).
     pub sim: SimMetering,
-    /// Which worker/instance served it.
+    /// Simulated OPIMA instance the batch was dispatched to.
     pub instance: usize,
+    /// Worker thread that executed the batch.
+    pub worker: usize,
 }
 
 impl InferenceResponse {
+    /// Wall time from arrival to completion (ms).
     pub fn total_ms(&self) -> f64 {
         self.queue_ms + self.exec_ms
     }
@@ -103,5 +118,22 @@ mod tests {
     fn pim_bits() {
         assert_eq!(Variant::Int4.pim_bits(), 4);
         assert_eq!(Variant::Fp32.pim_bits(), 8);
+    }
+
+    #[test]
+    fn total_is_queue_plus_exec() {
+        let r = InferenceResponse {
+            id: 0,
+            logits: vec![0.0; 4],
+            predicted: 0,
+            queue_ms: 1.5,
+            exec_ms: 2.0,
+            form_ms: 0.5,
+            sim: SimMetering::default(),
+            instance: 0,
+            worker: 0,
+        };
+        assert!((r.total_ms() - 3.5).abs() < 1e-12);
+        assert!(r.form_ms <= r.queue_ms);
     }
 }

@@ -1,34 +1,39 @@
-//! The serving loop: queue → batcher → router → PJRT worker.
+//! The synchronous serving facade over the pipelined [`Engine`].
 //!
-//! Functional answers come from the AOT HLO artifacts executed on PJRT;
-//! architectural cost per batch comes from the OPIMA simulator (the
-//! small served CNN analyzed per variant at startup). Single worker
-//! thread owns the PJRT client; the router load-balances the *simulated*
-//! hardware across instances.
+//! `Server` keeps the seed's call-loop API — `submit`/`flush`/
+//! `responses`/`stats` from one caller thread — but every batch now forms
+//! in the engine's batcher thread and executes on its worker pool.
+//! `submit` blocks for queue space instead of surfacing backpressure
+//! (use [`Engine`] directly for non-blocking submission and multi-
+//! producer serving), and `flush` drains the pipeline and waits for all
+//! outstanding responses.
+//!
+//! Functional answers come from the AOT HLO artifacts executed on PJRT
+//! (or the deterministic sim backend, see [`crate::runtime::executor`]);
+//! architectural cost per batch comes from the OPIMA simulator via the
+//! engine's precomputed cost table.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::analyzer::latency::analyze_model;
-use crate::cnn::graph::NetworkBuilder;
-use crate::cnn::layer::TensorShape;
 use crate::config::OpimaConfig;
-use crate::coordinator::batcher::{Batch, DynamicBatcher};
-use crate::coordinator::request::{
-    InferenceRequest, InferenceResponse, SimMetering, Variant,
-};
-use crate::coordinator::router::Router;
-use crate::error::{Error, Result};
-use crate::runtime::{Executor, Manifest};
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::request::{InferenceRequest, InferenceResponse, Variant};
+use crate::error::Result;
+use crate::runtime::{ExecutorSpec, Manifest};
 
-/// Server configuration.
+/// Server configuration (a facade over [`EngineConfig`]).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Simulated OPIMA instances behind the router.
+    /// Simulated OPIMA instances behind the dispatch policy.
     pub instances: usize,
     /// Batch deadline for the dynamic batcher.
     pub max_wait: Duration,
     /// OPIMA hardware configuration for the metering simulator.
     pub hw: OpimaConfig,
+    /// Worker threads in the underlying engine.
+    pub workers: usize,
+    /// Bounded ingress queue capacity.
+    pub queue_capacity: usize,
 }
 
 impl Default for ServerConfig {
@@ -37,6 +42,8 @@ impl Default for ServerConfig {
             instances: 1,
             max_wait: Duration::from_millis(2),
             hw: OpimaConfig::paper(),
+            workers: 1,
+            queue_capacity: 1024,
         }
     }
 }
@@ -45,211 +52,136 @@ impl Default for ServerConfig {
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub served: u64,
+    /// Successfully executed batches.
     pub batches: u64,
+    /// Requests lost to failed batch executions.
+    pub failed: u64,
+    /// Submissions rejected with backpressure.
+    pub rejected: u64,
     pub wall_ms: f64,
+    /// Mean wall time from arrival to batch-execution start (ms).
     pub mean_queue_ms: f64,
+    /// Mean whole-batch execution wall time over responses (ms).
     pub mean_exec_ms: f64,
+    /// Mean wall time from arrival to batch formation (ms).
+    pub mean_form_ms: f64,
     pub p50_total_ms: f64,
     pub p99_total_ms: f64,
     pub throughput_rps: f64,
-    /// Simulated hardware energy across all batches (mJ).
+    /// Simulated hardware energy, summed once per executed batch (mJ) —
+    /// zero-padded partial batches pay full-batch energy exactly once.
     pub sim_energy_mj: f64,
     /// Simulated hardware makespan (ms) — what the OPIMA modules spent.
     pub sim_makespan_ms: f64,
 }
 
-/// The OPIMA inference server.
+/// The OPIMA inference server (synchronous facade).
 pub struct Server {
     pub cfg: ServerConfig,
-    executor: Executor,
-    batcher: DynamicBatcher,
-    router: Router,
-    /// Per-variant simulated cost of one served batch: (latency_ms, mJ).
-    sim_costs: Vec<(Variant, f64, f64)>,
-    epoch: Instant,
+    engine: Engine,
     responses: Vec<InferenceResponse>,
 }
 
-/// The served model: must match python/compile/model.py's ARCH.
-fn served_network() -> Result<crate::cnn::graph::Network> {
-    let mut b = NetworkBuilder::new("served_cnn", TensorShape::new(12, 12, 1));
-    b.conv(3, 3, 8, 1, 1)?
-        .pool(2, 2)?
-        .conv(3, 3, 16, 1, 1)?
-        .pool(2, 2)?
-        .fc(4)?;
-    Ok(b.build())
-}
-
 impl Server {
-    /// Build a server over an artifact manifest.
+    /// Build a server over an artifact manifest (native backend: PJRT
+    /// when compiled with the `pjrt` feature, sim otherwise).
     pub fn new(cfg: ServerConfig, manifest: Manifest) -> Result<Self> {
-        cfg.hw.validate()?;
-        let batch = manifest.batch;
-        let executor = Executor::new(manifest)?;
-        let net = served_network()?;
-        // Pre-compute the simulated per-batch cost of each variant.
-        let mut sim_costs = Vec::new();
-        for v in [Variant::Fp32, Variant::Int8, Variant::Int4] {
-            let a = analyze_model(&cfg.hw, &net, v.pim_bits())?;
-            sim_costs.push((v, a.total_ms() * batch as f64, a.dynamic_mj * batch as f64));
-        }
+        Self::with_spec(cfg, manifest, ExecutorSpec::Native)
+    }
+
+    /// Sim-backed server — no PJRT library or artifacts on disk needed.
+    pub fn new_sim(cfg: ServerConfig, manifest: Manifest) -> Result<Self> {
+        Self::with_spec(cfg, manifest, ExecutorSpec::Sim { work_factor: 1 })
+    }
+
+    fn with_spec(cfg: ServerConfig, manifest: Manifest, executor: ExecutorSpec) -> Result<Self> {
+        let engine = Engine::new(
+            EngineConfig {
+                workers: cfg.workers,
+                queue_capacity: cfg.queue_capacity,
+                instances: cfg.instances,
+                max_wait: cfg.max_wait,
+                hw: cfg.hw.clone(),
+                executor,
+            },
+            manifest,
+        )?;
         Ok(Self {
-            batcher: DynamicBatcher::new(batch, cfg.max_wait),
-            router: Router::new(cfg.instances),
             cfg,
-            executor,
-            sim_costs,
-            epoch: Instant::now(),
+            engine,
             responses: Vec::new(),
         })
     }
 
-    /// Submit one request; executes a batch when the batcher flushes.
+    /// Submit one request. Blocks for queue space under load (the
+    /// synchronous-caller semantics of the seed API); batching and
+    /// execution happen asynchronously on the engine's threads.
     pub fn submit(&mut self, req: InferenceRequest) -> Result<()> {
-        if req.image.len() != self.image_elems() {
-            return Err(Error::Serving(format!(
-                "image has {} elems, artifact wants {}",
-                req.image.len(),
-                self.image_elems()
-            )));
-        }
-        if let Some(batch) = self.batcher.push(req) {
-            self.execute(batch)?;
-        }
-        // Deadline-triggered flushes.
-        for batch in self.batcher.poll(Instant::now()) {
-            self.execute(batch)?;
-        }
-        Ok(())
+        self.engine.submit_blocking(req)
     }
 
-    /// Flush all pending requests (end of stream).
+    /// Flush all pending requests and wait until every response is in.
     pub fn flush(&mut self) -> Result<()> {
-        for batch in self.batcher.drain() {
-            self.execute(batch)?;
-        }
-        Ok(())
+        let result = self.engine.drain();
+        // Incremental sync: only the responses that arrived since the
+        // last flush are cloned out of the sink.
+        let new = self.engine.responses_since(self.responses.len());
+        self.responses.extend(new);
+        result
     }
 
-    /// Responses so far (in completion order).
+    /// Responses up to the last `flush` (in completion order).
     pub fn responses(&self) -> &[InferenceResponse] {
         &self.responses
     }
 
+    /// The underlying pipelined engine (non-blocking submission, live
+    /// counters, multi-producer use).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
     pub fn image_elems(&self) -> usize {
-        let s = self.executor.manifest().image_size;
-        s * s
+        self.engine.image_elems()
     }
 
     pub fn batch_size(&self) -> usize {
-        self.batcher.max_batch()
+        self.engine.batch_size()
     }
 
     fn sim_cost(&self, v: Variant) -> (f64, f64) {
-        self.sim_costs
-            .iter()
-            .find(|(sv, _, _)| *sv == v)
-            .map(|(_, l, e)| (*l, *e))
+        self.engine
+            .sim_cost(v.pim_bits())
             .expect("all variants precomputed")
-    }
-
-    fn execute(&mut self, batch: Batch) -> Result<()> {
-        let bsz = self.batcher.max_batch();
-        let elems = self.image_elems();
-        // Pack (and zero-pad) the fixed-shape batch input.
-        let mut input = vec![0f32; bsz * elems];
-        for (i, r) in batch.requests.iter().enumerate() {
-            input[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
-        }
-        let artifact = batch.variant.artifact(bsz);
-        let t0 = Instant::now();
-        let logits = self.executor.run_f32(&artifact, &[&input])?;
-        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let classes = logits.len() / bsz;
-
-        // Simulated hardware cost, routed to the least-loaded instance.
-        let now_ms = self.epoch.elapsed().as_secs_f64() * 1e3;
-        let (sim_lat, sim_mj) = self.sim_cost(batch.variant);
-        let (instance, start, end) = self.router.dispatch(now_ms, sim_lat);
-        let _ = (start, end);
-
-        let done = Instant::now();
-        for (i, r) in batch.requests.iter().enumerate() {
-            let row = &logits[i * classes..(i + 1) * classes];
-            let predicted = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(c, _)| c)
-                .unwrap_or(0);
-            self.responses.push(InferenceResponse {
-                id: r.id,
-                logits: row.to_vec(),
-                predicted,
-                queue_ms: done
-                    .duration_since(r.arrival)
-                    .as_secs_f64()
-                    .mul_add(1e3, -exec_ms)
-                    .max(0.0),
-                exec_ms: exec_ms / batch.requests.len() as f64,
-                sim: SimMetering {
-                    hw_latency_ms: sim_lat,
-                    hw_energy_mj: sim_mj,
-                },
-                instance,
-            });
-        }
-        Ok(())
     }
 
     /// Aggregate statistics over everything served so far.
     pub fn stats(&self) -> ServerStats {
-        let n = self.responses.len();
-        if n == 0 {
-            return ServerStats::default();
-        }
-        let mut totals: Vec<f64> = self.responses.iter().map(|r| r.total_ms()).collect();
-        totals.sort_by(|a, b| a.total_cmp(b));
-        let wall_ms = self.epoch.elapsed().as_secs_f64() * 1e3;
-        let batches: u64 = self.router.load().iter().sum();
-        ServerStats {
-            served: n as u64,
-            batches,
-            wall_ms,
-            mean_queue_ms: self.responses.iter().map(|r| r.queue_ms).sum::<f64>() / n as f64,
-            mean_exec_ms: self.responses.iter().map(|r| r.exec_ms).sum::<f64>() / n as f64,
-            p50_total_ms: totals[n / 2],
-            p99_total_ms: totals[(n * 99 / 100).min(n - 1)],
-            throughput_rps: n as f64 / (wall_ms / 1e3).max(1e-9),
-            sim_energy_mj: self
-                .responses
-                .iter()
-                .map(|r| r.sim.hw_energy_mj)
-                .sum::<f64>()
-                / self.batch_size() as f64,
-            sim_makespan_ms: self.router.makespan_ms(),
-        }
+        self.engine.stats()
+    }
+
+    /// Graceful shutdown: drain in-flight work and join the pipeline.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.engine.shutdown()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::Path;
+    use std::time::Instant;
 
-    fn server(instances: usize) -> Option<Server> {
-        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: run `make artifacts` first");
-            return None;
-        }
-        let manifest = Manifest::load(&dir).unwrap();
+    /// Sim-backed server over a synthetic manifest: these tests exercise
+    /// coordinator semantics, not PJRT numerics, so they run everywhere.
+    fn server(instances: usize) -> Server {
         let cfg = ServerConfig {
             instances,
+            // Large deadline so batch counts are deterministic even on a
+            // loaded machine.
+            max_wait: Duration::from_secs(5),
             ..Default::default()
         };
-        Some(Server::new(cfg, manifest).unwrap())
+        Server::new_sim(cfg, Manifest::synthetic(8, 12)).unwrap()
     }
 
     fn req(id: u64, elems: usize, v: Variant) -> InferenceRequest {
@@ -263,7 +195,7 @@ mod tests {
 
     #[test]
     fn serves_full_batches() {
-        let Some(mut s) = server(1) else { return };
+        let mut s = server(1);
         let elems = s.image_elems();
         let bsz = s.batch_size();
         for i in 0..(2 * bsz as u64) {
@@ -280,7 +212,7 @@ mod tests {
 
     #[test]
     fn partial_batch_flushes() {
-        let Some(mut s) = server(1) else { return };
+        let mut s = server(1);
         let elems = s.image_elems();
         for i in 0..3u64 {
             s.submit(req(i, elems, Variant::Fp32)).unwrap();
@@ -295,8 +227,53 @@ mod tests {
     }
 
     #[test]
+    fn partial_batch_pays_full_batch_energy() {
+        let mut s = server(1);
+        let elems = s.image_elems();
+        // 3 requests → one zero-padded batch; energy must be the full
+        // per-batch cost, not 3/8 of it (the seed under-counted this).
+        for i in 0..3u64 {
+            s.submit(req(i, elems, Variant::Int4)).unwrap();
+        }
+        s.flush().unwrap();
+        let (_, batch_mj) = s.sim_cost(Variant::Int4);
+        let stats = s.stats();
+        assert_eq!(stats.batches, 1);
+        assert!(
+            (stats.sim_energy_mj - batch_mj).abs() < 1e-12 * batch_mj.max(1.0),
+            "partial batch energy {} != full batch {}",
+            stats.sim_energy_mj,
+            batch_mj
+        );
+    }
+
+    #[test]
+    fn latency_accounting_is_consistent() {
+        let mut s = server(1);
+        let elems = s.image_elems();
+        let bsz = s.batch_size();
+        for i in 0..bsz as u64 {
+            s.submit(req(i, elems, Variant::Int8)).unwrap();
+        }
+        s.flush().unwrap();
+        for r in s.responses() {
+            assert!(r.queue_ms >= 0.0 && r.exec_ms >= 0.0 && r.form_ms >= 0.0);
+            // The batch formed before it started executing.
+            assert!(
+                r.form_ms <= r.queue_ms + 1e-9,
+                "form {} > queue {}",
+                r.form_ms,
+                r.queue_ms
+            );
+            assert!(r.total_ms() >= r.exec_ms);
+        }
+        let stats = s.stats();
+        assert!(stats.mean_form_ms <= stats.mean_queue_ms + 1e-9);
+    }
+
+    #[test]
     fn multi_instance_routing_balances() {
-        let Some(mut s) = server(2) else { return };
+        let mut s = server(2);
         let elems = s.image_elems();
         let bsz = s.batch_size();
         for i in 0..(4 * bsz as u64) {
@@ -312,13 +289,13 @@ mod tests {
 
     #[test]
     fn wrong_image_size_rejected() {
-        let Some(mut s) = server(1) else { return };
+        let mut s = server(1);
         assert!(s.submit(req(0, 3, Variant::Int4)).is_err());
     }
 
     #[test]
     fn int4_sim_cost_below_int8() {
-        let Some(s) = server(1) else { return };
+        let s = server(1);
         let (l4, e4) = s.sim_cost(Variant::Int4);
         let (l8, e8) = s.sim_cost(Variant::Int8);
         assert!(l4 < l8, "TDM: 8-bit costs more time");

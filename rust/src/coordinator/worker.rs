@@ -1,0 +1,136 @@
+//! Worker threads of the serving engine.
+//!
+//! Each worker owns its own [`Executor`] (PJRT clients are not shared
+//! across threads; compile caches are warmed at engine startup), pulls
+//! formed batches from the shared batch channel, executes them, maps the
+//! batch onto a simulated OPIMA instance via the shared [`Router`], and
+//! reports per-request responses plus the per-batch simulated cost back
+//! over the results channel.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::analyzer::simcost::SimCostTable;
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::engine::lock;
+use crate::coordinator::request::{InferenceResponse, SimMetering};
+use crate::coordinator::router::Router;
+use crate::runtime::Executor;
+
+/// Everything one worker thread owns or shares.
+pub(crate) struct WorkerCtx {
+    pub id: usize,
+    pub executor: Executor,
+    pub batch_size: usize,
+    pub image_elems: usize,
+    pub router: Arc<Mutex<Router>>,
+    pub costs: Arc<SimCostTable>,
+    /// Shared serving epoch (finalized by `Engine::new` after warmup, so
+    /// the simulated-hardware clock and `wall_ms` share one origin).
+    pub epoch: Arc<Mutex<Instant>>,
+    pub rx: Arc<Mutex<Receiver<Batch>>>,
+    pub tx: Sender<BatchOutcome>,
+}
+
+/// What one executed (or failed) batch sends to the stats sink.
+pub(crate) struct BatchOutcome {
+    pub responses: Vec<InferenceResponse>,
+    /// Requests whose batch failed to execute (no responses for them).
+    pub failed: u64,
+    pub error: Option<String>,
+    /// Full-batch simulated energy (mJ) — counted once per executed
+    /// batch, so zero-padded partial batches still pay full-batch cost.
+    pub sim_energy_mj: f64,
+}
+
+/// Pull batches until the channel closes (engine shutdown).
+pub(crate) fn worker_loop(mut ctx: WorkerCtx) {
+    loop {
+        let msg = lock(&ctx.rx).recv();
+        let Ok(batch) = msg else { return };
+        let out = execute_batch(&mut ctx, batch);
+        if ctx.tx.send(out).is_err() {
+            return;
+        }
+    }
+}
+
+fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
+    let bsz = ctx.batch_size;
+    let elems = ctx.image_elems;
+    // Pack (and zero-pad) the fixed-shape batch input.
+    let mut input = vec![0f32; bsz * elems];
+    for (i, r) in batch.requests.iter().enumerate() {
+        input[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+    }
+    let artifact = batch.variant.artifact(bsz);
+    let exec_start = Instant::now();
+    let logits = match ctx.executor.run_f32(&artifact, &[&input]) {
+        Ok(l) => l,
+        Err(e) => {
+            return BatchOutcome {
+                responses: Vec::new(),
+                failed: batch.requests.len() as u64,
+                error: Some(e.to_string()),
+                sim_energy_mj: 0.0,
+            }
+        }
+    };
+    let exec_ms = exec_start.elapsed().as_secs_f64() * 1e3;
+    let classes = logits.len() / bsz;
+
+    // Simulated hardware metering: dispatch this *real* batch onto the
+    // least-loaded simulated OPIMA instance's busy horizon. A missing
+    // cost entry is a bug (the engine precomputes every variant) — fail
+    // the batch loudly rather than silently metering zero.
+    let Some((sim_lat, sim_mj)) = ctx.costs.get(batch.variant.pim_bits()) else {
+        return BatchOutcome {
+            responses: Vec::new(),
+            failed: batch.requests.len() as u64,
+            error: Some(format!(
+                "no precomputed sim cost for {}-bit batches",
+                batch.variant.pim_bits()
+            )),
+            sim_energy_mj: 0.0,
+        };
+    };
+    let epoch = *lock(&ctx.epoch);
+    let now_ms = exec_start.saturating_duration_since(epoch).as_secs_f64() * 1e3;
+    let instance = lock(&ctx.router).dispatch(now_ms, sim_lat).0;
+
+    let mut responses = Vec::with_capacity(batch.requests.len());
+    for (i, r) in batch.requests.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let predicted = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(c, _)| c)
+            .unwrap_or(0);
+        responses.push(InferenceResponse {
+            id: r.id,
+            logits: row.to_vec(),
+            predicted,
+            queue_ms: exec_start.saturating_duration_since(r.arrival).as_secs_f64() * 1e3,
+            exec_ms,
+            form_ms: batch
+                .formed_at
+                .saturating_duration_since(r.arrival)
+                .as_secs_f64()
+                * 1e3,
+            sim: SimMetering {
+                hw_latency_ms: sim_lat,
+                hw_energy_mj: sim_mj,
+            },
+            instance,
+            worker: ctx.id,
+        });
+    }
+    BatchOutcome {
+        responses,
+        failed: 0,
+        error: None,
+        sim_energy_mj: sim_mj,
+    }
+}

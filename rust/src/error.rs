@@ -1,49 +1,114 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the default
+//! build of this crate is deliberately dependency-free so tier-1
+//! `cargo build && cargo test` works in offline/sandboxed environments.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for the OPIMA stack.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration failed validation (geometry, parameters, ...).
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// A physical address fell outside the memory's capacity.
-    #[error("address out of range: {addr:#x} (capacity {capacity} bytes)")]
     AddressRange { addr: u64, capacity: u64 },
 
     /// A memory or PIM command was malformed or not executable.
-    #[error("command error: {0}")]
     Command(String),
 
     /// CNN graph construction/validation failure.
-    #[error("model error: {0}")]
     Model(String),
 
     /// CNN → PIM mapping failure (e.g. kernel wider than a subarray row).
-    #[error("mapping error: {0}")]
     Mapping(String),
 
     /// PJRT runtime failure (artifact missing, compile/execute error).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Serving-path failure (queue closed, request rejected, ...).
-    #[error("serving error: {0}")]
     Serving(String),
 
+    /// The serving engine's bounded ingress queue is full; the caller
+    /// should retry later or shed load.
+    Backpressure,
+
     /// I/O error (artifact files, config files).
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// JSON parse error (manifest, result export).
-    #[error("json error: {0}")]
     Json(String),
 
     /// TOML config parse error.
-    #[error("config parse error: {0}")]
     Toml(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "invalid configuration: {m}"),
+            Error::AddressRange { addr, capacity } => {
+                write!(f, "address out of range: {addr:#x} (capacity {capacity} bytes)")
+            }
+            Error::Command(m) => write!(f, "command error: {m}"),
+            Error::Model(m) => write!(f, "model error: {m}"),
+            Error::Mapping(m) => write!(f, "mapping error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Serving(m) => write!(f, "serving error: {m}"),
+            Error::Backpressure => write!(f, "backpressure: serving ingress queue is full"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Toml(m) => write!(f, "config parse error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_seed_formats() {
+        assert_eq!(
+            Error::Config("bad".into()).to_string(),
+            "invalid configuration: bad"
+        );
+        assert_eq!(
+            Error::AddressRange {
+                addr: 0x10,
+                capacity: 8
+            }
+            .to_string(),
+            "address out of range: 0x10 (capacity 8 bytes)"
+        );
+        assert_eq!(
+            Error::Backpressure.to_string(),
+            "backpressure: serving ingress queue is full"
+        );
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

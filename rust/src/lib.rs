@@ -26,9 +26,15 @@
 //!   (Figs. 7–12).
 //! - [`baselines`] — NP100 / E7742 / ORIN rooflines, PRIME, CrossLight,
 //!   PhPIM comparison models (paper §V).
-//! - [`coordinator`] — async inference server: router + dynamic batcher
-//!   driving the PJRT functional model with simulator metering.
-//! - [`runtime`] — PJRT artifact loading/execution (`xla` crate).
+//! - [`coordinator`] — the concurrent serving engine: bounded ingress
+//!   queue with backpressure → batcher thread (size- *and* idle-safe
+//!   deadline-triggered flushes) → worker pool (one warmed PJRT executor
+//!   per worker) → shared stats sink, with graceful drain/shutdown; the
+//!   router maps real batches onto simulated OPIMA instance horizons,
+//!   and a synchronous `Server` facade preserves the seed call-loop API.
+//! - [`runtime`] — artifact loading/execution: PJRT (`xla` crate,
+//!   feature `pjrt`) or a deterministic sim backend for environments
+//!   without the XLA native library or AOT artifacts.
 
 // modules added incrementally below
 pub mod analyzer;

@@ -9,7 +9,7 @@
 //!   latency  [--bits 4|8] [--model NAME]   Fig. 9 latency breakdown
 //!   compare  [--bits 4|8]     Figs. 10–12 cross-platform comparison
 //!   memtest  [--ops N]        memory-mode self-test (read/write sweep)
-//!   serve    [--requests N] [--variant v] [--instances K]  serving demo
+//!   serve    [--requests N] [--variant v] [--instances K] [--workers W]  serving demo
 //!   config                    print the active TOML configuration
 //!
 //! Global flag: --config <file.toml> loads overrides over paper defaults.
@@ -330,11 +330,13 @@ fn cmd_memtest(cfg: &OpimaConfig, args: &Args) -> Result<()> {
 fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
     let n = args.usize_or("requests", 256)?;
     let instances = args.usize_or("instances", 1)?;
+    let workers = args.usize_or("workers", 1)?;
     let variant = Variant::parse(args.get("variant").unwrap_or("int4"))?;
     let manifest = Manifest::load(&Manifest::default_dir())?;
     let mut server = Server::new(
         ServerConfig {
             instances,
+            workers,
             hw: cfg.clone(),
             ..Default::default()
         },
@@ -342,7 +344,15 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
     )?;
     let elems = server.image_elems();
     let mut rng = Rng::new(7);
-    println!("serving {n} requests (variant {variant:?}, {instances} instance(s)) ...");
+    if !cfg!(feature = "pjrt") {
+        println!(
+            "(built without --features pjrt: sim executor backend — predictions are \
+             deterministic pseudo-logits, not the trained model)"
+        );
+    }
+    println!(
+        "serving {n} requests (variant {variant:?}, {instances} instance(s), {workers} worker(s)) ..."
+    );
     for id in 0..n as u64 {
         let image: Vec<f32> = (0..elems).map(|_| rng.f64() as f32).collect();
         server.submit(InferenceRequest {
@@ -360,8 +370,12 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
         s.wall_ms, s.throughput_rps, s.p50_total_ms, s.p99_total_ms
     );
     println!(
+        "  latency split: mean form {:.3} ms   mean queue {:.3} ms   mean exec {:.3} ms",
+        s.mean_form_ms, s.mean_queue_ms, s.mean_exec_ms
+    );
+    println!(
         "  simulated OPIMA hardware: {:.2} ms makespan, {:.2} mJ dynamic energy",
         s.sim_makespan_ms, s.sim_energy_mj
     );
-    Ok(())
+    server.shutdown()
 }

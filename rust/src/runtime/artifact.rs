@@ -101,6 +101,36 @@ impl Manifest {
             .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in manifest")))
     }
 
+    /// In-memory manifest for the sim executor backend: the three served
+    /// CNN variants at the given batch/image size, no files on disk.
+    ///
+    /// Lets the serving engine, its concurrency tests and its benches run
+    /// in environments where `make artifacts` has never been executed.
+    pub fn synthetic(batch: usize, image_size: usize) -> Self {
+        let mut artifacts = BTreeMap::new();
+        for (name, bits) in [
+            (format!("cnn_fp32_b{batch}"), None),
+            (format!("cnn_int8_b{batch}"), Some(8)),
+            (format!("cnn_int4_b{batch}"), Some(4)),
+        ] {
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    input_shapes: vec![vec![batch, image_size, image_size, 1]],
+                    output_shape: vec![batch, 4],
+                    bits,
+                },
+            );
+        }
+        Self {
+            dir: PathBuf::from("<synthetic>"),
+            artifacts,
+            batch,
+            image_size,
+        }
+    }
+
     /// Default artifacts directory: `$OPIMA_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
         std::env::var_os("OPIMA_ARTIFACTS")
@@ -135,6 +165,20 @@ mod tests {
         assert_eq!(cnn.input_shapes[0], vec![8, 12, 12, 1]);
         assert_eq!(cnn.output_shape, vec![8, 4]);
         assert_eq!(cnn.output_elems(), 32);
+    }
+
+    #[test]
+    fn synthetic_manifest_covers_served_variants() {
+        let m = Manifest::synthetic(8, 12);
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.image_size, 12);
+        for name in ["cnn_fp32_b8", "cnn_int8_b8", "cnn_int4_b8"] {
+            let a = m.get(name).unwrap();
+            assert_eq!(a.input_shapes[0], vec![8, 12, 12, 1]);
+            assert_eq!(a.output_shape, vec![8, 4]);
+        }
+        assert_eq!(m.get("cnn_int4_b8").unwrap().bits, Some(4));
+        assert_eq!(m.get("cnn_fp32_b8").unwrap().bits, None);
     }
 
     #[test]

@@ -1,33 +1,67 @@
-//! PJRT executor: compile-once, execute-many over HLO text artifacts.
+//! Execution backends: compile-once, execute-many over HLO artifacts.
 //!
-//! Follows the verified /opt/xla-example/load_hlo pattern: HLO *text* is
-//! the interchange format (jax ≥ 0.5 emits 64-bit-id protos that
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids), and
-//! artifacts are lowered with `return_tuple=True`, so results unwrap
-//! with `to_tuple1`.
-
-use std::collections::HashMap;
+//! Two backends sit behind the same `Executor` API:
+//!
+//! - **PJRT** (feature `pjrt`): the real path. Follows the verified
+//!   /opt/xla-example/load_hlo pattern: HLO *text* is the interchange
+//!   format (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids), and artifacts are lowered
+//!   with `return_tuple=True`, so results unwrap with `to_tuple1`.
+//! - **Sim** (always available): a deterministic stand-in that validates
+//!   shapes against the manifest and produces input-dependent pseudo
+//!   logits. It lets the serving engine, its tests and its benches run
+//!   in environments without the XLA native library or AOT artifacts.
+//!
+//! Serving worker threads each own an `Executor` (PJRT clients are not
+//! shared across threads), and [`Executor::warmup`] pre-compiles the
+//! serving artifacts at engine startup so the first request never pays
+//! compile latency.
 
 use crate::error::{Error, Result};
-use crate::runtime::artifact::Manifest;
+use crate::runtime::artifact::{ArtifactInfo, Manifest};
 
-/// Compile-cached PJRT CPU executor.
+/// How to construct a worker's executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutorSpec {
+    /// PJRT when the `pjrt` feature is enabled, otherwise the sim backend.
+    #[default]
+    Native,
+    /// Deterministic sim backend; `work_factor` repeats the arithmetic to
+    /// emulate heavier models in scheduling/scaling benchmarks.
+    Sim { work_factor: u32 },
+}
+
+/// Compile-cached executor over an artifact manifest.
 pub struct Executor {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    backend: Backend,
+}
+
+enum Backend {
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::Pjrt),
+    Sim(SimBackend),
 }
 
 impl Executor {
-    /// Create a CPU-backed executor over an artifact manifest.
+    /// Create an executor with the native backend (PJRT when the `pjrt`
+    /// feature is enabled, the sim backend otherwise).
     pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PJRT client: {e}")))?;
-        Ok(Self {
-            client,
-            manifest,
-            cache: HashMap::new(),
-        })
+        Self::from_spec(ExecutorSpec::Native, manifest)
+    }
+
+    /// Create a sim-backed executor (no PJRT, no HLO files needed).
+    pub fn new_sim(manifest: Manifest) -> Result<Self> {
+        Self::from_spec(ExecutorSpec::Sim { work_factor: 1 }, manifest)
+    }
+
+    /// Create an executor from an explicit backend spec.
+    pub fn from_spec(spec: ExecutorSpec, manifest: Manifest) -> Result<Self> {
+        let backend = match spec {
+            ExecutorSpec::Native => native_backend()?,
+            ExecutorSpec::Sim { work_factor } => Backend::Sim(SimBackend::new(work_factor)),
+        };
+        Ok(Self { manifest, backend })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -35,32 +69,46 @@ impl Executor {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.platform(),
+            Backend::Sim(_) => "sim".to_string(),
+        }
     }
 
     /// Compile (or fetch from cache) an artifact by name.
     pub fn compile(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
-            return Ok(());
+        self.manifest.get(name)?;
+        match &mut self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.compile(&self.manifest, name),
+            Backend::Sim(s) => {
+                s.compiled.insert(name.to_string());
+                Ok(())
+            }
         }
-        let path = self.manifest.hlo_path(name);
-        if !path.exists() {
-            return Err(Error::Runtime(format!(
-                "HLO artifact missing: {} (run `make artifacts`)",
-                path.display()
-            )));
+    }
+
+    /// Pre-compile artifacts at startup (the engine's warm path).
+    ///
+    /// Names missing from the manifest, or whose HLO file is absent on
+    /// the PJRT backend, are skipped — serving them later surfaces the
+    /// error on the request path instead. Returns how many compiled.
+    pub fn warmup(&mut self, names: &[String]) -> usize {
+        let mut warmed = 0;
+        for name in names {
+            if self.manifest.get(name).is_err() {
+                continue;
+            }
+            #[cfg(feature = "pjrt")]
+            if matches!(self.backend, Backend::Pjrt(_)) && !self.manifest.hlo_path(name).exists() {
+                continue;
+            }
+            if self.compile(name).is_ok() {
+                warmed += 1;
+            }
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
-        )
-        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
-        self.cache.insert(name.to_string(), exe);
-        Ok(())
+        warmed
     }
 
     /// Execute an artifact with f32 inputs; returns the flat f32 output.
@@ -86,32 +134,159 @@ impl Executor {
             }
         }
         self.compile(name)?;
-
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (buf, shape) in inputs.iter().zip(&info.input_shapes) {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(buf)
-                .reshape(&dims)
-                .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
-            literals.push(lit);
+        match &mut self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.run(name, &info, inputs),
+            Backend::Sim(s) => Ok(s.run(&info, inputs)),
         }
-        let exe = self.cache.get(name).expect("compiled above");
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
-        // Artifacts are lowered with return_tuple=True → 1-tuple.
-        let out = result
-            .to_tuple1()
-            .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
-        out.to_vec::<f32>()
-            .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
     }
 
     /// Number of compiled executables held in the cache.
     pub fn cached(&self) -> usize {
-        self.cache.len()
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.cached(),
+            Backend::Sim(s) => s.compiled.len(),
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn native_backend() -> Result<Backend> {
+    Ok(Backend::Pjrt(pjrt::Pjrt::new()?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn native_backend() -> Result<Backend> {
+    Ok(Backend::Sim(SimBackend::new(1)))
+}
+
+/// Deterministic pseudo-execution: for batched artifacts (output shape
+/// `[rows, cols]`) each output is a fixed integer-patterned linear
+/// functional of the corresponding input row — finite, input-dependent,
+/// and identical across runs, workers and platforms.
+struct SimBackend {
+    work_factor: u32,
+    compiled: std::collections::HashSet<String>,
+}
+
+impl SimBackend {
+    fn new(work_factor: u32) -> Self {
+        Self {
+            work_factor: work_factor.max(1),
+            compiled: std::collections::HashSet::new(),
+        }
+    }
+
+    fn run(&self, info: &ArtifactInfo, inputs: &[&[f32]]) -> Vec<f32> {
+        let x = inputs[0];
+        let (rows, cols) = match info.output_shape.as_slice() {
+            [r, c] => (*r, *c),
+            _ => (1, info.output_elems()),
+        };
+        let per = if rows > 0 { x.len() / rows } else { 0 };
+        let mut out = vec![0f32; rows * cols];
+        for _ in 0..self.work_factor {
+            for (b, out_row) in out.chunks_mut(cols).enumerate() {
+                let row = &x[b * per..(b + 1) * per];
+                for (c, o) in out_row.iter_mut().enumerate() {
+                    // Seed with the previous pass so repeated passes are
+                    // not hoisted out as loop-invariant work.
+                    let mut acc = f64::from(*o) * 1e-9;
+                    for (i, v) in row.iter().enumerate() {
+                        let w = ((i * 31 + c * 17 + 7) % 13) as f64 - 6.0;
+                        acc += f64::from(*v) * (w / 13.0);
+                    }
+                    *o = acc as f32;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::collections::HashMap;
+
+    use crate::error::{Error, Result};
+    use crate::runtime::artifact::{ArtifactInfo, Manifest};
+
+    /// The real PJRT CPU backend (`xla` crate).
+    pub(super) struct Pjrt {
+        client: xla::PjRtClient,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Pjrt {
+        pub(super) fn new() -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("PJRT client: {e}")))?;
+            Ok(Self {
+                client,
+                cache: HashMap::new(),
+            })
+        }
+
+        pub(super) fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub(super) fn cached(&self) -> usize {
+            self.cache.len()
+        }
+
+        pub(super) fn compile(&mut self, manifest: &Manifest, name: &str) -> Result<()> {
+            if self.cache.contains_key(name) {
+                return Ok(());
+            }
+            let path = manifest.hlo_path(name);
+            if !path.exists() {
+                return Err(Error::Runtime(format!(
+                    "HLO artifact missing: {} (run `make artifacts`)",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+            self.cache.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        pub(super) fn run(
+            &mut self,
+            name: &str,
+            info: &ArtifactInfo,
+            inputs: &[&[f32]],
+        ) -> Result<Vec<f32>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (buf, shape) in inputs.iter().zip(&info.input_shapes) {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
+                literals.push(lit);
+            }
+            let exe = self.cache.get(name).expect("compiled above");
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+            // Artifacts are lowered with return_tuple=True → 1-tuple.
+            let out = result
+                .to_tuple1()
+                .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+            out.to_vec::<f32>()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+        }
     }
 }
 
@@ -120,7 +295,13 @@ mod tests {
     use super::*;
     use std::path::Path;
 
+    /// Real-artifact executor for the functional (PJRT) tests; the
+    /// accuracy bounds below only hold on the real backend.
     fn executor() -> Option<Executor> {
+        if !cfg!(feature = "pjrt") {
+            eprintln!("skipping: functional PJRT tests need --features pjrt");
+            return None;
+        }
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !dir.join("manifest.json").exists() {
             eprintln!("skipping: run `make artifacts` first");
@@ -186,8 +367,38 @@ mod tests {
     }
 
     #[test]
+    fn sim_backend_runs_without_artifacts() {
+        let m = Manifest::synthetic(8, 12);
+        let mut ex = Executor::new_sim(m).unwrap();
+        assert_eq!(ex.platform(), "sim");
+        let x = vec![0.25f32; 8 * 12 * 12];
+        let out = ex.run_f32("cnn_fp32_b8", &[&x]).unwrap();
+        assert_eq!(out.len(), 8 * 4);
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert_eq!(ex.cached(), 1);
+        // Deterministic: same input, same output.
+        let out2 = ex.run_f32("cnn_fp32_b8", &[&x]).unwrap();
+        assert_eq!(out, out2);
+        // Input-dependent: a different image changes the logits.
+        let y: Vec<f32> = (0..8 * 12 * 12).map(|i| (i % 5) as f32 * 0.1).collect();
+        assert_ne!(out, ex.run_f32("cnn_fp32_b8", &[&y]).unwrap());
+    }
+
+    #[test]
+    fn warmup_precompiles_serving_artifacts() {
+        let m = Manifest::synthetic(8, 12);
+        let mut ex = Executor::new_sim(m).unwrap();
+        let names: Vec<String> = ["cnn_fp32_b8", "cnn_int8_b8", "cnn_int4_b8", "nope"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(ex.warmup(&names), 3, "unknown names are skipped");
+        assert_eq!(ex.cached(), 3);
+    }
+
+    #[test]
     fn shape_validation() {
-        let Some(mut ex) = executor() else { return };
+        let mut ex = Executor::new_sim(Manifest::synthetic(8, 12)).unwrap();
         let bad = vec![0f32; 3];
         assert!(ex.run_f32("cnn_fp32_b8", &[&bad]).is_err());
         assert!(ex.run_f32("cnn_fp32_b8", &[]).is_err());

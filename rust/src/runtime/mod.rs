@@ -1,14 +1,18 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
-//! the Rust request path (Python never runs at serve time).
+//! Runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust request path (Python never runs at serve time).
 //!
 //! - [`artifact`] — `artifacts/manifest.json` parsing and path
-//!   resolution for the HLO text files emitted by `python/compile/aot.py`.
-//! - [`executor`] — `xla` crate wrapper: `PjRtClient::cpu()` →
+//!   resolution for the HLO text files emitted by `python/compile/aot.py`,
+//!   plus [`Manifest::synthetic`] for artifact-free sim runs.
+//! - [`executor`] — the execution backends behind one `Executor` API:
+//!   PJRT (`xla` crate, feature `pjrt`): `PjRtClient::cpu()` →
 //!   `HloModuleProto::from_text_file` → compile (cached) → execute with
-//!   f32 buffers.
+//!   f32 buffers; and a deterministic sim backend that needs neither the
+//!   XLA native library nor artifacts on disk. Serving workers each own
+//!   an `Executor`, warmed via `Executor::warmup` at engine startup.
 
 pub mod artifact;
 pub mod executor;
 
 pub use artifact::{ArtifactInfo, Manifest};
-pub use executor::Executor;
+pub use executor::{Executor, ExecutorSpec};

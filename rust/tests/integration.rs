@@ -197,9 +197,13 @@ fn serving_path_end_to_end() {
     }
     server.flush().unwrap();
     assert_eq!(server.responses().len(), 16);
-    // A clean class-0 pattern must classify as class 0 at fp32.
-    let correct = server.responses().iter().filter(|r| r.predicted == 0).count();
-    assert!(correct >= 15, "{correct}/16 classified as class 0");
+    // A clean class-0 pattern must classify as class 0 at fp32 — only
+    // meaningful on the real PJRT backend (the sim backend serves
+    // deterministic pseudo-logits).
+    if cfg!(feature = "pjrt") {
+        let correct = server.responses().iter().filter(|r| r.predicted == 0).count();
+        assert!(correct >= 15, "{correct}/16 classified as class 0");
+    }
 }
 
 #[test]
@@ -246,5 +250,10 @@ fn quantized_artifacts_agree_with_fp32_mostly() {
             agree += 1;
         }
     }
-    assert!(agree * 10 >= batch * 7, "int8 agrees with fp32: {agree}/{batch}");
+    // Agreement is only a meaningful check on the real PJRT backend —
+    // the sim backend ignores artifact weights, so fp32 and int8 outputs
+    // are identical and the bound would hold vacuously.
+    if cfg!(feature = "pjrt") {
+        assert!(agree * 10 >= batch * 7, "int8 agrees with fp32: {agree}/{batch}");
+    }
 }
