@@ -73,6 +73,33 @@ fn main() {
         }
     });
 
+    // --- streaming stats (the engine's observe path) ----------------------
+    use opima::util::histogram::Histogram;
+    let lat_samples: Vec<f64> = {
+        let mut r = Rng::new(99);
+        (0..10_000).map(|_| (r.normal() * 1.2 + 1.0).exp()).collect()
+    };
+    measure("histogram/record_10k", 3, 200, || {
+        let mut h = Histogram::new();
+        for &v in &lat_samples {
+            h.record(v);
+        }
+        black_box(h.count());
+    });
+    let mut shards = vec![Histogram::new(); 4];
+    for (i, &v) in lat_samples.iter().enumerate() {
+        shards[i % 4].record(v);
+    }
+    // What Engine::stats pays per snapshot: merge the worker shards and
+    // extract the percentile summary — O(buckets), served-count-free.
+    measure("histogram/merge_4_shards_summary", 3, 500, || {
+        let mut agg = Histogram::new();
+        for s in &shards {
+            agg.merge(s);
+        }
+        black_box(agg.summary());
+    });
+
     // --- PJRT end-to-end ---------------------------------------------------
     let dir = Manifest::default_dir();
     if dir.join("manifest.json").exists() {

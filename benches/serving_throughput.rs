@@ -79,8 +79,11 @@ fn sync_seed_path(manifest: &Manifest) -> f64 {
     served as f64 / t0.elapsed().as_secs_f64()
 }
 
-/// The pipelined engine under a multi-producer closed loop.
-fn engine_path(manifest: &Manifest, workers: usize) -> f64 {
+/// The pipelined engine under a multi-producer closed loop. Returns
+/// `(req/s, p50 ms, p99 ms)` — the percentiles come from the engine's
+/// streaming histograms, so collecting them costs O(buckets) regardless
+/// of how many requests were served.
+fn engine_path(manifest: &Manifest, workers: usize) -> (f64, f64, f64) {
     let mut engine = Engine::new(
         EngineConfig {
             workers,
@@ -113,7 +116,11 @@ fn engine_path(manifest: &Manifest, workers: usize) -> f64 {
     let stats = engine.stats();
     assert_eq!(stats.served as usize, N_REQUESTS);
     engine.shutdown().unwrap();
-    stats.served as f64 / elapsed
+    (
+        stats.served as f64 / elapsed,
+        stats.latency.total.p50,
+        stats.latency.total.p99,
+    )
 }
 
 fn main() {
@@ -124,21 +131,33 @@ fn main() {
     );
 
     let sync_rps = sync_seed_path(&manifest);
-    let mut rows: Vec<(String, f64)> = vec![("sync seed path (inline)".into(), sync_rps)];
+    // The sync replica has no latency accounting (the seed didn't
+    // either), so its percentile cells are blank.
+    let mut rows: Vec<(String, f64, Option<(f64, f64)>)> =
+        vec![("sync seed path (inline)".into(), sync_rps, None)];
     for workers in [1usize, 2, 4] {
-        let rps = engine_path(&manifest, workers);
-        rows.push((format!("engine, {workers} worker(s)"), rps));
+        let (rps, p50, p99) = engine_path(&manifest, workers);
+        rows.push((format!("engine, {workers} worker(s)"), rps, Some((p50, p99))));
     }
 
-    table_header("Serving throughput scaling", &["path", "req/s", "vs sync"]);
-    for (name, rps) in &rows {
+    table_header(
+        "Serving throughput scaling",
+        &["path", "req/s", "vs sync", "p50 ms", "p99 ms"],
+    );
+    for (name, rps, pcts) in &rows {
+        let (p50, p99) = match pcts {
+            Some((a, b)) => (format!("{a:.2}"), format!("{b:.2}")),
+            None => ("-".into(), "-".into()),
+        };
         table_row(&[
             name.clone(),
             format!("{rps:.0}"),
             format!("{:.2}x", rps / sync_rps),
+            p50,
+            p99,
         ]);
     }
-    let best = rows[1..].iter().map(|(_, r)| *r).fold(0.0f64, f64::max);
+    let best = rows[1..].iter().map(|(_, r, _)| *r).fold(0.0f64, f64::max);
     // Report, don't assert: on 1-2 vCPU machines the pool can legitimately
     // tie the zero-handoff inline loop, and a panic would eat the table.
     if best > sync_rps {

@@ -16,6 +16,14 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Benches and examples are plain binaries that `cargo build`/`test`
+# don't touch — compile them too so drift can't break silently.
+echo "== cargo build --release --examples =="
+cargo build --release --examples
+
+echo "== cargo bench --no-run =="
+cargo bench --no-run
+
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 

@@ -10,6 +10,7 @@
 //! across platforms for a given model.
 
 use crate::cnn::graph::Network;
+use crate::util::histogram::{Histogram, Summary};
 
 /// Result of running one model on one platform.
 #[derive(Debug, Clone)]
@@ -41,6 +42,19 @@ impl PlatformResult {
 /// per MAC at the quantized width.
 pub fn workload_bits(net: &Network, bits: u32) -> u64 {
     2 * net.macs() * bits as u64
+}
+
+/// Summarize an offline latency sample set (ms) through the same
+/// log-bucketed streaming histogram the serving engine uses — one
+/// percentile implementation for online serving stats and offline
+/// report tables, with the same nearest-rank definition and the same
+/// bounded relative error.
+pub fn latency_summary(samples_ms: &[f64]) -> Summary {
+    let mut h = Histogram::new();
+    for &v in samples_ms {
+        h.record(v);
+    }
+    h.summary()
 }
 
 /// Geometric-mean ratio of `xs` over `ys` (how the paper reports "N×
@@ -79,6 +93,25 @@ mod tests {
     fn workload_bits_scale() {
         let net = build_model(Model::ResNet18).unwrap();
         assert_eq!(workload_bits(&net, 8), 2 * workload_bits(&net, 4));
+    }
+
+    #[test]
+    fn latency_summary_matches_exact_oracle() {
+        use crate::util::histogram::nearest_rank;
+        let samples: Vec<f64> = (1..=500).map(|i| (i as f64).sqrt() * 0.7).collect();
+        let s = latency_summary(&samples);
+        assert_eq!(s.count, 500);
+        let mut sorted = samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        for (p, est) in [(0.5, s.p50), (0.9, s.p90), (0.99, s.p99)] {
+            let exact = nearest_rank(&sorted, p);
+            assert!(
+                (est - exact).abs() <= exact * Histogram::MAX_REL_ERROR,
+                "p{p}: {est} vs {exact}"
+            );
+        }
+        let mean = samples.iter().sum::<f64>() / 500.0;
+        assert!((s.mean - mean).abs() < 1e-9, "streaming mean is exact");
     }
 
     #[test]

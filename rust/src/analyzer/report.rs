@@ -3,6 +3,7 @@
 use crate::analyzer::latency::ModelAnalysis;
 use crate::analyzer::metrics::PlatformResult;
 use crate::analyzer::power::PowerBreakdown;
+use crate::util::histogram::Summary;
 
 /// Fig. 9-style latency breakdown rows.
 pub fn latency_table(analyses: &[ModelAnalysis]) -> String {
@@ -34,6 +35,22 @@ pub fn power_table(b: &PowerBreakdown) -> String {
         ));
     }
     out.push_str(&format!("| **total** | **{total:.1}** | 100% |\n"));
+    out
+}
+
+/// Latency-percentile rows (ms) for streaming or offline summaries —
+/// used by the CLI `serve` command and the serving example to render
+/// the engine's per-stage breakdown.
+pub fn latency_summary_table(rows: &[(&str, &Summary)]) -> String {
+    let mut out = String::from(
+        "| stage | n | mean (ms) | p50 | p90 | p99 | p99.9 | max |\n|---|---|---|---|---|---|---|---|\n",
+    );
+    for (name, s) in rows {
+        out.push_str(&format!(
+            "| {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} |\n",
+            name, s.count, s.mean, s.p50, s.p90, s.p99, s.p999, s.max
+        ));
+    }
     out
 }
 
@@ -82,5 +99,8 @@ mod tests {
             };
         let c = comparison_table(&[r], 1_000_000);
         assert!(c.contains("OPIMA"));
+        let s = crate::analyzer::metrics::latency_summary(&[1.0, 2.0, 3.0]);
+        let lt = latency_summary_table(&[("total", &s)]);
+        assert!(lt.contains("total") && lt.contains("p99.9"));
     }
 }

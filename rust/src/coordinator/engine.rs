@@ -22,10 +22,20 @@
 //!   Workers pull formed batches from a shared channel, execute them, and
 //!   map each real batch onto the least-loaded *simulated* OPIMA instance
 //!   via the shared [`Router`] (the dispatch policy).
+//! - **Streaming stats**: each worker folds its batches' latencies into
+//!   its own [`LatencyShard`] of log-bucketed histograms
+//!   ([`util::histogram`](crate::util::histogram)) — an uncontended
+//!   per-worker lock on the record path. [`Engine::stats`] merges the
+//!   shards in O(buckets), independent of how long the engine has been
+//!   serving: no response-history sort, no history clone. Memory is
+//!   fixed no matter how many requests have been served.
 //! - **Stats sink**: completed [`BatchOutcome`]s flow over a results
 //!   channel into a collector thread that maintains the shared sink
-//!   (responses, per-*batch* simulated energy, failure accounting) and
-//!   wakes [`Engine::drain`] waiters.
+//!   (a *bounded* ring of the last [`EngineConfig::history`] responses,
+//!   per-*batch* simulated energy, failure accounting) and wakes
+//!   [`Engine::drain`] waiters. The seed retained the full response
+//!   history forever; the ring caps retention so the sink is safe for
+//!   unbounded request streams.
 //!
 //! Per-batch simulated costs come from an immutable
 //! [`SimCostTable`](crate::analyzer::simcost::SimCostTable) precomputed
@@ -50,10 +60,12 @@ use crate::config::OpimaConfig;
 use crate::coordinator::batcher::{Batch, DynamicBatcher};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse, Variant};
 use crate::coordinator::router::Router;
-use crate::coordinator::server::ServerStats;
+use crate::coordinator::server::{LatencyBreakdown, ServerStats};
 use crate::coordinator::worker::{worker_loop, BatchOutcome, WorkerCtx};
 use crate::error::{Error, Result};
 use crate::runtime::{Executor, ExecutorSpec, Manifest};
+use crate::util::histogram::Histogram;
+use crate::util::ring::Ring;
 
 /// Longest the batcher sleeps while requests are pending; deadline and
 /// flush handling are late by at most this much.
@@ -82,6 +94,12 @@ pub struct EngineConfig {
     pub hw: OpimaConfig,
     /// Worker executor backend.
     pub executor: ExecutorSpec,
+    /// Bounded response history: the sink retains only the last
+    /// `history` responses for [`Engine::responses`] /
+    /// [`Engine::responses_since`] tailing. Aggregate statistics
+    /// (served counts, means, percentiles, energy) always cover *every*
+    /// response regardless of this capacity.
+    pub history: usize,
 }
 
 impl Default for EngineConfig {
@@ -93,6 +111,7 @@ impl Default for EngineConfig {
             max_wait: Duration::from_millis(2),
             hw: OpimaConfig::paper(),
             executor: ExecutorSpec::Native,
+            history: 1024,
         }
     }
 }
@@ -104,13 +123,13 @@ pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 }
 
 /// Aggregates written by the collector thread, read by `stats()`/waiters.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub(crate) struct SinkState {
-    /// Full response history. Retained because the `Server` facade and
-    /// `responses()`/`responses_since()` expose it; a bounded/streaming
-    /// accumulator for indefinitely-running servers is tracked in
-    /// ROADMAP.md open items.
-    pub responses: Vec<InferenceResponse>,
+    /// Bounded response history: only the last `history` responses are
+    /// retained (completion order, monotonic sequence numbers). The
+    /// latency aggregates live in the per-worker [`LatencyShard`]s, so
+    /// eviction here loses payloads (logits), never statistics.
+    pub recent: Ring<InferenceResponse>,
     /// Successfully executed batches.
     pub batches: u64,
     /// Requests lost to failed batches.
@@ -127,10 +146,58 @@ pub(crate) struct SinkState {
     pub first_error: Option<String>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub(crate) struct StatsSink {
     pub state: Mutex<SinkState>,
     pub done: Condvar,
+}
+
+impl StatsSink {
+    fn new(history: usize) -> Self {
+        Self {
+            state: Mutex::new(SinkState {
+                recent: Ring::new(history),
+                batches: 0,
+                failed: 0,
+                batch_energy_mj: 0.0,
+                completed: 0,
+                last_done: None,
+                first_error: None,
+            }),
+            done: Condvar::new(),
+        }
+    }
+}
+
+/// One worker's streaming latency accumulators — four log-bucketed
+/// histograms, fixed memory, recorded under the worker's own lock (only
+/// `stats()` ever contends it, briefly, to merge). Sharding per worker
+/// keeps the record path off any shared hot lock.
+#[derive(Debug, Default)]
+pub(crate) struct LatencyShard {
+    pub total: Histogram,
+    pub queue: Histogram,
+    pub exec: Histogram,
+    pub form: Histogram,
+}
+
+impl LatencyShard {
+    /// Fold one response's latency sample into the shard.
+    pub fn record(&mut self, r: &InferenceResponse) {
+        let (total, queue, exec, form) = r.latency_sample();
+        self.total.record(total);
+        self.queue.record(queue);
+        self.exec.record(exec);
+        self.form.record(form);
+    }
+
+    /// Fold another shard into this one. O(buckets).
+    pub fn merge(&mut self, other: &LatencyShard) {
+        self.total.merge(&other.total);
+        self.queue.merge(&other.queue);
+        self.exec.merge(&other.exec);
+        self.form.merge(&other.form);
+    }
 }
 
 /// Control flags shared with the batcher thread. Shutdown needs no
@@ -158,6 +225,8 @@ pub struct Engine {
     ingress: Option<SyncSender<InferenceRequest>>,
     ctrl: Arc<Ctrl>,
     sink: Arc<StatsSink>,
+    /// Per-worker streaming latency histograms, merged by `stats()`.
+    shards: Vec<Arc<Mutex<LatencyShard>>>,
     router: Arc<Mutex<Router>>,
     costs: Arc<SimCostTable>,
     /// Serving epoch (post-warmup), shared with the workers.
@@ -186,6 +255,9 @@ impl Engine {
         if cfg.instances == 0 {
             return Err(Error::Config("engine needs at least 1 instance".into()));
         }
+        if cfg.history == 0 {
+            return Err(Error::Config("history capacity must be at least 1".into()));
+        }
         cfg.hw.validate()?;
         let batch_size = manifest.batch;
         let image_elems = manifest.image_size * manifest.image_size;
@@ -194,7 +266,10 @@ impl Engine {
         let bits: Vec<u32> = variants.iter().map(|v| v.pim_bits()).collect();
         let costs = Arc::new(SimCostTable::build(&cfg.hw, &net, batch_size, &bits)?);
         let router = Arc::new(Mutex::new(Router::new(cfg.instances)));
-        let sink = Arc::new(StatsSink::default());
+        let sink = Arc::new(StatsSink::new(cfg.history));
+        let shards: Vec<Arc<Mutex<LatencyShard>>> = (0..cfg.workers)
+            .map(|_| Arc::new(Mutex::new(LatencyShard::default())))
+            .collect();
         let ctrl = Arc::new(Ctrl::default());
 
         let warm: Vec<String> = variants.iter().map(|v| v.artifact(batch_size)).collect();
@@ -227,6 +302,7 @@ impl Engine {
             let tx = res_tx.clone();
             let ready = ready_tx.clone();
             let w_epoch = Arc::clone(&epoch);
+            let shard = Arc::clone(&shards[id]);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("opima-worker-{id}"))
@@ -250,6 +326,7 @@ impl Engine {
                             router,
                             costs,
                             epoch: w_epoch,
+                            shard,
                             rx,
                             tx,
                         });
@@ -298,6 +375,7 @@ impl Engine {
             ingress: Some(ingress_tx),
             ctrl,
             sink,
+            shards,
             router,
             costs,
             epoch,
@@ -448,21 +526,27 @@ impl Engine {
         lock(&self.sink.state).completed
     }
 
-    /// Snapshot of all responses so far (completion order). Clones the
-    /// full history — callers that poll repeatedly should use
-    /// [`Engine::responses_since`] with their own high-water mark.
+    /// Snapshot of the *retained* responses (completion order): the last
+    /// [`EngineConfig::history`] at most — older responses are evicted
+    /// from the bounded ring, so the copy made here (and the memory
+    /// behind it) is O(history), not O(everything ever served).
+    /// Aggregate statistics are unaffected by eviction; callers that
+    /// tail the stream should use [`Engine::responses_since`].
     pub fn responses(&self) -> Vec<InferenceResponse> {
-        lock(&self.sink.state).responses.clone()
+        lock(&self.sink.state).recent.to_vec()
     }
 
-    /// Responses from index `from` onward (completion order): incremental
-    /// snapshots for callers that keep their own history.
-    pub fn responses_since(&self, from: usize) -> Vec<InferenceResponse> {
+    /// Retained responses with completion sequence ≥ `from` (completion
+    /// order), plus the next cursor value (= total responses completed
+    /// so far). A caller that polls with its last returned cursor sees
+    /// each response exactly once — unless it falls more than the ring
+    /// capacity behind, in which case the evicted gap is lost (the
+    /// returned cursor still advances past it, so the caller does not
+    /// stall; compare `vec.len()` against the cursor delta to detect
+    /// the gap).
+    pub fn responses_since(&self, from: u64) -> (Vec<InferenceResponse>, u64) {
         let st = lock(&self.sink.state);
-        match st.responses.get(from..) {
-            Some(tail) => tail.to_vec(),
-            None => Vec::new(),
-        }
+        (st.recent.since(from), st.recent.pushed())
     }
 
     /// Per-batch simulated `(latency_ms, energy_mj)` at an operand width.
@@ -471,10 +555,24 @@ impl Engine {
     }
 
     /// Aggregate statistics over everything served so far.
+    ///
+    /// O(buckets): merges the per-worker streaming histogram shards —
+    /// no response-history sort, no history clone, and the cost does not
+    /// grow with how long the engine has been serving. Each shard lock
+    /// is held only for its merge, so the observation path barely
+    /// contends with the workers. (A worker records its batch into its
+    /// shard just before the outcome reaches the collector, so a stats
+    /// snapshot taken mid-flight may momentarily count a response in the
+    /// latency aggregates that the sink counters haven't absorbed yet —
+    /// after `drain` the two views always agree.)
     pub fn stats(&self) -> ServerStats {
         let sim_makespan_ms = lock(&self.router).makespan_ms();
         let epoch = *lock(&self.epoch);
         let accepted = self.accepted.load(Ordering::Acquire);
+        let mut agg = LatencyShard::default();
+        for shard in &self.shards {
+            agg.merge(&lock(shard));
+        }
         let st = lock(&self.sink.state);
         // While work is in flight the wall clock runs to "now"; once the
         // pipeline is idle it stops at the last completion, so
@@ -485,29 +583,37 @@ impl Engine {
             Instant::now()
         };
         let wall_ms = end.saturating_duration_since(epoch).as_secs_f64() * 1e3;
-        let n = st.responses.len();
-        let mut stats = ServerStats {
-            served: n as u64,
-            batches: st.batches,
-            failed: st.failed,
+        let batches = st.batches;
+        let failed = st.failed;
+        let sim_energy_mj = st.batch_energy_mj;
+        drop(st);
+        let latency = LatencyBreakdown {
+            total: agg.total.summary(),
+            queue: agg.queue.summary(),
+            exec: agg.exec.summary(),
+            form: agg.form.summary(),
+        };
+        let n = latency.total.count;
+        ServerStats {
+            served: n,
+            batches,
+            failed,
             rejected: self.rejected.load(Ordering::Acquire),
             wall_ms,
-            sim_energy_mj: st.batch_energy_mj,
+            mean_queue_ms: latency.queue.mean,
+            mean_exec_ms: latency.exec.mean,
+            mean_form_ms: latency.form.mean,
+            p50_total_ms: latency.total.p50,
+            p99_total_ms: latency.total.p99,
+            throughput_rps: if n == 0 {
+                0.0
+            } else {
+                n as f64 / (wall_ms / 1e3).max(1e-9)
+            },
+            sim_energy_mj,
             sim_makespan_ms,
-            ..ServerStats::default()
-        };
-        if n == 0 {
-            return stats;
+            latency,
         }
-        let mut totals: Vec<f64> = st.responses.iter().map(|r| r.total_ms()).collect();
-        totals.sort_by(|a, b| a.total_cmp(b));
-        stats.mean_queue_ms = st.responses.iter().map(|r| r.queue_ms).sum::<f64>() / n as f64;
-        stats.mean_exec_ms = st.responses.iter().map(|r| r.exec_ms).sum::<f64>() / n as f64;
-        stats.mean_form_ms = st.responses.iter().map(|r| r.form_ms).sum::<f64>() / n as f64;
-        stats.p50_total_ms = totals[n / 2];
-        stats.p99_total_ms = totals[(n * 99 / 100).min(n - 1)];
-        stats.throughput_rps = n as f64 / (wall_ms / 1e3).max(1e-9);
-        stats
     }
 
     /// Graceful shutdown: drain in-flight work, disconnect the ingress
@@ -620,7 +726,9 @@ fn collector_loop(rx: Receiver<BatchOutcome>, sink: Arc<StatsSink>) {
             st.batches += 1;
             st.batch_energy_mj += out.sim_energy_mj;
         }
-        st.responses.extend(out.responses);
+        for r in out.responses {
+            st.recent.push(r);
+        }
         drop(st);
         sink.done.notify_all();
     }
@@ -670,6 +778,12 @@ mod tests {
         assert_eq!(s.served, 16);
         assert_eq!(s.batches, 2, "16 requests at batch 8 → 2 full batches");
         assert!(s.sim_energy_mj > 0.0);
+        // Streaming percentiles come from the merged worker shards and
+        // cover every response.
+        assert_eq!(s.latency.total.count, 16);
+        assert!(s.latency.total.p50 <= s.latency.total.p99 + 1e-12);
+        assert!(s.latency.total.p999 <= s.latency.total.max + 1e-12);
+        assert!((s.latency.queue.mean - s.mean_queue_ms).abs() < 1e-12);
         e.shutdown().unwrap();
     }
 
@@ -696,6 +810,15 @@ mod tests {
         assert!(Engine::new(
             EngineConfig {
                 instances: 0,
+                executor: ExecutorSpec::Sim { work_factor: 1 },
+                ..EngineConfig::default()
+            },
+            m.clone()
+        )
+        .is_err());
+        assert!(Engine::new(
+            EngineConfig {
+                history: 0,
                 executor: ExecutorSpec::Sim { work_factor: 1 },
                 ..EngineConfig::default()
             },

@@ -11,6 +11,16 @@
 //! shared stats sink; `shutdown` drains in-flight work before joining
 //! the pipeline threads.
 //!
+//! Observability is *streaming and bounded*: each worker folds its
+//! batches' latencies into a per-worker shard of log-bucketed histograms
+//! ([`util::histogram`](crate::util::histogram)), `Engine::stats` merges
+//! the shards in O(buckets) (no history sort or clone), and the sink
+//! retains only a fixed-capacity ring of the most recent responses
+//! ([`util::ring`](crate::util::ring)) — so memory and stats cost stay
+//! constant over unbounded request streams. The `Server` facade exposes
+//! responses by value (`recent`/`drain_responses`) rather than keeping
+//! its own copy.
+//!
 //! The functional result comes from executing the AOT HLO artifacts
 //! through PJRT (or the sim backend); the *architectural* cost of each
 //! batch (what the OPIMA hardware would have spent) is metered once per
@@ -20,8 +30,10 @@
 //! - [`request`] — request/response types and the model-variant registry.
 //! - [`batcher`] — dynamic batching: size- and deadline-triggered.
 //! - [`engine`] — the pipelined engine: queue → batcher → worker pool →
-//!   stats sink; backpressure, drain and graceful shutdown.
-//! - [`worker`] — worker loop: execute a batch, meter it, report it.
+//!   stats sink; backpressure, drain and graceful shutdown; streaming
+//!   per-worker latency histograms + bounded response ring.
+//! - [`worker`] — worker loop: execute a batch, meter it, fold it into
+//!   the worker's latency shard, report it.
 //! - [`router`] — least-outstanding-work dispatch of *real* worker
 //!   batches onto simulated OPIMA instance busy horizons.
 //! - [`server`] — the synchronous facade preserving the seed call-loop
@@ -36,4 +48,4 @@ pub mod worker;
 
 pub use engine::{Engine, EngineConfig};
 pub use request::{InferenceRequest, InferenceResponse, Variant};
-pub use server::{Server, ServerConfig, ServerStats};
+pub use server::{LatencyBreakdown, Server, ServerConfig, ServerStats};

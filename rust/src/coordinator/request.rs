@@ -96,6 +96,12 @@ impl InferenceResponse {
     pub fn total_ms(&self) -> f64 {
         self.queue_ms + self.exec_ms
     }
+
+    /// The `(total, queue, exec, form)` latency sample (ms) this
+    /// response contributes to the engine's streaming histograms.
+    pub fn latency_sample(&self) -> (f64, f64, f64, f64) {
+        (self.total_ms(), self.queue_ms, self.exec_ms, self.form_ms)
+    }
 }
 
 #[cfg(test)]

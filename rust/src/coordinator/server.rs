@@ -1,12 +1,19 @@
 //! The synchronous serving facade over the pipelined [`Engine`].
 //!
-//! `Server` keeps the seed's call-loop API — `submit`/`flush`/
-//! `responses`/`stats` from one caller thread — but every batch now forms
-//! in the engine's batcher thread and executes on its worker pool.
-//! `submit` blocks for queue space instead of surfacing backpressure
-//! (use [`Engine`] directly for non-blocking submission and multi-
-//! producer serving), and `flush` drains the pipeline and waits for all
-//! outstanding responses.
+//! `Server` keeps the seed's call-loop shape — `submit`/`flush`/`stats`
+//! from one caller thread — but every batch forms in the engine's
+//! batcher thread and executes on its worker pool. `submit` blocks for
+//! queue space instead of surfacing backpressure (use [`Engine`]
+//! directly for non-blocking submission and multi-producer serving),
+//! and `flush` drains the pipeline and waits for all outstanding
+//! responses.
+//!
+//! Responses are exposed **by value** from the engine's bounded ring:
+//! [`Server::recent`] snapshots the retained tail and
+//! [`Server::drain_responses`] hands out everything completed since the
+//! previous call. The facade keeps no copy of its own (the seed's
+//! borrowed `responses()` contract forced a second full-history clone —
+//! unbounded memory on an indefinitely-running server).
 //!
 //! Functional answers come from the AOT HLO artifacts executed on PJRT
 //! (or the deterministic sim backend, see [`crate::runtime::executor`]);
@@ -20,6 +27,7 @@ use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse, Variant};
 use crate::error::Result;
 use crate::runtime::{ExecutorSpec, Manifest};
+use crate::util::histogram::Summary;
 
 /// Server configuration (a facade over [`EngineConfig`]).
 #[derive(Debug, Clone)]
@@ -34,6 +42,9 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Bounded ingress queue capacity.
     pub queue_capacity: usize,
+    /// Bounded response history retained for `recent`/`drain_responses`
+    /// (aggregate stats always cover everything served).
+    pub history: usize,
 }
 
 impl Default for ServerConfig {
@@ -44,8 +55,27 @@ impl Default for ServerConfig {
             hw: OpimaConfig::paper(),
             workers: 1,
             queue_capacity: 1024,
+            history: 1024,
         }
     }
+}
+
+/// Streaming latency summaries per accounting stage (ms), computed from
+/// the engine's merged per-worker histograms — p50/p90/p99/p99.9 plus
+/// exact mean/min/max for each, covering every response ever served in
+/// fixed memory. Percentiles carry the histogram's bounded relative
+/// error ([`Histogram::MAX_REL_ERROR`](crate::util::histogram::Histogram::MAX_REL_ERROR));
+/// means are exact.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyBreakdown {
+    /// Arrival → completion (`queue + exec`).
+    pub total: Summary,
+    /// Arrival → start of batch execution.
+    pub queue: Summary,
+    /// Whole-batch execution wall time.
+    pub exec: Summary,
+    /// Arrival → batch formation (the dynamic-batcher share of `queue`).
+    pub form: Summary,
 }
 
 /// Aggregate serving statistics.
@@ -65,8 +95,12 @@ pub struct ServerStats {
     pub mean_exec_ms: f64,
     /// Mean wall time from arrival to batch formation (ms).
     pub mean_form_ms: f64,
+    /// Convenience copy of `latency.total.p50`.
     pub p50_total_ms: f64,
+    /// Convenience copy of `latency.total.p99`.
     pub p99_total_ms: f64,
+    /// Full streaming percentile breakdown (total/queue/exec/form).
+    pub latency: LatencyBreakdown,
     pub throughput_rps: f64,
     /// Simulated hardware energy, summed once per executed batch (mJ) —
     /// zero-padded partial batches pay full-batch energy exactly once.
@@ -79,7 +113,8 @@ pub struct ServerStats {
 pub struct Server {
     pub cfg: ServerConfig,
     engine: Engine,
-    responses: Vec<InferenceResponse>,
+    /// Completion-sequence cursor for `drain_responses`.
+    seen: u64,
 }
 
 impl Server {
@@ -103,13 +138,14 @@ impl Server {
                 max_wait: cfg.max_wait,
                 hw: cfg.hw.clone(),
                 executor,
+                history: cfg.history,
             },
             manifest,
         )?;
         Ok(Self {
             cfg,
             engine,
-            responses: Vec::new(),
+            seen: 0,
         })
     }
 
@@ -122,17 +158,26 @@ impl Server {
 
     /// Flush all pending requests and wait until every response is in.
     pub fn flush(&mut self) -> Result<()> {
-        let result = self.engine.drain();
-        // Incremental sync: only the responses that arrived since the
-        // last flush are cloned out of the sink.
-        let new = self.engine.responses_since(self.responses.len());
-        self.responses.extend(new);
-        result
+        self.engine.drain()
     }
 
-    /// Responses up to the last `flush` (in completion order).
-    pub fn responses(&self) -> &[InferenceResponse] {
-        &self.responses
+    /// By-value snapshot of the retained responses (completion order):
+    /// the last [`ServerConfig::history`] at most. Older responses are
+    /// evicted from the engine's bounded ring — aggregate `stats()` are
+    /// unaffected. Independent of the `drain_responses` cursor.
+    pub fn recent(&self) -> Vec<InferenceResponse> {
+        self.engine.responses()
+    }
+
+    /// Take everything completed since the previous `drain_responses`
+    /// call (completion order), by value. Call `flush` first for the
+    /// synchronous submit-flush-collect loop. A caller that falls more
+    /// than the ring capacity behind loses the evicted gap (the cursor
+    /// still advances past it, so later calls resume at the live tail).
+    pub fn drain_responses(&mut self) -> Vec<InferenceResponse> {
+        let (tail, next) = self.engine.responses_since(self.seen);
+        self.seen = next;
+        tail
     }
 
     /// The underlying pipelined engine (non-blocking submission, live
@@ -202,12 +247,43 @@ mod tests {
             s.submit(req(i, elems, Variant::Int4)).unwrap();
         }
         s.flush().unwrap();
-        assert_eq!(s.responses().len(), 2 * bsz);
+        assert_eq!(s.drain_responses().len(), 2 * bsz);
         let stats = s.stats();
         assert_eq!(stats.served, 2 * bsz as u64);
         assert_eq!(stats.batches, 2);
         assert!(stats.sim_energy_mj > 0.0);
         assert!(stats.throughput_rps > 0.0);
+        // The streaming breakdown covers every response with ordered
+        // percentiles.
+        assert_eq!(stats.latency.total.count, 2 * bsz as u64);
+        assert!(stats.latency.total.p50 <= stats.latency.total.p999 + 1e-12);
+    }
+
+    #[test]
+    fn drain_responses_is_incremental_and_recent_is_bounded() {
+        let cfg = ServerConfig {
+            max_wait: Duration::from_secs(5),
+            history: 8,
+            ..Default::default()
+        };
+        let mut s = Server::new_sim(cfg, Manifest::synthetic(8, 12)).unwrap();
+        let elems = s.image_elems();
+        for i in 0..8u64 {
+            s.submit(req(i, elems, Variant::Int4)).unwrap();
+        }
+        s.flush().unwrap();
+        assert_eq!(s.drain_responses().len(), 8);
+        assert_eq!(s.drain_responses().len(), 0, "cursor advanced");
+        for i in 8..16u64 {
+            s.submit(req(i, elems, Variant::Int4)).unwrap();
+        }
+        s.flush().unwrap();
+        let second = s.drain_responses();
+        assert_eq!(second.len(), 8, "only the new batch");
+        assert!(second.iter().all(|r| r.id >= 8));
+        // recent() is capped by the ring, while stats cover all 16.
+        assert_eq!(s.recent().len(), 8);
+        assert_eq!(s.stats().served, 16);
     }
 
     #[test]
@@ -218,9 +294,10 @@ mod tests {
             s.submit(req(i, elems, Variant::Fp32)).unwrap();
         }
         s.flush().unwrap();
-        assert_eq!(s.responses().len(), 3);
+        let rs = s.drain_responses();
+        assert_eq!(rs.len(), 3);
         // All responses carry finite logits and a class in range.
-        for r in s.responses() {
+        for r in &rs {
             assert!(r.logits.iter().all(|v| v.is_finite()));
             assert!(r.predicted < r.logits.len());
         }
@@ -256,7 +333,7 @@ mod tests {
             s.submit(req(i, elems, Variant::Int8)).unwrap();
         }
         s.flush().unwrap();
-        for r in s.responses() {
+        for r in &s.drain_responses() {
             assert!(r.queue_ms >= 0.0 && r.exec_ms >= 0.0 && r.form_ms >= 0.0);
             // The batch formed before it started executing.
             assert!(
@@ -281,7 +358,7 @@ mod tests {
         }
         s.flush().unwrap();
         let mut seen = [0u64; 2];
-        for r in s.responses() {
+        for r in &s.drain_responses() {
             seen[r.instance] += 1;
         }
         assert!(seen[0] > 0 && seen[1] > 0, "both instances used: {seen:?}");

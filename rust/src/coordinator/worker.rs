@@ -3,9 +3,11 @@
 //! Each worker owns its own [`Executor`] (PJRT clients are not shared
 //! across threads; compile caches are warmed at engine startup), pulls
 //! formed batches from the shared batch channel, executes them, maps the
-//! batch onto a simulated OPIMA instance via the shared [`Router`], and
-//! reports per-request responses plus the per-batch simulated cost back
-//! over the results channel.
+//! batch onto a simulated OPIMA instance via the shared [`Router`],
+//! folds the batch's latency samples into its own streaming
+//! [`LatencyShard`] (fixed-memory histograms; `Engine::stats` merges the
+//! shards), and reports per-request responses plus the per-batch
+//! simulated cost back over the results channel.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -13,7 +15,7 @@ use std::time::Instant;
 
 use crate::analyzer::simcost::SimCostTable;
 use crate::coordinator::batcher::Batch;
-use crate::coordinator::engine::lock;
+use crate::coordinator::engine::{lock, LatencyShard};
 use crate::coordinator::request::{InferenceResponse, SimMetering};
 use crate::coordinator::router::Router;
 use crate::runtime::Executor;
@@ -29,6 +31,9 @@ pub(crate) struct WorkerCtx {
     /// Shared serving epoch (finalized by `Engine::new` after warmup, so
     /// the simulated-hardware clock and `wall_ms` share one origin).
     pub epoch: Arc<Mutex<Instant>>,
+    /// This worker's streaming latency histograms. Locked once per batch
+    /// here; contended only by a concurrent `Engine::stats` merge.
+    pub shard: Arc<Mutex<LatencyShard>>,
     pub rx: Arc<Mutex<Receiver<Batch>>>,
     pub tx: Sender<BatchOutcome>,
 }
@@ -126,6 +131,15 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
             instance,
             worker: ctx.id,
         });
+    }
+    // Record latencies into this worker's shard *before* handing the
+    // outcome to the collector: once `drain` observes the completion,
+    // the streaming aggregates already include it.
+    {
+        let mut shard = lock(&ctx.shard);
+        for r in &responses {
+            shard.record(r);
+        }
     }
     BatchOutcome {
         responses,

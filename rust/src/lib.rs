@@ -29,12 +29,20 @@
 //! - [`coordinator`] — the concurrent serving engine: bounded ingress
 //!   queue with backpressure → batcher thread (size- *and* idle-safe
 //!   deadline-triggered flushes) → worker pool (one warmed PJRT executor
-//!   per worker) → shared stats sink, with graceful drain/shutdown; the
+//!   per worker) → bounded stats sink, with graceful drain/shutdown; the
 //!   router maps real batches onto simulated OPIMA instance horizons,
-//!   and a synchronous `Server` facade preserves the seed call-loop API.
+//!   and a synchronous `Server` facade preserves the seed call-loop API
+//!   with a by-value response API. Observability is streaming: per-worker
+//!   log-bucketed latency histograms merged in O(buckets) by `stats()`,
+//!   and a fixed-capacity ring of recent responses — memory stays
+//!   constant over unbounded request streams.
 //! - [`runtime`] — artifact loading/execution: PJRT (`xla` crate,
 //!   feature `pjrt`) or a deterministic sim backend for environments
 //!   without the XLA native library or AOT artifacts.
+//! - [`util`] — dependency-free substrates: JSON/TOML-lite parsing, the
+//!   deterministic PRNG (unbiased bounded sampling), the bench harness,
+//!   and the shared streaming histogram + bounded ring behind both the
+//!   serving stats and the offline analyzer percentiles.
 
 // modules added incrementally below
 pub mod analyzer;

@@ -366,12 +366,17 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
     let s = server.stats();
     println!("served {} requests in {} batches", s.served, s.batches);
     println!(
-        "  wall: {:.1} ms   throughput: {:.0} req/s   p50 {:.2} ms   p99 {:.2} ms",
-        s.wall_ms, s.throughput_rps, s.p50_total_ms, s.p99_total_ms
+        "  wall: {:.1} ms   throughput: {:.0} req/s   p50 {:.2} ms   p99 {:.2} ms   p99.9 {:.2} ms",
+        s.wall_ms, s.throughput_rps, s.p50_total_ms, s.p99_total_ms, s.latency.total.p999
     );
-    println!(
-        "  latency split: mean form {:.3} ms   mean queue {:.3} ms   mean exec {:.3} ms",
-        s.mean_form_ms, s.mean_queue_ms, s.mean_exec_ms
+    print!(
+        "{}",
+        opima::analyzer::report::latency_summary_table(&[
+            ("total", &s.latency.total),
+            ("queue", &s.latency.queue),
+            ("exec", &s.latency.exec),
+            ("form", &s.latency.form),
+        ])
     );
     println!(
         "  simulated OPIMA hardware: {:.2} ms makespan, {:.2} mJ dynamic energy",

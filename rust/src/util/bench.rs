@@ -7,6 +7,8 @@
 use std::hint::black_box as std_black_box;
 use std::time::Instant;
 
+use crate::util::histogram::nearest_rank;
+
 /// Re-exported black box.
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
@@ -65,7 +67,9 @@ pub fn measure<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) 
         name: name.to_string(),
         samples,
         mean_ns: mean,
-        median_ns: times[samples / 2],
+        // Nearest-rank (ceil(p·n) - 1): `times[samples / 2]` overshoots
+        // for even n (at n=2 it reports the max as the median).
+        median_ns: nearest_rank(&times, 0.5),
         std_ns: var.sqrt(),
         min_ns: times[0],
         max_ns: times[samples - 1],

@@ -1,0 +1,338 @@
+//! Log-bucketed streaming histogram (HDR-style): fixed memory, mergeable,
+//! O(buckets) percentile queries.
+//!
+//! Values (latencies in ms) are bucketed log-linearly: each power-of-two
+//! octave is split into `2^SUB_BITS` linear sub-buckets, extracted
+//! directly from the IEEE-754 exponent and top mantissa bits — no `log`
+//! calls on the record path. A bucket's midpoint is reported for
+//! percentiles, so the relative error is bounded by
+//! [`Histogram::MAX_REL_ERROR`] (half a sub-bucket width). `count`,
+//! `sum`, `min` and `max` are tracked exactly alongside the buckets, so
+//! means are not quantized and percentile estimates clamp into the true
+//! observed range (an n=1 histogram reports the exact value).
+//!
+//! Percentiles use the nearest-rank definition `rank = ceil(p·n)` (the
+//! smallest value with at least `p·n` observations at or below it) — the
+//! same oracle [`nearest_rank`] applies to an exact sorted slice. The
+//! seed engine's `totals[n / 2]` read the *max* at n=2; rank `ceil(p·n)`
+//! reads the min there, as p50 should.
+//!
+//! Built for the serving engine's per-worker latency shards (see
+//! `coordinator::engine`): workers `record` into their own shard and the
+//! stats path `merge`s shards into one histogram per latency kind, so
+//! observing the system costs O(buckets), independent of how long the
+//! engine has been serving.
+
+/// Linear sub-buckets per octave = `2^SUB_BITS`.
+const SUB_BITS: u32 = 6;
+const SUBS: usize = 1 << SUB_BITS;
+/// Smallest trackable exponent: values below `2^EXP_MIN` (≈ 1 ns in ms
+/// units), zero, negatives and NaN land in the underflow bucket.
+const EXP_MIN: i32 = -20;
+/// One past the largest trackable exponent: values at or above
+/// `2^EXP_MAX` ms (≈ 17.5 min) clamp into the top bucket.
+const EXP_MAX: i32 = 20;
+const OCTAVES: usize = (EXP_MAX - EXP_MIN) as usize;
+/// Bucket 0 is the underflow bucket; the rest are log-linear.
+const BUCKETS: usize = 1 + OCTAVES * SUBS;
+
+/// Smallest value the log-linear buckets resolve (ms); below this the
+/// underflow bucket absorbs the sample and percentile estimates fall
+/// back to the exact `min`.
+pub const MIN_TRACKABLE_MS: f64 = 9.5367431640625e-7; // 2^-20
+
+/// Streaming latency histogram: fixed `BUCKETS`-sized memory regardless
+/// of how many samples are recorded.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Worst-case relative error of a percentile estimate vs the exact
+    /// nearest-rank value, for samples the log-linear buckets resolve:
+    /// half a sub-bucket width, `2^-(SUB_BITS+1)` (< 0.79%).
+    pub const MAX_REL_ERROR: f64 = 1.0 / (2u64 << SUB_BITS) as f64;
+
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for a value (callers sanitize NaN first). Total:
+    /// negative/tiny values go to the underflow bucket, huge values
+    /// clamp to the top bucket.
+    fn index(v: f64) -> usize {
+        if v < MIN_TRACKABLE_MS {
+            return 0;
+        }
+        if v >= (1u64 << EXP_MAX) as f64 {
+            return BUCKETS - 1;
+        }
+        let bits = v.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        let sub = ((bits >> (52 - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+        1 + (exp - EXP_MIN) as usize * SUBS + sub
+    }
+
+    /// Representative (midpoint) value of a bucket.
+    fn bucket_mid(idx: usize) -> f64 {
+        if idx == 0 {
+            return 0.0;
+        }
+        let i = idx - 1;
+        let scale = f64::powi(2.0, EXP_MIN + (i / SUBS) as i32);
+        let lo = scale * (1.0 + (i % SUBS) as f64 / SUBS as f64);
+        lo + scale / (2 * SUBS) as f64
+    }
+
+    /// Record one sample. O(1), no allocation. NaN counts as 0 (the
+    /// underflow bucket) so min/max stay ordered and `clamp` stays safe.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_nan() { 0.0 } else { v };
+        self.counts[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram into this one. O(buckets).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact streaming mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum recorded value (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank percentile estimate for `p` in (0, 1]: the midpoint
+    /// of the bucket holding the rank-`ceil(p·n)` sample, clamped into
+    /// the exact observed `[min, max]`. Within
+    /// [`Histogram::MAX_REL_ERROR`] of the exact sorted-slice answer; 0
+    /// when empty. O(buckets).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bucket_mid(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Snapshot of the standard summary quantities.
+    pub fn summary(&self) -> Summary {
+        Summary {
+            count: self.count,
+            mean: self.mean(),
+            min: self.min(),
+            max: self.max(),
+            p50: self.percentile(0.50),
+            p90: self.percentile(0.90),
+            p99: self.percentile(0.99),
+            p999: self.percentile(0.999),
+        }
+    }
+}
+
+/// Point-in-time summary of one latency distribution (ms).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Summary {
+    pub count: u64,
+    /// Exact streaming mean.
+    pub mean: f64,
+    /// Exact minimum.
+    pub min: f64,
+    /// Exact maximum.
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    /// p99.9.
+    pub p999: f64,
+}
+
+/// Exact nearest-rank percentile of an ascending-sorted non-empty slice:
+/// `sorted[ceil(p·n) - 1]` with the rank clamped into `[1, n]`. The
+/// oracle the histogram approximates — and the correct form of the
+/// seed's `totals[n / 2]` (which read the max at n=2 for p50).
+pub fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty slice");
+    let n = sorted.len();
+    let rank = ((p * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_all_zero() {
+        let h = Histogram::new();
+        let s = h.summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 0.0);
+        assert_eq!(s.p50, 0.0);
+    }
+
+    #[test]
+    fn single_value_is_exact() {
+        let mut h = Histogram::new();
+        h.record(3.7);
+        let s = h.summary();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.mean, 3.7);
+        // min/max clamping makes every percentile of n=1 exact.
+        assert_eq!(s.p50, 3.7);
+        assert_eq!(s.p999, 3.7);
+    }
+
+    #[test]
+    fn n2_p50_reads_the_lower_sample() {
+        // The off-by-one this subsystem fixes: the seed's `totals[n/2]`
+        // reported the max of two samples as p50.
+        let mut h = Histogram::new();
+        h.record(1.0);
+        h.record(100.0);
+        assert!(h.percentile(0.5) < 1.01, "p50 of {{1, 100}} is 1");
+        assert!(h.percentile(0.99) > 99.0, "p99 of {{1, 100}} is 100");
+    }
+
+    #[test]
+    fn percentiles_within_relative_error_bound() {
+        let mut h = Histogram::new();
+        let vals: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.13).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        for &p in &[0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let exact = nearest_rank(&vals, p);
+            let est = h.percentile(p);
+            assert!(
+                (est - exact).abs() <= exact * Histogram::MAX_REL_ERROR,
+                "p{p}: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_single_histogram() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for i in 0..500 {
+            let v = 0.01 * (i as f64 + 1.0);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        a.merge(&b);
+        let (m, w) = (a.summary(), whole.summary());
+        // Bucket counts, min and max are order-insensitive, so the
+        // percentiles match exactly; the mean's summation order differs
+        // (evens+odds vs interleaved), so it only matches to rounding.
+        assert_eq!(m.count, w.count);
+        assert_eq!(m.min, w.min);
+        assert_eq!(m.max, w.max);
+        assert_eq!(m.p50, w.p50);
+        assert_eq!(m.p90, w.p90);
+        assert_eq!(m.p99, w.p99);
+        assert_eq!(m.p999, w.p999);
+        assert!((m.mean - w.mean).abs() <= w.mean * 1e-12);
+    }
+
+    #[test]
+    fn extreme_values_are_total() {
+        let mut h = Histogram::new();
+        for v in [0.0, -5.0, f64::NAN, 1e-12, 1e9, f64::INFINITY, 2.5] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        // Every sample landed in some bucket; percentiles stay finite
+        // and ordered (max is +inf by exact tracking, p50 is bucketed).
+        assert!(h.percentile(0.5).is_finite());
+    }
+
+    #[test]
+    fn memory_is_fixed() {
+        let mut h = Histogram::new();
+        let before = h.counts.len();
+        for i in 0..100_000 {
+            h.record((i % 977) as f64 * 0.003);
+        }
+        assert_eq!(h.counts.len(), before, "no growth with sample count");
+        assert_eq!(h.count(), 100_000);
+    }
+
+    #[test]
+    fn nearest_rank_oracle() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(nearest_rank(&v, 0.5), 2.0);
+        assert_eq!(nearest_rank(&v, 0.25), 1.0);
+        assert_eq!(nearest_rank(&v, 0.75), 3.0);
+        assert_eq!(nearest_rank(&v, 1.0), 4.0);
+        assert_eq!(nearest_rank(&[1.0, 100.0], 0.5), 1.0, "n=2 p50 is the min");
+        assert_eq!(nearest_rank(&[7.0], 0.999), 7.0);
+    }
+}

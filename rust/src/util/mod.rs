@@ -10,11 +10,19 @@
 //! - [`tomlite`] — a TOML subset parser (flat `[section]` tables with
 //!   scalar values) for experiment configs.
 //! - [`prng`] — SplitMix64/Xoshiro256** deterministic PRNG (workloads,
-//!   property tests).
+//!   property tests) with unbiased Lemire bounded sampling.
 //! - [`bench`] — a criterion-style measurement harness for `cargo bench`
 //!   targets (warmup, N samples, mean/median/stddev reporting).
+//! - [`histogram`] — log-bucketed streaming histogram (HDR-style): fixed
+//!   memory, mergeable shards, O(buckets) nearest-rank percentiles. The
+//!   one percentile implementation shared by the serving engine's
+//!   streaming stats and the offline analyzer.
+//! - [`ring`] — fixed-capacity ring buffer with monotonic sequence
+//!   numbers (the engine's bounded response history).
 
 pub mod bench;
+pub mod histogram;
 pub mod json;
 pub mod prng;
+pub mod ring;
 pub mod tomlite;

@@ -47,16 +47,35 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
-    /// Uniform integer in [lo, hi) — hi exclusive, hi > lo.
-    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
-        assert!(hi > lo);
-        lo + self.next_u64() % (hi - lo)
+    /// Exactly uniform integer in [0, n) via Lemire's multiply-shift
+    /// reduction with rejection. A plain `next_u64() % n` carries modulo
+    /// bias: low residues receive ⌈2^64/n⌉ of the 2^64 equally-likely
+    /// draws while high residues receive only ⌊2^64/n⌋ — a skew that
+    /// load-generator arrival sampling inherits. The rejection loop
+    /// removes the bias and almost never iterates (reject probability
+    /// < n/2^64, exactly 0 for powers of two).
+    pub fn bounded(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let mut m = self.next_u64() as u128 * n as u128;
+        if (m as u64) < n {
+            let t = n.wrapping_neg() % n; // (2^64 - n) mod n
+            while (m as u64) < t {
+                m = self.next_u64() as u128 * n as u128;
+            }
+        }
+        (m >> 64) as u64
     }
 
-    /// Uniform usize in [0, n).
+    /// Uniform integer in [lo, hi) — hi exclusive, hi > lo. Unbiased.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        lo + self.bounded(hi - lo)
+    }
+
+    /// Uniform usize in [0, n). Unbiased.
     pub fn index(&mut self, n: usize) -> usize {
         assert!(n > 0);
-        (self.next_u64() % n as u64) as usize
+        self.bounded(n as u64) as usize
     }
 
     /// Standard normal via Box–Muller.
@@ -130,6 +149,34 @@ mod tests {
         for _ in 0..1000 {
             let v = r.range(10, 20);
             assert!((10..20).contains(&v));
+        }
+    }
+
+    #[test]
+    fn bounded_in_range_and_deterministic() {
+        let mut a = Rng::new(17);
+        let mut b = Rng::new(17);
+        for n in [1u64, 2, 3, 7, 1 << 32, u64::MAX] {
+            for _ in 0..200 {
+                let x = a.bounded(n);
+                assert!(x < n);
+                assert_eq!(x, b.bounded(n));
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_is_unbiased_mod3() {
+        // With `% 3` the residues of 2^64 draws split 1-extra/1-extra/
+        // 0-extra; Lemire+rejection must be exactly uniform. 30k draws,
+        // expected 10k each, σ ≈ 82 → a 500 tolerance is > 6σ.
+        let mut r = Rng::new(23);
+        let mut counts = [0u64; 3];
+        for _ in 0..30_000 {
+            counts[r.bounded(3) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as i64 - 10_000).abs() < 500, "counts {counts:?}");
         }
     }
 

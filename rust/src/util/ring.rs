@@ -1,0 +1,133 @@
+//! Fixed-capacity ring buffer with monotonic sequence numbers.
+//!
+//! Backs the serving engine's bounded response history: the ring retains
+//! only the last `capacity` items, but every item ever pushed gets a
+//! monotonically increasing sequence number (its push index), so tailing
+//! consumers can express "everything since my high-water mark" with
+//! [`Ring::since`] and detect eviction gaps by comparing cursors.
+
+use std::collections::VecDeque;
+
+/// A bounded FIFO: pushing beyond capacity evicts the oldest item.
+#[derive(Debug, Clone)]
+pub struct Ring<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    pushed: u64,
+}
+
+impl<T> Ring<T> {
+    /// Create a ring retaining at most `cap` items (`cap ≥ 1`).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "ring capacity must be at least 1");
+        Self {
+            buf: VecDeque::with_capacity(cap),
+            cap,
+            pushed: 0,
+        }
+    }
+
+    /// Append an item, evicting the oldest when full. O(1) amortized.
+    pub fn push(&mut self, item: T) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(item);
+        self.pushed += 1;
+    }
+
+    /// Items currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Maximum number of retained items.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total items ever pushed — also the sequence number the *next*
+    /// push will get, i.e. the cursor one past the newest retained item.
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Sequence number of the oldest retained item (= `pushed` when
+    /// empty). Items below this have been evicted.
+    pub fn first_seq(&self) -> u64 {
+        self.pushed - self.buf.len() as u64
+    }
+
+    /// Iterate the retained items, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf.iter()
+    }
+}
+
+impl<T: Clone> Ring<T> {
+    /// Clone out all retained items, oldest first.
+    pub fn to_vec(&self) -> Vec<T> {
+        self.buf.iter().cloned().collect()
+    }
+
+    /// Clone out the retained items with sequence number ≥ `seq`, oldest
+    /// first. Items older than `seq` that were already evicted are — by
+    /// design — not reconstructible; a consumer whose cursor fell behind
+    /// `first_seq()` has lost the gap.
+    pub fn since(&self, seq: u64) -> Vec<T> {
+        let skip = seq.saturating_sub(self.first_seq()) as usize;
+        self.buf.iter().skip(skip).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_within_capacity_keeps_all() {
+        let mut r = Ring::new(4);
+        for i in 0..3 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.pushed(), 3);
+        assert_eq!(r.first_seq(), 0);
+        assert_eq!(r.to_vec(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn overflow_evicts_oldest() {
+        let mut r = Ring::new(3);
+        for i in 0..10 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.pushed(), 10);
+        assert_eq!(r.first_seq(), 7);
+        assert_eq!(r.to_vec(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn since_respects_cursor_and_eviction() {
+        let mut r = Ring::new(4);
+        for i in 0..6 {
+            r.push(i);
+        }
+        // Retained: seqs 2..6.
+        assert_eq!(r.since(0), vec![2, 3, 4, 5], "evicted gap is gone");
+        assert_eq!(r.since(3), vec![3, 4, 5]);
+        assert_eq!(r.since(6), Vec::<i32>::new(), "cursor at head: empty");
+        assert_eq!(r.since(99), Vec::<i32>::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_rejected() {
+        let _ = Ring::<u8>::new(0);
+    }
+}

@@ -196,12 +196,13 @@ fn serving_path_end_to_end() {
             .unwrap();
     }
     server.flush().unwrap();
-    assert_eq!(server.responses().len(), 16);
+    let responses = server.drain_responses();
+    assert_eq!(responses.len(), 16);
     // A clean class-0 pattern must classify as class 0 at fp32 — only
     // meaningful on the real PJRT backend (the sim backend serves
     // deterministic pseudo-logits).
     if cfg!(feature = "pjrt") {
-        let correct = server.responses().iter().filter(|r| r.predicted == 0).count();
+        let correct = responses.iter().filter(|r| r.predicted == 0).count();
         assert!(correct >= 15, "{correct}/16 classified as class 0");
     }
 }

@@ -1,0 +1,173 @@
+//! Streaming-stats invariants: histogram percentile accuracy against the
+//! exact sorted-vec oracle, and bounded sink memory under a soak load
+//! that far exceeds the response ring's capacity.
+//!
+//! proptest is unavailable in this offline environment, so the property
+//! test uses the in-repo deterministic PRNG with the seed printed in the
+//! assertion message — the same randomized-invariant methodology as
+//! `rust/tests/properties.rs`.
+
+use std::time::{Duration, Instant};
+
+use opima::coordinator::engine::{Engine, EngineConfig};
+use opima::coordinator::request::{InferenceRequest, Variant};
+use opima::runtime::{ExecutorSpec, Manifest};
+use opima::util::histogram::{nearest_rank, Histogram};
+use opima::util::prng::Rng;
+
+/// PROPERTY: for any sample set, histogram percentiles match the exact
+/// nearest-rank (`ceil(p·n) - 1`) sorted-vec percentile within the
+/// bucketing's relative-error bound, at n ∈ {1, 2, 10, 10_000}; and the
+/// streaming mean/min/max are exact.
+#[test]
+fn prop_histogram_percentiles_match_exact_oracle() {
+    for &n in &[1usize, 2, 10, 10_000] {
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(7700 + seed);
+            // Log-normal-ish samples spanning several orders of
+            // magnitude — the shape of real latency tails.
+            let vals: Vec<f64> = (0..n).map(|_| (rng.normal() * 1.5).exp()).collect();
+            let mut h = Histogram::new();
+            for &v in &vals {
+                h.record(v);
+            }
+            let mut sorted = vals.clone();
+            sorted.sort_by(f64::total_cmp);
+            for &p in &[0.5, 0.9, 0.99, 0.999] {
+                let exact = nearest_rank(&sorted, p);
+                let est = h.percentile(p);
+                assert!(
+                    (est - exact).abs() <= exact * Histogram::MAX_REL_ERROR + 1e-12,
+                    "n={n} seed={seed} p={p}: est {est} vs exact {exact}"
+                );
+            }
+            let mean = vals.iter().sum::<f64>() / n as f64;
+            let s = h.summary();
+            assert_eq!(s.count, n as u64);
+            assert!((s.mean - mean).abs() <= mean * 1e-12, "mean is exact");
+            assert_eq!(s.min, sorted[0], "min is exact");
+            assert_eq!(s.max, sorted[n - 1], "max is exact");
+        }
+    }
+}
+
+/// Regression for the seed's `totals[n / 2]` off-by-one: at n=2 the p50
+/// must track the *lower* sample (nearest-rank ceil(0.5·2) = 1), not
+/// the max.
+#[test]
+fn p50_of_two_samples_is_the_lower_one() {
+    let mut h = Histogram::new();
+    h.record(1.0);
+    h.record(1000.0);
+    assert!(h.percentile(0.5) < 1.01, "p50 {}", h.percentile(0.5));
+    assert_eq!(nearest_rank(&[1.0, 1000.0], 0.5), 1.0);
+}
+
+fn req(id: u64) -> InferenceRequest {
+    let variant = match id % 3 {
+        0 => Variant::Fp32,
+        1 => Variant::Int8,
+        _ => Variant::Int4,
+    };
+    InferenceRequest {
+        id,
+        image: (0..144).map(|i| ((id as usize + i) % 11) as f32 * 0.1).collect(),
+        variant,
+        arrival: Instant::now(),
+    }
+}
+
+/// SOAK: after N ≫ ring-capacity responses the sink retains only
+/// `history` responses, while `stats()` still reports aggregates
+/// (served count, means, percentiles, energy) over *all* N — i.e. sink
+/// memory is O(capacity) and statistics are lossless.
+#[test]
+fn soak_sink_memory_bounded_stats_complete() {
+    const HISTORY: usize = 64;
+    const N: u64 = 2048;
+    let mut e = Engine::new(
+        EngineConfig {
+            workers: 2,
+            queue_capacity: 128,
+            instances: 2,
+            max_wait: Duration::from_millis(1),
+            executor: ExecutorSpec::Sim { work_factor: 1 },
+            history: HISTORY,
+            ..EngineConfig::default()
+        },
+        Manifest::synthetic(8, 12),
+    )
+    .unwrap();
+    for id in 0..N {
+        e.submit_blocking(req(id)).unwrap();
+    }
+    e.drain().unwrap();
+
+    // Retention is exactly the ring capacity — 32× fewer than served.
+    let retained = e.responses();
+    assert_eq!(retained.len(), HISTORY, "sink memory is O(capacity)");
+    let (tail, cursor) = e.responses_since(0);
+    assert_eq!(cursor, N, "every response got a completion sequence");
+    assert_eq!(tail.len(), HISTORY, "only the ring tail is retrievable");
+
+    // Aggregates still cover all N responses.
+    let s = e.stats();
+    assert_eq!(s.served, N);
+    assert_eq!(s.failed, 0);
+    assert_eq!(s.latency.total.count, N);
+    assert_eq!(s.latency.queue.count, N);
+    assert!(s.batches >= N / 8);
+    assert!(s.sim_energy_mj > 0.0);
+    // Percentiles are present, ordered, and inside the observed range.
+    assert!(s.latency.total.p50 > 0.0);
+    assert!(s.latency.total.p50 <= s.latency.total.p90 + 1e-12);
+    assert!(s.latency.total.p90 <= s.latency.total.p99 + 1e-12);
+    assert!(s.latency.total.p99 <= s.latency.total.p999 + 1e-12);
+    assert!(s.latency.total.p999 <= s.latency.total.max + 1e-12);
+    assert!(s.latency.total.min <= s.latency.total.p50 + 1e-12);
+    // Exact means keep the stage accounting identity: form ≤ queue.
+    assert!(s.mean_form_ms <= s.mean_queue_ms + 1e-9);
+    e.shutdown().unwrap();
+}
+
+/// Tailing with `responses_since` sees each retained response exactly
+/// once, and a cursor that fell behind the ring resumes at the live
+/// tail instead of stalling.
+#[test]
+fn responses_since_tails_without_duplicates() {
+    const HISTORY: usize = 16;
+    let mut e = Engine::new(
+        EngineConfig {
+            workers: 1,
+            queue_capacity: 64,
+            instances: 1,
+            max_wait: Duration::from_millis(1),
+            executor: ExecutorSpec::Sim { work_factor: 1 },
+            history: HISTORY,
+            ..EngineConfig::default()
+        },
+        Manifest::synthetic(8, 12),
+    )
+    .unwrap();
+    // First wave fits the ring: the tail consumer sees all of it.
+    for id in 0..16 {
+        e.submit_blocking(req(3 * id + 2)).unwrap(); // all Int4
+    }
+    e.drain().unwrap();
+    let (first, cursor) = e.responses_since(0);
+    assert_eq!(first.len(), 16);
+    assert_eq!(cursor, 16);
+    // Second wave overflows the ring (32 > 16) while the consumer
+    // sleeps: it gets only the retained tail, but the cursor lands on
+    // the live head so the next poll is gap-free.
+    for id in 16..48 {
+        e.submit_blocking(req(3 * id + 2)).unwrap();
+    }
+    e.drain().unwrap();
+    let (second, cursor2) = e.responses_since(cursor);
+    assert_eq!(second.len(), HISTORY, "evicted gap is lost, tail is not");
+    assert_eq!(cursor2, 48);
+    let (third, _) = e.responses_since(cursor2);
+    assert!(third.is_empty(), "caught-up consumer sees nothing new");
+    e.shutdown().unwrap();
+}
