@@ -56,6 +56,7 @@ fn main() {
         for id in 0..8u64 {
             let out = b.push(InferenceRequest {
                 id,
+                model: Model::LeNet,
                 image: vec![rng.f64() as f32; 4],
                 variant: Variant::Int4,
                 arrival: Instant::now(),

@@ -11,6 +11,7 @@
 
 use std::time::{Duration, Instant};
 
+use opima::cnn::Model;
 use opima::coordinator::batcher::DynamicBatcher;
 use opima::coordinator::engine::{Engine, EngineConfig};
 use opima::coordinator::request::{InferenceRequest, Variant};
@@ -37,6 +38,7 @@ fn requests() -> Vec<InferenceRequest> {
             };
             InferenceRequest {
                 id,
+                model: Model::LeNet,
                 image: (0..IMAGE * IMAGE).map(|_| rng.f64() as f32).collect(),
                 variant,
                 arrival: Instant::now(),
@@ -59,7 +61,8 @@ fn sync_seed_path(manifest: &Manifest) -> f64 {
             input[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
         }
         let n = batch.requests.len();
-        ex.run_f32(&batch.variant.artifact(BATCH), &[&input]).unwrap();
+        ex.run_f32(&batch.variant.artifact_for(batch.model, BATCH), &[&input])
+            .unwrap();
         n
     };
     let t0 = Instant::now();

@@ -27,6 +27,11 @@ cargo bench --no-run
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+# Docs are part of the contract: broken intra-doc links (e.g. dangling
+# references from the lib/module docs) fail the build here.
+echo "== RUSTDOCFLAGS=-Dwarnings cargo doc --no-deps =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

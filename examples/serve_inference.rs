@@ -12,13 +12,21 @@
 //! exercises the identical pipeline but serves pseudo-logits — so
 //! accuracy thresholds are only asserted on the real path.
 //!
+//! With `--mix lenet:4,vgg16:1` the producers drive a weighted random
+//! *multi-model* load instead: every request names a model, the batcher
+//! keeps per-(model, variant) queues, and the engine's plan registry
+//! compiles each pair exactly once on first use. Accuracy is only
+//! checked for the LeNet share (the synthetic dataset is LeNet's).
+//!
 //! Run: make artifacts && cargo run --release --features pjrt --example serve_inference
 //!  or: cargo run --release --example serve_inference   (sim fallback)
+//!  or: cargo run --release --example serve_inference -- --mix lenet:4,vgg16:1
 
 use std::time::{Duration, Instant};
 
+use opima::cnn::Model;
 use opima::coordinator::engine::{Engine, EngineConfig};
-use opima::coordinator::{InferenceRequest, Variant};
+use opima::coordinator::{parse_mix, pick_weighted, InferenceRequest, Variant};
 use opima::runtime::{ExecutorSpec, Manifest};
 use opima::util::prng::Rng;
 
@@ -45,6 +53,131 @@ fn make_image(rng: &mut Rng, size: usize) -> (Vec<f32>, usize) {
     (img, cls)
 }
 
+/// The `--mix` spec from the process args, if given (the grammar lives
+/// in `opima::coordinator::parse_mix`, shared with the CLI).
+fn mix_arg() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == "--mix").map(|i| {
+        args.get(i + 1)
+            .expect("--mix needs a value like lenet:4,vgg16:1")
+            .clone()
+    })
+}
+
+/// The multi-model load: producers submit a weighted random model mix,
+/// the engine batches per (model, variant) and compiles each pair's
+/// plan exactly once.
+fn run_mix(
+    manifest: Manifest,
+    spec: ExecutorSpec,
+    functional: bool,
+    mix: Vec<(Model, u64)>,
+) -> opima::Result<()> {
+    let producers = 4usize;
+    let per_producer = 64usize;
+    let n_requests = producers * per_producer;
+    let variant = Variant::Int4;
+    let engine = Engine::new(
+        EngineConfig {
+            workers: 2,
+            queue_capacity: 64,
+            instances: 2,
+            max_wait: Duration::from_millis(2),
+            executor: spec,
+            history: n_requests,
+            ..EngineConfig::default()
+        },
+        manifest,
+    )?;
+
+    // Producers: weighted random model per request; LeNet requests use
+    // the labeled synthetic dataset, other models random images.
+    let label_chunks: Vec<Vec<Option<usize>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let eng = &engine;
+                let mix = &mix;
+                s.spawn(move || {
+                    let mut rng = Rng::new(20260731 + p as u64);
+                    let mut labels = Vec::with_capacity(per_producer);
+                    for i in 0..per_producer {
+                        let model = pick_weighted(&mut rng, mix);
+                        let elems = eng.image_elems_for(model);
+                        let (image, label) = if model == Model::LeNet {
+                            let (img, l) = make_image(&mut rng, (elems as f64).sqrt() as usize);
+                            (img, Some(l))
+                        } else {
+                            ((0..elems).map(|_| rng.f64() as f32).collect(), None)
+                        };
+                        labels.push(label);
+                        eng.submit_blocking(InferenceRequest {
+                            id: (p * per_producer + i) as u64,
+                            model,
+                            image,
+                            variant,
+                            arrival: Instant::now(),
+                        })
+                        .expect("submit");
+                    }
+                    labels
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut engine = engine;
+    engine.drain()?;
+
+    // LeNet-share accuracy (the only labeled traffic).
+    let (mut lenet_total, mut lenet_correct) = (0usize, 0usize);
+    for r in &engine.responses() {
+        let (p, i) = (r.id as usize / per_producer, r.id as usize % per_producer);
+        if let Some(label) = label_chunks[p][i] {
+            lenet_total += 1;
+            if r.predicted == label {
+                lenet_correct += 1;
+            }
+        }
+    }
+    let s = engine.stats();
+    let mix_desc: Vec<String> = mix.iter().map(|(m, w)| format!("{}:{w}", m.name())).collect();
+    println!("\n=== mixed workload ({}) ===", mix_desc.join(","));
+    println!(
+        "served {} requests in {} batches; {} (model, variant) plan(s), each compiled once",
+        s.served,
+        s.batches,
+        engine.registry().builds()
+    );
+    println!(
+        "  wall {:.0} ms  throughput {:.0} req/s  p50 {:.2} ms  p99 {:.2} ms",
+        s.wall_ms, s.throughput_rps, s.latency.total.p50, s.latency.total.p99
+    );
+    println!("  per-model: model served batches p50ms p99ms energy_mJ makespan_ms");
+    for m in &s.per_model {
+        println!(
+            "    {:<12} {:>5} {:>6} {:>8.2} {:>8.2} {:>10.2} {:>10.2}",
+            m.model.name(),
+            m.served,
+            m.batches,
+            m.latency.total.p50,
+            m.latency.total.p99,
+            m.sim_energy_mj,
+            m.sim_makespan_ms
+        );
+    }
+    assert_eq!(s.served as usize, n_requests, "every request answered");
+    let served_sum: u64 = s.per_model.iter().map(|m| m.served).sum();
+    assert_eq!(served_sum, s.served, "per-model counts sum to the total");
+    if functional && lenet_total > 0 {
+        let acc = lenet_correct as f64 / lenet_total as f64;
+        println!("  lenet accuracy: {:.1}% over {lenet_total}", 100.0 * acc);
+        assert!(acc >= 0.65, "lenet int4 accuracy {acc} below threshold");
+    }
+    engine.shutdown()?;
+    println!("\nserve_inference OK — mixed workload served");
+    Ok(())
+}
+
 fn main() -> opima::Result<()> {
     let (manifest, spec, functional) = match Manifest::load(&Manifest::default_dir()) {
         Ok(m) if cfg!(feature = "pjrt") => (m, ExecutorSpec::Native, true),
@@ -61,6 +194,9 @@ fn main() -> opima::Result<()> {
             )
         }
     };
+    if let Some(mix_spec) = mix_arg() {
+        return run_mix(manifest, spec, functional, parse_mix(&mix_spec)?);
+    }
     let image_size = manifest.image_size;
     let producers = 4usize;
     let per_producer = 128usize;
@@ -112,6 +248,7 @@ fn main() -> opima::Result<()> {
                             }
                             eng.submit_blocking(InferenceRequest {
                                 id: (p * per_producer + i) as u64,
+                                model: Model::LeNet,
                                 image,
                                 variant,
                                 arrival: Instant::now(),

@@ -3,7 +3,7 @@
 use crate::cnn::graph::Network;
 use crate::config::OpimaConfig;
 use crate::error::Result;
-use crate::mapper::plan::map_network;
+use crate::mapper::plan::{map_network, MappedNetwork};
 use crate::pim::scheduler::{LayerCost, PimScheduler};
 
 /// Full analysis of one (model, bit-width) pair on OPIMA.
@@ -34,20 +34,32 @@ impl ModelAnalysis {
 
 /// Analyze a network at the given operand width on OPIMA.
 pub fn analyze_model(cfg: &OpimaConfig, net: &Network, bits: u32) -> Result<ModelAnalysis> {
-    let mapped = map_network(cfg, net, bits)?;
+    analyze_mapped(cfg, &map_network(cfg, net, bits)?, bits)
+}
+
+/// Price an already-mapped network. For callers that need both the
+/// mapper plan and its cost (the serving plan registry), so the mapping
+/// pass runs once, not once per consumer. The MAC total comes from the
+/// plan's work items — identical to `Network::macs()` by the mapper's
+/// conservation invariant.
+pub fn analyze_mapped(
+    cfg: &OpimaConfig,
+    mapped: &MappedNetwork,
+    bits: u32,
+) -> Result<ModelAnalysis> {
     let sched = PimScheduler::new(cfg)?;
     let layer_costs = sched.cost_network(&mapped.works)?;
     let processing_ms = layer_costs.iter().map(|c| c.processing_ns).sum::<f64>() / 1e6;
     let writeback_ms = layer_costs.iter().map(|c| c.writeback_ns).sum::<f64>() / 1e6;
     let dynamic_mj = layer_costs.iter().map(|c| c.dynamic_pj()).sum::<f64>() / 1e9;
     Ok(ModelAnalysis {
-        name: mapped.name,
+        name: mapped.name.clone(),
         bits,
         layer_costs,
         processing_ms,
         writeback_ms,
         dynamic_mj,
-        macs: net.macs(),
+        macs: mapped.works.iter().map(|w| w.macs).sum(),
     })
 }
 

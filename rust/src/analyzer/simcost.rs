@@ -7,7 +7,7 @@
 //! size) and shares it read-only across all worker threads behind an
 //! `Arc` — no locking, no per-request analyzer work.
 
-use crate::analyzer::latency::analyze_model;
+use crate::analyzer::latency::{analyze_model, ModelAnalysis};
 use crate::cnn::graph::Network;
 use crate::config::OpimaConfig;
 use crate::error::Result;
@@ -52,6 +52,21 @@ impl SimCostTable {
             });
         }
         Ok(Self { batch, entries })
+    }
+
+    /// Single-entry table from an existing analysis, scaled to `batch`
+    /// inferences per served batch — the serving registry's path, which
+    /// analyzes each `(model, width)` pair exactly once and reuses the
+    /// same pass for both the mapper plan and this cost table.
+    pub fn from_analysis(analysis: &ModelAnalysis, batch: usize) -> Self {
+        Self {
+            batch,
+            entries: vec![SimCost {
+                bits: analysis.bits,
+                latency_ms: analysis.total_ms() * batch as f64,
+                energy_mj: analysis.dynamic_mj * batch as f64,
+            }],
+        }
     }
 
     /// Batch size the costs are scaled to.
@@ -109,6 +124,18 @@ mod tests {
         assert!(l4 < l8, "TDM: 8-bit costs more time ({l4} vs {l8})");
         assert!(e4 < e8);
         assert!(l4 > 0.0 && e4 > 0.0);
+    }
+
+    #[test]
+    fn from_analysis_matches_build() {
+        let cfg = OpimaConfig::paper();
+        let net = small_net();
+        let mapped = crate::mapper::plan::map_network(&cfg, &net, 4).unwrap();
+        let a = crate::analyzer::latency::analyze_mapped(&cfg, &mapped, 4).unwrap();
+        let single = SimCostTable::from_analysis(&a, 8);
+        let full = SimCostTable::build(&cfg, &net, 8, &[4]).unwrap();
+        assert_eq!(single.get(4), full.get(4));
+        assert_eq!(single.batch(), 8);
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //!   per-layer workload stream the mapper consumes.
 //! - [`models`] — ResNet18, InceptionV2(-S), MobileNet, SqueezeNet and
 //!   VGG16 as evaluated in the paper, with parameter counts checked
-//!   against Table II.
+//!   against Table II, plus the tiny served LeNet and the static
+//!   input/classifier metadata the multi-model coordinator validates
+//!   requests against.
 //! - [`quant`] — model bit-width variants (fp32/int8/int4) and the
 //!   accuracy table loaded from the Python training artifact.
 
@@ -18,4 +20,4 @@ pub mod quant;
 
 pub use graph::{Network, NetworkBuilder};
 pub use layer::{Layer, LayerInstance, TensorShape};
-pub use models::{build_model, Model, ALL_MODELS};
+pub use models::{build_model, Model, ALL_MODELS, SERVABLE_MODELS};

@@ -1,4 +1,4 @@
-//! The paper's evaluation model zoo (Table II).
+//! The paper's evaluation model zoo (Table II) plus the serving demo CNN.
 //!
 //! Five CNNs, each built for the dataset the paper pairs it with. The
 //! definitions follow the standard architectures; parameter counts are
@@ -6,14 +6,23 @@
 //! recorded in EXPERIMENTS.md §Table II). Where the paper's count
 //! evidently corresponds to the 1000-class ImageNet head (MobileNet,
 //! SqueezeNet), we keep that head and note it.
+//!
+//! A sixth [`Model::LeNet`] variant names the tiny LeNet-style CNN the
+//! serving path has always executed (python/compile/model.py's ARCH —
+//! the only model with real AOT HLO artifacts). It is *not* a Table II
+//! row: [`ALL_MODELS`] still enumerates exactly the paper's five, while
+//! [`SERVABLE_MODELS`] adds LeNet for the multi-model coordinator.
 
 use crate::cnn::graph::{Network, NetworkBuilder};
 use crate::cnn::layer::TensorShape;
 use crate::error::Result;
 
-/// The evaluated models (Table II rows).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// The evaluated models (Table II rows) plus the serving demo CNN.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Model {
+    /// The tiny served CNN (python/compile/model.py); not in Table II.
+    #[default]
+    LeNet,
     ResNet18,
     InceptionV2,
     MobileNet,
@@ -21,8 +30,19 @@ pub enum Model {
     Vgg16,
 }
 
-/// All Table II rows in paper order.
+/// All Table II rows in paper order (LeNet is serving-only).
 pub const ALL_MODELS: [Model; 5] = [
+    Model::ResNet18,
+    Model::InceptionV2,
+    Model::MobileNet,
+    Model::SqueezeNet,
+    Model::Vgg16,
+];
+
+/// Every model the multi-model coordinator can serve: the demo LeNet
+/// plus the five Table II CNNs.
+pub const SERVABLE_MODELS: [Model; 6] = [
+    Model::LeNet,
     Model::ResNet18,
     Model::InceptionV2,
     Model::MobileNet,
@@ -33,6 +53,7 @@ pub const ALL_MODELS: [Model; 5] = [
 impl Model {
     pub fn name(&self) -> &'static str {
         match self {
+            Model::LeNet => "lenet",
             Model::ResNet18 => "resnet18",
             Model::InceptionV2 => "inceptionv2",
             Model::MobileNet => "mobilenet",
@@ -41,9 +62,11 @@ impl Model {
         }
     }
 
-    /// Dataset pairing from Table II.
+    /// Dataset pairing from Table II (LeNet serves the synthetic
+    /// 4-pattern dataset of python/compile/data.py).
     pub fn dataset(&self) -> &'static str {
         match self {
+            Model::LeNet => "synthetic-4",
             Model::ResNet18 => "CIFAR100",
             Model::InceptionV2 => "SVHN",
             Model::MobileNet => "CIFAR10",
@@ -52,9 +75,12 @@ impl Model {
         }
     }
 
-    /// Parameter count reported in Table II.
+    /// Parameter count reported in Table II. LeNet is not a Table II
+    /// row; its entry is the exact count of the built network (asserted
+    /// by `lenet_metadata_matches_built_network`).
     pub fn paper_params(&self) -> u64 {
         match self {
+            Model::LeNet => 1_828,
             Model::ResNet18 => 11_584_865,
             Model::InceptionV2 => 2_661_960,
             Model::MobileNet => 4_209_088,
@@ -63,9 +89,11 @@ impl Model {
         }
     }
 
-    /// Table II accuracies: (fp32, int8, int4) in percent.
+    /// Table II accuracies: (fp32, int8, int4) in percent. LeNet has no
+    /// Table II row and reports zeros.
     pub fn paper_accuracy(&self) -> (f64, f64, f64) {
         match self {
+            Model::LeNet => (0.0, 0.0, 0.0),
             Model::ResNet18 => (75.3, 74.2, 72.6),
             Model::InceptionV2 => (81.5, 80.8, 75.9),
             Model::MobileNet => (88.2, 87.5, 83.5),
@@ -74,20 +102,67 @@ impl Model {
         }
     }
 
+    /// Input spatial size (square side) of the model's serving tensor.
+    pub fn input_size(&self) -> usize {
+        match self {
+            Model::LeNet => 12,
+            Model::ResNet18 | Model::InceptionV2 | Model::MobileNet => 32,
+            Model::SqueezeNet => 96,
+            Model::Vgg16 => 224,
+        }
+    }
+
+    /// Input channel count of the model's serving tensor.
+    pub fn input_channels(&self) -> usize {
+        match self {
+            Model::LeNet => 1,
+            _ => 3,
+        }
+    }
+
+    /// Classifier width (logits per inference).
+    pub fn classes(&self) -> usize {
+        match self {
+            Model::LeNet => 4,
+            Model::ResNet18 => 100,
+            Model::InceptionV2 | Model::Vgg16 => 10,
+            Model::MobileNet | Model::SqueezeNet => 1000,
+        }
+    }
+
+    /// Flattened per-image element count (`size² × channels`, NHWC) a
+    /// serving request for this model must carry.
+    pub fn input_elems(&self) -> usize {
+        self.input_size() * self.input_size() * self.input_channels()
+    }
+
     pub fn from_name(name: &str) -> Option<Model> {
-        ALL_MODELS.iter().copied().find(|m| m.name() == name)
+        SERVABLE_MODELS.iter().copied().find(|m| m.name() == name)
     }
 }
 
 /// Build a model's network graph.
 pub fn build_model(model: Model) -> Result<Network> {
     match model {
+        Model::LeNet => lenet(4),
         Model::ResNet18 => resnet18(100),
         Model::InceptionV2 => inception_v2s(10),
         Model::MobileNet => mobilenet(1000),
         Model::SqueezeNet => squeezenet(1000),
         Model::Vgg16 => vgg16(10),
     }
+}
+
+/// The tiny LeNet-style served CNN — must match python/compile/model.py's
+/// ARCH (the architecture behind the `cnn_*` AOT HLO artifacts).
+pub fn lenet(classes: usize) -> Result<Network> {
+    let mut b = NetworkBuilder::new("lenet", TensorShape::new(12, 12, 1));
+    b.conv(3, 3, 8, 1, 1)?
+        .pool(2, 2)?
+        .conv(3, 3, 16, 1, 1)?
+        .pool(2, 2)?
+        .fc(classes)?;
+    Ok(b.build())
 }
 
 /// CIFAR-style ResNet-18: 3×3 stem, four stages of two basic blocks.
@@ -291,9 +366,32 @@ mod tests {
 
     #[test]
     fn model_name_roundtrip() {
-        for m in ALL_MODELS {
+        for m in SERVABLE_MODELS {
             assert_eq!(Model::from_name(m.name()), Some(m));
         }
         assert_eq!(Model::from_name("nope"), None);
+    }
+
+    #[test]
+    fn serving_metadata_matches_built_networks() {
+        // The coordinator validates request images and synthesizes
+        // executor programs from this static metadata — it must agree
+        // exactly with the graphs the analyzer maps.
+        for m in SERVABLE_MODELS {
+            let net = build_model(m).unwrap();
+            assert_eq!(net.input.elems() as usize, m.input_elems(), "{}", m.name());
+            assert_eq!(net.output.elems() as usize, m.classes(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn lenet_metadata_matches_built_network() {
+        let net = build_model(Model::LeNet).unwrap();
+        assert_eq!(net.params(), Model::LeNet.paper_params());
+        assert_eq!(Model::LeNet.input_elems(), 144);
+        assert_eq!(Model::LeNet.classes(), 4);
+        // LeNet is serving-only: not a Table II row.
+        assert!(!ALL_MODELS.contains(&Model::LeNet));
+        assert!(SERVABLE_MODELS.contains(&Model::LeNet));
     }
 }

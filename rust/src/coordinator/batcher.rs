@@ -1,26 +1,43 @@
-//! Dynamic batching: group same-variant requests up to the artifact
-//! batch size, flushing on size or deadline (vLLM-router-style policy,
-//! specialized to fixed-shape AOT artifacts).
+//! Dynamic batching: group same-`(model, variant)` requests up to the
+//! artifact batch size, flushing on size or deadline (vLLM-router-style
+//! policy, specialized to fixed-shape AOT artifacts).
+//!
+//! Batches are never formed across models or variants — a batch executes
+//! one artifact, and an artifact is one `(model, variant)` pair. Queues
+//! are created on demand as new pairs arrive (at most
+//! `SERVABLE_MODELS × 3` of them) and deadline/drain flushes walk the
+//! queues round-robin starting at a rotating cursor, so under sustained
+//! multi-model load every model periodically gets the head-of-line slot
+//! instead of the first-registered model always flushing first.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::cnn::models::Model;
 use crate::coordinator::request::{InferenceRequest, Variant};
 
-/// A flushed batch (all one variant, ≤ `max_batch` requests).
+/// A flushed batch (one `(model, variant)`, ≤ `max_batch` requests).
 #[derive(Debug)]
 pub struct Batch {
+    pub model: Model,
     pub variant: Variant,
     pub requests: Vec<InferenceRequest>,
     pub formed_at: Instant,
+    /// Formation sequence number (0, 1, 2, … per batcher).
+    pub seq: u64,
 }
 
-/// Size/deadline-triggered batcher with per-variant queues.
+/// Size/deadline-triggered batcher with per-`(model, variant)` queues.
 #[derive(Debug)]
 pub struct DynamicBatcher {
     max_batch: usize,
     max_wait: Duration,
-    queues: Vec<(Variant, VecDeque<InferenceRequest>)>,
+    /// Insertion-ordered queues, one per `(model, variant)` seen so far.
+    queues: Vec<((Model, Variant), VecDeque<InferenceRequest>)>,
+    /// Round-robin cursor: where the next deadline/drain sweep starts.
+    rr: usize,
+    /// Batches formed so far (the next batch's sequence number).
+    formed: u64,
 }
 
 impl DynamicBatcher {
@@ -29,11 +46,9 @@ impl DynamicBatcher {
         Self {
             max_batch,
             max_wait,
-            queues: vec![
-                (Variant::Fp32, VecDeque::new()),
-                (Variant::Int8, VecDeque::new()),
-                (Variant::Int4, VecDeque::new()),
-            ],
+            queues: Vec::new(),
+            rr: 0,
+            formed: 0,
         }
     }
 
@@ -43,38 +58,38 @@ impl DynamicBatcher {
 
     /// Enqueue a request; returns a batch if the size trigger fired.
     pub fn push(&mut self, req: InferenceRequest) -> Option<Batch> {
-        let variant = req.variant;
-        let q = self.queue_mut(variant);
+        let key = (req.model, req.variant);
+        let q = self.queue_mut(key);
         q.push_back(req);
         if q.len() >= self.max_batch {
-            return self.take(variant);
+            return self.take(key);
         }
         None
     }
 
-    /// Flush any queue whose oldest request has exceeded the deadline.
+    /// Flush every queue whose oldest request has exceeded the deadline,
+    /// sweeping round-robin from the rotating cursor.
     pub fn poll(&mut self, now: Instant) -> Vec<Batch> {
-        let expired: Vec<Variant> = self
-            .queues
-            .iter()
-            .filter(|(_, q)| {
-                q.front()
+        let expired: Vec<(Model, Variant)> = self
+            .rotation()
+            .filter(|key| {
+                self.queue(*key)
+                    .and_then(VecDeque::front)
                     .is_some_and(|r| now.duration_since(r.arrival) >= self.max_wait)
             })
-            .map(|(v, _)| *v)
             .collect();
-        expired.into_iter().filter_map(|v| self.take(v)).collect()
+        self.advance_rr(!expired.is_empty());
+        expired.into_iter().filter_map(|k| self.take(k)).collect()
     }
 
-    /// Drain everything (shutdown path).
+    /// Drain everything (shutdown path), in round-robin order.
     pub fn drain(&mut self) -> Vec<Batch> {
-        let variants: Vec<Variant> = self
-            .queues
-            .iter()
-            .filter(|(_, q)| !q.is_empty())
-            .map(|(v, _)| *v)
+        let keys: Vec<(Model, Variant)> = self
+            .rotation()
+            .filter(|key| self.queue(*key).is_some_and(|q| !q.is_empty()))
             .collect();
-        variants.into_iter().filter_map(|v| self.take(v)).collect()
+        self.advance_rr(!keys.is_empty());
+        keys.into_iter().filter_map(|k| self.take(k)).collect()
     }
 
     /// Outstanding (unbatched) requests.
@@ -92,27 +107,47 @@ impl DynamicBatcher {
             .min()
     }
 
-    fn queue_mut(&mut self, v: Variant) -> &mut VecDeque<InferenceRequest> {
-        &mut self
-            .queues
-            .iter_mut()
-            .find(|(qv, _)| *qv == v)
-            .expect("all variants present")
-            .1
+    /// Queue keys starting at the round-robin cursor.
+    fn rotation(&self) -> impl Iterator<Item = (Model, Variant)> + '_ {
+        let n = self.queues.len();
+        let start = if n == 0 { 0 } else { self.rr % n };
+        (0..n).map(move |i| self.queues[(start + i) % n].0)
     }
 
-    fn take(&mut self, v: Variant) -> Option<Batch> {
+    fn advance_rr(&mut self, flushed: bool) {
+        if flushed && !self.queues.is_empty() {
+            self.rr = (self.rr + 1) % self.queues.len();
+        }
+    }
+
+    fn queue(&self, key: (Model, Variant)) -> Option<&VecDeque<InferenceRequest>> {
+        self.queues.iter().find(|(k, _)| *k == key).map(|(_, q)| q)
+    }
+
+    fn queue_mut(&mut self, key: (Model, Variant)) -> &mut VecDeque<InferenceRequest> {
+        if let Some(i) = self.queues.iter().position(|(k, _)| *k == key) {
+            return &mut self.queues[i].1;
+        }
+        self.queues.push((key, VecDeque::new()));
+        &mut self.queues.last_mut().expect("just pushed").1
+    }
+
+    fn take(&mut self, key: (Model, Variant)) -> Option<Batch> {
         let max = self.max_batch;
-        let q = self.queue_mut(v);
+        let q = self.queue_mut(key);
         if q.is_empty() {
             return None;
         }
         let n = q.len().min(max);
         let requests: Vec<InferenceRequest> = q.drain(..n).collect();
+        let seq = self.formed;
+        self.formed += 1;
         Some(Batch {
-            variant: v,
+            model: key.0,
+            variant: key.1,
             requests,
             formed_at: Instant::now(),
+            seq,
         })
     }
 }
@@ -122,8 +157,13 @@ mod tests {
     use super::*;
 
     fn req(id: u64, v: Variant) -> InferenceRequest {
+        req_for(id, Model::LeNet, v)
+    }
+
+    fn req_for(id: u64, m: Model, v: Variant) -> InferenceRequest {
         InferenceRequest {
             id,
+            model: m,
             image: vec![0.0; 4],
             variant: v,
             arrival: Instant::now(),
@@ -138,6 +178,8 @@ mod tests {
         let batch = b.push(req(2, Variant::Int4)).unwrap();
         assert_eq!(batch.requests.len(), 3);
         assert_eq!(batch.variant, Variant::Int4);
+        assert_eq!(batch.model, Model::LeNet);
+        assert_eq!(batch.seq, 0);
         assert_eq!(b.pending(), 0);
     }
 
@@ -152,6 +194,26 @@ mod tests {
     }
 
     #[test]
+    fn models_do_not_mix() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        assert!(b.push(req_for(0, Model::LeNet, Variant::Int4)).is_none());
+        assert!(b.push(req_for(1, Model::Vgg16, Variant::Int4)).is_none());
+        assert_eq!(b.pending(), 2, "same variant, different model: no mix");
+        let batch = b.push(req_for(2, Model::Vgg16, Variant::Int4)).unwrap();
+        assert_eq!(batch.model, Model::Vgg16);
+        assert!(batch.requests.iter().all(|r| r.model == Model::Vgg16));
+        assert_eq!(b.pending(), 1, "the LeNet request is still queued");
+    }
+
+    #[test]
+    fn batch_seq_is_monotonic() {
+        let mut b = DynamicBatcher::new(1, Duration::from_secs(10));
+        let s0 = b.push(req_for(0, Model::LeNet, Variant::Int4)).unwrap().seq;
+        let s1 = b.push(req_for(1, Model::Vgg16, Variant::Int8)).unwrap().seq;
+        assert_eq!((s0, s1), (0, 1));
+    }
+
+    #[test]
     fn deadline_trigger() {
         let mut b = DynamicBatcher::new(100, Duration::from_millis(0));
         b.push(req(0, Variant::Fp32));
@@ -161,18 +223,38 @@ mod tests {
     }
 
     #[test]
+    fn deadline_flush_rotates_across_models() {
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(0));
+        b.push(req_for(0, Model::LeNet, Variant::Int4));
+        b.push(req_for(1, Model::Vgg16, Variant::Int4));
+        let later = Instant::now() + Duration::from_millis(1);
+        let first = b.poll(later);
+        assert_eq!(first.len(), 2);
+        assert_eq!(first[0].model, Model::LeNet, "cursor starts at 0");
+        // Refill both; the cursor has advanced, so the other model now
+        // gets the head-of-line slot.
+        b.push(req_for(2, Model::LeNet, Variant::Int4));
+        b.push(req_for(3, Model::Vgg16, Variant::Int4));
+        let second = b.poll(later + Duration::from_millis(1));
+        assert_eq!(second.len(), 2);
+        assert_eq!(second[0].model, Model::Vgg16, "round-robin fairness");
+    }
+
+    #[test]
     fn next_deadline_tracks_oldest_request() {
         let mut b = DynamicBatcher::new(100, Duration::from_millis(10));
         assert!(b.next_deadline().is_none());
         let t0 = Instant::now();
         b.push(InferenceRequest {
             id: 0,
+            model: Model::LeNet,
             image: vec![],
             variant: Variant::Int8,
             arrival: t0,
         });
         b.push(InferenceRequest {
             id: 1,
+            model: Model::LeNet,
             image: vec![],
             variant: Variant::Fp32,
             arrival: t0 + Duration::from_millis(5),
@@ -195,8 +277,9 @@ mod tests {
         let mut b = DynamicBatcher::new(100, Duration::from_secs(60));
         b.push(req(0, Variant::Fp32));
         b.push(req(1, Variant::Int4));
+        b.push(req_for(2, Model::MobileNet, Variant::Int4));
         let batches = b.drain();
-        assert_eq!(batches.len(), 2);
+        assert_eq!(batches.len(), 3);
         assert_eq!(b.pending(), 0);
     }
 }

@@ -4,7 +4,10 @@
 //! The seed coordinator was synchronous — `submit` executed batches
 //! inline on the caller's thread and deadline flushes only fired when the
 //! *next* request happened to arrive. This engine makes the serving path
-//! genuinely concurrent:
+//! genuinely concurrent — and, since the registry refactor, genuinely
+//! multi-model: one engine serves every
+//! [`SERVABLE_MODELS`](crate::cnn::models::SERVABLE_MODELS) entry from
+//! shared capacity instead of one process per model.
 //!
 //! - **Ingress**: a bounded queue. [`Engine::submit`] is non-blocking and
 //!   returns [`Error::Backpressure`] when the queue is full;
@@ -14,32 +17,39 @@
 //!   fills, the batcher blocks handing off its next batch and stops
 //!   pulling ingress, and the ingress queue fills up to `queue_capacity`.
 //! - **Batcher thread**: owns the [`DynamicBatcher`] and is the only
-//!   place batches form. It flushes on size *or* deadline via a timer
-//!   tick sized by [`DynamicBatcher::next_deadline`], so an idle queue
-//!   still flushes on time (the seed's structural bug).
+//!   place batches form. Batches are strictly per-`(model, variant)` —
+//!   never mixed — with round-robin fairness across the pending queues,
+//!   and flush on size *or* deadline via a timer tick sized by
+//!   [`DynamicBatcher::next_deadline`], so an idle queue still flushes
+//!   on time (the seed's structural bug).
 //! - **Worker pool**: `workers` threads, each owning its own PJRT
-//!   [`Executor`] with the serving artifacts pre-compiled at startup.
-//!   Workers pull formed batches from a shared channel, execute them, and
-//!   map each real batch onto the least-loaded *simulated* OPIMA instance
-//!   via the shared [`Router`] (the dispatch policy).
+//!   [`Executor`] (the on-disk LeNet serving artifacts are pre-compiled
+//!   at startup; other models compile on first batch). Workers pull
+//!   formed batches from a shared channel, resolve each batch through
+//!   the shared [`PlanRegistry`] — the lazily-built, `Arc`-shared cache
+//!   of per-`(model, variant)` mapper plans, sim-cost tables and
+//!   executor programs, built exactly once under a per-key lock — and
+//!   map each real batch onto the least-loaded *simulated* OPIMA
+//!   instance via the shared [`Router`] (reservations tagged by model).
 //! - **Streaming stats**: each worker folds its batches' latencies into
-//!   its own [`LatencyShard`] of log-bucketed histograms
+//!   its own per-model shard of log-bucketed histograms
 //!   ([`util::histogram`](crate::util::histogram)) — an uncontended
 //!   per-worker lock on the record path. [`Engine::stats`] merges the
-//!   shards in O(buckets), independent of how long the engine has been
-//!   serving: no response-history sort, no history clone. Memory is
-//!   fixed no matter how many requests have been served.
-//! - **Stats sink**: completed [`BatchOutcome`]s flow over a results
+//!   shards in O(models × buckets), independent of how long the engine
+//!   has been serving: no response-history sort, no history clone — and
+//!   reports both the global breakdown and a per-model one (served,
+//!   batches, latency, sim energy, sim makespan).
+//! - **Stats sink**: completed batch outcomes flow over a results
 //!   channel into a collector thread that maintains the shared sink
 //!   (a *bounded* ring of the last [`EngineConfig::history`] responses,
-//!   per-*batch* simulated energy, failure accounting) and wakes
-//!   [`Engine::drain`] waiters. The seed retained the full response
-//!   history forever; the ring caps retention so the sink is safe for
-//!   unbounded request streams.
+//!   per-*batch* and per-model simulated energy, failure accounting) and
+//!   wakes [`Engine::drain`] waiters. The seed retained the full
+//!   response history forever; the ring caps retention so the sink is
+//!   safe for unbounded request streams.
 //!
-//! Per-batch simulated costs come from an immutable
-//! [`SimCostTable`](crate::analyzer::simcost::SimCostTable) precomputed
-//! at startup — the analyzer never runs on the request path.
+//! Per-batch simulated costs come from the immutable
+//! [`SimCostTable`](crate::analyzer::simcost::SimCostTable) inside each
+//! registry plan — the analyzer never runs on the request path.
 //!
 //! **Shutdown** is graceful: [`Engine::drain`] flushes and waits until
 //! every accepted request has an outcome; [`Engine::shutdown`] (also run
@@ -47,20 +57,20 @@
 //! and exit, lets workers finish remaining batches, and joins all
 //! pipeline threads. Stats stay readable afterwards.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::analyzer::simcost::SimCostTable;
-use crate::cnn::graph::{Network, NetworkBuilder};
-use crate::cnn::layer::TensorShape;
+use crate::cnn::models::{Model, SERVABLE_MODELS};
 use crate::config::OpimaConfig;
 use crate::coordinator::batcher::{Batch, DynamicBatcher};
+use crate::coordinator::registry::{augment_manifest, PlanRegistry};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse, Variant};
 use crate::coordinator::router::Router;
-use crate::coordinator::server::{LatencyBreakdown, ServerStats};
+use crate::coordinator::server::{LatencyBreakdown, ModelServingStats, ServerStats};
 use crate::coordinator::worker::{worker_loop, BatchOutcome, WorkerCtx};
 use crate::error::{Error, Result};
 use crate::runtime::{Executor, ExecutorSpec, Manifest};
@@ -122,13 +132,22 @@ pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// Per-model aggregates the collector maintains alongside the global
+/// counters.
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct ModelSink {
+    pub batches: u64,
+    pub failed: u64,
+    pub energy_mj: f64,
+}
+
 /// Aggregates written by the collector thread, read by `stats()`/waiters.
 #[derive(Debug)]
 pub(crate) struct SinkState {
     /// Bounded response history: only the last `history` responses are
     /// retained (completion order, monotonic sequence numbers). The
-    /// latency aggregates live in the per-worker [`LatencyShard`]s, so
-    /// eviction here loses payloads (logits), never statistics.
+    /// latency aggregates live in the per-worker shards, so eviction
+    /// here loses payloads (logits), never statistics.
     pub recent: Ring<InferenceResponse>,
     /// Successfully executed batches.
     pub batches: u64,
@@ -138,6 +157,8 @@ pub(crate) struct SinkState {
     /// partial batches pay full-batch energy, responses are not
     /// double-counted).
     pub batch_energy_mj: f64,
+    /// Per-model batch/failure/energy aggregates.
+    pub models: HashMap<Model, ModelSink>,
     /// Requests with an outcome (responses + failed).
     pub completed: u64,
     /// When the most recent batch outcome landed — the wall-clock end of
@@ -160,6 +181,7 @@ impl StatsSink {
                 batches: 0,
                 failed: 0,
                 batch_energy_mj: 0.0,
+                models: HashMap::new(),
                 completed: 0,
                 last_done: None,
                 first_error: None,
@@ -169,10 +191,8 @@ impl StatsSink {
     }
 }
 
-/// One worker's streaming latency accumulators — four log-bucketed
-/// histograms, fixed memory, recorded under the worker's own lock (only
-/// `stats()` ever contends it, briefly, to merge). Sharding per worker
-/// keeps the record path off any shared hot lock.
+/// One latency accumulator: four log-bucketed histograms (total, queue,
+/// exec, form), fixed memory.
 #[derive(Debug, Default)]
 pub(crate) struct LatencyShard {
     pub total: Histogram,
@@ -198,6 +218,33 @@ impl LatencyShard {
         self.exec.merge(&other.exec);
         self.form.merge(&other.form);
     }
+
+    /// Snapshot the shard's summaries.
+    pub fn breakdown(&self) -> LatencyBreakdown {
+        LatencyBreakdown {
+            total: self.total.summary(),
+            queue: self.queue.summary(),
+            exec: self.exec.summary(),
+            form: self.form.summary(),
+        }
+    }
+}
+
+/// One worker's streaming latency accumulators, sharded per model —
+/// recorded under the worker's own lock (only `stats()` ever contends
+/// it, briefly, to merge). Sharding per worker keeps the record path
+/// off any shared hot lock; keying per model keeps the per-model
+/// breakdown exact without a second pass over responses.
+#[derive(Debug, Default)]
+pub(crate) struct WorkerShard {
+    pub models: HashMap<Model, LatencyShard>,
+}
+
+impl WorkerShard {
+    /// Fold one response into the model's latency shard.
+    pub fn record(&mut self, model: Model, r: &InferenceResponse) {
+        self.models.entry(model).or_default().record(r);
+    }
 }
 
 /// Control flags shared with the batcher thread. Shutdown needs no
@@ -208,27 +255,17 @@ struct Ctrl {
     flush: AtomicBool,
 }
 
-/// The served model: must match python/compile/model.py's ARCH.
-pub(crate) fn served_network() -> Result<Network> {
-    let mut b = NetworkBuilder::new("served_cnn", TensorShape::new(12, 12, 1));
-    b.conv(3, 3, 8, 1, 1)?
-        .pool(2, 2)?
-        .conv(3, 3, 16, 1, 1)?
-        .pool(2, 2)?
-        .fc(4)?;
-    Ok(b.build())
-}
-
 /// The multi-threaded pipelined serving engine.
 pub struct Engine {
     cfg: EngineConfig,
     ingress: Option<SyncSender<InferenceRequest>>,
     ctrl: Arc<Ctrl>,
     sink: Arc<StatsSink>,
-    /// Per-worker streaming latency histograms, merged by `stats()`.
-    shards: Vec<Arc<Mutex<LatencyShard>>>,
+    /// Per-worker, per-model streaming latency histograms, merged by
+    /// `stats()`.
+    shards: Vec<Arc<Mutex<WorkerShard>>>,
     router: Arc<Mutex<Router>>,
-    costs: Arc<SimCostTable>,
+    registry: Arc<PlanRegistry>,
     /// Serving epoch (post-warmup), shared with the workers.
     epoch: Arc<Mutex<Instant>>,
     batch_size: usize,
@@ -259,19 +296,25 @@ impl Engine {
             return Err(Error::Config("history capacity must be at least 1".into()));
         }
         cfg.hw.validate()?;
+        // Synthesize artifact entries for the non-LeNet servable models
+        // the manifest doesn't define (the sim backend needs only the
+        // shapes; the PJRT backend will still fail loudly on a missing
+        // HLO file). LeNet's on-disk `cnn_*` family is never touched.
+        let mut manifest = manifest;
+        augment_manifest(&mut manifest);
         let batch_size = manifest.batch;
         let image_elems = manifest.image_size * manifest.image_size;
-        let net = served_network()?;
         let variants = [Variant::Fp32, Variant::Int8, Variant::Int4];
-        let bits: Vec<u32> = variants.iter().map(|v| v.pim_bits()).collect();
-        let costs = Arc::new(SimCostTable::build(&cfg.hw, &net, batch_size, &bits)?);
+        let registry = Arc::new(PlanRegistry::new(cfg.hw.clone(), manifest.clone()));
         let router = Arc::new(Mutex::new(Router::new(cfg.instances)));
         let sink = Arc::new(StatsSink::new(cfg.history));
-        let shards: Vec<Arc<Mutex<LatencyShard>>> = (0..cfg.workers)
-            .map(|_| Arc::new(Mutex::new(LatencyShard::default())))
+        let shards: Vec<Arc<Mutex<WorkerShard>>> = (0..cfg.workers)
+            .map(|_| Arc::new(Mutex::new(WorkerShard::default())))
             .collect();
         let ctrl = Arc::new(Ctrl::default());
 
+        // Warm the LeNet serving artifacts (the only family with real
+        // AOT HLO on disk); other models compile on first batch.
         let warm: Vec<String> = variants.iter().map(|v| v.artifact(batch_size)).collect();
 
         let (ingress_tx, ingress_rx) = mpsc::sync_channel::<InferenceRequest>(cfg.queue_capacity);
@@ -297,7 +340,7 @@ impl Engine {
             let spec = cfg.executor;
             let warm = warm.clone();
             let router = Arc::clone(&router);
-            let costs = Arc::clone(&costs);
+            let registry = Arc::clone(&registry);
             let rx = Arc::clone(&batch_rx);
             let tx = res_tx.clone();
             let ready = ready_tx.clone();
@@ -322,9 +365,8 @@ impl Engine {
                             id,
                             executor,
                             batch_size,
-                            image_elems,
+                            registry,
                             router,
-                            costs,
                             epoch: w_epoch,
                             shard,
                             rx,
@@ -377,7 +419,7 @@ impl Engine {
             sink,
             shards,
             router,
-            costs,
+            registry,
             epoch,
             batch_size,
             image_elems,
@@ -393,12 +435,31 @@ impl Engine {
         &self.cfg
     }
 
+    /// Per-image element count of the legacy (LeNet) serving artifacts,
+    /// from the manifest. See [`Engine::image_elems_for`] for the
+    /// model-aware count.
     pub fn image_elems(&self) -> usize {
         self.image_elems
     }
 
+    /// Flattened per-image element count a request for `model` must
+    /// carry: LeNet follows the loaded manifest; the paper models follow
+    /// their static metadata.
+    pub fn image_elems_for(&self, model: Model) -> usize {
+        match model {
+            Model::LeNet => self.image_elems,
+            m => m.input_elems(),
+        }
+    }
+
     pub fn batch_size(&self) -> usize {
         self.batch_size
+    }
+
+    /// The shared plan/cost registry (lazily-built per-`(model,
+    /// variant)` compiled artifacts).
+    pub fn registry(&self) -> &PlanRegistry {
+        &self.registry
     }
 
     /// Non-blocking submit. Returns [`Error::Backpressure`] when the
@@ -445,11 +506,12 @@ impl Engine {
     }
 
     fn validate(&self, req: &InferenceRequest) -> Result<()> {
-        if req.image.len() != self.image_elems {
+        let want = self.image_elems_for(req.model);
+        if req.image.len() != want {
             return Err(Error::Serving(format!(
-                "image has {} elems, artifact wants {}",
-                req.image.len(),
-                self.image_elems
+                "image for {} has {} elems, artifact wants {want}",
+                req.model.name(),
+                req.image.len()
             )));
         }
         Ok(())
@@ -549,51 +611,86 @@ impl Engine {
         (st.recent.since(from), st.recent.pushed())
     }
 
-    /// Per-batch simulated `(latency_ms, energy_mj)` at an operand width.
-    pub fn sim_cost(&self, bits: u32) -> Option<(f64, f64)> {
-        self.costs.get(bits)
+    /// Per-batch simulated `(latency_ms, energy_mj)` for a `(model,
+    /// variant)` pair, resolving (and, on first use, building) its
+    /// registry plan.
+    pub fn sim_cost(&self, model: Model, variant: Variant) -> Result<(f64, f64)> {
+        Ok(self.registry.resolve(model, variant)?.sim_cost())
     }
 
     /// Aggregate statistics over everything served so far.
     ///
-    /// O(buckets): merges the per-worker streaming histogram shards —
-    /// no response-history sort, no history clone, and the cost does not
-    /// grow with how long the engine has been serving. Each shard lock
-    /// is held only for its merge, so the observation path barely
-    /// contends with the workers. (A worker records its batch into its
-    /// shard just before the outcome reaches the collector, so a stats
-    /// snapshot taken mid-flight may momentarily count a response in the
-    /// latency aggregates that the sink counters haven't absorbed yet —
-    /// after `drain` the two views always agree.)
+    /// O(models × buckets): merges the per-worker streaming histogram
+    /// shards — no response-history sort, no history clone, and the cost
+    /// does not grow with how long the engine has been serving. Each
+    /// shard lock is held only for its merge, so the observation path
+    /// barely contends with the workers. (A worker records its batch
+    /// into its shard just before the outcome reaches the collector, so
+    /// a stats snapshot taken mid-flight may momentarily count a
+    /// response in the latency aggregates that the sink counters haven't
+    /// absorbed yet — after `drain` the two views always agree.)
     pub fn stats(&self) -> ServerStats {
-        let sim_makespan_ms = lock(&self.router).makespan_ms();
+        let (sim_makespan_ms, model_spans) = {
+            let r = lock(&self.router);
+            (r.makespan_ms(), r.model_makespans().clone())
+        };
         let epoch = *lock(&self.epoch);
         let accepted = self.accepted.load(Ordering::Acquire);
-        let mut agg = LatencyShard::default();
+        // Merge the per-worker shards into one shard per model, then
+        // fold those into the global aggregate.
+        let mut merged: HashMap<Model, LatencyShard> = HashMap::new();
         for shard in &self.shards {
-            agg.merge(&lock(shard));
+            let s = lock(shard);
+            for (m, sh) in &s.models {
+                merged.entry(*m).or_default().merge(sh);
+            }
         }
-        let st = lock(&self.sink.state);
-        // While work is in flight the wall clock runs to "now"; once the
-        // pipeline is idle it stops at the last completion, so
-        // throughput_rps doesn't decay while the engine sits idle.
-        let end = if st.completed >= accepted {
-            st.last_done.unwrap_or(epoch)
-        } else {
-            Instant::now()
+        let mut agg = LatencyShard::default();
+        for sh in merged.values() {
+            agg.merge(sh);
+        }
+        let (batches, failed, sim_energy_mj, model_sinks, end) = {
+            let st = lock(&self.sink.state);
+            // While work is in flight the wall clock runs to "now"; once
+            // the pipeline is idle it stops at the last completion, so
+            // throughput_rps doesn't decay while the engine sits idle.
+            let end = if st.completed >= accepted {
+                st.last_done.unwrap_or(epoch)
+            } else {
+                Instant::now()
+            };
+            (
+                st.batches,
+                st.failed,
+                st.batch_energy_mj,
+                st.models.clone(),
+                end,
+            )
         };
         let wall_ms = end.saturating_duration_since(epoch).as_secs_f64() * 1e3;
-        let batches = st.batches;
-        let failed = st.failed;
-        let sim_energy_mj = st.batch_energy_mj;
-        drop(st);
-        let latency = LatencyBreakdown {
-            total: agg.total.summary(),
-            queue: agg.queue.summary(),
-            exec: agg.exec.summary(),
-            form: agg.form.summary(),
-        };
+        let latency = agg.breakdown();
         let n = latency.total.count;
+        // Per-model breakdown in `SERVABLE_MODELS` order, covering every
+        // model that served, failed, or was metered.
+        let mut per_model = Vec::new();
+        for m in SERVABLE_MODELS {
+            let lat = merged.get(&m);
+            let sunk = model_sinks.get(&m);
+            if lat.is_none() && sunk.is_none() {
+                continue;
+            }
+            let latb = lat.map(LatencyShard::breakdown).unwrap_or_default();
+            let s = sunk.copied().unwrap_or_default();
+            per_model.push(ModelServingStats {
+                model: m,
+                served: latb.total.count,
+                batches: s.batches,
+                failed: s.failed,
+                sim_energy_mj: s.energy_mj,
+                sim_makespan_ms: model_spans.get(&m).copied().unwrap_or(0.0),
+                latency: latb,
+            });
+        }
         ServerStats {
             served: n,
             batches,
@@ -613,6 +710,7 @@ impl Engine {
             sim_energy_mj,
             sim_makespan_ms,
             latency,
+            per_model,
         }
     }
 
@@ -651,10 +749,11 @@ impl Drop for Engine {
 
 /// The batcher thread: the only place batches form.
 ///
-/// Unbatched pending is structurally bounded (each variant queue flushes
-/// at `max_batch`), and handing a formed batch to a saturated worker
-/// pool blocks on the bounded batch channel — which stops the ingress
-/// pull and lets the bounded ingress queue exert backpressure.
+/// Unbatched pending is structurally bounded (each `(model, variant)`
+/// queue flushes at `max_batch`), and handing a formed batch to a
+/// saturated worker pool blocks on the bounded batch channel — which
+/// stops the ingress pull and lets the bounded ingress queue exert
+/// backpressure.
 fn batcher_loop(
     rx: Receiver<InferenceRequest>,
     tx: SyncSender<Batch>,
@@ -710,13 +809,22 @@ fn batcher_loop(
     }
 }
 
-/// The collector thread: folds batch outcomes into the shared sink and
-/// wakes `drain` waiters.
+/// The collector thread: folds batch outcomes into the shared sink
+/// (global and per-model) and wakes `drain` waiters.
 fn collector_loop(rx: Receiver<BatchOutcome>, sink: Arc<StatsSink>) {
     while let Ok(out) = rx.recv() {
         let mut st = lock(&sink.state);
         st.completed += out.responses.len() as u64 + out.failed;
         st.last_done = Some(Instant::now());
+        {
+            let m = st.models.entry(out.model).or_default();
+            if out.failed > 0 {
+                m.failed += out.failed;
+            } else {
+                m.batches += 1;
+                m.energy_mj += out.sim_energy_mj;
+            }
+        }
         if out.failed > 0 {
             st.failed += out.failed;
             if st.first_error.is_none() {
@@ -757,6 +865,7 @@ mod tests {
     fn req(id: u64, variant: Variant) -> InferenceRequest {
         InferenceRequest {
             id,
+            model: Model::LeNet,
             image: (0..144).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect(),
             variant,
             arrival: Instant::now(),
@@ -774,6 +883,7 @@ mod tests {
         let rs = e.responses();
         assert_eq!(rs.len(), 16);
         assert!(rs.iter().all(|r| r.logits.len() == 4));
+        assert!(rs.iter().all(|r| r.model == Model::LeNet));
         let s = e.stats();
         assert_eq!(s.served, 16);
         assert_eq!(s.batches, 2, "16 requests at batch 8 → 2 full batches");
@@ -784,6 +894,17 @@ mod tests {
         assert!(s.latency.total.p50 <= s.latency.total.p99 + 1e-12);
         assert!(s.latency.total.p999 <= s.latency.total.max + 1e-12);
         assert!((s.latency.queue.mean - s.mean_queue_ms).abs() < 1e-12);
+        // Single-model run: the per-model breakdown is that one model
+        // and it carries the global totals.
+        assert_eq!(s.per_model.len(), 1);
+        let m = &s.per_model[0];
+        assert_eq!(m.model, Model::LeNet);
+        assert_eq!(m.served, 16);
+        assert_eq!(m.batches, 2);
+        assert!((m.sim_energy_mj - s.sim_energy_mj).abs() < 1e-12);
+        assert!(m.sim_makespan_ms > 0.0 && m.sim_makespan_ms <= s.sim_makespan_ms);
+        // The LeNet plan was compiled exactly once for the whole run.
+        assert_eq!(e.registry().builds(), 1);
         e.shutdown().unwrap();
     }
 
@@ -847,6 +968,17 @@ mod tests {
     }
 
     #[test]
+    fn rejects_wrong_image_size_per_model() {
+        let e = sim_engine(1, 16, Duration::from_secs(5));
+        // A LeNet-sized image is not a valid ResNet18 request.
+        let mut r = req(0, Variant::Int4);
+        r.model = Model::ResNet18;
+        assert!(e.submit(r).is_err());
+        assert_eq!(e.image_elems_for(Model::LeNet), 144);
+        assert_eq!(e.image_elems_for(Model::ResNet18), 32 * 32 * 3);
+    }
+
+    #[test]
     fn failed_batch_is_accounted_not_lost() {
         let mut manifest = Manifest::synthetic(8, 12);
         manifest.artifacts.remove("cnn_int4_b8");
@@ -868,6 +1000,11 @@ mod tests {
         let s = e.stats();
         assert_eq!(s.failed, 3);
         assert_eq!(s.served, 0);
+        // The failure is attributed to the model that owned the batch.
+        assert_eq!(s.per_model.len(), 1);
+        assert_eq!(s.per_model[0].model, Model::LeNet);
+        assert_eq!(s.per_model[0].failed, 3);
+        assert_eq!(s.per_model[0].batches, 0);
         // The error was reported by that drain and cleared: a later
         // drain (here via shutdown) of an otherwise-clean engine is Ok.
         e.shutdown().unwrap();

@@ -1,51 +1,76 @@
-//! The serving coordinator: OPIMA as an inference appliance.
+//! The serving coordinator: OPIMA as a multi-model inference appliance.
 //!
-//! A multi-threaded pipelined engine serves CNN classification requests:
-//! a bounded ingress queue (non-blocking `submit` returns
-//! [`Backpressure`](crate::error::Error::Backpressure) when full), a
-//! dedicated batcher thread that owns the dynamic batcher and flushes on
-//! size **or** deadline via a timer tick (an idle queue still flushes on
-//! time), and a worker pool where each worker owns its own PJRT executor
-//! (compile caches warmed at startup) and pulls formed batches from a
-//! channel. Completed responses flow over a results channel into a
-//! shared stats sink; `shutdown` drains in-flight work before joining
-//! the pipeline threads.
+//! A multi-threaded pipelined engine serves CNN classification requests
+//! for any of the [`SERVABLE_MODELS`](crate::cnn::models::SERVABLE_MODELS)
+//! from shared capacity: a bounded ingress queue (non-blocking `submit`
+//! returns [`Backpressure`](crate::error::Error::Backpressure) when
+//! full), a dedicated batcher thread that owns the dynamic batcher —
+//! one pending queue per `(model, variant)` pair, flushed on size **or**
+//! deadline via a timer tick (an idle queue still flushes on time) with
+//! round-robin fairness across models, and never mixing models in one
+//! batch — and a worker pool where each worker owns its own PJRT
+//! executor (LeNet compile caches warmed at startup) and pulls formed
+//! batches from a channel.
 //!
-//! Observability is *streaming and bounded*: each worker folds its
-//! batches' latencies into a per-worker shard of log-bucketed histograms
-//! ([`util::histogram`](crate::util::histogram)), `Engine::stats` merges
-//! the shards in O(buckets) (no history sort or clone), and the sink
-//! retains only a fixed-capacity ring of the most recent responses
+//! Per-model compiled state lives in the shared [`registry`]: a
+//! lazily-built, `Arc`-shared [`PlanRegistry`] caching each `(model,
+//! variant)` pair's network graph, mapper plan,
+//! [`SimCostTable`](crate::analyzer::simcost::SimCostTable) and
+//! executor program. Plans build exactly once under a per-key lock —
+//! concurrent first requests for the same pair share one build; the
+//! analyzer never runs on the request path.
+//!
+//! Completed responses flow over a results channel into a shared stats
+//! sink; `shutdown` drains in-flight work before joining the pipeline
+//! threads.
+//!
+//! Observability is *streaming, bounded, and per-model*: each worker
+//! folds its batches' latencies into a per-worker, per-model shard of
+//! log-bucketed histograms ([`util::histogram`](crate::util::histogram)),
+//! `Engine::stats` merges the shards in O(models × buckets), and the
+//! sink retains only a fixed-capacity ring of the most recent responses
 //! ([`util::ring`](crate::util::ring)) — so memory and stats cost stay
-//! constant over unbounded request streams. The `Server` facade exposes
-//! responses by value (`recent`/`drain_responses`) rather than keeping
-//! its own copy.
+//! constant over unbounded request streams. [`ServerStats`] reports the
+//! global breakdown plus a [`ModelServingStats`] row per active model
+//! (served, batches, latency, sim energy, tagged sim makespan); the
+//! `Server` facade exposes responses by value (`recent`/
+//! `drain_responses`) rather than keeping its own copy.
 //!
 //! The functional result comes from executing the AOT HLO artifacts
 //! through PJRT (or the sim backend); the *architectural* cost of each
 //! batch (what the OPIMA hardware would have spent) is metered once per
-//! executed batch from a precomputed immutable cost table and reported
+//! executed batch from the plan's precomputed cost table and reported
 //! with every response.
 //!
-//! - [`request`] — request/response types and the model-variant registry.
-//! - [`batcher`] — dynamic batching: size- and deadline-triggered.
+//! See `DESIGN.md` §3 for the end-to-end dataflow picture (ingress →
+//! per-model batch queues → registry → worker pool → router → stats).
+//!
+//! - [`request`] — request/response types, the model field and the
+//!   quantization variants, and per-`(model, variant)` artifact naming.
+//! - [`batcher`] — dynamic batching: size- and deadline-triggered,
+//!   per-`(model, variant)` queues, round-robin fairness.
+//! - [`registry`] — the shared plan/cost registry: per-`(model,
+//!   variant)` compiled artifacts, built lazily and exactly once.
 //! - [`engine`] — the pipelined engine: queue → batcher → worker pool →
 //!   stats sink; backpressure, drain and graceful shutdown; streaming
-//!   per-worker latency histograms + bounded response ring.
-//! - [`worker`] — worker loop: execute a batch, meter it, fold it into
-//!   the worker's latency shard, report it.
+//!   per-worker per-model latency histograms + bounded response ring.
+//! - [`worker`] — worker loop: resolve a batch's plan, execute it,
+//!   meter it, fold it into the worker's latency shard, report it.
 //! - [`router`] — least-outstanding-work dispatch of *real* worker
-//!   batches onto simulated OPIMA instance busy horizons.
+//!   batches onto simulated OPIMA instance busy horizons, with
+//!   reservations tagged per model.
 //! - [`server`] — the synchronous facade preserving the seed call-loop
 //!   API on top of the engine.
 
 pub mod batcher;
 pub mod engine;
+pub mod registry;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod worker;
 
 pub use engine::{Engine, EngineConfig};
-pub use request::{InferenceRequest, InferenceResponse, Variant};
-pub use server::{LatencyBreakdown, Server, ServerConfig, ServerStats};
+pub use registry::{ModelPlan, PlanRegistry};
+pub use request::{parse_mix, pick_weighted, InferenceRequest, InferenceResponse, Variant};
+pub use server::{LatencyBreakdown, ModelServingStats, Server, ServerConfig, ServerStats};

@@ -1,0 +1,323 @@
+//! The shared plan/cost registry: per-`(model, variant)` compiled
+//! serving artifacts, built lazily and exactly once.
+//!
+//! Multi-model serving means a worker can be handed a batch for any of
+//! the [`SERVABLE_MODELS`](crate::cnn::models::SERVABLE_MODELS) at any
+//! moment. Everything a batch needs besides the executor's compile
+//! cache — the model's network graph, its mapper plan on the PIM
+//! substrate, the precomputed [`SimCostTable`] that meters the batch,
+//! and the executor program (artifact name + shapes) it runs — is
+//! deterministic per `(model, variant)` and expensive enough (a full
+//! analyzer pass over e.g. VGG16) that it must never run per request,
+//! and wasteful enough that it should never run per *worker* either.
+//!
+//! [`PlanRegistry`] is that cache: an `Arc`-shared, lazily-populated map
+//! keyed by `(model, variant)`. Resolution takes a short global lock to
+//! find-or-create the key's slot, then builds under the slot's own lock
+//! — concurrent first requests for the *same* pair block until the one
+//! build finishes (never duplicating it), while requests for *different*
+//! pairs build in parallel. Build outcomes (including errors — builds
+//! are deterministic) are cached, and [`PlanRegistry::builds`] counts
+//! actual build executions so tests can assert the exactly-once
+//! property.
+//!
+//! The registry also owns manifest augmentation
+//! ([`augment_manifest`]): synthesized [`ArtifactInfo`] entries for
+//! every servable `(model, variant)` pair the loaded manifest doesn't
+//! already provide, so the sim backend can execute any model while the
+//! on-disk (LeNet) artifact family keeps the manifest as its single
+//! source of truth — a missing LeNet artifact still fails the batch
+//! instead of being silently re-synthesized.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::analyzer::latency::analyze_mapped;
+use crate::analyzer::simcost::SimCostTable;
+use crate::cnn::graph::Network;
+use crate::cnn::models::{build_model, Model, SERVABLE_MODELS};
+use crate::config::OpimaConfig;
+use crate::coordinator::engine::lock;
+use crate::coordinator::request::Variant;
+use crate::error::{Error, Result};
+use crate::mapper::plan::{map_network, MappedNetwork};
+use crate::runtime::{ArtifactInfo, Manifest};
+
+/// Everything the serving path needs for one `(model, variant)` pair,
+/// compiled once and shared read-only behind an `Arc`.
+#[derive(Debug)]
+pub struct ModelPlan {
+    pub model: Model,
+    pub variant: Variant,
+    /// The model's network graph (shape/MAC ground truth).
+    pub network: Network,
+    /// The mapper plan: the network mapped onto the PIM substrate at
+    /// this variant's operand width.
+    pub mapped: MappedNetwork,
+    /// Whole-batch simulated cost at the serving batch size.
+    pub costs: SimCostTable,
+    /// The executor program: artifact name + tensor shapes the worker
+    /// runs for each batch of this pair.
+    pub program: ArtifactInfo,
+    /// Serving batch size the program and costs are built for.
+    pub batch: usize,
+}
+
+impl ModelPlan {
+    /// Flattened per-image element count the program's input expects.
+    pub fn image_elems(&self) -> usize {
+        self.program.input_elems(0) / self.batch.max(1)
+    }
+
+    /// Logits per inference in the program's output.
+    pub fn classes(&self) -> usize {
+        self.program.output_elems() / self.batch.max(1)
+    }
+
+    /// Whole-batch simulated `(latency_ms, energy_mj)`.
+    pub fn sim_cost(&self) -> (f64, f64) {
+        self.costs
+            .get(self.variant.pim_bits())
+            .expect("table built with this variant's width")
+    }
+}
+
+/// A cached build outcome: the shared plan, or the deterministic build
+/// error's message.
+type Built = std::result::Result<Arc<ModelPlan>, String>;
+
+/// One key's build slot. The slot mutex is the per-key build lock:
+/// holding it while building makes concurrent same-key resolutions wait
+/// for (and then share) the single build instead of repeating it.
+#[derive(Default)]
+struct Slot {
+    cell: Mutex<Option<Built>>,
+}
+
+/// Lazily-built, `Arc`-shared cache of per-`(model, variant)` serving
+/// plans. See the [module docs](self) for the locking discipline.
+pub struct PlanRegistry {
+    hw: OpimaConfig,
+    manifest: Manifest,
+    batch: usize,
+    slots: Mutex<HashMap<(Model, Variant), Arc<Slot>>>,
+    builds: AtomicU64,
+}
+
+impl PlanRegistry {
+    /// Create a registry over an (already augmented) manifest. Plans
+    /// are built on first resolution, not here.
+    pub fn new(hw: OpimaConfig, manifest: Manifest) -> Self {
+        let batch = manifest.batch;
+        Self {
+            hw,
+            manifest,
+            batch,
+            slots: Mutex::new(HashMap::new()),
+            builds: AtomicU64::new(0),
+        }
+    }
+
+    /// Serving batch size every plan is built for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Number of plan builds actually executed so far. With N concurrent
+    /// first-resolutions of one `(model, variant)` pair this is 1, not N.
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::Acquire)
+    }
+
+    /// Number of `(model, variant)` pairs resolved (or resolving) so far.
+    pub fn cached(&self) -> usize {
+        lock(&self.slots).len()
+    }
+
+    /// Resolve the plan for a `(model, variant)` pair, building it if
+    /// this is the first resolution. Concurrent first resolutions of the
+    /// same pair serialize on the pair's slot lock and share one build;
+    /// different pairs build in parallel. Deterministic build errors are
+    /// cached and re-reported.
+    pub fn resolve(&self, model: Model, variant: Variant) -> Result<Arc<ModelPlan>> {
+        let slot = {
+            let mut slots = lock(&self.slots);
+            Arc::clone(slots.entry((model, variant)).or_default())
+        };
+        let mut cell = lock(&slot.cell);
+        if cell.is_none() {
+            self.builds.fetch_add(1, Ordering::AcqRel);
+            *cell = Some(
+                self.build(model, variant)
+                    .map(Arc::new)
+                    .map_err(|e| e.to_string()),
+            );
+        }
+        match cell.as_ref().expect("filled above") {
+            Ok(plan) => Ok(Arc::clone(plan)),
+            Err(e) => Err(Error::Serving(format!(
+                "plan for ({}, {}): {e}",
+                model.name(),
+                variant.tag()
+            ))),
+        }
+    }
+
+    fn build(&self, model: Model, variant: Variant) -> Result<ModelPlan> {
+        let bits = variant.pim_bits();
+        let network = build_model(model)?;
+        // One mapping pass feeds both the stored mapper plan and the
+        // cost table (analyze_mapped prices the already-mapped network
+        // instead of re-mapping it).
+        let mapped = map_network(&self.hw, &network, bits)?;
+        let analysis = analyze_mapped(&self.hw, &mapped, bits)?;
+        let costs = SimCostTable::from_analysis(&analysis, self.batch);
+        let name = variant.artifact_for(model, self.batch);
+        let program = self.manifest.get(&name)?.clone();
+        Ok(ModelPlan {
+            model,
+            variant,
+            network,
+            mapped,
+            costs,
+            program,
+            batch: self.batch,
+        })
+    }
+}
+
+impl std::fmt::Debug for PlanRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanRegistry")
+            .field("batch", &self.batch)
+            .field("cached", &self.cached())
+            .field("builds", &self.builds())
+            .finish()
+    }
+}
+
+/// Add synthesized artifact entries for every servable `(model,
+/// variant)` pair the manifest doesn't already define, shaped from the
+/// models' static metadata at the manifest's batch size. Existing
+/// entries (notably LeNet's on-disk `cnn_*` family) are never
+/// overwritten — and never re-created when absent, so a manifest that
+/// genuinely lacks a LeNet artifact still fails that batch loudly.
+pub fn augment_manifest(manifest: &mut Manifest) {
+    let batch = manifest.batch;
+    for model in SERVABLE_MODELS {
+        if model == Model::LeNet {
+            continue;
+        }
+        for variant in [Variant::Fp32, Variant::Int8, Variant::Int4] {
+            let name = variant.artifact_for(model, batch);
+            if manifest.artifacts.contains_key(&name) {
+                continue;
+            }
+            let size = model.input_size();
+            manifest.artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    input_shapes: vec![vec![batch, size, size, model.input_channels()]],
+                    output_shape: vec![batch, model.classes()],
+                    bits: match variant {
+                        Variant::Fp32 => None,
+                        v => Some(v.pim_bits()),
+                    },
+                },
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> PlanRegistry {
+        let mut manifest = Manifest::synthetic(8, 12);
+        augment_manifest(&mut manifest);
+        PlanRegistry::new(OpimaConfig::paper(), manifest)
+    }
+
+    #[test]
+    fn resolves_lenet_from_manifest_artifacts() {
+        let r = registry();
+        let plan = r.resolve(Model::LeNet, Variant::Int4).unwrap();
+        assert_eq!(plan.program.name, "cnn_int4_b8");
+        assert_eq!(plan.image_elems(), 144);
+        assert_eq!(plan.classes(), 4);
+        let (lat, mj) = plan.sim_cost();
+        assert!(lat > 0.0 && mj > 0.0);
+        assert!(!plan.mapped.works.is_empty());
+        assert_eq!(r.builds(), 1);
+    }
+
+    #[test]
+    fn second_resolution_hits_the_cache() {
+        let r = registry();
+        let a = r.resolve(Model::LeNet, Variant::Int8).unwrap();
+        let b = r.resolve(Model::LeNet, Variant::Int8).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same Arc, no rebuild");
+        assert_eq!(r.builds(), 1);
+        assert_eq!(r.cached(), 1);
+    }
+
+    #[test]
+    fn distinct_pairs_build_distinct_plans() {
+        let r = registry();
+        let lenet = r.resolve(Model::LeNet, Variant::Int4).unwrap();
+        let mobile = r.resolve(Model::MobileNet, Variant::Int4).unwrap();
+        assert_eq!(r.builds(), 2);
+        assert_eq!(mobile.program.name, "mobilenet_int4_b8");
+        assert_eq!(mobile.image_elems(), 32 * 32 * 3);
+        assert_eq!(mobile.classes(), 1000);
+        // A bigger model costs more simulated time and energy per batch.
+        assert!(mobile.sim_cost().0 > lenet.sim_cost().0);
+        assert!(mobile.sim_cost().1 > lenet.sim_cost().1);
+    }
+
+    #[test]
+    fn concurrent_first_resolutions_build_exactly_once() {
+        let r = std::sync::Arc::new(registry());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let r = Arc::clone(&r);
+                s.spawn(move || {
+                    let plan = r.resolve(Model::LeNet, Variant::Int4).unwrap();
+                    assert_eq!(plan.model, Model::LeNet);
+                });
+            }
+        });
+        assert_eq!(r.builds(), 1, "8 racing resolutions, one build");
+    }
+
+    #[test]
+    fn missing_artifact_is_a_cached_error() {
+        let mut manifest = Manifest::synthetic(8, 12);
+        manifest.artifacts.remove("cnn_int4_b8");
+        augment_manifest(&mut manifest);
+        let r = PlanRegistry::new(OpimaConfig::paper(), manifest);
+        assert!(r.resolve(Model::LeNet, Variant::Int4).is_err());
+        assert!(r.resolve(Model::LeNet, Variant::Int4).is_err());
+        assert_eq!(r.builds(), 1, "the failed build is cached, not retried");
+        // Other pairs are unaffected.
+        assert!(r.resolve(Model::LeNet, Variant::Int8).is_ok());
+    }
+
+    #[test]
+    fn augmentation_covers_all_pairs_and_keeps_existing_entries() {
+        let mut manifest = Manifest::synthetic(8, 12);
+        let lenet_before = manifest.get("cnn_fp32_b8").unwrap().clone();
+        augment_manifest(&mut manifest);
+        assert_eq!(manifest.get("cnn_fp32_b8").unwrap(), &lenet_before);
+        for model in SERVABLE_MODELS {
+            for v in [Variant::Fp32, Variant::Int8, Variant::Int4] {
+                let info = manifest.get(&v.artifact_for(model, 8)).unwrap();
+                assert_eq!(info.input_elems(0), 8 * model.input_elems());
+                assert_eq!(info.output_elems(), 8 * model.classes());
+            }
+        }
+    }
+}

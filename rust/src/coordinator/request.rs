@@ -2,9 +2,60 @@
 
 use std::time::Instant;
 
+use crate::cnn::models::Model;
 use crate::error::{Error, Result};
+use crate::util::prng::Rng;
 
-/// Which CNN variant serves the request (precision ↔ artifact).
+/// Parse a workload-mix spec like `lenet:4,vgg16:1` into `(model,
+/// weight)` pairs — the grammar behind the CLI's and the serving
+/// example's `--mix` flag. A bare model name means weight 1; weights
+/// must be at least 1 and at least one model must be listed.
+pub fn parse_mix(spec: &str) -> Result<Vec<(Model, u64)>> {
+    let mut mix: Vec<(Model, u64)> = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => {
+                let weight: u64 = w.trim().parse().map_err(|_| {
+                    Error::Config(format!("mix weight in '{part}' wants an integer"))
+                })?;
+                (n.trim(), weight)
+            }
+            None => (part, 1),
+        };
+        let model = Model::from_name(name)
+            .ok_or_else(|| Error::Config(format!("mix names unknown model '{name}'")))?;
+        if weight == 0 {
+            return Err(Error::Config(format!(
+                "mix weight for '{name}' must be at least 1"
+            )));
+        }
+        mix.push((model, weight));
+    }
+    if mix.is_empty() {
+        return Err(Error::Config("mix lists no models".into()));
+    }
+    Ok(mix)
+}
+
+/// Weighted random model pick from a parsed mix (weights are positive
+/// by [`parse_mix`]'s contract).
+pub fn pick_weighted(rng: &mut Rng, mix: &[(Model, u64)]) -> Model {
+    let total: u64 = mix.iter().map(|(_, w)| *w).sum();
+    let mut ticket = rng.bounded(total);
+    for (m, w) in mix {
+        if ticket < *w {
+            return *m;
+        }
+        ticket -= w;
+    }
+    unreachable!("ticket is bounded by the total weight");
+}
+
+/// Which quantization variant serves the request (precision ↔ artifact).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Variant {
     Fp32,
@@ -13,12 +64,29 @@ pub enum Variant {
 }
 
 impl Variant {
-    /// Artifact name for a given serving batch size.
-    pub fn artifact(&self, batch: usize) -> String {
+    /// Short lowercase tag used in artifact names and CLI flags.
+    pub fn tag(&self) -> &'static str {
         match self {
-            Variant::Fp32 => format!("cnn_fp32_b{batch}"),
-            Variant::Int8 => format!("cnn_int8_b{batch}"),
-            Variant::Int4 => format!("cnn_int4_b{batch}"),
+            Variant::Fp32 => "fp32",
+            Variant::Int8 => "int8",
+            Variant::Int4 => "int4",
+        }
+    }
+
+    /// Artifact name for a given serving batch size — the legacy
+    /// single-model naming, which is exactly [`Model::LeNet`]'s artifact
+    /// family (`cnn_*` — the names python/compile emits to disk).
+    pub fn artifact(&self, batch: usize) -> String {
+        format!("cnn_{}_b{batch}", self.tag())
+    }
+
+    /// Artifact name for a `(model, variant)` pair at a serving batch
+    /// size. LeNet keeps the on-disk `cnn_*` family; every other model
+    /// is namespaced by its model name (e.g. `vgg16_int4_b8`).
+    pub fn artifact_for(&self, model: Model, batch: usize) -> String {
+        match model {
+            Model::LeNet => self.artifact(batch),
+            m => format!("{}_{}_b{batch}", m.name(), self.tag()),
         }
     }
 
@@ -45,7 +113,10 @@ impl Variant {
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     pub id: u64,
-    /// Flattened image (image_size² × channels, NHWC).
+    /// Which CNN serves the request (see
+    /// [`SERVABLE_MODELS`](crate::cnn::models::SERVABLE_MODELS)).
+    pub model: Model,
+    /// Flattened image (`model.input_elems()` values, NHWC).
     pub image: Vec<f32>,
     pub variant: Variant,
     pub arrival: Instant,
@@ -71,6 +142,8 @@ pub struct SimMetering {
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
+    /// The model that served this request (batches are single-model).
+    pub model: Model,
     pub logits: Vec<f32>,
     pub predicted: usize,
     /// Wall time from arrival to the start of the batch's execution
@@ -89,6 +162,10 @@ pub struct InferenceResponse {
     pub instance: usize,
     /// Worker thread that executed the batch.
     pub worker: usize,
+    /// Formation sequence number of the batch that carried this request
+    /// (monotonic per engine) — responses with equal `batch_seq` rode
+    /// the same single-model batch.
+    pub batch_seq: u64,
 }
 
 impl InferenceResponse {
@@ -115,6 +192,52 @@ mod tests {
     }
 
     #[test]
+    fn artifact_names_per_model() {
+        // LeNet keeps the on-disk legacy family; other models namespace.
+        assert_eq!(Variant::Fp32.artifact_for(Model::LeNet, 8), "cnn_fp32_b8");
+        assert_eq!(
+            Variant::Int4.artifact_for(Model::Vgg16, 8),
+            "vgg16_int4_b8"
+        );
+        assert_eq!(
+            Variant::Int8.artifact_for(Model::ResNet18, 4),
+            "resnet18_int8_b4"
+        );
+    }
+
+    #[test]
+    fn mix_parsing() {
+        let mix = parse_mix("lenet:4,vgg16:1").unwrap();
+        assert_eq!(mix, vec![(Model::LeNet, 4), (Model::Vgg16, 1)]);
+        assert_eq!(parse_mix("resnet18").unwrap(), vec![(Model::ResNet18, 1)]);
+        assert_eq!(
+            parse_mix(" lenet : 2 , mobilenet ").unwrap(),
+            vec![(Model::LeNet, 2), (Model::MobileNet, 1)]
+        );
+        assert!(parse_mix("nope:1").is_err(), "unknown model");
+        assert!(parse_mix("lenet:0").is_err(), "zero weight");
+        assert!(parse_mix("lenet:x").is_err(), "non-integer weight");
+        assert!(parse_mix("").is_err(), "empty spec");
+    }
+
+    #[test]
+    fn weighted_pick_follows_the_mix() {
+        let mix = parse_mix("lenet:3,vgg16:1").unwrap();
+        let mut rng = Rng::new(1);
+        let (mut lenet, mut vgg) = (0u32, 0u32);
+        for _ in 0..4000 {
+            match pick_weighted(&mut rng, &mix) {
+                Model::LeNet => lenet += 1,
+                Model::Vgg16 => vgg += 1,
+                m => panic!("model {m:?} not in the mix"),
+            }
+        }
+        assert!(vgg > 0, "every listed model appears");
+        // ~3:1 split; an enormous margin at n=4000.
+        assert!(lenet > 2 * vgg, "lenet {lenet} vs vgg {vgg}");
+    }
+
+    #[test]
     fn variant_parse() {
         assert_eq!(Variant::parse("int4").unwrap(), Variant::Int4);
         assert!(Variant::parse("int2").is_err());
@@ -130,6 +253,7 @@ mod tests {
     fn total_is_queue_plus_exec() {
         let r = InferenceResponse {
             id: 0,
+            model: Model::LeNet,
             logits: vec![0.0; 4],
             predicted: 0,
             queue_ms: 1.5,
@@ -138,6 +262,7 @@ mod tests {
             sim: SimMetering::default(),
             instance: 0,
             worker: 0,
+            batch_seq: 0,
         };
         assert!((r.total_ms() - 3.5).abs() < 1e-12);
         assert!(r.form_ms <= r.queue_ms);

@@ -3,7 +3,13 @@
 //! A deployment can attach several OPIMA memory modules; the router
 //! tracks the simulated busy horizon of each and sends every batch to
 //! the instance that frees up first (the same policy a vLLM-style
-//! router applies to replicas).
+//! router applies to replicas). Reservations can be tagged with the
+//! model that booked them ([`Router::dispatch_for`]), so the simulated
+//! makespan is reportable per model as well as globally.
+
+use std::collections::HashMap;
+
+use crate::cnn::models::Model;
 
 /// Tracks per-instance simulated busy horizons.
 #[derive(Debug, Clone)]
@@ -12,6 +18,9 @@ pub struct Router {
     horizons: Vec<f64>,
     /// Batches dispatched per instance.
     dispatched: Vec<u64>,
+    /// Latest reservation end (ms) per tagging model — that model's
+    /// simulated makespan.
+    model_end: HashMap<Model, f64>,
 }
 
 impl Router {
@@ -20,6 +29,7 @@ impl Router {
         Self {
             horizons: vec![0.0; instances],
             dispatched: vec![0; instances],
+            model_end: HashMap::new(),
         }
     }
 
@@ -44,6 +54,16 @@ impl Router {
         (idx, start, end)
     }
 
+    /// [`Router::dispatch`] with the reservation tagged by the model the
+    /// batch serves, so [`Router::model_makespan_ms`] can report when the
+    /// simulated hardware finished that model's work.
+    pub fn dispatch_for(&mut self, model: Model, now_ms: f64, dur_ms: f64) -> (usize, f64, f64) {
+        let r = self.dispatch(now_ms, dur_ms);
+        let end = self.model_end.entry(model).or_insert(0.0);
+        *end = end.max(r.2);
+        r
+    }
+
     /// Per-instance dispatched-batch counts.
     pub fn load(&self) -> &[u64] {
         &self.dispatched
@@ -52,6 +72,17 @@ impl Router {
     /// Simulated makespan across instances.
     pub fn makespan_ms(&self) -> f64 {
         self.horizons.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Simulated makespan of one model's tagged reservations (0 when the
+    /// model never dispatched).
+    pub fn model_makespan_ms(&self, model: Model) -> f64 {
+        self.model_end.get(&model).copied().unwrap_or(0.0)
+    }
+
+    /// All per-model makespans recorded so far.
+    pub fn model_makespans(&self) -> &HashMap<Model, f64> {
+        &self.model_end
     }
 }
 
@@ -90,5 +121,20 @@ mod tests {
         let (_, s, e) = r.dispatch(100.0, 5.0);
         assert_eq!(s, 100.0);
         assert_eq!(e, 105.0);
+    }
+
+    #[test]
+    fn tagged_reservations_report_per_model_makespan() {
+        let mut r = Router::new(1);
+        r.dispatch_for(Model::LeNet, 0.0, 10.0);
+        r.dispatch_for(Model::Vgg16, 0.0, 30.0);
+        r.dispatch_for(Model::LeNet, 0.0, 10.0);
+        // Serialized on one instance: lenet [0,10], vgg [10,40],
+        // lenet [40,50].
+        assert_eq!(r.model_makespan_ms(Model::LeNet), 50.0);
+        assert_eq!(r.model_makespan_ms(Model::Vgg16), 40.0);
+        assert_eq!(r.makespan_ms(), 50.0);
+        assert_eq!(r.model_makespan_ms(Model::MobileNet), 0.0);
+        assert_eq!(r.model_makespans().len(), 2);
     }
 }

@@ -22,6 +22,7 @@
 
 use std::time::Duration;
 
+use crate::cnn::models::Model;
 use crate::config::OpimaConfig;
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse, Variant};
@@ -78,6 +79,27 @@ pub struct LatencyBreakdown {
     pub form: Summary,
 }
 
+/// One model's share of the serving statistics (multi-model engines
+/// serve several models from shared capacity; batches are single-model,
+/// so every row is exact, not apportioned).
+#[derive(Debug, Clone, Default)]
+pub struct ModelServingStats {
+    pub model: Model,
+    /// Responses served for this model.
+    pub served: u64,
+    /// Successfully executed batches carrying this model.
+    pub batches: u64,
+    /// Requests lost to failed batch executions of this model.
+    pub failed: u64,
+    /// Simulated hardware energy of this model's batches (mJ).
+    pub sim_energy_mj: f64,
+    /// Simulated hardware time at which this model's last batch finished
+    /// (ms) — its tagged makespan on the shared instances.
+    pub sim_makespan_ms: f64,
+    /// This model's streaming latency breakdown.
+    pub latency: LatencyBreakdown,
+}
+
 /// Aggregate serving statistics.
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
@@ -95,12 +117,19 @@ pub struct ServerStats {
     pub mean_exec_ms: f64,
     /// Mean wall time from arrival to batch formation (ms).
     pub mean_form_ms: f64,
-    /// Convenience copy of `latency.total.p50`.
+    /// Convenience copy of `latency.total.p50`, kept for API
+    /// compatibility (the CLI prints the `latency` table instead).
     pub p50_total_ms: f64,
-    /// Convenience copy of `latency.total.p99`.
+    /// Convenience copy of `latency.total.p99`, kept for API
+    /// compatibility (the CLI prints the `latency` table instead).
     pub p99_total_ms: f64,
     /// Full streaming percentile breakdown (total/queue/exec/form).
     pub latency: LatencyBreakdown,
+    /// Per-model breakdown (in
+    /// [`SERVABLE_MODELS`](crate::cnn::models::SERVABLE_MODELS) order,
+    /// models with no activity omitted). Served counts, batches, energy
+    /// and latency counts each sum to the global figures.
+    pub per_model: Vec<ModelServingStats>,
     pub throughput_rps: f64,
     /// Simulated hardware energy, summed once per executed batch (mJ) —
     /// zero-padded partial batches pay full-batch energy exactly once.
@@ -190,14 +219,20 @@ impl Server {
         self.engine.image_elems()
     }
 
+    /// Flattened per-image element count a request for `model` must
+    /// carry.
+    pub fn image_elems_for(&self, model: Model) -> usize {
+        self.engine.image_elems_for(model)
+    }
+
     pub fn batch_size(&self) -> usize {
         self.engine.batch_size()
     }
 
     fn sim_cost(&self, v: Variant) -> (f64, f64) {
         self.engine
-            .sim_cost(v.pim_bits())
-            .expect("all variants precomputed")
+            .sim_cost(Model::LeNet, v)
+            .expect("lenet plans build from the synthetic manifest")
     }
 
     /// Aggregate statistics over everything served so far.
@@ -230,8 +265,13 @@ mod tests {
     }
 
     fn req(id: u64, elems: usize, v: Variant) -> InferenceRequest {
+        req_for(id, Model::LeNet, elems, v)
+    }
+
+    fn req_for(id: u64, model: Model, elems: usize, v: Variant) -> InferenceRequest {
         InferenceRequest {
             id,
+            model,
             image: (0..elems).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect(),
             variant: v,
             arrival: Instant::now(),
@@ -368,6 +408,50 @@ mod tests {
     fn wrong_image_size_rejected() {
         let mut s = server(1);
         assert!(s.submit(req(0, 3, Variant::Int4)).is_err());
+    }
+
+    #[test]
+    fn serves_a_model_mix_with_per_model_stats() {
+        let mut s = server(1);
+        let bsz = s.batch_size() as u64;
+        // One full LeNet batch interleaved with one full MobileNet batch.
+        for i in 0..bsz {
+            s.submit(req(i, s.image_elems(), Variant::Int4)).unwrap();
+            s.submit(req_for(
+                bsz + i,
+                Model::MobileNet,
+                s.image_elems_for(Model::MobileNet),
+                Variant::Int4,
+            ))
+            .unwrap();
+        }
+        s.flush().unwrap();
+        let rs = s.drain_responses();
+        assert_eq!(rs.len(), 2 * bsz as usize);
+        // Batches are single-model: responses sharing a batch_seq share
+        // a model, and each response's logits match its model's head.
+        for r in &rs {
+            let width = match r.model {
+                Model::LeNet => 4,
+                Model::MobileNet => 1000,
+                m => panic!("unexpected model {m:?}"),
+            };
+            assert_eq!(r.logits.len(), width);
+        }
+        let stats = s.stats();
+        assert_eq!(stats.served, 2 * bsz);
+        assert_eq!(stats.batches, 2);
+        assert_eq!(stats.per_model.len(), 2);
+        let served_sum: u64 = stats.per_model.iter().map(|m| m.served).sum();
+        let batch_sum: u64 = stats.per_model.iter().map(|m| m.batches).sum();
+        let energy_sum: f64 = stats.per_model.iter().map(|m| m.sim_energy_mj).sum();
+        assert_eq!(served_sum, stats.served);
+        assert_eq!(batch_sum, stats.batches);
+        assert!((energy_sum - stats.sim_energy_mj).abs() < 1e-9 * stats.sim_energy_mj.max(1.0));
+        // MobileNet is the heavier model on the simulated hardware.
+        let find = |m: Model| stats.per_model.iter().find(|x| x.model == m).unwrap();
+        assert!(find(Model::MobileNet).sim_energy_mj > find(Model::LeNet).sim_energy_mj);
+        assert!(find(Model::MobileNet).sim_makespan_ms <= stats.sim_makespan_ms + 1e-12);
     }
 
     #[test]

@@ -1,21 +1,26 @@
 //! Worker threads of the serving engine.
 //!
 //! Each worker owns its own [`Executor`] (PJRT clients are not shared
-//! across threads; compile caches are warmed at engine startup), pulls
-//! formed batches from the shared batch channel, executes them, maps the
-//! batch onto a simulated OPIMA instance via the shared [`Router`],
-//! folds the batch's latency samples into its own streaming
-//! [`LatencyShard`] (fixed-memory histograms; `Engine::stats` merges the
-//! shards), and reports per-request responses plus the per-batch
-//! simulated cost back over the results channel.
+//! across threads; the LeNet compile caches are warmed at engine
+//! startup, other models compile on first batch), pulls formed batches
+//! from the shared batch channel, resolves each batch's `(model,
+//! variant)` through the shared [`PlanRegistry`] (plans build lazily,
+//! exactly once, under a per-key lock), executes the plan's program,
+//! maps the batch onto a simulated OPIMA instance via the shared
+//! [`Router`] (reservations tagged by model), folds the batch's latency
+//! samples into its own per-model streaming shard (fixed-memory
+//! histograms; `Engine::stats` merges the shards), and reports
+//! per-request responses plus the per-batch simulated cost back over
+//! the results channel.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::analyzer::simcost::SimCostTable;
+use crate::cnn::models::Model;
 use crate::coordinator::batcher::Batch;
-use crate::coordinator::engine::{lock, LatencyShard};
+use crate::coordinator::engine::{lock, WorkerShard};
+use crate::coordinator::registry::PlanRegistry;
 use crate::coordinator::request::{InferenceResponse, SimMetering};
 use crate::coordinator::router::Router;
 use crate::runtime::Executor;
@@ -25,21 +30,23 @@ pub(crate) struct WorkerCtx {
     pub id: usize,
     pub executor: Executor,
     pub batch_size: usize,
-    pub image_elems: usize,
+    pub registry: Arc<PlanRegistry>,
     pub router: Arc<Mutex<Router>>,
-    pub costs: Arc<SimCostTable>,
     /// Shared serving epoch (finalized by `Engine::new` after warmup, so
     /// the simulated-hardware clock and `wall_ms` share one origin).
     pub epoch: Arc<Mutex<Instant>>,
-    /// This worker's streaming latency histograms. Locked once per batch
-    /// here; contended only by a concurrent `Engine::stats` merge.
-    pub shard: Arc<Mutex<LatencyShard>>,
+    /// This worker's per-model streaming latency histograms. Locked once
+    /// per batch here; contended only by a concurrent `Engine::stats`
+    /// merge.
+    pub shard: Arc<Mutex<WorkerShard>>,
     pub rx: Arc<Mutex<Receiver<Batch>>>,
     pub tx: Sender<BatchOutcome>,
 }
 
 /// What one executed (or failed) batch sends to the stats sink.
 pub(crate) struct BatchOutcome {
+    /// The model the batch served (batches are single-model).
+    pub model: Model,
     pub responses: Vec<InferenceResponse>,
     /// Requests whose batch failed to execute (no responses for them).
     pub failed: u64,
@@ -61,48 +68,56 @@ pub(crate) fn worker_loop(mut ctx: WorkerCtx) {
     }
 }
 
+fn fail(batch: &Batch, error: String) -> BatchOutcome {
+    BatchOutcome {
+        model: batch.model,
+        responses: Vec::new(),
+        failed: batch.requests.len() as u64,
+        error: Some(error),
+        sim_energy_mj: 0.0,
+    }
+}
+
 fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
+    // Resolve the batch's compiled plan (lazy, cached, built exactly
+    // once across the pool). A model whose artifact or mapping is broken
+    // fails its batches loudly; other models keep serving.
+    let plan = match ctx.registry.resolve(batch.model, batch.variant) {
+        Ok(p) => p,
+        Err(e) => return fail(&batch, e.to_string()),
+    };
     let bsz = ctx.batch_size;
-    let elems = ctx.image_elems;
+    let elems = plan.image_elems();
     // Pack (and zero-pad) the fixed-shape batch input.
     let mut input = vec![0f32; bsz * elems];
     for (i, r) in batch.requests.iter().enumerate() {
+        if r.image.len() != elems {
+            return fail(
+                &batch,
+                format!(
+                    "request {} carries {} elems, plan wants {elems}",
+                    r.id,
+                    r.image.len()
+                ),
+            );
+        }
         input[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
     }
-    let artifact = batch.variant.artifact(bsz);
     let exec_start = Instant::now();
-    let logits = match ctx.executor.run_f32(&artifact, &[&input]) {
+    let logits = match ctx.executor.run_f32(&plan.program.name, &[&input]) {
         Ok(l) => l,
-        Err(e) => {
-            return BatchOutcome {
-                responses: Vec::new(),
-                failed: batch.requests.len() as u64,
-                error: Some(e.to_string()),
-                sim_energy_mj: 0.0,
-            }
-        }
+        Err(e) => return fail(&batch, e.to_string()),
     };
     let exec_ms = exec_start.elapsed().as_secs_f64() * 1e3;
     let classes = logits.len() / bsz;
 
     // Simulated hardware metering: dispatch this *real* batch onto the
-    // least-loaded simulated OPIMA instance's busy horizon. A missing
-    // cost entry is a bug (the engine precomputes every variant) — fail
-    // the batch loudly rather than silently metering zero.
-    let Some((sim_lat, sim_mj)) = ctx.costs.get(batch.variant.pim_bits()) else {
-        return BatchOutcome {
-            responses: Vec::new(),
-            failed: batch.requests.len() as u64,
-            error: Some(format!(
-                "no precomputed sim cost for {}-bit batches",
-                batch.variant.pim_bits()
-            )),
-            sim_energy_mj: 0.0,
-        };
-    };
+    // least-loaded simulated OPIMA instance's busy horizon, tagged with
+    // the model so makespan is reportable per model.
+    let (sim_lat, sim_mj) = plan.sim_cost();
     let epoch = *lock(&ctx.epoch);
     let now_ms = exec_start.saturating_duration_since(epoch).as_secs_f64() * 1e3;
-    let instance = lock(&ctx.router).dispatch(now_ms, sim_lat).0;
+    let instance = lock(&ctx.router).dispatch_for(batch.model, now_ms, sim_lat).0;
 
     let mut responses = Vec::with_capacity(batch.requests.len());
     for (i, r) in batch.requests.iter().enumerate() {
@@ -115,6 +130,7 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
             .unwrap_or(0);
         responses.push(InferenceResponse {
             id: r.id,
+            model: batch.model,
             logits: row.to_vec(),
             predicted,
             queue_ms: exec_start.saturating_duration_since(r.arrival).as_secs_f64() * 1e3,
@@ -130,18 +146,20 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
             },
             instance,
             worker: ctx.id,
+            batch_seq: batch.seq,
         });
     }
-    // Record latencies into this worker's shard *before* handing the
-    // outcome to the collector: once `drain` observes the completion,
-    // the streaming aggregates already include it.
+    // Record latencies into this worker's per-model shard *before*
+    // handing the outcome to the collector: once `drain` observes the
+    // completion, the streaming aggregates already include it.
     {
         let mut shard = lock(&ctx.shard);
         for r in &responses {
-            shard.record(r);
+            shard.record(batch.model, r);
         }
     }
     BatchOutcome {
+        model: batch.model,
         responses,
         failed: 0,
         error: None,

@@ -19,23 +19,32 @@
 //!   command scheduling; the NVMain substitute).
 //! - [`pim`] — the PIM engine: subarray groups, MDL arrays, WDM/MDM MAC
 //!   scheduling, aggregation unit, TDM bit-width bridging (paper §IV.C).
-//! - [`cnn`] — CNN graph IR and the five evaluation models (Table II).
+//! - [`cnn`] — CNN graph IR, the five evaluation models (Table II) and
+//!   the tiny served LeNet, with the static serving metadata the
+//!   coordinator validates requests against.
 //! - [`mapper`] — CNN → PIM mapping: input-stationary convs,
 //!   weight-stationary FC, 1×1-kernel serialization (paper §IV.D).
 //! - [`analyzer`] — latency/energy/power roll-up, EPB and FPS/W metrics
 //!   (Figs. 7–12).
 //! - [`baselines`] — NP100 / E7742 / ORIN rooflines, PRIME, CrossLight,
 //!   PhPIM comparison models (paper §V).
-//! - [`coordinator`] — the concurrent serving engine: bounded ingress
-//!   queue with backpressure → batcher thread (size- *and* idle-safe
-//!   deadline-triggered flushes) → worker pool (one warmed PJRT executor
-//!   per worker) → bounded stats sink, with graceful drain/shutdown; the
-//!   router maps real batches onto simulated OPIMA instance horizons,
-//!   and a synchronous `Server` facade preserves the seed call-loop API
-//!   with a by-value response API. Observability is streaming: per-worker
-//!   log-bucketed latency histograms merged in O(buckets) by `stats()`,
-//!   and a fixed-capacity ring of recent responses — memory stays
-//!   constant over unbounded request streams.
+//! - [`coordinator`] — the concurrent *multi-model* serving engine:
+//!   bounded ingress queue with backpressure → batcher thread (one
+//!   queue per `(model, variant)` pair, size- *and* idle-safe
+//!   deadline-triggered flushes, round-robin fairness across models,
+//!   batches never mixed) → worker pool (one PJRT executor per worker;
+//!   every batch resolves through the shared `PlanRegistry`, a lazily
+//!   built per-`(model, variant)` cache of mapper plan + sim-cost table
+//!   + executor program, compiled exactly once under a per-key lock) →
+//!   bounded stats sink, with graceful drain/shutdown; the router maps
+//!   real batches onto simulated OPIMA instance horizons with
+//!   reservations tagged per model, and a synchronous `Server` facade
+//!   preserves the seed call-loop API with a by-value response API.
+//!   Observability is streaming and per-model: per-worker log-bucketed
+//!   latency histograms merged in O(models × buckets) by `stats()`
+//!   (global + per-model breakdowns), and a fixed-capacity ring of
+//!   recent responses — memory stays constant over unbounded request
+//!   streams.
 //! - [`runtime`] — artifact loading/execution: PJRT (`xla` crate,
 //!   feature `pjrt`) or a deterministic sim backend for environments
 //!   without the XLA native library or AOT artifacts.

@@ -43,6 +43,28 @@ pub const MIN_TRACKABLE_MS: f64 = 9.5367431640625e-7; // 2^-20
 
 /// Streaming latency histogram: fixed `BUCKETS`-sized memory regardless
 /// of how many samples are recorded.
+///
+/// ```
+/// use opima::util::histogram::Histogram;
+///
+/// let mut h = Histogram::new();
+/// for v in [1.0, 2.0, 4.0] {
+///     h.record(v);
+/// }
+/// assert_eq!(h.count(), 3);
+/// assert!((h.mean() - 7.0 / 3.0).abs() < 1e-12); // mean is exact
+/// assert_eq!(h.min(), 1.0);
+/// assert_eq!(h.max(), 4.0);
+/// // Nearest-rank p50 of {1, 2, 4} is 2, within the bucketing error.
+/// assert!((h.percentile(0.5) - 2.0).abs() <= 2.0 * Histogram::MAX_REL_ERROR);
+///
+/// // Shards merge in O(buckets) — the serving engine's stats path.
+/// let mut other = Histogram::new();
+/// other.record(8.0);
+/// h.merge(&other);
+/// assert_eq!(h.summary().count, 4);
+/// assert_eq!(h.max(), 8.0);
+/// ```
 #[derive(Debug, Clone)]
 pub struct Histogram {
     counts: Vec<u64>,

@@ -9,6 +9,21 @@
 use std::collections::VecDeque;
 
 /// A bounded FIFO: pushing beyond capacity evicts the oldest item.
+///
+/// ```
+/// use opima::util::ring::Ring;
+///
+/// let mut r = Ring::new(2);
+/// r.push("a");
+/// r.push("b");
+/// r.push("c"); // evicts "a"
+/// assert_eq!(r.to_vec(), vec!["b", "c"]);
+/// assert_eq!(r.len(), 2);
+/// assert_eq!(r.pushed(), 3);    // sequence numbers keep counting
+/// assert_eq!(r.first_seq(), 1); // "a" (seq 0) was evicted
+/// // Tail everything at or after sequence 2:
+/// assert_eq!(r.since(2), vec!["c"]);
+/// ```
 #[derive(Debug, Clone)]
 pub struct Ring<T> {
     buf: VecDeque<T>,

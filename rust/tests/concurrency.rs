@@ -7,6 +7,7 @@
 use std::collections::HashSet;
 use std::time::{Duration, Instant};
 
+use opima::cnn::Model;
 use opima::coordinator::engine::{Engine, EngineConfig};
 use opima::coordinator::request::{InferenceRequest, Variant};
 use opima::runtime::{ExecutorSpec, Manifest};
@@ -35,6 +36,7 @@ fn req(id: u64) -> InferenceRequest {
     };
     InferenceRequest {
         id,
+        model: Model::LeNet,
         image: (0..144).map(|i| ((id as usize + i) % 11) as f32 * 0.1).collect(),
         variant,
         arrival: Instant::now(),

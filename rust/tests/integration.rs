@@ -189,6 +189,7 @@ fn serving_path_end_to_end() {
         server
             .submit(InferenceRequest {
                 id,
+                model: opima::cnn::Model::LeNet,
                 image: image.clone(),
                 variant: Variant::Fp32,
                 arrival: Instant::now(),

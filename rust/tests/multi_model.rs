@@ -1,0 +1,210 @@
+//! Multi-model serving invariants over the pipelined engine and the
+//! shared plan/cost registry (ISSUE 3 acceptance tests):
+//!
+//! (a) concurrent first-submissions of the same `(model, variant)` pair
+//!     compile its plan exactly once,
+//! (b) batches are never formed across models, and
+//! (c) per-model served counts sum to the global count.
+//!
+//! Everything runs on the deterministic sim executor backend with a
+//! synthetic manifest, so the full queue → batcher → worker-pool → sink
+//! pipeline is exercised in any environment — no PJRT, no artifacts.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use opima::cnn::Model;
+use opima::coordinator::engine::{Engine, EngineConfig};
+use opima::coordinator::registry::{augment_manifest, PlanRegistry};
+use opima::coordinator::request::{InferenceRequest, Variant};
+use opima::runtime::{ExecutorSpec, Manifest};
+use opima::OpimaConfig;
+
+fn engine(workers: usize) -> Engine {
+    Engine::new(
+        EngineConfig {
+            workers,
+            queue_capacity: 256,
+            instances: 2,
+            max_wait: Duration::from_millis(1),
+            executor: ExecutorSpec::Sim { work_factor: 1 },
+            history: 4096,
+            ..EngineConfig::default()
+        },
+        Manifest::synthetic(8, 12),
+    )
+    .unwrap()
+}
+
+fn req(id: u64, model: Model, variant: Variant) -> InferenceRequest {
+    let elems = model.input_elems();
+    InferenceRequest {
+        id,
+        model,
+        image: (0..elems).map(|i| ((id as usize + i) % 13) as f32 * 0.1).collect(),
+        variant,
+        arrival: Instant::now(),
+    }
+}
+
+/// (a), registry-level: N threads racing the first resolution of one
+/// pair share exactly one build, and a different pair builds separately.
+#[test]
+fn racing_resolutions_compile_exactly_once() {
+    let mut manifest = Manifest::synthetic(8, 12);
+    augment_manifest(&mut manifest);
+    let registry = Arc::new(PlanRegistry::new(OpimaConfig::paper(), manifest));
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let registry = Arc::clone(&registry);
+            s.spawn(move || {
+                let plan = registry.resolve(Model::ResNet18, Variant::Int4).unwrap();
+                assert_eq!(plan.model, Model::ResNet18);
+                assert_eq!(plan.classes(), 100);
+            });
+        }
+    });
+    assert_eq!(registry.builds(), 1, "8 racing threads, one build");
+    registry.resolve(Model::ResNet18, Variant::Int8).unwrap();
+    assert_eq!(registry.builds(), 2, "a distinct pair builds once more");
+}
+
+/// (a), engine-level: multi-producer mixed traffic over a racing worker
+/// pool compiles each distinct `(model, variant)` pair exactly once.
+#[test]
+fn engine_compiles_each_pair_exactly_once_under_concurrency() {
+    let producers = 4u64;
+    let per = 32u64;
+    let mut e = engine(4);
+    std::thread::scope(|s| {
+        for p in 0..producers {
+            let eref = &e;
+            s.spawn(move || {
+                for i in 0..per {
+                    let id = p * per + i;
+                    // Three distinct pairs, interleaved from every
+                    // producer so first-submissions race.
+                    let (model, variant) = match id % 3 {
+                        0 => (Model::LeNet, Variant::Int4),
+                        1 => (Model::LeNet, Variant::Int8),
+                        _ => (Model::ResNet18, Variant::Int4),
+                    };
+                    eref.submit_blocking(req(id, model, variant)).unwrap();
+                }
+            });
+        }
+    });
+    e.drain().unwrap();
+    assert_eq!(e.completed(), producers * per);
+    assert_eq!(
+        e.registry().builds(),
+        3,
+        "3 distinct (model, variant) pairs → exactly 3 plan builds"
+    );
+    e.shutdown().unwrap();
+}
+
+/// (b): responses sharing a batch carry one model — batches never form
+/// across models (or variants), even with interleaved arrivals.
+#[test]
+fn batches_are_never_formed_across_models() {
+    let mut e = engine(2);
+    // Strictly interleaved arrivals: lenet, resnet, lenet, resnet, …
+    // A batcher that ignored the model would happily mix these.
+    let n = 64u64;
+    for id in 0..n {
+        let model = if id % 2 == 0 { Model::LeNet } else { Model::ResNet18 };
+        e.submit_blocking(req(id, model, Variant::Int4)).unwrap();
+    }
+    e.drain().unwrap();
+    let rs = e.responses();
+    assert_eq!(rs.len(), n as usize);
+    let mut by_batch: HashMap<u64, Vec<&opima::coordinator::InferenceResponse>> = HashMap::new();
+    for r in &rs {
+        by_batch.entry(r.batch_seq).or_default().push(r);
+    }
+    for (seq, group) in &by_batch {
+        let model = group[0].model;
+        assert!(
+            group.iter().all(|r| r.model == model),
+            "batch {seq} mixes models"
+        );
+        // And the payload matches the model's classifier head.
+        let classes = model.classes();
+        assert!(group.iter().all(|r| r.logits.len() == classes));
+        assert!(group.len() <= e.batch_size());
+    }
+    // The requests parity-split ids by model; verify responses agree.
+    for r in &rs {
+        let expect = if r.id % 2 == 0 { Model::LeNet } else { Model::ResNet18 };
+        assert_eq!(r.model, expect, "response {} served by wrong model", r.id);
+    }
+    e.shutdown().unwrap();
+}
+
+/// (c): the per-model breakdown partitions the global stats — served
+/// counts, batches and sim energy all sum to the totals.
+#[test]
+fn per_model_served_counts_sum_to_global() {
+    let mut e = engine(2);
+    let n = 96u64;
+    for id in 0..n {
+        let model = match id % 4 {
+            0 | 1 => Model::LeNet, // lenet:2, resnet:1, mobilenet:1
+            2 => Model::ResNet18,
+            _ => Model::MobileNet,
+        };
+        e.submit_blocking(req(id, model, Variant::Int4)).unwrap();
+    }
+    e.drain().unwrap();
+    let s = e.stats();
+    assert_eq!(s.served, n);
+    assert_eq!(s.failed, 0);
+    assert_eq!(s.per_model.len(), 3, "three active models");
+
+    let served_sum: u64 = s.per_model.iter().map(|m| m.served).sum();
+    let batch_sum: u64 = s.per_model.iter().map(|m| m.batches).sum();
+    let failed_sum: u64 = s.per_model.iter().map(|m| m.failed).sum();
+    let energy_sum: f64 = s.per_model.iter().map(|m| m.sim_energy_mj).sum();
+    assert_eq!(served_sum, s.served, "per-model served partitions global");
+    assert_eq!(batch_sum, s.batches, "per-model batches partition global");
+    assert_eq!(failed_sum, s.failed);
+    assert!(
+        (energy_sum - s.sim_energy_mj).abs() <= 1e-9 * s.sim_energy_mj.max(1.0),
+        "per-model energy {energy_sum} != global {}",
+        s.sim_energy_mj
+    );
+
+    // Exact per-model counts follow the submitted mix.
+    let served_of = |m: Model| {
+        s.per_model
+            .iter()
+            .find(|x| x.model == m)
+            .map(|x| x.served)
+            .unwrap_or(0)
+    };
+    assert_eq!(served_of(Model::LeNet), n / 2);
+    assert_eq!(served_of(Model::ResNet18), n / 4);
+    assert_eq!(served_of(Model::MobileNet), n / 4);
+
+    // Per-model latency shards cover exactly that model's responses,
+    // and every model's tagged makespan is within the global one.
+    for m in &s.per_model {
+        assert_eq!(m.latency.total.count, m.served);
+        assert!(m.latency.total.p50 <= m.latency.total.p99 + 1e-12);
+        assert!(m.sim_makespan_ms > 0.0);
+        assert!(m.sim_makespan_ms <= s.sim_makespan_ms + 1e-12);
+        assert!(m.sim_energy_mj > 0.0);
+    }
+    // The heaviest model dominates the simulated energy bill.
+    let energy_of = |m: Model| {
+        s.per_model
+            .iter()
+            .find(|x| x.model == m)
+            .map(|x| x.sim_energy_mj)
+            .unwrap_or(0.0)
+    };
+    assert!(energy_of(Model::ResNet18) > energy_of(Model::LeNet));
+    e.shutdown().unwrap();
+}

@@ -5,6 +5,7 @@
 //! same randomized-invariant methodology, with seeds printed on failure.
 
 use opima::cnn::layer::{Layer, TensorShape};
+use opima::cnn::Model;
 use opima::config::{Geometry, OpimaConfig};
 use opima::coordinator::batcher::DynamicBatcher;
 use opima::coordinator::request::{InferenceRequest, Variant};
@@ -120,10 +121,11 @@ fn prop_levels_roundtrip() {
 }
 
 /// PROPERTY: the batcher never loses or duplicates a request, never
-/// exceeds the batch size, and never mixes variants.
+/// exceeds the batch size, and never mixes variants — or models.
 #[test]
 fn prop_batcher_conservation() {
     let mut rng = Rng::new(21);
+    let models = [Model::LeNet, Model::ResNet18, Model::Vgg16];
     for case in 0..50 {
         let max_batch = 1 + rng.index(16);
         let n = 1 + rng.index(200);
@@ -137,6 +139,7 @@ fn prop_batcher_conservation() {
             };
             if let Some(batch) = b.push(InferenceRequest {
                 id,
+                model: models[rng.index(models.len())],
                 image: vec![],
                 variant,
                 arrival: std::time::Instant::now(),
@@ -146,11 +149,16 @@ fn prop_batcher_conservation() {
                     batch.requests.iter().all(|r| r.variant == batch.variant),
                     "case {case}: mixed variants"
                 );
+                assert!(
+                    batch.requests.iter().all(|r| r.model == batch.model),
+                    "case {case}: mixed models"
+                );
                 seen.extend(batch.requests.iter().map(|r| r.id));
             }
         }
         for batch in b.drain() {
             assert!(batch.requests.len() <= max_batch);
+            assert!(batch.requests.iter().all(|r| r.model == batch.model));
             seen.extend(batch.requests.iter().map(|r| r.id));
         }
         seen.sort();

@@ -9,6 +9,7 @@
 
 use std::time::{Duration, Instant};
 
+use opima::cnn::Model;
 use opima::coordinator::engine::{Engine, EngineConfig};
 use opima::coordinator::request::{InferenceRequest, Variant};
 use opima::runtime::{ExecutorSpec, Manifest};
@@ -71,6 +72,7 @@ fn req(id: u64) -> InferenceRequest {
     };
     InferenceRequest {
         id,
+        model: Model::LeNet,
         image: (0..144).map(|i| ((id as usize + i) % 11) as f32 * 0.1).collect(),
         variant,
         arrival: Instant::now(),
