@@ -1,10 +1,14 @@
 //! Hot-path micro/macro benchmarks (§Perf): the components on the
 //! serving and analysis critical paths, plus the end-to-end PJRT
 //! execution of the AOT artifacts.
+//!
+//! Results are printed as a table *and* written to `BENCH_hotpath.json`
+//! (schema: `util::bench::JsonReport`). `OPIMA_BENCH_SMOKE=1` runs one
+//! sample per measurement so CI can validate the JSON schema cheaply.
 
 use std::time::Instant;
 
-use opima::analyzer::analyze_model;
+use opima::analyzer::{analyze_model, simulate_analysis};
 use opima::cnn::{build_model, Model};
 use opima::coordinator::batcher::DynamicBatcher;
 use opima::coordinator::request::{InferenceRequest, Variant};
@@ -13,12 +17,13 @@ use opima::mapper::map_network;
 use opima::memory::MemoryController;
 use opima::pim::PimScheduler;
 use opima::runtime::{Executor, Manifest};
-use opima::util::bench::{black_box, measure};
+use opima::util::bench::{black_box, measure, scaled, JsonReport};
 use opima::util::prng::Rng;
 use opima::OpimaConfig;
 
 fn main() {
     let cfg = OpimaConfig::paper();
+    let mut report = JsonReport::new("hotpath");
 
     // --- analyzer path --------------------------------------------------
     let nets: Vec<_> = [Model::ResNet18, Model::Vgg16]
@@ -26,32 +31,38 @@ fn main() {
         .map(|&m| build_model(m).unwrap())
         .collect();
     for net in &nets {
-        measure(&format!("analyze/{}_4b", net.name), 3, 100, || {
+        report.add_stats(&measure(&format!("analyze/{}_4b", net.name), 3, scaled(100), || {
             black_box(analyze_model(&cfg, net, 4).unwrap());
-        });
+        }));
     }
-    measure("mapper/map_resnet18", 3, 200, || {
+    report.add_stats(&measure("mapper/map_resnet18", 3, scaled(200), || {
         black_box(map_network(&cfg, &nets[0], 4).unwrap());
-    });
+    }));
     let mapped = map_network(&cfg, &nets[0], 4).unwrap();
     let sched = PimScheduler::new(&cfg).unwrap();
-    measure("scheduler/cost_network_resnet18", 3, 200, || {
+    report.add_stats(&measure("scheduler/cost_network_resnet18", 3, scaled(200), || {
         black_box(sched.cost_network(&mapped.works).unwrap());
-    });
+    }));
+    // The pipelined batch timeline (the registry caches these per
+    // (model, variant, batch); this is the cold cost of one schedule).
+    let analysis = analyze_model(&cfg, &nets[0], 4).unwrap();
+    report.add_stats(&measure("timeline/resnet18_batch32", 3, scaled(200), || {
+        black_box(simulate_analysis(&cfg, &analysis, 32));
+    }));
 
     // --- memory simulator hot loop ---------------------------------------
     let mut mem = MemoryController::new(&cfg).unwrap();
     let data = vec![0xA5u8; 128];
     let mut addr = 0u64;
-    measure("memory/write128_read128", 10, 2000, || {
+    report.add_stats(&measure("memory/write128_read128", 10, scaled(2000), || {
         addr = (addr + 4096) % (1 << 28);
         mem.write(addr, &data).unwrap();
         black_box(mem.read(addr, 128).unwrap());
-    });
+    }));
 
     // --- coordinator components ------------------------------------------
     let mut rng = Rng::new(1);
-    measure("batcher/push_flush_batch8", 10, 2000, || {
+    report.add_stats(&measure("batcher/push_flush_batch8", 10, scaled(2000), || {
         let mut b = DynamicBatcher::new(8, std::time::Duration::from_millis(2));
         for id in 0..8u64 {
             let out = b.push(InferenceRequest {
@@ -66,13 +77,19 @@ fn main() {
                 black_box(out);
             }
         }
-    });
-    measure("router/dispatch_1k", 5, 500, || {
+    }));
+    report.add_stats(&measure("router/dispatch_1k", 5, scaled(500), || {
         let mut r = Router::new(4);
         for i in 0..1000 {
             black_box(r.dispatch(i as f64, 1.5));
         }
-    });
+    }));
+    report.add_stats(&measure("router/dispatch_for_occupancy_1k", 5, scaled(500), || {
+        let mut r = Router::with_capacity(4, 16_384);
+        for i in 0..1000 {
+            black_box(r.dispatch_for(Model::ResNet18, 400, i as f64, 1.5));
+        }
+    }));
 
     // --- streaming stats (the engine's observe path) ----------------------
     use opima::util::histogram::Histogram;
@@ -80,26 +97,26 @@ fn main() {
         let mut r = Rng::new(99);
         (0..10_000).map(|_| (r.normal() * 1.2 + 1.0).exp()).collect()
     };
-    measure("histogram/record_10k", 3, 200, || {
+    report.add_stats(&measure("histogram/record_10k", 3, scaled(200), || {
         let mut h = Histogram::new();
         for &v in &lat_samples {
             h.record(v);
         }
         black_box(h.count());
-    });
+    }));
     let mut shards = vec![Histogram::new(); 4];
     for (i, &v) in lat_samples.iter().enumerate() {
         shards[i % 4].record(v);
     }
     // What Engine::stats pays per snapshot: merge the worker shards and
     // extract the percentile summary — O(buckets), served-count-free.
-    measure("histogram/merge_4_shards_summary", 3, 500, || {
+    report.add_stats(&measure("histogram/merge_4_shards_summary", 3, scaled(500), || {
         let mut agg = Histogram::new();
         for s in &shards {
             agg.merge(s);
         }
         black_box(agg.summary());
-    });
+    }));
 
     // --- PJRT end-to-end ---------------------------------------------------
     let dir = Manifest::default_dir();
@@ -113,16 +130,31 @@ fn main() {
         // those timings as "pjrt/..." would misattribute them.
         let plat = ex.platform();
         ex.run_f32("photonic_mac_4b", &[&a, &w]).unwrap(); // compile outside timing
-        measure(&format!("{plat}/photonic_mac_4b_64x128x64"), 5, 200, || {
-            black_box(ex.run_f32("photonic_mac_4b", &[&a, &w]).unwrap());
-        });
+        report.add_stats(&measure(
+            &format!("{plat}/photonic_mac_4b_64x128x64"),
+            5,
+            scaled(200),
+            || {
+                black_box(ex.run_f32("photonic_mac_4b", &[&a, &w]).unwrap());
+            },
+        ));
         let cnn = ex.manifest().get("cnn_int4_b8").unwrap().clone();
         let x = vec![0.5f32; cnn.input_elems(0)];
         ex.run_f32("cnn_int4_b8", &[&x]).unwrap();
-        measure(&format!("{plat}/cnn_int4_b8_batch8"), 5, 100, || {
-            black_box(ex.run_f32("cnn_int4_b8", &[&x]).unwrap());
-        });
+        report.add_stats(&measure(
+            &format!("{plat}/cnn_int4_b8_batch8"),
+            5,
+            scaled(100),
+            || {
+                black_box(ex.run_f32("cnn_int4_b8", &[&x]).unwrap());
+            },
+        ));
     } else {
         println!("(skipping PJRT benches: run `make artifacts`)");
+    }
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("WARNING: could not write bench JSON: {e}"),
     }
 }

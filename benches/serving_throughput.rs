@@ -16,20 +16,36 @@ use opima::coordinator::batcher::DynamicBatcher;
 use opima::coordinator::engine::{Engine, EngineConfig};
 use opima::coordinator::request::{InferenceRequest, Variant};
 use opima::runtime::{Executor, ExecutorSpec, Manifest};
-use opima::util::bench::{table_header, table_row};
+use opima::util::bench::{smoke, table_header, table_row, JsonReport};
+use opima::util::json::Json;
 use opima::util::prng::Rng;
 
 /// Sim backend work factor: ~2 ms per batch on a laptop-class core, so
-/// a 512-request run keeps the worker pool genuinely busy.
-const WORK: u32 = 400;
-const N_REQUESTS: usize = 512;
+/// a 512-request run keeps the worker pool genuinely busy. Smoke mode
+/// (`OPIMA_BENCH_SMOKE=1`) shrinks the run to a schema check.
+fn work() -> u32 {
+    if smoke() {
+        2
+    } else {
+        400
+    }
+}
+
+fn n_requests() -> usize {
+    if smoke() {
+        64
+    } else {
+        512
+    }
+}
+
 const PRODUCERS: usize = 4;
 const BATCH: usize = 8;
 const IMAGE: usize = 12;
 
 fn requests() -> Vec<InferenceRequest> {
     let mut rng = Rng::new(4242);
-    (0..N_REQUESTS as u64)
+    (0..n_requests() as u64)
         .map(|id| {
             let variant = match id % 3 {
                 0 => Variant::Fp32,
@@ -51,7 +67,7 @@ fn requests() -> Vec<InferenceRequest> {
 /// on the submitting thread, deadline flushes piggybacking on submits.
 fn sync_seed_path(manifest: &Manifest) -> f64 {
     let mut ex =
-        Executor::from_spec(ExecutorSpec::Sim { work_factor: WORK }, manifest.clone()).unwrap();
+        Executor::from_spec(ExecutorSpec::Sim { work_factor: work() }, manifest.clone()).unwrap();
     let mut batcher = DynamicBatcher::new(BATCH, Duration::from_millis(2));
     let elems = IMAGE * IMAGE;
     let mut served = 0usize;
@@ -78,7 +94,7 @@ fn sync_seed_path(manifest: &Manifest) -> f64 {
     for batch in batcher.drain() {
         served += run(&mut ex, batch);
     }
-    assert_eq!(served, N_REQUESTS);
+    assert_eq!(served, n_requests());
     served as f64 / t0.elapsed().as_secs_f64()
 }
 
@@ -93,14 +109,14 @@ fn engine_path(manifest: &Manifest, workers: usize) -> (f64, f64, f64) {
             queue_capacity: 256,
             instances: workers,
             max_wait: Duration::from_millis(2),
-            executor: ExecutorSpec::Sim { work_factor: WORK },
+            executor: ExecutorSpec::Sim { work_factor: work() },
             ..EngineConfig::default()
         },
         manifest.clone(),
     )
     .unwrap();
     let reqs = requests();
-    let chunk = N_REQUESTS / PRODUCERS;
+    let chunk = n_requests() / PRODUCERS;
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for slice in reqs.chunks(chunk) {
@@ -117,7 +133,7 @@ fn engine_path(manifest: &Manifest, workers: usize) -> (f64, f64, f64) {
     engine.drain().unwrap();
     let elapsed = t0.elapsed().as_secs_f64();
     let stats = engine.stats();
-    assert_eq!(stats.served as usize, N_REQUESTS);
+    assert_eq!(stats.served as usize, n_requests());
     engine.shutdown().unwrap();
     (
         stats.served as f64 / elapsed,
@@ -129,8 +145,11 @@ fn engine_path(manifest: &Manifest, workers: usize) -> (f64, f64, f64) {
 fn main() {
     let manifest = Manifest::synthetic(BATCH, IMAGE);
     println!(
-        "serving throughput: {N_REQUESTS} mixed-variant requests, batch {BATCH}, \
-         {PRODUCERS} producers, sim work factor {WORK}"
+        "serving throughput: {} mixed-variant requests, batch {BATCH}, \
+         {PRODUCERS} producers, sim work factor {}{}",
+        n_requests(),
+        work(),
+        if smoke() { " (smoke mode)" } else { "" }
     );
 
     let sync_rps = sync_seed_path(&manifest);
@@ -160,6 +179,25 @@ fn main() {
             p99,
         ]);
     }
+    // Machine-readable summary alongside the table.
+    let mut report = JsonReport::new("serving_throughput");
+    for (name, rps, pcts) in &rows {
+        let mut fields = vec![
+            ("req_per_s", Json::Num(*rps)),
+            ("vs_sync", Json::Num(rps / sync_rps)),
+            ("requests", Json::Num(n_requests() as f64)),
+        ];
+        if let Some((p50, p99)) = pcts {
+            fields.push(("p50_ms", Json::Num(*p50)));
+            fields.push(("p99_ms", Json::Num(*p99)));
+        }
+        report.add(name, &fields);
+    }
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nWARNING: could not write bench JSON: {e}"),
+    }
+
     let best = rows[1..].iter().map(|(_, r, _)| *r).fold(0.0f64, f64::max);
     // Report, don't assert: on 1-2 vCPU machines the pool can legitimately
     // tie the zero-handoff inline loop, and a panic would eat the table.

@@ -24,6 +24,16 @@ cargo build --release --examples
 echo "== cargo bench --no-run =="
 cargo bench --no-run
 
+# The JSON-emitting benches run in smoke mode (1 sample, tiny load) so
+# the BENCH_<name>.json schema cannot rot without CI noticing.
+echo "== bench JSON emitters (smoke mode) =="
+OPIMA_BENCH_SMOKE=1 cargo bench --bench hotpath
+OPIMA_BENCH_SMOKE=1 cargo bench --bench serving_throughput
+for f in BENCH_hotpath.json BENCH_serving_throughput.json; do
+  test -s "$f" || { echo "missing bench summary $f"; exit 1; }
+  grep -q '"results":\[' "$f" || { echo "bad schema in $f"; exit 1; }
+done
+
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 

@@ -3,7 +3,7 @@
 use crate::cnn::graph::Network;
 use crate::config::OpimaConfig;
 use crate::error::Result;
-use crate::mapper::plan::{map_network, MappedNetwork};
+use crate::mapper::plan::{map_network, MappedNetwork, Occupancy};
 use crate::pim::scheduler::{LayerCost, PimScheduler};
 
 /// Full analysis of one (model, bit-width) pair on OPIMA.
@@ -20,6 +20,10 @@ pub struct ModelAnalysis {
     pub dynamic_mj: f64,
     /// Total MACs.
     pub macs: u64,
+    /// Subarray occupancy of the mapping vs. the geometry's capacity —
+    /// drives the timeline's pipelining decision and the serving-path
+    /// capacity warnings.
+    pub occupancy: Occupancy,
 }
 
 impl ModelAnalysis {
@@ -60,6 +64,7 @@ pub fn analyze_mapped(
         writeback_ms,
         dynamic_mj,
         macs: mapped.works.iter().map(|w| w.macs).sum(),
+        occupancy: mapped.occupancy(&cfg.geometry),
     })
 }
 

@@ -3,7 +3,10 @@
 //!
 //! Rolls the PIM scheduler's per-layer costs into the quantities the
 //! paper reports: latency breakdowns (Fig. 9/10), the power envelope
-//! (Fig. 8), energy-per-bit (Fig. 11) and FPS/W (Fig. 12).
+//! (Fig. 8), energy-per-bit (Fig. 11) and FPS/W (Fig. 12) — and, since
+//! the timeline refactor, schedules whole batches as discrete events
+//! against resource pools ([`timeline`]) so batch latency reflects
+//! pipelining instead of the old `batch ×` analytical scaling.
 
 pub mod energy;
 pub mod latency;
@@ -11,8 +14,10 @@ pub mod metrics;
 pub mod power;
 pub mod report;
 pub mod simcost;
+pub mod timeline;
 
 pub use latency::{analyze_model, ModelAnalysis};
 pub use metrics::PlatformResult;
 pub use power::{power_breakdown, PowerBreakdown};
 pub use simcost::{SimCost, SimCostTable};
+pub use timeline::{simulate_analysis, BatchTimeline};

@@ -3,6 +3,7 @@
 use crate::analyzer::latency::ModelAnalysis;
 use crate::analyzer::metrics::PlatformResult;
 use crate::analyzer::power::PowerBreakdown;
+use crate::analyzer::timeline::BatchTimeline;
 use crate::util::histogram::Summary;
 
 /// Fig. 9-style latency breakdown rows.
@@ -49,6 +50,29 @@ pub fn latency_summary_table(rows: &[(&str, &Summary)]) -> String {
         out.push_str(&format!(
             "| {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} |\n",
             name, s.count, s.mean, s.p50, s.p90, s.p99, s.p999, s.max
+        ));
+    }
+    out
+}
+
+/// Pipelined-vs-sequential batch report rows (the `analyze --batch`
+/// command): one timeline per model, with the analytical `batch ×`
+/// baseline, the pipelined makespan, and the bottleneck lower bound.
+pub fn timeline_table(rows: &[(&str, &BatchTimeline)]) -> String {
+    let mut out = String::from(
+        "| model | batch | sequential (ms) | pipelined (ms) | speedup | \
+         bottleneck (ms) | efficiency |\n|---|---|---|---|---|---|---|\n",
+    );
+    for (name, t) in rows {
+        out.push_str(&format!(
+            "| {} | {} | {:.3} | {:.3} | {:.2}× | {:.3} | {:.0}% |\n",
+            name,
+            t.batch,
+            t.sequential_ms(),
+            t.makespan_ms(),
+            t.speedup(),
+            t.bottleneck_ms(),
+            100.0 * t.efficiency()
         ));
     }
     out
@@ -102,5 +126,15 @@ mod tests {
         let s = crate::analyzer::metrics::latency_summary(&[1.0, 2.0, 3.0]);
         let lt = latency_summary_table(&[("total", &s)]);
         assert!(lt.contains("total") && lt.contains("p99.9"));
+    }
+
+    #[test]
+    fn timeline_table_renders() {
+        let cfg = OpimaConfig::paper();
+        let a = analyze_model(&cfg, &build_model(Model::ResNet18).unwrap(), 4).unwrap();
+        let t = crate::analyzer::timeline::simulate_analysis(&cfg, &a, 8);
+        let out = timeline_table(&[("resnet18", &t)]);
+        assert!(out.contains("resnet18") && out.contains("bottleneck"));
+        assert!(out.contains("×"));
     }
 }

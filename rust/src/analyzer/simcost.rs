@@ -1,29 +1,51 @@
-//! Shared immutable per-batch simulated-cost table.
+//! Shared immutable simulated-cost table, keyed by operand width **and
+//! batch size**.
 //!
 //! The serving engine meters every executed batch with the OPIMA
-//! simulator. Running `analyze_model` on the request path would dominate
-//! serving latency, so the engine precomputes this table once at startup
-//! (one entry per distinct operand width, scaled to the serving batch
-//! size) and shares it read-only across all worker threads behind an
-//! `Arc` — no locking, no per-request analyzer work.
+//! simulator. Running `analyze_model` (let alone the batch timeline) on
+//! the request path would dominate serving latency, so the engine
+//! precomputes this table once per plan and shares it read-only across
+//! all worker threads behind an `Arc` — no locking, no per-request
+//! analyzer work.
+//!
+//! Batch latency is **no longer the `batch ×` analytical scaling**: each
+//! entry's `latency_ms` is the pipelined makespan of the
+//! [`timeline`](crate::analyzer::timeline) (sublinear in batch for
+//! pipelinable mappings), while `energy_mj` stays linear — overlap moves
+//! work in time, it does not remove any. The old scaling is preserved in
+//! [`SimCost::sequential_ms`] so reports can show the gain.
 
 use crate::analyzer::latency::{analyze_model, ModelAnalysis};
+use crate::analyzer::timeline::{simulate_analysis, BatchTimeline};
 use crate::cnn::graph::Network;
 use crate::config::OpimaConfig;
 use crate::error::Result;
 
-/// Simulated cost of serving one whole batch at a given operand width.
+/// Simulated cost of serving one whole batch at a given operand width
+/// and batch size.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimCost {
     /// Operand width on the PIM substrate (bits).
     pub bits: u32,
-    /// Simulated OPIMA latency for the whole batch (ms).
+    /// Images per batch this entry is priced for.
+    pub batch: usize,
+    /// Pipelined OPIMA latency for the whole batch (ms) — the timeline
+    /// makespan, sublinear in `batch` when the mapping pipelines.
     pub latency_ms: f64,
-    /// Simulated dynamic energy for the whole batch (mJ).
+    /// Simulated dynamic energy for the whole batch (mJ) — linear in
+    /// `batch`.
     pub energy_mj: f64,
+    /// The pre-timeline analytical cost (`batch ×` single inference, ms).
+    pub sequential_ms: f64,
+    /// False when the mapping was over capacity and the timeline ran
+    /// strictly serialized (`latency_ms == sequential_ms`).
+    pub pipelined: bool,
 }
 
-/// Immutable cost table, safe to share across threads (`Arc<SimCostTable>`).
+/// Immutable cost table, safe to share across threads
+/// (`Arc<SimCostTable>`). Entries are keyed by `(bits, batch)`; every
+/// build also inserts the `batch = 1` entry, which equals the analytical
+/// single-inference totals by the timeline's fidelity invariant.
 #[derive(Debug, Clone)]
 pub struct SimCostTable {
     batch: usize,
@@ -31,60 +53,91 @@ pub struct SimCostTable {
 }
 
 impl SimCostTable {
-    /// Analyze `net` once per distinct bit-width, scaled to `batch`
-    /// inferences per served batch.
+    /// Analyze `net` once per distinct bit-width and schedule each
+    /// analysis at `batch` (and at 1) on the pipelined timeline.
     pub fn build(
         cfg: &OpimaConfig,
         net: &Network,
         batch: usize,
         bit_widths: &[u32],
     ) -> Result<Self> {
-        let mut entries: Vec<SimCost> = Vec::new();
+        let mut table = Self {
+            batch,
+            entries: Vec::new(),
+        };
         for &bits in bit_widths {
-            if entries.iter().any(|e| e.bits == bits) {
+            if table.entry(bits, batch).is_some() {
                 continue;
             }
             let a = analyze_model(cfg, net, bits)?;
-            entries.push(SimCost {
-                bits,
-                latency_ms: a.total_ms() * batch as f64,
-                energy_mj: a.dynamic_mj * batch as f64,
-            });
+            table.insert(cfg, &a, batch);
         }
-        Ok(Self { batch, entries })
+        Ok(table)
     }
 
-    /// Single-entry table from an existing analysis, scaled to `batch`
-    /// inferences per served batch — the serving registry's path, which
-    /// analyzes each `(model, width)` pair exactly once and reuses the
-    /// same pass for both the mapper plan and this cost table.
-    pub fn from_analysis(analysis: &ModelAnalysis, batch: usize) -> Self {
-        Self {
+    /// Single-width table from an existing analysis, scheduled at
+    /// `batch` (and at 1) — the serving registry's path, which analyzes
+    /// each `(model, width)` pair exactly once and reuses the same pass
+    /// for the mapper plan, this cost table and the cached timelines.
+    pub fn from_analysis(cfg: &OpimaConfig, analysis: &ModelAnalysis, batch: usize) -> Self {
+        let mut table = Self {
             batch,
-            entries: vec![SimCost {
-                bits: analysis.bits,
-                latency_ms: analysis.total_ms() * batch as f64,
-                energy_mj: analysis.dynamic_mj * batch as f64,
-            }],
+            entries: Vec::new(),
+        };
+        table.insert(cfg, analysis, batch);
+        table
+    }
+
+    /// Schedule `analysis` at `batch` (and at 1, if absent) and record
+    /// the entries. Idempotent per `(bits, batch)` key.
+    pub fn insert(&mut self, cfg: &OpimaConfig, analysis: &ModelAnalysis, batch: usize) {
+        for b in [1usize, batch] {
+            if self.entry(analysis.bits, b).is_some() {
+                continue;
+            }
+            let t = simulate_analysis(cfg, analysis, b);
+            self.entries.push(entry_from_timeline(analysis, &t));
         }
     }
 
-    /// Batch size the costs are scaled to.
+    /// Serving batch size the default lookups are priced for.
     pub fn batch(&self) -> usize {
         self.batch
     }
 
-    /// Whole-batch `(latency_ms, energy_mj)` at operand width `bits`.
+    /// Whole-batch `(latency_ms, energy_mj)` at operand width `bits`
+    /// and the table's serving batch size.
     pub fn get(&self, bits: u32) -> Option<(f64, f64)> {
-        self.entries
-            .iter()
-            .find(|e| e.bits == bits)
-            .map(|e| (e.latency_ms, e.energy_mj))
+        self.get_at(bits, self.batch)
     }
 
-    /// All distinct entries.
+    /// Whole-batch `(latency_ms, energy_mj)` at `(bits, batch)`.
+    pub fn get_at(&self, bits: u32, batch: usize) -> Option<(f64, f64)> {
+        self.entry(bits, batch).map(|e| (e.latency_ms, e.energy_mj))
+    }
+
+    /// Full entry at `(bits, batch)`.
+    pub fn entry(&self, bits: u32, batch: usize) -> Option<&SimCost> {
+        self.entries
+            .iter()
+            .find(|e| e.bits == bits && e.batch == batch)
+    }
+
+    /// All entries, in insertion order.
     pub fn entries(&self) -> &[SimCost] {
         &self.entries
+    }
+}
+
+/// Fold a scheduled timeline into a cost-table entry.
+pub fn entry_from_timeline(analysis: &ModelAnalysis, t: &BatchTimeline) -> SimCost {
+    SimCost {
+        bits: analysis.bits,
+        batch: t.batch,
+        latency_ms: t.makespan_ms(),
+        energy_mj: analysis.dynamic_mj * t.batch as f64,
+        sequential_ms: t.sequential_ms(),
+        pipelined: t.pipelined,
     }
 }
 
@@ -106,12 +159,15 @@ mod tests {
     }
 
     #[test]
-    fn dedups_bit_widths() {
+    fn dedups_bit_widths_and_keys_by_batch() {
         let cfg = OpimaConfig::paper();
         let t = SimCostTable::build(&cfg, &small_net(), 8, &[8, 8, 4]).unwrap();
-        assert_eq!(t.entries().len(), 2);
+        // Two widths × two batch keys (1 and 8) each.
+        assert_eq!(t.entries().len(), 4);
         assert_eq!(t.batch(), 8);
         assert!(t.get(8).is_some() && t.get(4).is_some());
+        assert!(t.get_at(4, 1).is_some());
+        assert!(t.get_at(4, 3).is_none(), "unscheduled batch sizes miss");
         assert!(t.get(2).is_none());
     }
 
@@ -132,20 +188,38 @@ mod tests {
         let net = small_net();
         let mapped = crate::mapper::plan::map_network(&cfg, &net, 4).unwrap();
         let a = crate::analyzer::latency::analyze_mapped(&cfg, &mapped, 4).unwrap();
-        let single = SimCostTable::from_analysis(&a, 8);
+        let single = SimCostTable::from_analysis(&cfg, &a, 8);
         let full = SimCostTable::build(&cfg, &net, 8, &[4]).unwrap();
         assert_eq!(single.get(4), full.get(4));
         assert_eq!(single.batch(), 8);
     }
 
     #[test]
-    fn scales_with_batch() {
+    fn batch_latency_sublinear_energy_linear() {
+        // The old analytical core priced a batch as exactly `batch ×`
+        // one inference; the timeline pipelines images, so batch latency
+        // must now be *sublinear* while staying above the bottleneck
+        // bound. Energy stays exactly linear.
         let cfg = OpimaConfig::paper();
-        let t1 = SimCostTable::build(&cfg, &small_net(), 1, &[4]).unwrap();
         let t8 = SimCostTable::build(&cfg, &small_net(), 8, &[4]).unwrap();
-        let (l1, e1) = t1.get(4).unwrap();
+        let (l1, e1) = t8.get_at(4, 1).unwrap();
         let (l8, e8) = t8.get(4).unwrap();
-        assert!((l8 - 8.0 * l1).abs() < 1e-9 * l8.max(1.0));
-        assert!((e8 - 8.0 * e1).abs() < 1e-9 * e8.max(1.0));
+        assert!(l8 < 8.0 * l1, "pipelining must beat {} vs {}", l8, 8.0 * l1);
+        assert!(l8 > l1, "more images cannot be faster");
+        assert!((e8 - 8.0 * e1).abs() < 1e-9 * e8.max(1.0), "energy is linear");
+        let entry = t8.entry(4, 8).unwrap();
+        assert!(entry.pipelined);
+        assert!((entry.sequential_ms - 8.0 * l1).abs() < 1e-9 * entry.sequential_ms);
+    }
+
+    #[test]
+    fn batch_one_entry_matches_analytical_total() {
+        let cfg = OpimaConfig::paper();
+        let net = small_net();
+        let a = analyze_model(&cfg, &net, 4).unwrap();
+        let t = SimCostTable::build(&cfg, &net, 4, &[4]).unwrap();
+        let (l1, e1) = t.get_at(4, 1).unwrap();
+        assert!((l1 - a.total_ms()).abs() <= 1e-9 * a.total_ms());
+        assert!((e1 - a.dynamic_mj).abs() <= 1e-9 * a.dynamic_mj);
     }
 }

@@ -1,0 +1,440 @@
+//! The resource-aware pipelined simulation timeline.
+//!
+//! The analytical core prices one inference as the *sequential* sum of
+//! its layer costs, and a batch as `batch ×` that sum. On the real
+//! hardware a batch pipelines: while image `i`'s layer-`k` outputs are
+//! being written back to OPCM, image `i+1` can already be processing in
+//! layer `k`'s subarrays — the two touch disjoint footprints (layer `k`
+//! reads its own input maps, the writeback targets layer `k+1`'s), so
+//! nothing serializes except genuinely shared resources.
+//!
+//! This module schedules per-image, per-layer **events** against explicit
+//! **resource pools** and reports the resulting makespan:
+//!
+//! - Every `(image, layer)` pair emits three chained events, priced by
+//!   the PIM scheduler's stage split ([`LayerCost::mac_ns`],
+//!   [`LayerCost::aggregation_ns`], [`LayerCost::writeback_ns`]):
+//!   **Processing** (in-waveguide MACs), **Aggregation** (PD/ADC/
+//!   shift-add drain) and **Writeback** (OPCM MLC program trains).
+//! - Resource pools: each layer's subarray/MDL group is *exclusive*
+//!   (one image in flight per layer — the mapper's input-stationary
+//!   placement holds exactly one image's maps per layer); aggregation
+//!   events draw from [`PipelineParams::aggregation_units`]; writeback
+//!   events draw from [`PipelineParams::writeback_channels`] (the
+//!   optical write-power budget already caps the lanes *inside* one
+//!   train, this caps concurrent trains).
+//! - Hazards: layer `k` of image `i` cannot start before image `i`'s
+//!   layer-`(k-1)` writeback lands (dataflow, RAW); the writeback of
+//!   image `i`'s layer `k` cannot start before image `i-1` has finished
+//!   *reading* layer `k+1`'s input maps (in-place overwrite, WAR); and
+//!   writebacks into one layer issue in image order. Input-image loading
+//!   is not priced — consistent with the analytical model, which also
+//!   excludes it.
+//!
+//! Because the WAR hazard makes every in-place overwrite wait for its
+//! reader, pipelining needs **no extra subarray capacity**: the resident
+//! footprint is the mapper's single-image placement, whatever the batch.
+//! When that placement itself exceeds the geometry
+//! ([`Occupancy::fits`](crate::mapper::Occupancy::fits) is false) the
+//! layers time-share the memory and
+//! cross-image overlap is unsound, so the timeline falls back to strict
+//! serial execution.
+//!
+//! **Fidelity invariant:** at `batch = 1` every event chains with zero
+//! slack, so the makespan equals the analytical layer sum exactly — the
+//! timeline widens the model without repricing the paper reproduction
+//! (Figs. 9/10). For `batch ≥ 2` the makespan is bounded below by the
+//! bottleneck resource ([`BatchTimeline::bottleneck_ns`]) and above by
+//! the sequential sum, and is monotone in batch size.
+
+use crate::analyzer::latency::ModelAnalysis;
+use crate::config::{OpimaConfig, PipelineParams};
+use crate::pim::scheduler::LayerCost;
+
+/// Which hardware stage an event occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// In-waveguide MACs on the layer's subarray group (exclusive).
+    Processing,
+    /// PD + ADC + shift-add drain on a shared aggregation unit.
+    Aggregation,
+    /// OPCM MLC program train on a shared writeback channel.
+    Writeback,
+}
+
+/// One scheduled event on the timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub image: usize,
+    pub layer: usize,
+    pub phase: Phase,
+    pub start_ns: f64,
+    pub end_ns: f64,
+}
+
+/// The scheduled batch: makespan plus the analytical bounds around it.
+#[derive(Debug, Clone)]
+pub struct BatchTimeline {
+    /// Images scheduled.
+    pub batch: usize,
+    /// Every event, in issue order (image-major, layer-minor, M→A→W).
+    pub events: Vec<Event>,
+    /// End of the last event — the simulated whole-batch latency (ns).
+    pub makespan_ns: f64,
+    /// `batch ×` the analytical single-inference sum (ns) — the old
+    /// cost model, and a hard upper bound on the makespan.
+    pub sequential_ns: f64,
+    /// Lower bound from the busiest resource (ns): no feasible schedule
+    /// can beat `max(single-image critical path, per-resource work)`.
+    pub bottleneck_ns: f64,
+    /// Analytical single-inference total (ns).
+    pub per_image_ns: f64,
+    /// False when the mapping is over capacity and the schedule fell
+    /// back to strict serial execution.
+    pub pipelined: bool,
+}
+
+impl BatchTimeline {
+    pub fn makespan_ms(&self) -> f64 {
+        self.makespan_ns / 1e6
+    }
+
+    pub fn sequential_ms(&self) -> f64 {
+        self.sequential_ns / 1e6
+    }
+
+    pub fn bottleneck_ms(&self) -> f64 {
+        self.bottleneck_ns / 1e6
+    }
+
+    /// Pipelining gain over the old `batch ×` analytical model (≥ 1).
+    pub fn speedup(&self) -> f64 {
+        self.sequential_ns / self.makespan_ns.max(f64::MIN_POSITIVE)
+    }
+
+    /// How close the schedule runs to the bottleneck lower bound (≤ 1).
+    pub fn efficiency(&self) -> f64 {
+        self.bottleneck_ns / self.makespan_ns.max(f64::MIN_POSITIVE)
+    }
+}
+
+/// A counting resource pool: `capacity` slots, each busy until its
+/// recorded free time. Acquisition picks the earliest-free slot and
+/// starts no earlier than `ready` — events on one slot never overlap.
+#[derive(Debug)]
+struct Pool {
+    slots: Vec<f64>,
+}
+
+impl Pool {
+    fn new(capacity: usize) -> Self {
+        Self {
+            slots: vec![0.0; capacity.max(1)],
+        }
+    }
+
+    /// Book `dur` of work becoming ready at `ready`; returns the start.
+    fn acquire(&mut self, ready: f64, dur: f64) -> f64 {
+        let idx = self
+            .slots
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .expect("pool has at least one slot");
+        let start = ready.max(self.slots[idx]);
+        self.slots[idx] = start + dur;
+        start
+    }
+}
+
+/// Schedule `batch` images through the priced layers, pipelined.
+///
+/// Callers that know the mapping's occupancy should prefer
+/// [`simulate_analysis`], which falls back to serial execution when the
+/// stationary operands don't fit in memory.
+pub fn simulate(cfg: &OpimaConfig, costs: &[LayerCost], batch: usize) -> BatchTimeline {
+    schedule(&cfg.pipeline, costs, batch, true)
+}
+
+/// Schedule a whole [`ModelAnalysis`] at `batch`, honouring its
+/// occupancy: an over-capacity mapping runs strictly serialized.
+pub fn simulate_analysis(cfg: &OpimaConfig, a: &ModelAnalysis, batch: usize) -> BatchTimeline {
+    schedule(&cfg.pipeline, &a.layer_costs, batch, a.occupancy.fits())
+}
+
+fn schedule(
+    pipe: &PipelineParams,
+    costs: &[LayerCost],
+    batch: usize,
+    pipelined: bool,
+) -> BatchTimeline {
+    let nl = costs.len();
+    let per_image_ns: f64 = costs.iter().map(LayerCost::total_ns).sum();
+    let sequential_ns = per_image_ns * batch as f64;
+    let bottleneck_ns = bottleneck(pipe, costs, batch, per_image_ns);
+
+    let mut events = Vec::with_capacity(batch * nl * 3);
+    // Per-layer exclusive compute unit (subarray group + MDL array):
+    // free once the image's aggregation has drained into SRAM.
+    let mut layer_free = vec![0.0f64; nl];
+    // Writebacks into one layer's input maps issue in image order.
+    let mut wb_layer_free = vec![0.0f64; nl];
+    let mut agg_pool = Pool::new(pipe.aggregation_units);
+    let mut wb_pool = Pool::new(pipe.writeback_channels);
+    // Retirement time of each image (for the in-flight window knob and
+    // the serial fallback).
+    let mut retired = Vec::with_capacity(batch);
+    let window = pipe.max_in_flight_images;
+
+    for image in 0..batch {
+        // Dataflow cursor: when this image's input to the next layer is
+        // available. The first layer's input load is not priced.
+        let mut ready = if !pipelined {
+            // Over-capacity: layers time-share the memory — image i may
+            // not enter until image i-1 fully retires.
+            retired.last().copied().unwrap_or(0.0)
+        } else if window > 0 && image >= window {
+            retired[image - window]
+        } else {
+            0.0
+        };
+        for (layer, c) in costs.iter().enumerate() {
+            // Processing: the layer's exclusive unit, once the previous
+            // image has drained out of it.
+            let m_start = ready.max(layer_free[layer]);
+            let m_end = m_start + c.mac_ns;
+            // Aggregation: continues on the layer unit but also needs a
+            // shared aggregation pipeline.
+            let a_start = agg_pool.acquire(m_end, c.aggregation_ns);
+            let a_end = a_start + c.aggregation_ns;
+            layer_free[layer] = a_end;
+            // Writeback targets layer k+1's input subarrays: wait until
+            // the previous image has finished reading them (WAR), keep
+            // per-layer image order, and take a writeback channel.
+            let war = if layer + 1 < nl { layer_free[layer + 1] } else { 0.0 };
+            let w_ready = a_end.max(war).max(wb_layer_free[layer]);
+            let w_start = wb_pool.acquire(w_ready, c.writeback_ns);
+            let w_end = w_start + c.writeback_ns;
+            wb_layer_free[layer] = w_end;
+            events.push(Event {
+                image,
+                layer,
+                phase: Phase::Processing,
+                start_ns: m_start,
+                end_ns: m_end,
+            });
+            events.push(Event {
+                image,
+                layer,
+                phase: Phase::Aggregation,
+                start_ns: a_start,
+                end_ns: a_end,
+            });
+            events.push(Event {
+                image,
+                layer,
+                phase: Phase::Writeback,
+                start_ns: w_start,
+                end_ns: w_end,
+            });
+            ready = w_end;
+        }
+        retired.push(ready);
+    }
+    let makespan_ns = events.iter().fold(0.0f64, |m, e| m.max(e.end_ns));
+    BatchTimeline {
+        batch,
+        events,
+        makespan_ns,
+        sequential_ns,
+        bottleneck_ns,
+        per_image_ns,
+        pipelined,
+    }
+}
+
+/// Lower bound on any feasible schedule: the single-image critical path,
+/// or the busiest resource's total work divided by its capacity.
+fn bottleneck(
+    pipe: &PipelineParams,
+    costs: &[LayerCost],
+    batch: usize,
+    per_image_ns: f64,
+) -> f64 {
+    let b = batch as f64;
+    // Each layer's exclusive unit holds one image for mac + aggregation.
+    let max_unit = costs
+        .iter()
+        .map(|c| c.mac_ns + c.aggregation_ns)
+        .fold(0.0f64, f64::max);
+    // Writebacks into one layer are image-ordered.
+    let max_wb = costs.iter().map(|c| c.writeback_ns).fold(0.0f64, f64::max);
+    let agg_total: f64 = costs.iter().map(|c| c.aggregation_ns).sum();
+    let wb_total: f64 = costs.iter().map(|c| c.writeback_ns).sum();
+    per_image_ns
+        .max(b * max_unit)
+        .max(b * max_wb)
+        .max(b * agg_total / pipe.aggregation_units.max(1) as f64)
+        .max(b * wb_total / pipe.writeback_channels.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::latency::analyze_model;
+    use crate::cnn::graph::{Network, NetworkBuilder};
+    use crate::cnn::layer::TensorShape;
+    use crate::cnn::models::{build_model, Model};
+
+    fn small_net() -> Network {
+        let mut b = NetworkBuilder::new("t", TensorShape::new(12, 12, 1));
+        b.conv(3, 3, 8, 1, 1)
+            .unwrap()
+            .pool(2, 2)
+            .unwrap()
+            .fc(4)
+            .unwrap();
+        b.build()
+    }
+
+    fn analysis(bits: u32) -> (OpimaConfig, ModelAnalysis) {
+        let cfg = OpimaConfig::paper();
+        let a = analyze_model(&cfg, &small_net(), bits).unwrap();
+        (cfg, a)
+    }
+
+    #[test]
+    fn batch_one_equals_analytical_sum() {
+        let (cfg, a) = analysis(4);
+        let t = simulate_analysis(&cfg, &a, 1);
+        let total_ns = a.total_ms() * 1e6;
+        assert!(
+            (t.makespan_ns - total_ns).abs() <= 1e-9 * total_ns,
+            "batch-1 makespan {} != analytical {}",
+            t.makespan_ns,
+            total_ns
+        );
+        assert!(t.pipelined);
+        assert!((t.speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_makespan_between_bounds_and_sublinear() {
+        let (cfg, a) = analysis(4);
+        for batch in [2usize, 8, 32] {
+            let t = simulate_analysis(&cfg, &a, batch);
+            assert!(
+                t.makespan_ns < t.sequential_ns,
+                "batch {batch}: no overlap ({} vs {})",
+                t.makespan_ns,
+                t.sequential_ns
+            );
+            assert!(
+                t.makespan_ns + 1e-6 >= t.bottleneck_ns,
+                "batch {batch}: beat the bottleneck bound"
+            );
+            assert!(t.speedup() > 1.0);
+            assert!(t.efficiency() <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn makespan_monotone_in_batch() {
+        let (cfg, a) = analysis(4);
+        let mut prev = 0.0;
+        for batch in 1..=16 {
+            let t = simulate_analysis(&cfg, &a, batch);
+            assert!(t.makespan_ns >= prev, "batch {batch} shrank the makespan");
+            prev = t.makespan_ns;
+        }
+    }
+
+    #[test]
+    fn resnet18_batch8_strictly_sublinear() {
+        // The acceptance shape: a multi-row-kernel model at batch ≥ 8.
+        let cfg = OpimaConfig::paper();
+        let a = analyze_model(&cfg, &build_model(Model::ResNet18).unwrap(), 4).unwrap();
+        let t = simulate_analysis(&cfg, &a, 8);
+        assert!(t.pipelined);
+        assert!(t.makespan_ns < 8.0 * a.total_ms() * 1e6);
+        assert!(t.makespan_ns + 1e-3 >= t.bottleneck_ns);
+    }
+
+    #[test]
+    fn per_layer_unit_and_channels_never_oversubscribed() {
+        let (cfg, a) = analysis(8);
+        let t = simulate_analysis(&cfg, &a, 6);
+        // Per (layer, phase=Processing∪Aggregation): one image at a time.
+        let nl = a.layer_costs.len();
+        for layer in 0..nl {
+            let mut spans: Vec<(f64, f64)> = t
+                .events
+                .iter()
+                .filter(|e| e.layer == layer && e.phase != Phase::Writeback)
+                .map(|e| (e.start_ns, e.end_ns))
+                .collect();
+            spans.sort_by(|x, y| x.0.total_cmp(&y.0));
+            // Group the M and A of one image as [M.start, A.end]; images
+            // must not interleave on the layer unit.
+            for pair in spans.chunks(2).collect::<Vec<_>>().windows(2) {
+                assert!(
+                    pair[0][1].1 <= pair[1][0].0 + 1e-9,
+                    "layer {layer}: images overlap on the exclusive unit"
+                );
+            }
+        }
+        // Writeback channel pool: at no event boundary do more than
+        // `writeback_channels` trains overlap.
+        let wb: Vec<(f64, f64)> = t
+            .events
+            .iter()
+            .filter(|e| e.phase == Phase::Writeback)
+            .map(|e| (e.start_ns, e.end_ns))
+            .collect();
+        for &(s, _) in &wb {
+            let live = wb.iter().filter(|&&(a_, b_)| a_ <= s && s < b_).count();
+            assert!(live <= cfg.pipeline.writeback_channels);
+        }
+    }
+
+    #[test]
+    fn over_capacity_falls_back_to_serial() {
+        let mut cfg = OpimaConfig::paper();
+        cfg.geometry.banks = 1;
+        cfg.geometry.subarray_rows = 2;
+        cfg.geometry.subarray_cols = 2;
+        cfg.geometry.subarray_groups = 2;
+        let a = analyze_model(&cfg, &build_model(Model::ResNet18).unwrap(), 4).unwrap();
+        assert!(!a.occupancy.fits());
+        let t = simulate_analysis(&cfg, &a, 4);
+        assert!(!t.pipelined);
+        assert!(
+            (t.makespan_ns - t.sequential_ns).abs() <= 1e-9 * t.sequential_ns,
+            "serial fallback must equal the sequential sum"
+        );
+    }
+
+    #[test]
+    fn wider_writeback_channel_pool_cannot_hurt() {
+        let (cfg, a) = analysis(4);
+        let base = simulate_analysis(&cfg, &a, 16);
+        let mut wide = cfg.clone();
+        wide.pipeline.writeback_channels = 4;
+        let t = simulate_analysis(&wide, &a, 16);
+        assert!(t.makespan_ns <= base.makespan_ns + 1e-6);
+    }
+
+    #[test]
+    fn in_flight_window_of_one_serializes_images() {
+        let (cfg, a) = analysis(4);
+        let mut tight = cfg.clone();
+        tight.pipeline.max_in_flight_images = 1;
+        let t = simulate_analysis(&tight, &a, 4);
+        // Window 1: image i may only enter once i-1 retired — the
+        // schedule degenerates to the sequential sum.
+        assert!((t.makespan_ns - t.sequential_ns).abs() <= 1e-9 * t.sequential_ns);
+        let free = simulate_analysis(&cfg, &a, 4);
+        assert!(free.makespan_ns < t.makespan_ns);
+    }
+}

@@ -18,7 +18,10 @@ use crate::cnn::layer::TensorShape;
 use crate::error::Result;
 
 /// The evaluated models (Table II rows) plus the serving demo CNN.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+///
+/// `Ord` follows declaration order (= [`SERVABLE_MODELS`] order), so
+/// sorted per-model reports are stable across runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub enum Model {
     /// The tiny served CNN (python/compile/model.py); not in Table II.
     #[default]

@@ -53,13 +53,18 @@ impl Default for Geometry {
 impl Geometry {
     /// Total OPCM cells in the memory.
     pub fn total_cells(&self) -> u64 {
-        self.banks as u64
-            * self.subarrays_per_bank() as u64
-            * self.cells_per_subarray() as u64
+        self.total_subarrays() as u64 * self.cells_per_subarray() as u64
     }
 
     pub fn subarrays_per_bank(&self) -> usize {
         self.subarray_rows * self.subarray_cols
+    }
+
+    /// Total subarrays across all banks — the one capacity figure the
+    /// mapper occupancy check, the FC placement validator and the
+    /// router's co-residency accounting all share.
+    pub fn total_subarrays(&self) -> usize {
+        self.banks * self.subarrays_per_bank()
     }
 
     pub fn cells_per_subarray(&self) -> usize {
@@ -231,6 +236,43 @@ impl Default for PimParams {
     }
 }
 
+/// Batch-pipelining parameters for the simulation timeline
+/// ([`crate::analyzer::timeline`]).
+///
+/// The paper evaluates single-inference latency; these knobs govern how
+/// a *batch* of images pipelines through the layer stages, and default
+/// to what the paper's hardware actually provides — they widen the
+/// model without repricing the single-image reproduction (at batch 1
+/// the timeline collapses to the analytical layer sum regardless of
+/// these values).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineParams {
+    /// Concurrent whole-layer OPCM writeback trains. The optical write
+    /// power budget already bounds the *lanes* inside one train
+    /// ([`PimParams::writeback_lanes`]); this bounds how many layers'
+    /// trains can be in flight at once. Paper-faithful default: 1 — the
+    /// lane budget is a single shared channel.
+    pub writeback_channels: usize,
+    /// Aggregation-unit pipelines usable concurrently by in-flight
+    /// layers. Default: 4, one per bank (each bank owns its PD/ADC/
+    /// shift-add stack, see [`PowerModel::aggregation_logic_w`]).
+    pub aggregation_units: usize,
+    /// Upper bound on images concurrently in flight in the layer
+    /// pipeline (aggregation-SRAM staging depth). 0 means no explicit
+    /// bound — in-flight depth is limited only by the resource pools.
+    pub max_in_flight_images: usize,
+}
+
+impl Default for PipelineParams {
+    fn default() -> Self {
+        Self {
+            writeback_channels: 1,
+            aggregation_units: 4,
+            max_in_flight_images: 0,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 
@@ -239,6 +281,7 @@ pub struct OpimaConfig {
     pub timing: Timing,
     pub power: PowerModel,
     pub pim: PimParams,
+    pub pipeline: PipelineParams,
     pub losses: LossParams,
     pub energy: EnergyParams,
 }
@@ -270,6 +313,13 @@ impl OpimaConfig {
         if self.pim.one_by_one_lanes_per_bank == 0 || self.pim.writeback_lanes == 0 {
             return Err(Error::Config(
                 "one_by_one_lanes_per_bank and writeback_lanes must be positive".into(),
+            ));
+        }
+        if self.pipeline.writeback_channels == 0 || self.pipeline.aggregation_units == 0 {
+            return Err(Error::Config(
+                "pipeline.writeback_channels and pipeline.aggregation_units must be \
+                 positive (max_in_flight_images may be 0 = unbounded)"
+                    .into(),
             ));
         }
         self.losses.validate()?;
@@ -324,6 +374,15 @@ impl OpimaConfig {
             p.one_by_one_lanes_per_bank =
                 doc.usize_or("pim.one_by_one_lanes_per_bank", p.one_by_one_lanes_per_bank);
             p.writeback_lanes = doc.usize_or("pim.writeback_lanes", p.writeback_lanes);
+        }
+        {
+            let p = &mut cfg.pipeline;
+            p.writeback_channels =
+                doc.usize_or("pipeline.writeback_channels", p.writeback_channels);
+            p.aggregation_units =
+                doc.usize_or("pipeline.aggregation_units", p.aggregation_units);
+            p.max_in_flight_images =
+                doc.usize_or("pipeline.max_in_flight_images", p.max_in_flight_images);
         }
         {
             let l = &mut cfg.losses;
@@ -411,6 +470,15 @@ impl OpimaConfig {
                 ("writeback_lanes".into(), V::Int(pi.writeback_lanes as i64)),
             ]),
         );
+        let pl = &self.pipeline;
+        sections.insert(
+            "pipeline".into(),
+            BTreeMap::from([
+                ("writeback_channels".into(), V::Int(pl.writeback_channels as i64)),
+                ("aggregation_units".into(), V::Int(pl.aggregation_units as i64)),
+                ("max_in_flight_images".into(), V::Int(pl.max_in_flight_images as i64)),
+            ]),
+        );
         let l = &self.losses;
         sections.insert(
             "losses".into(),
@@ -484,6 +552,27 @@ mod tests {
         let mut c = OpimaConfig::paper();
         c.timing.write_ns = 0.1;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn pipeline_knobs_validated_and_parse() {
+        let mut c = OpimaConfig::paper();
+        c.pipeline.writeback_channels = 0;
+        assert!(c.validate().is_err());
+        c.pipeline.writeback_channels = 1;
+        c.pipeline.aggregation_units = 0;
+        assert!(c.validate().is_err());
+        // max_in_flight_images = 0 is the "unbounded" sentinel, valid.
+        c.pipeline.aggregation_units = 4;
+        c.pipeline.max_in_flight_images = 0;
+        c.validate().unwrap();
+        let parsed = OpimaConfig::from_toml(
+            "[pipeline]\nwriteback_channels = 2\nmax_in_flight_images = 3\n",
+        )
+        .unwrap();
+        assert_eq!(parsed.pipeline.writeback_channels, 2);
+        assert_eq!(parsed.pipeline.aggregation_units, 4, "default kept");
+        assert_eq!(parsed.pipeline.max_in_flight_images, 3);
     }
 
     #[test]

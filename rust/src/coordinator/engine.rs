@@ -29,8 +29,10 @@
 //!   the shared [`PlanRegistry`] — the lazily-built, `Arc`-shared cache
 //!   of per-`(model, variant)` mapper plans, sim-cost tables and
 //!   executor programs, built exactly once under a per-key lock — and
-//!   map each real batch onto the least-loaded *simulated* OPIMA
-//!   instance via the shared [`Router`] (reservations tagged by model).
+//!   place each real batch at the earliest *simulated* time its mapper
+//!   footprint fits on an OPIMA instance via the shared,
+//!   occupancy-aware [`Router`] (models whose footprints fit together
+//!   co-reside; reservations are tagged by model).
 //! - **Streaming stats**: each worker folds its batches' latencies into
 //!   its own per-model shard of log-bucketed histograms
 //!   ([`util::histogram`](crate::util::histogram)) — an uncontended
@@ -306,7 +308,12 @@ impl Engine {
         let image_elems = manifest.image_size * manifest.image_size;
         let variants = [Variant::Fp32, Variant::Int8, Variant::Int4];
         let registry = Arc::new(PlanRegistry::new(cfg.hw.clone(), manifest.clone()));
-        let router = Arc::new(Mutex::new(Router::new(cfg.instances)));
+        // Each simulated instance is a whole OPIMA module: batches
+        // co-reside when their mapper footprints fit in its subarrays.
+        let router = Arc::new(Mutex::new(Router::with_capacity(
+            cfg.instances,
+            cfg.hw.geometry.total_subarrays(),
+        )));
         let sink = Arc::new(StatsSink::new(cfg.history));
         let shards: Vec<Arc<Mutex<WorkerShard>>> = (0..cfg.workers)
             .map(|_| Arc::new(Mutex::new(WorkerShard::default())))
@@ -618,6 +625,13 @@ impl Engine {
         Ok(self.registry.resolve(model, variant)?.sim_cost())
     }
 
+    /// Structured over-capacity warnings for every model resolved so
+    /// far whose mapping exceeds the simulated memory's subarray
+    /// capacity (such models still serve, but time-share the memory).
+    pub fn capacity_warnings(&self) -> Vec<crate::mapper::CapacityWarning> {
+        self.registry.capacity_warnings()
+    }
+
     /// Aggregate statistics over everything served so far.
     ///
     /// O(models × buckets): merges the per-worker streaming histogram
@@ -632,7 +646,8 @@ impl Engine {
     pub fn stats(&self) -> ServerStats {
         let (sim_makespan_ms, model_spans) = {
             let r = lock(&self.router);
-            (r.makespan_ms(), r.model_makespans().clone())
+            // Already model-sorted, so per-model rows are stable.
+            (r.makespan_ms(), r.model_makespans())
         };
         let epoch = *lock(&self.epoch);
         let accepted = self.accepted.load(Ordering::Acquire);
@@ -687,7 +702,11 @@ impl Engine {
                 batches: s.batches,
                 failed: s.failed,
                 sim_energy_mj: s.energy_mj,
-                sim_makespan_ms: model_spans.get(&m).copied().unwrap_or(0.0),
+                sim_makespan_ms: model_spans
+                    .iter()
+                    .find(|(sm, _)| *sm == m)
+                    .map(|(_, e)| *e)
+                    .unwrap_or(0.0),
                 latency: latb,
             });
         }

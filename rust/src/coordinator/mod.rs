@@ -18,7 +18,9 @@
 //! [`SimCostTable`](crate::analyzer::simcost::SimCostTable) and
 //! executor program. Plans build exactly once under a per-key lock —
 //! concurrent first requests for the same pair share one build; the
-//! analyzer never runs on the request path.
+//! registry additionally caches pipelined batch timelines per
+//! `(model, variant, batch)`; the analyzer never runs on the request
+//! path.
 //!
 //! Completed responses flow over a results channel into a shared stats
 //! sink; `shutdown` drains in-flight work before joining the pipeline
@@ -56,9 +58,11 @@
 //!   per-worker per-model latency histograms + bounded response ring.
 //! - [`worker`] — worker loop: resolve a batch's plan, execute it,
 //!   meter it, fold it into the worker's latency shard, report it.
-//! - [`router`] — least-outstanding-work dispatch of *real* worker
-//!   batches onto simulated OPIMA instance busy horizons, with
-//!   reservations tagged per model.
+//! - [`router`] — occupancy-aware dispatch of *real* worker batches
+//!   onto simulated OPIMA instances: each batch is placed at the
+//!   earliest simulated time its mapper footprint fits, so models
+//!   whose footprints fit together co-reside; reservations are tagged
+//!   per model.
 //! - [`server`] — the synchronous facade preserving the seed call-loop
 //!   API on top of the engine.
 

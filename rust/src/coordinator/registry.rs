@@ -33,15 +33,16 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::analyzer::latency::analyze_mapped;
+use crate::analyzer::latency::{analyze_mapped, ModelAnalysis};
 use crate::analyzer::simcost::SimCostTable;
+use crate::analyzer::timeline::{simulate_analysis, BatchTimeline};
 use crate::cnn::graph::Network;
 use crate::cnn::models::{build_model, Model, SERVABLE_MODELS};
 use crate::config::OpimaConfig;
 use crate::coordinator::engine::lock;
 use crate::coordinator::request::Variant;
 use crate::error::{Error, Result};
-use crate::mapper::plan::{map_network, MappedNetwork};
+use crate::mapper::plan::{map_network, CapacityWarning, MappedNetwork, Occupancy};
 use crate::runtime::{ArtifactInfo, Manifest};
 
 /// Everything the serving path needs for one `(model, variant)` pair,
@@ -55,7 +56,11 @@ pub struct ModelPlan {
     /// The mapper plan: the network mapped onto the PIM substrate at
     /// this variant's operand width.
     pub mapped: MappedNetwork,
-    /// Whole-batch simulated cost at the serving batch size.
+    /// The priced analysis (per-layer stage costs plus the mapping's
+    /// occupancy) the timeline cache schedules from.
+    pub analysis: ModelAnalysis,
+    /// Whole-batch simulated cost at the serving batch size (pipelined
+    /// timeline makespans, keyed by `(bits, batch)`).
     pub costs: SimCostTable,
     /// The executor program: artifact name + tensor shapes the worker
     /// runs for each batch of this pair.
@@ -81,6 +86,20 @@ impl ModelPlan {
             .get(self.variant.pim_bits())
             .expect("table built with this variant's width")
     }
+
+    /// Subarray occupancy of the mapping vs. the hardware capacity —
+    /// drives the router's co-residency accounting and the over-capacity
+    /// warning surfaced by the serve path. (Single source of truth:
+    /// the analysis pass.)
+    pub fn occupancy(&self) -> Occupancy {
+        self.analysis.occupancy
+    }
+
+    /// Structured over-capacity warning for this plan's mapping, `None`
+    /// when it fits.
+    pub fn capacity_warning(&self) -> Option<CapacityWarning> {
+        self.occupancy().warning_for(&self.mapped.name)
+    }
 }
 
 /// A cached build outcome: the shared plan, or the deterministic build
@@ -102,6 +121,11 @@ pub struct PlanRegistry {
     manifest: Manifest,
     batch: usize,
     slots: Mutex<HashMap<(Model, Variant), Arc<Slot>>>,
+    /// Scheduled batch timelines, keyed by `(model, variant, batch)` —
+    /// the serving batch size is prescheduled inside each plan's cost
+    /// table; this cache serves ad-hoc batch sizes (the `analyze`-style
+    /// queries) without re-running the event simulation.
+    timelines: Mutex<HashMap<(Model, Variant, usize), Arc<BatchTimeline>>>,
     builds: AtomicU64,
 }
 
@@ -115,6 +139,7 @@ impl PlanRegistry {
             manifest,
             batch,
             slots: Mutex::new(HashMap::new()),
+            timelines: Mutex::new(HashMap::new()),
             builds: AtomicU64::new(0),
         }
     }
@@ -164,15 +189,53 @@ impl PlanRegistry {
         }
     }
 
+    /// The pipelined batch timeline for `(model, variant, batch)`,
+    /// scheduling (and caching) it on first request. The plan is
+    /// resolved (and built if needed) *before* taking the cache lock,
+    /// so the lock is never held across a plan build; the simulation
+    /// itself runs under the lock, which makes each key's schedule run
+    /// exactly once even under racing first requests.
+    pub fn timeline(
+        &self,
+        model: Model,
+        variant: Variant,
+        batch: usize,
+    ) -> Result<Arc<BatchTimeline>> {
+        let plan = self.resolve(model, variant)?;
+        let mut cache = lock(&self.timelines);
+        if let Some(t) = cache.get(&(model, variant, batch)) {
+            return Ok(Arc::clone(t));
+        }
+        let t = Arc::new(simulate_analysis(&self.hw, &plan.analysis, batch));
+        cache.insert((model, variant, batch), Arc::clone(&t));
+        Ok(t)
+    }
+
+    /// Structured over-capacity warnings across every plan resolved so
+    /// far (models that map but exceed the memory's subarray capacity),
+    /// sorted by model.
+    pub fn capacity_warnings(&self) -> Vec<CapacityWarning> {
+        let slots: Vec<Arc<Slot>> = lock(&self.slots).values().cloned().collect();
+        let mut warnings: Vec<CapacityWarning> = slots
+            .iter()
+            .filter_map(|s| match &*lock(&s.cell) {
+                Some(Ok(plan)) => plan.capacity_warning(),
+                _ => None,
+            })
+            .collect();
+        warnings.sort_by(|a, b| a.network.cmp(&b.network));
+        warnings
+    }
+
     fn build(&self, model: Model, variant: Variant) -> Result<ModelPlan> {
         let bits = variant.pim_bits();
         let network = build_model(model)?;
-        // One mapping pass feeds both the stored mapper plan and the
-        // cost table (analyze_mapped prices the already-mapped network
-        // instead of re-mapping it).
+        // One mapping pass feeds the stored mapper plan, the analysis,
+        // and the cost table (analyze_mapped prices the already-mapped
+        // network instead of re-mapping it).
         let mapped = map_network(&self.hw, &network, bits)?;
         let analysis = analyze_mapped(&self.hw, &mapped, bits)?;
-        let costs = SimCostTable::from_analysis(&analysis, self.batch);
+        let costs = SimCostTable::from_analysis(&self.hw, &analysis, self.batch);
         let name = variant.artifact_for(model, self.batch);
         let program = self.manifest.get(&name)?.clone();
         Ok(ModelPlan {
@@ -180,6 +243,7 @@ impl PlanRegistry {
             variant,
             network,
             mapped,
+            analysis,
             costs,
             program,
             batch: self.batch,
@@ -291,6 +355,52 @@ mod tests {
             }
         });
         assert_eq!(r.builds(), 1, "8 racing resolutions, one build");
+    }
+
+    #[test]
+    fn timeline_cache_is_per_batch_and_reused() {
+        let r = registry();
+        let t16 = r.timeline(Model::LeNet, Variant::Int4, 16).unwrap();
+        let again = r.timeline(Model::LeNet, Variant::Int4, 16).unwrap();
+        assert!(Arc::ptr_eq(&t16, &again), "cached, not rescheduled");
+        assert_eq!(r.builds(), 1, "timeline reuses the plan's analysis");
+        let t1 = r.timeline(Model::LeNet, Variant::Int4, 1).unwrap();
+        assert!(!Arc::ptr_eq(&t1, &t16));
+        assert!(t16.makespan_ns < 16.0 * t1.makespan_ns, "pipelined");
+        assert!(t16.makespan_ns > t1.makespan_ns);
+    }
+
+    #[test]
+    fn plans_carry_occupancy_and_fit_the_paper_memory() {
+        let r = registry();
+        let plan = r.resolve(Model::Vgg16, Variant::Int8).unwrap();
+        assert!(plan.occupancy().fits());
+        assert!(plan.occupancy().subarrays_used > 0);
+        assert!(plan.capacity_warning().is_none());
+        assert!(r.capacity_warnings().is_empty());
+    }
+
+    #[test]
+    fn over_capacity_plan_surfaces_a_warning() {
+        let mut hw = OpimaConfig::paper();
+        hw.geometry.banks = 1;
+        hw.geometry.subarray_rows = 2;
+        hw.geometry.subarray_cols = 2;
+        hw.geometry.subarray_groups = 2;
+        let mut manifest = Manifest::synthetic(8, 12);
+        augment_manifest(&mut manifest);
+        let r = PlanRegistry::new(hw, manifest);
+        let plan = r.resolve(Model::ResNet18, Variant::Int8).unwrap();
+        assert!(!plan.occupancy().fits());
+        let w = plan.capacity_warning().unwrap();
+        assert!(w.subarrays_used > w.capacity);
+        let all = r.capacity_warnings();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0], w);
+        // Over capacity ⇒ the timeline refuses to pipeline.
+        let t = r.timeline(Model::ResNet18, Variant::Int8, 4).unwrap();
+        assert!(!t.pipelined);
+        assert!((t.makespan_ns - t.sequential_ns).abs() <= 1e-9 * t.sequential_ns);
     }
 
     #[test]

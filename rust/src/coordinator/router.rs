@@ -1,35 +1,106 @@
-//! Least-outstanding-work routing across simulated OPIMA instances.
+//! Occupancy-aware routing across simulated OPIMA instances.
 //!
-//! A deployment can attach several OPIMA memory modules; the router
-//! tracks the simulated busy horizon of each and sends every batch to
-//! the instance that frees up first (the same policy a vLLM-style
-//! router applies to replicas). Reservations can be tagged with the
-//! model that booked them ([`Router::dispatch_for`]), so the simulated
-//! makespan is reportable per model as well as globally.
+//! A deployment can attach several OPIMA memory modules. The router
+//! used to reduce each instance to a single scalar busy horizon —
+//! one batch at a time per module, regardless of how little of the
+//! module the batch's model actually occupies. It now tracks
+//! per-instance **subarray occupancy**: every reservation carries the
+//! mapper footprint of the model it serves, and a batch is placed at
+//! the earliest simulated time at which its footprint fits alongside
+//! the reservations already running there. Two models whose footprints
+//! fit together co-reside on one instance instead of serializing — the
+//! decision is driven by the mapper's occupancy, not a scalar horizon.
+//!
+//! Reservations can be tagged with the model that booked them
+//! ([`Router::dispatch_for`]), so the simulated makespan is reportable
+//! per model as well as globally; per-model reports are sorted by model
+//! for stable output. The footprint-free [`Router::dispatch`] books the
+//! instance exclusively (the whole capacity) and keeps the old
+//! serialize-per-instance semantics.
+//!
+//! **Modeling assumption:** co-residency is gated on the *subarray*
+//! footprint only — the first-order resource that determines whether a
+//! model's stationary operands can be resident at all. Co-resident
+//! batches are assumed to also share the aggregation/writeback stage
+//! pools without contention, even though each batch's duration was
+//! priced by the timeline assuming sole use of them; co-resident
+//! makespans are therefore optimistic by up to the writeback-channel
+//! share. Modeling cross-batch stage contention would require one
+//! global event timeline across all in-flight batches (a candidate
+//! follow-up), not per-batch durations.
+//!
+//! The feasibility check is conservative: a candidate window is charged
+//! every reservation it overlaps, so occupancy is never undercounted
+//! (sequential reservations inside one window may be double-counted,
+//! delaying a placement but never overbooking the memory). Expired
+//! reservations are pruned against the latest dispatch clock, and the
+//! per-instance ledger is **bounded**: when simulated time runs ahead
+//! of real time (the oversubscribed regime this router exists to
+//! model) old reservations never expire, so past
+//! [`MAX_RESERVATIONS_PER_INSTANCE`] the earliest-ending half is
+//! compacted into a per-instance *floor* — no new reservation may
+//! start before it. Compaction is conservative (placements only move
+//! later, never overbook) and keeps dispatch O(bounded) instead of
+//! growing with every batch ever served.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cnn::models::Model;
 
-/// Tracks per-instance simulated busy horizons.
+/// Ledger bound per instance; beyond this the earliest-ending half of
+/// the reservations is folded into the instance's start floor.
+pub const MAX_RESERVATIONS_PER_INSTANCE: usize = 128;
+
+/// One committed slice of simulated instance time.
+#[derive(Debug, Clone, Copy)]
+struct Reservation {
+    start_ms: f64,
+    end_ms: f64,
+    subarrays: usize,
+}
+
+/// Tracks per-instance reservations and occupancy.
 #[derive(Debug, Clone)]
 pub struct Router {
-    /// Simulated time (ms) at which each instance becomes free.
-    horizons: Vec<f64>,
+    /// Subarray capacity of each instance.
+    capacity: usize,
+    /// Active (not yet pruned) reservations per instance.
+    reservations: Vec<Vec<Reservation>>,
     /// Batches dispatched per instance.
     dispatched: Vec<u64>,
+    /// Latest reservation end (ms) per instance.
+    horizons: Vec<f64>,
+    /// Per-instance compaction floor (ms): simulated time before which
+    /// no new reservation may start, raised when old reservations are
+    /// folded away to bound the ledger.
+    floors: Vec<f64>,
+    /// Latest `now` seen — the prune frontier.
+    frontier: f64,
     /// Latest reservation end (ms) per tagging model — that model's
-    /// simulated makespan.
-    model_end: HashMap<Model, f64>,
+    /// simulated makespan. `BTreeMap` so iteration is model-sorted.
+    model_end: BTreeMap<Model, f64>,
 }
 
 impl Router {
+    /// Router whose instances are booked exclusively (each dispatch
+    /// takes the whole module — the pre-occupancy behaviour).
     pub fn new(instances: usize) -> Self {
+        Self::with_capacity(instances, 1)
+    }
+
+    /// Router over instances with `subarray_capacity` subarrays each;
+    /// [`Router::dispatch_for`] co-schedules batches whose footprints
+    /// fit together.
+    pub fn with_capacity(instances: usize, subarray_capacity: usize) -> Self {
         assert!(instances >= 1);
         Self {
-            horizons: vec![0.0; instances],
+            capacity: subarray_capacity.max(1),
+            reservations: vec![Vec::new(); instances],
             dispatched: vec![0; instances],
-            model_end: HashMap::new(),
+            horizons: vec![0.0; instances],
+            floors: vec![0.0; instances],
+            frontier: 0.0,
+            model_end: BTreeMap::new(),
         }
     }
 
@@ -37,31 +108,115 @@ impl Router {
         self.horizons.len()
     }
 
-    /// Pick the least-loaded instance for a batch arriving at `now_ms`
-    /// with simulated duration `dur_ms`. Returns (instance, start_ms,
-    /// end_ms) and commits the reservation.
+    /// Subarray capacity of each instance.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Book a whole instance exclusively for a batch arriving at
+    /// `now_ms` with simulated duration `dur_ms`. Returns (instance,
+    /// start_ms, end_ms) and commits the reservation.
     pub fn dispatch(&mut self, now_ms: f64, dur_ms: f64) -> (usize, f64, f64) {
-        let (idx, _) = self
-            .horizons
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.total_cmp(b.1))
+        self.place(None, self.capacity, now_ms, dur_ms)
+    }
+
+    /// Occupancy-aware dispatch: place a batch of `model` with the
+    /// mapper footprint `subarrays` at the earliest feasible simulated
+    /// time across instances. The reservation is tagged by model so
+    /// [`Router::model_makespan_ms`] can report when the simulated
+    /// hardware finished that model's work. Footprints larger than an
+    /// instance are clamped to the full instance (the model time-shares
+    /// the memory; the registry surfaces the capacity warning).
+    pub fn dispatch_for(
+        &mut self,
+        model: Model,
+        subarrays: usize,
+        now_ms: f64,
+        dur_ms: f64,
+    ) -> (usize, f64, f64) {
+        self.place(Some(model), subarrays, now_ms, dur_ms)
+    }
+
+    fn place(
+        &mut self,
+        model: Option<Model>,
+        subarrays: usize,
+        now_ms: f64,
+        dur_ms: f64,
+    ) -> (usize, f64, f64) {
+        let fp = subarrays.clamp(1, self.capacity);
+        self.frontier = self.frontier.max(now_ms);
+        // Place against the frontier, not the caller's clock: workers
+        // race, and a stale `now_ms` below the latest prune point would
+        // see already-pruned reservations as free capacity (overbooking
+        // the instance). Clamping forward keeps the never-undercount
+        // invariant; a placement never starts before the latest
+        // observed dispatch clock anyway.
+        let now_ms = self.frontier;
+        let frontier = self.frontier;
+        for (rs, floor) in self.reservations.iter_mut().zip(self.floors.iter_mut()) {
+            rs.retain(|r| r.end_ms > frontier);
+            // When simulated time runs ahead of the wall clock nothing
+            // expires; fold the earliest-ending half into the floor so
+            // memory and dispatch cost stay bounded.
+            if rs.len() >= MAX_RESERVATIONS_PER_INSTANCE {
+                rs.sort_by(|a, b| a.end_ms.total_cmp(&b.end_ms));
+                let cut = rs.len() - MAX_RESERVATIONS_PER_INSTANCE / 2;
+                *floor = floor.max(rs[cut - 1].end_ms);
+                rs.drain(..cut);
+            }
+        }
+        // Earliest feasible start wins; ties (e.g. small footprints that
+        // fit everywhere immediately) break toward the least-dispatched
+        // instance so load still spreads across modules.
+        let (idx, start) = (0..self.instances())
+            .map(|i| (i, self.earliest_start(i, fp, now_ms, dur_ms)))
+            .min_by(|a, b| {
+                a.1.total_cmp(&b.1)
+                    .then_with(|| self.dispatched[a.0].cmp(&self.dispatched[b.0]))
+            })
             .expect("non-empty");
-        let start = self.horizons[idx].max(now_ms);
         let end = start + dur_ms;
-        self.horizons[idx] = end;
+        self.reservations[idx].push(Reservation {
+            start_ms: start,
+            end_ms: end,
+            subarrays: fp,
+        });
         self.dispatched[idx] += 1;
+        self.horizons[idx] = self.horizons[idx].max(end);
+        if let Some(m) = model {
+            let e = self.model_end.entry(m).or_insert(0.0);
+            *e = e.max(end);
+        }
         (idx, start, end)
     }
 
-    /// [`Router::dispatch`] with the reservation tagged by the model the
-    /// batch serves, so [`Router::model_makespan_ms`] can report when the
-    /// simulated hardware finished that model's work.
-    pub fn dispatch_for(&mut self, model: Model, now_ms: f64, dur_ms: f64) -> (usize, f64, f64) {
-        let r = self.dispatch(now_ms, dur_ms);
-        let end = self.model_end.entry(model).or_insert(0.0);
-        *end = end.max(r.2);
-        r
+    /// Earliest `t ≥ max(now, floor)` at which `fp` subarrays are free
+    /// on instance `i` for the whole window `[t, t + dur)`, by the
+    /// conservative overlap count. Candidates are the base time and
+    /// each reservation end.
+    fn earliest_start(&self, i: usize, fp: usize, now_ms: f64, dur_ms: f64) -> f64 {
+        let rs = &self.reservations[i];
+        let base = now_ms.max(self.floors[i]);
+        let mut candidates: Vec<f64> = std::iter::once(base)
+            .chain(rs.iter().map(|r| r.end_ms).filter(|&e| e > base))
+            .collect();
+        candidates.sort_by(|a, b| a.total_cmp(b));
+        for t in candidates {
+            let used: usize = rs
+                .iter()
+                .filter(|r| r.start_ms < t + dur_ms && r.end_ms > t)
+                .map(|r| r.subarrays)
+                .sum();
+            if used + fp <= self.capacity {
+                return t;
+            }
+        }
+        // Unreachable by construction: at the latest reservation end no
+        // reservation overlaps the window and `fp ≤ capacity`, so the
+        // loop always returns there at the latest. Kept as a defensive
+        // fallback rather than a panic in the serving path.
+        self.horizons[i].max(base)
     }
 
     /// Per-instance dispatched-batch counts.
@@ -80,9 +235,10 @@ impl Router {
         self.model_end.get(&model).copied().unwrap_or(0.0)
     }
 
-    /// All per-model makespans recorded so far.
-    pub fn model_makespans(&self) -> &HashMap<Model, f64> {
-        &self.model_end
+    /// All per-model makespans recorded so far, sorted by model
+    /// (declaration order), so reports built from this are stable.
+    pub fn model_makespans(&self) -> Vec<(Model, f64)> {
+        self.model_end.iter().map(|(m, e)| (*m, *e)).collect()
     }
 }
 
@@ -124,11 +280,14 @@ mod tests {
     }
 
     #[test]
-    fn tagged_reservations_report_per_model_makespan() {
-        let mut r = Router::new(1);
-        r.dispatch_for(Model::LeNet, 0.0, 10.0);
-        r.dispatch_for(Model::Vgg16, 0.0, 30.0);
-        r.dispatch_for(Model::LeNet, 0.0, 10.0);
+    fn tagged_full_capacity_reservations_serialize() {
+        // Full-footprint dispatches reproduce the old scalar-horizon
+        // behaviour exactly.
+        let mut r = Router::with_capacity(1, 16_384);
+        let cap = r.capacity();
+        r.dispatch_for(Model::LeNet, cap, 0.0, 10.0);
+        r.dispatch_for(Model::Vgg16, cap, 0.0, 30.0);
+        r.dispatch_for(Model::LeNet, cap, 0.0, 10.0);
         // Serialized on one instance: lenet [0,10], vgg [10,40],
         // lenet [40,50].
         assert_eq!(r.model_makespan_ms(Model::LeNet), 50.0);
@@ -136,5 +295,83 @@ mod tests {
         assert_eq!(r.makespan_ms(), 50.0);
         assert_eq!(r.model_makespan_ms(Model::MobileNet), 0.0);
         assert_eq!(r.model_makespans().len(), 2);
+    }
+
+    #[test]
+    fn small_footprints_co_reside() {
+        // Two models that together fit in one instance overlap in
+        // simulated time instead of serializing.
+        let mut r = Router::with_capacity(1, 1000);
+        let (_, s0, _) = r.dispatch_for(Model::LeNet, 100, 0.0, 10.0);
+        let (_, s1, _) = r.dispatch_for(Model::MobileNet, 400, 0.0, 20.0);
+        assert_eq!(s0, 0.0);
+        assert_eq!(s1, 0.0, "fits alongside — co-resident");
+        assert_eq!(r.makespan_ms(), 20.0);
+        // A third model that does NOT fit (100+400+600 > 1000) queues
+        // until enough occupancy frees: at t=10 lenet releases 100.
+        let (_, s2, e2) = r.dispatch_for(Model::Vgg16, 600, 0.0, 5.0);
+        assert_eq!(s2, 10.0);
+        assert_eq!(e2, 15.0);
+    }
+
+    #[test]
+    fn oversized_footprint_clamps_to_exclusive() {
+        let mut r = Router::with_capacity(1, 100);
+        r.dispatch_for(Model::Vgg16, 10_000, 0.0, 10.0);
+        let (_, s, _) = r.dispatch_for(Model::LeNet, 1, 0.0, 1.0);
+        assert_eq!(s, 10.0, "a clamped full-capacity batch excludes others");
+    }
+
+    #[test]
+    fn model_makespans_sorted_by_model() {
+        let mut r = Router::with_capacity(2, 100);
+        r.dispatch_for(Model::Vgg16, 10, 0.0, 5.0);
+        r.dispatch_for(Model::LeNet, 10, 0.0, 5.0);
+        r.dispatch_for(Model::MobileNet, 10, 0.0, 5.0);
+        let spans = r.model_makespans();
+        let models: Vec<Model> = spans.iter().map(|(m, _)| *m).collect();
+        assert_eq!(models, vec![Model::LeNet, Model::MobileNet, Model::Vgg16]);
+    }
+
+    #[test]
+    fn stale_dispatch_clock_clamps_to_frontier() {
+        // Racing workers can present now_ms below the latest prune
+        // frontier; placement must clamp forward so pruned occupancy
+        // can never be overbooked.
+        let mut r = Router::with_capacity(1, 100);
+        r.dispatch_for(Model::LeNet, 60, 103.0, 5.0);
+        let (_, s, _) = r.dispatch_for(Model::Vgg16, 60, 100.0, 5.0);
+        assert!(s >= 103.0, "stale now started before the frontier: {s}");
+        assert_eq!(s, 108.0, "60+60 > 100: serialized behind the first");
+    }
+
+    #[test]
+    fn ledger_stays_bounded_when_sim_time_outruns_the_clock() {
+        // Oversubscribed regime: every dispatch arrives at now = 0 while
+        // simulated reservations stretch far into the future, so nothing
+        // ever expires. The ledger must compact instead of growing, and
+        // placements must stay feasible and non-decreasing per instance.
+        let mut r = Router::with_capacity(1, 100);
+        let mut last_start = 0.0f64;
+        for _ in 0..2000 {
+            // Footprint 60: no two fit together, so every batch queues.
+            let (_, s, _) = r.dispatch_for(Model::Vgg16, 60, 0.0, 5.0);
+            assert!(s >= last_start, "starts must not regress");
+            last_start = s;
+        }
+        assert!(r.reservations[0].len() <= MAX_RESERVATIONS_PER_INSTANCE);
+        // Work is conserved: 2000 serialized 5 ms batches.
+        assert!((r.makespan_ms() - 2000.0 * 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn picks_instance_with_earliest_feasible_start() {
+        let mut r = Router::with_capacity(2, 100);
+        // Saturate instance 0 until t=50; instance 1 until t=10.
+        r.dispatch_for(Model::Vgg16, 100, 0.0, 50.0);
+        r.dispatch_for(Model::LeNet, 100, 0.0, 10.0);
+        let (i, s, _) = r.dispatch_for(Model::MobileNet, 80, 0.0, 5.0);
+        assert_eq!(i, 1);
+        assert_eq!(s, 10.0);
     }
 }

@@ -111,13 +111,16 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
     let exec_ms = exec_start.elapsed().as_secs_f64() * 1e3;
     let classes = logits.len() / bsz;
 
-    // Simulated hardware metering: dispatch this *real* batch onto the
-    // least-loaded simulated OPIMA instance's busy horizon, tagged with
-    // the model so makespan is reportable per model.
+    // Simulated hardware metering: place this *real* batch at the
+    // earliest simulated time its mapper footprint fits on an OPIMA
+    // instance (models whose footprints fit together co-reside), tagged
+    // with the model so makespan is reportable per model.
     let (sim_lat, sim_mj) = plan.sim_cost();
     let epoch = *lock(&ctx.epoch);
     let now_ms = exec_start.saturating_duration_since(epoch).as_secs_f64() * 1e3;
-    let instance = lock(&ctx.router).dispatch_for(batch.model, now_ms, sim_lat).0;
+    let instance = lock(&ctx.router)
+        .dispatch_for(batch.model, plan.occupancy().subarrays_used, now_ms, sim_lat)
+        .0;
 
     let mut responses = Vec::with_capacity(batch.requests.len());
     for (i, r) in batch.requests.iter().enumerate() {

@@ -23,9 +23,15 @@
 //!   the tiny served LeNet, with the static serving metadata the
 //!   coordinator validates requests against.
 //! - [`mapper`] — CNN → PIM mapping: input-stationary convs,
-//!   weight-stationary FC, 1×1-kernel serialization (paper §IV.D).
+//!   weight-stationary FC, 1×1-kernel serialization (paper §IV.D),
+//!   per-layer subarray footprints and occupancy-vs-capacity
+//!   accounting with structured over-capacity warnings.
 //! - [`analyzer`] — latency/energy/power roll-up, EPB and FPS/W metrics
-//!   (Figs. 7–12).
+//!   (Figs. 7–12), and the resource-aware pipelined simulation
+//!   timeline ([`analyzer::timeline`]): whole batches scheduled as
+//!   discrete events against subarray/aggregation/writeback pools, so
+//!   batch latency is sublinear instead of `batch ×` the layer sum
+//!   (exactly equal to it at batch 1).
 //! - [`baselines`] — NP100 / E7742 / ORIN rooflines, PRIME, CrossLight,
 //!   PhPIM comparison models (paper §V).
 //! - [`coordinator`] — the concurrent *multi-model* serving engine:
@@ -36,10 +42,12 @@
 //!   every batch resolves through the shared `PlanRegistry`, a lazily
 //!   built per-`(model, variant)` cache of mapper plan + sim-cost table
 //!   + executor program, compiled exactly once under a per-key lock) →
-//!   bounded stats sink, with graceful drain/shutdown; the router maps
-//!   real batches onto simulated OPIMA instance horizons with
-//!   reservations tagged per model, and a synchronous `Server` facade
-//!   preserves the seed call-loop API with a by-value response API.
+//!   bounded stats sink, with graceful drain/shutdown; the
+//!   occupancy-aware router places each real batch at the earliest
+//!   simulated time its mapper footprint fits on an OPIMA instance
+//!   (co-residency instead of scalar busy horizons), with reservations
+//!   tagged per model, and a synchronous `Server` facade preserves the
+//!   seed call-loop API with a by-value response API.
 //!   Observability is streaming and per-model: per-worker log-bucketed
 //!   latency histograms merged in O(models × buckets) by `stats()`
 //!   (global + per-model breakdowns), and a fixed-capacity ring of

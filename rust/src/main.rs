@@ -7,6 +7,8 @@
 //!   groups                    Fig. 7  subarray-group selection sweep
 //!   power                     Fig. 8  power breakdown
 //!   latency  [--bits 4|8] [--model NAME]   Fig. 9 latency breakdown
+//!   analyze  [--batch N] [--bits 4|8] [--model NAME]
+//!                             pipelined-vs-sequential batch timeline
 //!   compare  [--bits 4|8]     Figs. 10–12 cross-platform comparison
 //!   memtest  [--ops N]        memory-mode self-test (read/write sweep)
 //!   serve    [--requests N] [--variant v] [--instances K] [--workers W]
@@ -97,6 +99,7 @@ fn run() -> Result<()> {
         "groups" => cmd_groups(&cfg),
         "power" => cmd_power(&cfg),
         "latency" => cmd_latency(&cfg, &args),
+        "analyze" => cmd_analyze(&cfg, &args),
         "compare" => cmd_compare(&cfg, &args),
         "memtest" => cmd_memtest(&cfg, &args),
         "serve" => cmd_serve(&cfg, &args),
@@ -106,7 +109,7 @@ fn run() -> Result<()> {
         }
         other => Err(Error::Config(format!(
             "unknown command '{other}' (try: info dse crossing groups power \
-             latency compare memtest serve config)"
+             latency analyze compare memtest serve config)"
         ))),
     }
 }
@@ -242,6 +245,44 @@ fn cmd_latency(cfg: &OpimaConfig, args: &Args) -> Result<()> {
         }
     }
     print!("{}", report::latency_table(&analyses));
+    Ok(())
+}
+
+fn cmd_analyze(cfg: &OpimaConfig, args: &Args) -> Result<()> {
+    let batch = args.usize_or("batch", 8)?;
+    if batch == 0 {
+        return Err(Error::Config("--batch must be at least 1".into()));
+    }
+    let models = parse_models(args)?;
+    let bits: u32 = args
+        .get("bits")
+        .unwrap_or("4")
+        .parse()
+        .map_err(|_| Error::Config("bad --bits".into()))?;
+    println!(
+        "Pipelined batch timeline vs the analytical batch × sum ({bits}-bit, \
+         batch {batch})\n"
+    );
+    let mut rows = Vec::new();
+    let mut warnings = Vec::new();
+    for m in &models {
+        let net = build_model(*m)?;
+        let a = opima::analyzer::analyze_model(cfg, &net, bits)?;
+        if let Some(w) = a.occupancy.warning_for(&a.name) {
+            warnings.push(w);
+        }
+        rows.push((m.name(), opima::analyzer::simulate_analysis(cfg, &a, batch)));
+    }
+    let refs: Vec<(&str, &opima::analyzer::BatchTimeline)> =
+        rows.iter().map(|(n, t)| (*n, t)).collect();
+    print!("{}", report::timeline_table(&refs));
+    println!(
+        "\n(speedup = sequential / pipelined; efficiency = bottleneck bound / \
+         pipelined — 100% means the schedule saturates its busiest resource)"
+    );
+    for w in &warnings {
+        println!("warning: {w}");
+    }
     Ok(())
 }
 
@@ -427,5 +468,11 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
     }
     let per_model_sum: u64 = s.per_model.iter().map(|m| m.served).sum();
     debug_assert_eq!(per_model_sum, s.served);
+    // Over-capacity models still serve but time-share the simulated
+    // memory; surface the mapper's structured warning instead of
+    // silently mapping.
+    for w in server.engine().capacity_warnings() {
+        println!("warning: {w}");
+    }
     server.shutdown()
 }

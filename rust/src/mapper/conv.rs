@@ -31,6 +31,15 @@ pub struct ConvMapping {
     pub one_by_one: bool,
 }
 
+impl ConvMapping {
+    /// Subarrays this layer's stationary operands occupy — the resource
+    /// footprint the occupancy accounting and the simulation timeline
+    /// charge for the layer (input-stationary: the feature-map shards).
+    pub fn footprint(&self) -> usize {
+        self.subarrays_for_feature_map
+    }
+}
+
 /// Map one conv layer; errors only if a single kernel row's spatial width
 /// alone exceeds the WDM degree (the paper: "if the kernel sizes do not
 /// exceed the subarray row size"). Wide channel counts tile.

@@ -21,6 +21,15 @@ pub struct FcMapping {
     pub subarrays_for_weights: usize,
 }
 
+impl FcMapping {
+    /// Subarrays this layer's stationary operands occupy — the resource
+    /// footprint the occupancy accounting and the simulation timeline
+    /// charge for the layer (weight-stationary: the weight matrix).
+    pub fn footprint(&self) -> usize {
+        self.subarrays_for_weights
+    }
+}
+
 pub fn map_fc(geom: &Geometry, inst: &LayerInstance) -> Result<FcMapping> {
     let Layer::Fc { out, .. } = inst.layer else {
         return Err(Error::Mapping("map_fc on non-fc layer".into()));
@@ -31,7 +40,7 @@ pub fn map_fc(geom: &Geometry, inst: &LayerInstance) -> Result<FcMapping> {
     let neurons_per_subarray = (geom.rows_per_subarray / rows_per_neuron).max(1);
     let subarrays_for_weights = out.div_ceil(neurons_per_subarray).max(1);
     // Capacity sanity: the whole matrix must fit in the memory.
-    let total_subarrays = geom.banks * geom.subarrays_per_bank();
+    let total_subarrays = geom.total_subarrays();
     if subarrays_for_weights > total_subarrays {
         return Err(Error::Mapping(format!(
             "FC weight matrix needs {subarrays_for_weights} subarrays, \

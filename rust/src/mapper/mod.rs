@@ -13,4 +13,4 @@ pub mod conv;
 pub mod fc;
 pub mod plan;
 
-pub use plan::{map_network, MappedNetwork};
+pub use plan::{map_network, CapacityWarning, MappedNetwork, Occupancy};

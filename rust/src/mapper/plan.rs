@@ -1,20 +1,98 @@
 //! Network-level mapping: [`crate::cnn::Network`] → PIM workload stream.
 
+use std::fmt;
+
 use crate::cnn::graph::Network;
 use crate::cnn::layer::Layer;
-use crate::config::OpimaConfig;
+use crate::config::{Geometry, OpimaConfig};
 use crate::error::Result;
 use crate::mapper::{conv, fc};
 use crate::pim::LayerWork;
+
+/// Subarray occupancy of a mapped network against a geometry's capacity.
+///
+/// This is the first-class form of what used to be a test-only
+/// comparison: the registry and the `serve`/`analyze` CLI paths surface
+/// over-capacity mappings as a structured [`CapacityWarning`] instead of
+/// silently mapping, and the simulation timeline disables cross-image
+/// pipelining when the footprints cannot all be resident at once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Occupancy {
+    /// Subarrays occupied by the network's stationary operands.
+    pub subarrays_used: usize,
+    /// Subarrays the geometry provides (`banks × subarrays_per_bank`).
+    pub capacity: usize,
+}
+
+impl Occupancy {
+    /// Whether the stationary operands fit in memory all at once.
+    pub fn fits(&self) -> bool {
+        self.subarrays_used <= self.capacity
+    }
+
+    /// Fraction of the memory's subarrays occupied (may exceed 1).
+    pub fn utilization(&self) -> f64 {
+        self.subarrays_used as f64 / self.capacity.max(1) as f64
+    }
+
+    /// Structured over-capacity warning, `None` when the mapping fits.
+    pub fn warning_for(&self, network: &str) -> Option<CapacityWarning> {
+        if self.fits() {
+            None
+        } else {
+            Some(CapacityWarning {
+                network: network.to_string(),
+                subarrays_used: self.subarrays_used,
+                capacity: self.capacity,
+            })
+        }
+    }
+}
+
+/// A mapped network whose stationary operands exceed the memory's
+/// subarray capacity: it still maps (layers time-share the memory), but
+/// cross-image pipelining is unsound and serving it degrades latency.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CapacityWarning {
+    pub network: String,
+    pub subarrays_used: usize,
+    pub capacity: usize,
+}
+
+impl fmt::Display for CapacityWarning {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: stationary operands need {} subarrays but the memory has {} \
+             ({:.1}% over capacity) — layers time-share the memory and the \
+             batch timeline falls back to serial execution",
+            self.network,
+            self.subarrays_used,
+            self.capacity,
+            100.0 * (self.subarrays_used as f64 / self.capacity.max(1) as f64 - 1.0)
+        )
+    }
+}
 
 /// A network mapped onto the PIM substrate.
 #[derive(Debug, Clone)]
 pub struct MappedNetwork {
     pub name: String,
-    /// Per-compute-layer work items, in execution order.
+    /// Per-compute-layer work items, in execution order. Each carries
+    /// its own subarray footprint (`LayerWork::subarrays`).
     pub works: Vec<LayerWork>,
     /// Total subarrays touched by stationary operands (capacity check).
     pub subarrays_used: usize,
+}
+
+impl MappedNetwork {
+    /// Occupancy of this mapping against a geometry's subarray capacity.
+    pub fn occupancy(&self, geom: &Geometry) -> Occupancy {
+        Occupancy {
+            subarrays_used: self.subarrays_used,
+            capacity: geom.total_subarrays(),
+        }
+    }
 }
 
 /// Map a network at a given operand bit-width (activations and weights
@@ -27,7 +105,7 @@ pub fn map_network(cfg: &OpimaConfig, net: &Network, bits: u32) -> Result<Mapped
         match inst.layer {
             Layer::Conv { kh, .. } => {
                 let m = conv::map_conv(geom, inst)?;
-                subarrays_used += m.subarrays_for_feature_map;
+                subarrays_used += m.footprint();
                 works.push(LayerWork {
                     name: inst.name.clone(),
                     macs: inst.macs(),
@@ -36,11 +114,12 @@ pub fn map_network(cfg: &OpimaConfig, net: &Network, bits: u32) -> Result<Mapped
                     weight_bits: bits,
                     out_elems: inst.out_shape.elems(),
                     weight_elems: inst.params(),
+                    subarrays: m.footprint(),
                 });
             }
             Layer::Fc { .. } => {
                 let m = fc::map_fc(geom, inst)?;
-                subarrays_used += m.subarrays_for_weights;
+                subarrays_used += m.footprint();
                 works.push(LayerWork {
                     name: inst.name.clone(),
                     macs: inst.macs(),
@@ -49,6 +128,7 @@ pub fn map_network(cfg: &OpimaConfig, net: &Network, bits: u32) -> Result<Mapped
                     weight_bits: bits,
                     out_elems: inst.out_shape.elems(),
                     weight_elems: inst.params(),
+                    subarrays: m.footprint(),
                 });
             }
             _ => {}
@@ -96,21 +176,55 @@ mod tests {
     }
 
     #[test]
+    fn per_layer_footprints_sum_to_total() {
+        let cfg = OpimaConfig::paper();
+        let net = build_model(Model::ResNet18).unwrap();
+        let mapped = map_network(&cfg, &net, 4).unwrap();
+        assert!(mapped.works.iter().all(|w| w.subarrays >= 1));
+        let sum: usize = mapped.works.iter().map(|w| w.subarrays).sum();
+        assert_eq!(sum, mapped.subarrays_used);
+    }
+
+    #[test]
     fn capacity_fits_paper_memory() {
         // Every model's stationary operands must fit in the 16384
-        // subarrays of the paper configuration.
+        // subarrays of the paper configuration — now asserted through
+        // the first-class occupancy API.
         let cfg = OpimaConfig::paper();
-        let total = cfg.geometry.banks * cfg.geometry.subarrays_per_bank();
         for m in ALL_MODELS {
             let net = build_model(m).unwrap();
             let mapped = map_network(&cfg, &net, 8).unwrap();
+            let occ = mapped.occupancy(&cfg.geometry);
+            assert_eq!(occ.capacity, 16_384);
             assert!(
-                mapped.subarrays_used <= total,
-                "{} uses {} of {total}",
+                occ.fits(),
+                "{} uses {} of {}",
                 m.name(),
-                mapped.subarrays_used
+                occ.subarrays_used,
+                occ.capacity
             );
+            assert!(occ.warning_for(&mapped.name).is_none());
+            assert!(occ.utilization() <= 1.0);
         }
+    }
+
+    #[test]
+    fn over_capacity_mapping_warns() {
+        // A starved geometry still maps (conv footprints have no hard
+        // capacity error) but reports a structured warning.
+        let mut cfg = OpimaConfig::paper();
+        cfg.geometry.subarray_rows = 2;
+        cfg.geometry.subarray_cols = 2;
+        cfg.geometry.subarray_groups = 2;
+        cfg.geometry.banks = 1;
+        let net = build_model(Model::ResNet18).unwrap();
+        let mapped = map_network(&cfg, &net, 8).unwrap();
+        let occ = mapped.occupancy(&cfg.geometry);
+        assert!(!occ.fits());
+        assert!(occ.utilization() > 1.0);
+        let w = occ.warning_for(&mapped.name).unwrap();
+        assert_eq!(w.capacity, 4);
+        assert!(w.to_string().contains("resnet18_8b"));
     }
 
     #[test]

@@ -28,6 +28,10 @@ pub struct LayerWork {
     pub out_elems: u64,
     /// Weight parameters involved (for MDL programming counts).
     pub weight_elems: u64,
+    /// Subarrays occupied by this layer's stationary operands (the
+    /// mapper's placement footprint) — the resource the simulation
+    /// timeline and the router's co-residency accounting charge.
+    pub subarrays: usize,
 }
 
 /// Cost of one layer on the PIM substrate.
@@ -35,7 +39,14 @@ pub struct LayerWork {
 pub struct LayerCost {
     pub name: String,
     /// In-memory MAC + aggregation time (the paper's "processing").
+    /// Always equal to `mac_ns + aggregation_ns`.
     pub processing_ns: f64,
+    /// In-waveguide MAC time alone (MDL cycles) — the stage the timeline
+    /// schedules against the layer's subarray/MDL resources.
+    pub mac_ns: f64,
+    /// Aggregation-unit pipeline time alone (PD + ADC + shift-add) — the
+    /// stage the timeline schedules against the shared aggregation units.
+    pub aggregation_ns: f64,
     /// Non-linearity application + OPCM write of output maps ("writeback").
     pub writeback_ns: f64,
     /// OPCM cell read energy (pJ).
@@ -50,6 +61,8 @@ pub struct LayerCost {
     pub cycles: u64,
     /// Effective MAC lanes used.
     pub lanes: u64,
+    /// Subarray footprint inherited from the [`LayerWork`].
+    pub subarrays: usize,
 }
 
 impl LayerCost {
@@ -116,7 +129,8 @@ impl PimScheduler {
             work.out_elems * plan.steps as u64,
             work.out_elems,
         );
-        let processing_ns = cycles as f64 * cfg.timing.cycle_ns() + agg.latency_ns;
+        let mac_ns = cycles as f64 * cfg.timing.cycle_ns();
+        let processing_ns = mac_ns + agg.latency_ns;
 
         // --- energies ----------------------------------------------------
         // One OPCM cell read per nibble MAC (input-stationary operand).
@@ -141,6 +155,8 @@ impl PimScheduler {
         Ok(LayerCost {
             name: work.name.clone(),
             processing_ns,
+            mac_ns,
+            aggregation_ns: agg.latency_ns,
             writeback_ns,
             read_pj,
             mdl_pj,
@@ -148,6 +164,7 @@ impl PimScheduler {
             writeback_pj,
             cycles,
             lanes,
+            subarrays: work.subarrays,
         })
     }
 
@@ -175,7 +192,20 @@ mod tests {
             weight_bits: 4,
             out_elems,
             weight_elems: 1_000,
+            subarrays: 4,
         }
+    }
+
+    #[test]
+    fn stage_costs_partition_processing() {
+        // The timeline composes mac/aggregation/writeback stages; they
+        // must partition the analytical totals exactly.
+        let s = sched();
+        let c = s.cost_layer(&conv_work(1_000_000, 3, 10_000)).unwrap();
+        assert!(c.mac_ns > 0.0 && c.aggregation_ns > 0.0);
+        assert!((c.processing_ns - (c.mac_ns + c.aggregation_ns)).abs() < 1e-9);
+        assert!((c.total_ns() - (c.mac_ns + c.aggregation_ns + c.writeback_ns)).abs() < 1e-9);
+        assert_eq!(c.subarrays, 4, "footprint carried through pricing");
     }
 
     #[test]

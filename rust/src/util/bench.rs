@@ -5,9 +5,11 @@
 //! `black_box` to defeat constant folding.
 
 use std::hint::black_box as std_black_box;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::util::histogram::nearest_rank;
+use crate::util::json::Json;
 
 /// Re-exported black box.
 pub fn black_box<T>(x: T) -> T {
@@ -85,6 +87,90 @@ pub fn measure<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) 
     stats
 }
 
+/// Whether benches run in smoke mode (`OPIMA_BENCH_SMOKE=1`): one
+/// sample per measurement, tiny workloads — CI uses this to exercise
+/// the JSON emitters without paying full bench time.
+pub fn smoke() -> bool {
+    std::env::var("OPIMA_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+/// `samples` normally, 1 in smoke mode.
+pub fn scaled(samples: usize) -> usize {
+    if smoke() {
+        1
+    } else {
+        samples
+    }
+}
+
+/// Machine-readable bench summary, written as `BENCH_<name>.json` so
+/// bench trajectories can be collected instead of scraped from stdout.
+///
+/// Schema: `{"bench": <name>, "smoke": <bool>, "results": [<row>...]}`
+/// where each row is an object with at least a `"name"` field;
+/// [`JsonReport::add_stats`] rows carry `samples`/`mean_ns`/`median_ns`/
+/// `std_ns`/`min_ns`/`max_ns`.
+#[derive(Debug, Clone)]
+pub struct JsonReport {
+    bench: String,
+    rows: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        Self {
+            bench: bench.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one result row: a named object of numeric/string fields.
+    pub fn add(&mut self, name: &str, fields: &[(&str, Json)]) {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(name.to_string()));
+        for (k, v) in fields {
+            obj.insert((*k).to_string(), v.clone());
+        }
+        self.rows.push(Json::Obj(obj));
+    }
+
+    /// Append one [`measure`] result.
+    pub fn add_stats(&mut self, s: &Stats) {
+        self.add(
+            &s.name,
+            &[
+                ("samples", Json::Num(s.samples as f64)),
+                ("mean_ns", Json::Num(s.mean_ns)),
+                ("median_ns", Json::Num(s.median_ns)),
+                ("std_ns", Json::Num(s.std_ns)),
+                ("min_ns", Json::Num(s.min_ns)),
+                ("max_ns", Json::Num(s.max_ns)),
+            ],
+        );
+    }
+
+    /// The full document this report serializes to.
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        obj.insert("smoke".to_string(), Json::Bool(smoke()));
+        obj.insert("results".to_string(), Json::Arr(self.rows.clone()));
+        Json::Obj(obj)
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, format!("{}\n", self.to_json()))?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<name>.json` into the current directory.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        self.write_to(Path::new("."))
+    }
+}
+
 /// Print a markdown-style table header for paper-figure benches.
 pub fn table_header(title: &str, columns: &[&str]) {
     println!("\n## {title}\n");
@@ -110,5 +196,25 @@ mod tests {
         assert_eq!(s.samples, 20);
         assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
         assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn json_report_round_trips_schema() {
+        let mut r = JsonReport::new("unit_test");
+        let s = measure("probe", 0, 3, || {
+            black_box(1 + 1);
+        });
+        r.add_stats(&s);
+        r.add("custom", &[("req_per_s", Json::Num(123.5))]);
+        let path = r.write_to(&std::env::temp_dir()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("unit_test"));
+        let rows = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("probe"));
+        assert_eq!(rows[0].get("samples").unwrap().as_f64(), Some(3.0));
+        assert_eq!(rows[1].get("req_per_s").unwrap().as_f64(), Some(123.5));
+        std::fs::remove_file(path).unwrap();
     }
 }

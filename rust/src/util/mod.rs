@@ -12,7 +12,9 @@
 //! - [`prng`] — SplitMix64/Xoshiro256** deterministic PRNG (workloads,
 //!   property tests) with unbiased Lemire bounded sampling.
 //! - [`bench`] — a criterion-style measurement harness for `cargo bench`
-//!   targets (warmup, N samples, mean/median/stddev reporting).
+//!   targets (warmup, N samples, mean/median/stddev reporting), plus
+//!   machine-readable `BENCH_<name>.json` summaries and the
+//!   `OPIMA_BENCH_SMOKE` one-sample mode CI uses to gate the schema.
 //! - [`histogram`] — log-bucketed streaming histogram (HDR-style): fixed
 //!   memory, mergeable shards, O(buckets) nearest-rank percentiles. The
 //!   one percentile implementation shared by the serving engine's

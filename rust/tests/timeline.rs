@@ -1,0 +1,160 @@
+//! Property tests over the pipelined simulation timeline.
+//!
+//! The invariants the refactor promises (ISSUE 4):
+//! - pipelined batch latency ≥ the bottleneck-stage lower bound
+//!   (`max_stage × images`, generalized per resource pool),
+//! - pipelined batch latency ≤ the sequential `batch ×` sum,
+//! - makespan is monotone in batch size,
+//! - batch = 1 equals the analytical `ModelAnalysis` totals exactly,
+//! - multi-row-kernel models at batch ≥ 8 are *strictly* sublinear.
+//!
+//! proptest is unavailable offline, so these use the in-repo
+//! deterministic PRNG with many random cases (seeds printed on failure).
+
+use opima::analyzer::latency::analyze_model;
+use opima::analyzer::timeline::simulate_analysis;
+use opima::cnn::graph::{Network, NetworkBuilder};
+use opima::cnn::layer::TensorShape;
+use opima::cnn::{build_model, Model};
+use opima::util::prng::Rng;
+use opima::OpimaConfig;
+
+/// Build a random small CNN: a few conv/pool stages and an FC head.
+fn random_net(rng: &mut Rng, case: usize) -> Network {
+    let side = 8 + 4 * rng.index(4); // 8..20
+    let cin = 1 + rng.index(3);
+    let mut b = NetworkBuilder::new(&format!("rand{case}"), TensorShape::new(side, side, cin));
+    let stages = 1 + rng.index(3);
+    for _ in 0..stages {
+        let k = [1usize, 3, 3, 5][rng.index(4)];
+        let cout = 4 << rng.index(3);
+        b.conv(k, k, cout, 1, k / 2).unwrap();
+        if rng.index(2) == 0 {
+            b.pool(2, 2).unwrap();
+        }
+    }
+    b.fc(1 + rng.index(16)).unwrap();
+    b.build()
+}
+
+#[test]
+fn prop_timeline_bounds_hold_for_random_nets() {
+    let cfg = OpimaConfig::paper();
+    let mut rng = Rng::new(4040);
+    for case in 0..40 {
+        let net = random_net(&mut rng, case);
+        let bits = [4u32, 8][rng.index(2)];
+        let a = analyze_model(&cfg, &net, bits).unwrap();
+        let batch = 1 + rng.index(24);
+        let t = simulate_analysis(&cfg, &a, batch);
+        assert_eq!(t.batch, batch);
+        let seq = a.total_ms() * 1e6 * batch as f64;
+        assert!(
+            (t.sequential_ns - seq).abs() <= 1e-9 * seq,
+            "case {case}: sequential mismatch"
+        );
+        assert!(
+            t.makespan_ns <= t.sequential_ns * (1.0 + 1e-12),
+            "case {case}: makespan {} exceeds sequential {}",
+            t.makespan_ns,
+            t.sequential_ns
+        );
+        assert!(
+            t.makespan_ns + 1e-6 >= t.bottleneck_ns,
+            "case {case}: makespan {} beats the bottleneck bound {}",
+            t.makespan_ns,
+            t.bottleneck_ns
+        );
+        // The bound itself is at least the busiest single stage × batch.
+        let max_stage = a
+            .layer_costs
+            .iter()
+            .map(|c| (c.mac_ns + c.aggregation_ns).max(c.writeback_ns))
+            .fold(0.0f64, f64::max);
+        assert!(
+            t.bottleneck_ns + 1e-6 >= max_stage * batch as f64,
+            "case {case}: bottleneck below max_stage × images"
+        );
+    }
+}
+
+#[test]
+fn prop_batch_one_matches_analytical_totals() {
+    let cfg = OpimaConfig::paper();
+    let mut rng = Rng::new(1111);
+    for case in 0..40 {
+        let net = random_net(&mut rng, case);
+        let bits = [4u32, 8][rng.index(2)];
+        let a = analyze_model(&cfg, &net, bits).unwrap();
+        let t = simulate_analysis(&cfg, &a, 1);
+        let total_ns = a.total_ms() * 1e6;
+        assert!(
+            (t.makespan_ns - total_ns).abs() <= 1e-9 * total_ns.max(1.0),
+            "case {case}: batch-1 timeline {} != analytical {}",
+            t.makespan_ns,
+            total_ns
+        );
+    }
+}
+
+#[test]
+fn prop_makespan_monotone_in_batch() {
+    let cfg = OpimaConfig::paper();
+    let mut rng = Rng::new(2222);
+    for case in 0..20 {
+        let net = random_net(&mut rng, case);
+        let a = analyze_model(&cfg, &net, 4).unwrap();
+        let mut prev = 0.0f64;
+        for batch in [1usize, 2, 3, 5, 8, 13, 21] {
+            let t = simulate_analysis(&cfg, &a, batch);
+            assert!(
+                t.makespan_ns >= prev - 1e-9,
+                "case {case}: batch {batch} shrank the makespan"
+            );
+            prev = t.makespan_ns;
+        }
+    }
+}
+
+#[test]
+fn multi_row_kernel_models_batch8_strictly_sublinear() {
+    // The acceptance criterion: for a multi-row-kernel model at
+    // batch ≥ 8, pipelined batch latency is strictly below `batch ×`
+    // the single-inference latency while respecting the bottleneck
+    // bound. ResNet18 and VGG16 are the paper's multi-row-kernel CNNs.
+    let cfg = OpimaConfig::paper();
+    for model in [Model::ResNet18, Model::Vgg16] {
+        let a = analyze_model(&cfg, &build_model(model).unwrap(), 4).unwrap();
+        for batch in [8usize, 16] {
+            let t = simulate_analysis(&cfg, &a, batch);
+            assert!(t.pipelined);
+            let linear = batch as f64 * a.total_ms() * 1e6;
+            assert!(
+                t.makespan_ns < linear,
+                "{model:?} batch {batch}: {} !< {linear}",
+                t.makespan_ns
+            );
+            assert!(t.makespan_ns + 1e-3 >= t.bottleneck_ns);
+            assert!(t.speedup() > 1.0);
+        }
+    }
+}
+
+#[test]
+fn registry_timeline_agrees_with_direct_simulation() {
+    // The serving registry's cached timelines must be the same schedule
+    // the analyzer computes directly.
+    use opima::coordinator::registry::{augment_manifest, PlanRegistry};
+    use opima::coordinator::request::Variant;
+    use opima::runtime::Manifest;
+
+    let cfg = OpimaConfig::paper();
+    let mut manifest = Manifest::synthetic(8, 12);
+    augment_manifest(&mut manifest);
+    let registry = PlanRegistry::new(cfg.clone(), manifest);
+    let cached = registry.timeline(Model::ResNet18, Variant::Int4, 16).unwrap();
+    let a = analyze_model(&cfg, &build_model(Model::ResNet18).unwrap(), 4).unwrap();
+    let direct = simulate_analysis(&cfg, &a, 16);
+    assert!((cached.makespan_ns - direct.makespan_ns).abs() <= 1e-9 * direct.makespan_ns);
+    assert_eq!(cached.batch, 16);
+}
