@@ -6,12 +6,13 @@
 //! (schema: `util::bench::JsonReport`). `OPIMA_BENCH_SMOKE=1` runs one
 //! sample per measurement so CI can validate the JSON schema cheaply.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use opima::analyzer::{analyze_model, simulate_analysis};
+use opima::analyzer::{analyze_model, simulate_analysis, simulate_analysis_makespan};
 use opima::cnn::{build_model, Model};
 use opima::coordinator::batcher::DynamicBatcher;
-use opima::coordinator::request::{InferenceRequest, Variant};
+use opima::coordinator::request::{ImageBuf, InferenceRequest, LogitsPool, LogitsView, Variant};
 use opima::coordinator::router::Router;
 use opima::mapper::map_network;
 use opima::memory::MemoryController;
@@ -49,6 +50,11 @@ fn main() {
     report.add_stats(&measure("timeline/resnet18_batch32", 3, scaled(200), || {
         black_box(simulate_analysis(&cfg, &analysis, 32));
     }));
+    // The makespan-only fast path the registry/cost tables use — same
+    // arithmetic, no `batch × layers × 3` event vec.
+    report.add_stats(&measure("timeline/resnet18_batch32_makespan_only", 3, scaled(200), || {
+        black_box(simulate_analysis_makespan(&cfg, &analysis, 32));
+    }));
 
     // --- memory simulator hot loop ---------------------------------------
     let mut mem = MemoryController::new(&cfg).unwrap();
@@ -68,7 +74,7 @@ fn main() {
             let out = b.push(InferenceRequest {
                 id,
                 model: Model::LeNet,
-                image: vec![rng.f64() as f32; 4],
+                image: vec![rng.f64() as f32; 4].into(),
                 variant: Variant::Int4,
                 arrival: Instant::now(),
             });
@@ -89,6 +95,57 @@ fn main() {
         for i in 0..1000 {
             black_box(r.dispatch_for(Model::ResNet18, 400, i as f64, 1.5));
         }
+    }));
+
+    // --- serving data plane: old copy path vs pooled zero-copy path -------
+    // What a worker pays per batch to (a) pack 8 images into the fixed-
+    // shape batch input and (b) publish per-request logits. The `_copy`
+    // rows replicate the pre-zero-copy engine (fresh Vec per batch,
+    // `row.to_vec()` per response); the `_pooled` rows are the shipping
+    // path (reused input buffer, shared Arc logits + per-response views).
+    let bsz = 8usize;
+    let elems = 144usize;
+    let classes = 4usize;
+    let images: Vec<ImageBuf> = (0..bsz)
+        .map(|b| (0..elems).map(|i| ((b * elems + i) % 7) as f32 * 0.1).collect())
+        .collect();
+    report.add_stats(&measure("serving/pack_batch8_copy", 10, scaled(2000), || {
+        let mut input = vec![0f32; bsz * elems];
+        for (i, img) in images.iter().enumerate() {
+            input[i * elems..(i + 1) * elems].copy_from_slice(img);
+        }
+        black_box(&input);
+    }));
+    let mut pooled_input: Vec<f32> = Vec::new();
+    report.add_stats(&measure("serving/pack_batch8_pooled", 10, scaled(2000), || {
+        // The worker's path: size the reused buffer, overwrite the rows
+        // in place — a full batch pays no memset (only a short batch
+        // zeroes its padding tail).
+        pooled_input.resize(bsz * elems, 0.0);
+        for (i, img) in images.iter().enumerate() {
+            pooled_input[i * elems..(i + 1) * elems].copy_from_slice(img);
+        }
+        black_box(&pooled_input);
+    }));
+    let batch_logits: Vec<f32> = (0..bsz * classes).map(|i| i as f32 * 0.25).collect();
+    report.add_stats(&measure("serving/respond_batch8_copy", 10, scaled(2000), || {
+        let rows: Vec<Vec<f32>> = (0..bsz)
+            .map(|i| batch_logits[i * classes..(i + 1) * classes].to_vec())
+            .collect();
+        black_box(&rows);
+    }));
+    let mut pool = LogitsPool::new(4);
+    report.add_stats(&measure("serving/respond_batch8_pooled", 10, scaled(2000), || {
+        let mut buf = pool.take(bsz * classes);
+        Arc::get_mut(&mut buf)
+            .expect("freshly taken pool buffer is unique")
+            .copy_from_slice(&batch_logits);
+        let views: Vec<LogitsView> = (0..bsz)
+            .map(|i| LogitsView::new(Arc::clone(&buf), i * classes, classes))
+            .collect();
+        black_box(&views);
+        drop(views);
+        pool.put(buf);
     }));
 
     // --- streaming stats (the engine's observe path) ----------------------

@@ -33,6 +33,12 @@ for f in BENCH_hotpath.json BENCH_serving_throughput.json; do
   test -s "$f" || { echo "missing bench summary $f"; exit 1; }
   grep -q '"results":\[' "$f" || { echo "bad schema in $f"; exit 1; }
 done
+# The zero-copy data-plane rows (copy vs pooled, ISSUE 5) must keep
+# landing in the hotpath summary.
+for row in 'serving/pack_batch8_copy' 'serving/pack_batch8_pooled' \
+           'serving/respond_batch8_copy' 'serving/respond_batch8_pooled'; do
+  grep -q "$row" BENCH_hotpath.json || { echo "missing $row row in BENCH_hotpath.json"; exit 1; }
+done
 
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings

@@ -113,7 +113,7 @@ fn run_mix(
                         eng.submit_blocking(InferenceRequest {
                             id: (p * per_producer + i) as u64,
                             model,
-                            image,
+                            image: image.into(),
                             variant,
                             arrival: Instant::now(),
                         })
@@ -249,7 +249,7 @@ fn main() -> opima::Result<()> {
                             eng.submit_blocking(InferenceRequest {
                                 id: (p * per_producer + i) as u64,
                                 model: Model::LeNet,
-                                image,
+                                image: image.into(),
                                 variant,
                                 arrival: Instant::now(),
                             })

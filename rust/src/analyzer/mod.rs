@@ -20,4 +20,6 @@ pub use latency::{analyze_model, ModelAnalysis};
 pub use metrics::PlatformResult;
 pub use power::{power_breakdown, PowerBreakdown};
 pub use simcost::{SimCost, SimCostTable};
-pub use timeline::{simulate_analysis, BatchTimeline};
+pub use timeline::{
+    simulate_analysis, simulate_analysis_makespan, BatchTimeline, TimelineSummary,
+};

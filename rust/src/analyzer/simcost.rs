@@ -16,7 +16,7 @@
 //! [`SimCost::sequential_ms`] so reports can show the gain.
 
 use crate::analyzer::latency::{analyze_model, ModelAnalysis};
-use crate::analyzer::timeline::{simulate_analysis, BatchTimeline};
+use crate::analyzer::timeline::{simulate_analysis_makespan, TimelineSummary};
 use crate::cnn::graph::Network;
 use crate::config::OpimaConfig;
 use crate::error::Result;
@@ -89,13 +89,15 @@ impl SimCostTable {
     }
 
     /// Schedule `analysis` at `batch` (and at 1, if absent) and record
-    /// the entries. Idempotent per `(bits, batch)` key.
+    /// the entries. Idempotent per `(bits, batch)` key. Uses the
+    /// makespan-only fast path — the table stores scalar bounds, so the
+    /// event schedule is never materialized here.
     pub fn insert(&mut self, cfg: &OpimaConfig, analysis: &ModelAnalysis, batch: usize) {
         for b in [1usize, batch] {
             if self.entry(analysis.bits, b).is_some() {
                 continue;
             }
-            let t = simulate_analysis(cfg, analysis, b);
+            let t = simulate_analysis_makespan(cfg, analysis, b);
             self.entries.push(entry_from_timeline(analysis, &t));
         }
     }
@@ -129,8 +131,10 @@ impl SimCostTable {
     }
 }
 
-/// Fold a scheduled timeline into a cost-table entry.
-pub fn entry_from_timeline(analysis: &ModelAnalysis, t: &BatchTimeline) -> SimCost {
+/// Fold a scheduled timeline's scalar bounds into a cost-table entry
+/// (a full [`BatchTimeline`](crate::analyzer::timeline::BatchTimeline)
+/// converts via its `summary()`).
+pub fn entry_from_timeline(analysis: &ModelAnalysis, t: &TimelineSummary) -> SimCost {
     SimCost {
         bits: analysis.bits,
         batch: t.batch,

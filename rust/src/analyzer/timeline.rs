@@ -44,8 +44,16 @@
 //! slack, so the makespan equals the analytical layer sum exactly — the
 //! timeline widens the model without repricing the paper reproduction
 //! (Figs. 9/10). For `batch ≥ 2` the makespan is bounded below by the
-//! bottleneck resource ([`BatchTimeline::bottleneck_ns`]) and above by
+//! bottleneck resource ([`TimelineSummary::bottleneck_ns`]) and above by
 //! the sequential sum, and is monotone in batch size.
+//!
+//! Two entry points share one scheduling pass: [`simulate`]/
+//! [`simulate_analysis`] materialize the full [`Event`] schedule (the
+//! `analyze` report and the property tests), while [`simulate_makespan`]/
+//! [`simulate_analysis_makespan`] run the identical arithmetic without
+//! allocating the `batch × layers × 3` event vec — the fast path the
+//! serving registry and [`SimCostTable`](crate::analyzer::simcost::SimCostTable)
+//! use, since they only consume the scalar [`TimelineSummary`] bounds.
 
 use crate::analyzer::latency::ModelAnalysis;
 use crate::config::{OpimaConfig, PipelineParams};
@@ -72,13 +80,18 @@ pub struct Event {
     pub end_ns: f64,
 }
 
-/// The scheduled batch: makespan plus the analytical bounds around it.
-#[derive(Debug, Clone)]
-pub struct BatchTimeline {
+/// The scalar outcome of scheduling a batch: the makespan plus the
+/// analytical bounds around it, without the event schedule.
+///
+/// This is what the serving-side consumers
+/// ([`SimCostTable`](crate::analyzer::simcost::SimCostTable), the plan
+/// registry's timeline cache) actually read — the makespan-only fast
+/// path ([`simulate_makespan`]/[`simulate_analysis_makespan`]) produces
+/// it without materializing the `batch × layers × 3` [`Event`] vec.
+#[derive(Debug, Clone, Copy)]
+pub struct TimelineSummary {
     /// Images scheduled.
     pub batch: usize,
-    /// Every event, in issue order (image-major, layer-minor, M→A→W).
-    pub events: Vec<Event>,
     /// End of the last event — the simulated whole-batch latency (ns).
     pub makespan_ns: f64,
     /// `batch ×` the analytical single-inference sum (ns) — the old
@@ -94,7 +107,7 @@ pub struct BatchTimeline {
     pub pipelined: bool,
 }
 
-impl BatchTimeline {
+impl TimelineSummary {
     pub fn makespan_ms(&self) -> f64 {
         self.makespan_ns / 1e6
     }
@@ -115,6 +128,33 @@ impl BatchTimeline {
     /// How close the schedule runs to the bottleneck lower bound (≤ 1).
     pub fn efficiency(&self) -> f64 {
         self.bottleneck_ns / self.makespan_ns.max(f64::MIN_POSITIVE)
+    }
+}
+
+/// The scheduled batch: the [`TimelineSummary`] bounds **and** the full
+/// event schedule (reports and property tests; scalar consumers use the
+/// summary via the makespan-only fast path). Derefs to the summary, so
+/// `t.makespan_ns`, `t.speedup()`, … read through it unchanged — the
+/// scalar fields and derived metrics live in exactly one place.
+#[derive(Debug, Clone)]
+pub struct BatchTimeline {
+    summary: TimelineSummary,
+    /// Every event, in issue order (image-major, layer-minor, M→A→W).
+    pub events: Vec<Event>,
+}
+
+impl BatchTimeline {
+    /// The scalar bounds without the event schedule.
+    pub fn summary(&self) -> TimelineSummary {
+        self.summary
+    }
+}
+
+impl std::ops::Deref for BatchTimeline {
+    type Target = TimelineSummary;
+
+    fn deref(&self) -> &TimelineSummary {
+        &self.summary
     }
 }
 
@@ -154,27 +194,61 @@ impl Pool {
 /// [`simulate_analysis`], which falls back to serial execution when the
 /// stationary operands don't fit in memory.
 pub fn simulate(cfg: &OpimaConfig, costs: &[LayerCost], batch: usize) -> BatchTimeline {
-    schedule(&cfg.pipeline, costs, batch, true)
+    full_schedule(&cfg.pipeline, costs, batch, true)
 }
 
 /// Schedule a whole [`ModelAnalysis`] at `batch`, honouring its
 /// occupancy: an over-capacity mapping runs strictly serialized.
 pub fn simulate_analysis(cfg: &OpimaConfig, a: &ModelAnalysis, batch: usize) -> BatchTimeline {
-    schedule(&cfg.pipeline, &a.layer_costs, batch, a.occupancy.fits())
+    full_schedule(&cfg.pipeline, &a.layer_costs, batch, a.occupancy.fits())
 }
 
-fn schedule(
+/// Makespan-only counterpart of [`simulate`]: the identical scheduling
+/// pass, but skipping the `batch × layers × 3` [`Event`] vec. The
+/// serving-side consumers (plan registry, cost tables) only read the
+/// scalar bounds, so they never pay for the schedule they discard.
+pub fn simulate_makespan(cfg: &OpimaConfig, costs: &[LayerCost], batch: usize) -> TimelineSummary {
+    schedule(&cfg.pipeline, costs, batch, true, None)
+}
+
+/// Makespan-only counterpart of [`simulate_analysis`].
+pub fn simulate_analysis_makespan(
+    cfg: &OpimaConfig,
+    a: &ModelAnalysis,
+    batch: usize,
+) -> TimelineSummary {
+    schedule(&cfg.pipeline, &a.layer_costs, batch, a.occupancy.fits(), None)
+}
+
+/// Run [`schedule`] with event materialization and package the full
+/// timeline.
+fn full_schedule(
     pipe: &PipelineParams,
     costs: &[LayerCost],
     batch: usize,
     pipelined: bool,
 ) -> BatchTimeline {
+    let mut events = Vec::with_capacity(batch * costs.len() * 3);
+    let summary = schedule(pipe, costs, batch, pipelined, Some(&mut events));
+    BatchTimeline { summary, events }
+}
+
+/// The scheduling pass. With `events: None` this is the makespan-only
+/// fast path: identical arithmetic (the running makespan maximum visits
+/// the same event end times in the same order), no event allocation.
+fn schedule(
+    pipe: &PipelineParams,
+    costs: &[LayerCost],
+    batch: usize,
+    pipelined: bool,
+    mut events: Option<&mut Vec<Event>>,
+) -> TimelineSummary {
     let nl = costs.len();
     let per_image_ns: f64 = costs.iter().map(LayerCost::total_ns).sum();
     let sequential_ns = per_image_ns * batch as f64;
     let bottleneck_ns = bottleneck(pipe, costs, batch, per_image_ns);
 
-    let mut events = Vec::with_capacity(batch * nl * 3);
+    let mut makespan_ns = 0.0f64;
     // Per-layer exclusive compute unit (subarray group + MDL array):
     // free once the image's aggregation has drained into SRAM.
     let mut layer_free = vec![0.0f64; nl];
@@ -217,35 +291,36 @@ fn schedule(
             let w_start = wb_pool.acquire(w_ready, c.writeback_ns);
             let w_end = w_start + c.writeback_ns;
             wb_layer_free[layer] = w_end;
-            events.push(Event {
-                image,
-                layer,
-                phase: Phase::Processing,
-                start_ns: m_start,
-                end_ns: m_end,
-            });
-            events.push(Event {
-                image,
-                layer,
-                phase: Phase::Aggregation,
-                start_ns: a_start,
-                end_ns: a_end,
-            });
-            events.push(Event {
-                image,
-                layer,
-                phase: Phase::Writeback,
-                start_ns: w_start,
-                end_ns: w_end,
-            });
+            makespan_ns = makespan_ns.max(m_end).max(a_end).max(w_end);
+            if let Some(ev) = events.as_deref_mut() {
+                ev.push(Event {
+                    image,
+                    layer,
+                    phase: Phase::Processing,
+                    start_ns: m_start,
+                    end_ns: m_end,
+                });
+                ev.push(Event {
+                    image,
+                    layer,
+                    phase: Phase::Aggregation,
+                    start_ns: a_start,
+                    end_ns: a_end,
+                });
+                ev.push(Event {
+                    image,
+                    layer,
+                    phase: Phase::Writeback,
+                    start_ns: w_start,
+                    end_ns: w_end,
+                });
+            }
             ready = w_end;
         }
         retired.push(ready);
     }
-    let makespan_ns = events.iter().fold(0.0f64, |m, e| m.max(e.end_ns));
-    BatchTimeline {
+    TimelineSummary {
         batch,
-        events,
         makespan_ns,
         sequential_ns,
         bottleneck_ns,
@@ -423,6 +498,27 @@ mod tests {
         wide.pipeline.writeback_channels = 4;
         let t = simulate_analysis(&wide, &a, 16);
         assert!(t.makespan_ns <= base.makespan_ns + 1e-6);
+    }
+
+    #[test]
+    fn makespan_fast_path_matches_full_schedule() {
+        let (cfg, a) = analysis(4);
+        for batch in [1usize, 2, 8, 32] {
+            let full = simulate_analysis(&cfg, &a, batch);
+            let fast = simulate_analysis_makespan(&cfg, &a, batch);
+            // Same pass, same arithmetic order → bit-identical scalars.
+            assert_eq!(fast.batch, full.batch);
+            assert_eq!(fast.makespan_ns, full.makespan_ns);
+            assert_eq!(fast.sequential_ns, full.sequential_ns);
+            assert_eq!(fast.bottleneck_ns, full.bottleneck_ns);
+            assert_eq!(fast.per_image_ns, full.per_image_ns);
+            assert_eq!(fast.pipelined, full.pipelined);
+            assert_eq!(fast.makespan_ms(), full.summary().makespan_ms());
+            assert_eq!(full.events.len(), batch * a.layer_costs.len() * 3);
+        }
+        // The serial (over-capacity) fallback agrees too.
+        let raw = simulate_makespan(&cfg, &a.layer_costs, 4);
+        assert_eq!(raw.makespan_ns, simulate(&cfg, &a.layer_costs, 4).makespan_ns);
     }
 
     #[test]

@@ -69,7 +69,15 @@ impl DynamicBatcher {
 
     /// Flush every queue whose oldest request has exceeded the deadline,
     /// sweeping round-robin from the rotating cursor.
+    ///
+    /// Early-returns when nothing is pending: the batcher thread calls
+    /// this on every timer tick, so the idle path must do no queue scan
+    /// and no key-vec building (the cursor also stays put — an idle tick
+    /// is not a flush).
     pub fn poll(&mut self, now: Instant) -> Vec<Batch> {
+        if self.pending() == 0 {
+            return Vec::new();
+        }
         let expired: Vec<(Model, Variant)> = self
             .rotation()
             .filter(|key| {
@@ -83,7 +91,13 @@ impl DynamicBatcher {
     }
 
     /// Drain everything (shutdown path), in round-robin order.
+    /// Early-returns when nothing is pending, like [`Self::poll`] — the
+    /// engine's `drain` re-arms a flush pass every waiter lap, which
+    /// lands here with empty queues almost every time.
     pub fn drain(&mut self) -> Vec<Batch> {
+        if self.pending() == 0 {
+            return Vec::new();
+        }
         let keys: Vec<(Model, Variant)> = self
             .rotation()
             .filter(|key| self.queue(*key).is_some_and(|q| !q.is_empty()))
@@ -164,10 +178,27 @@ mod tests {
         InferenceRequest {
             id,
             model: m,
-            image: vec![0.0; 4],
+            image: vec![0.0; 4].into(),
             variant: v,
             arrival: Instant::now(),
         }
+    }
+
+    #[test]
+    fn idle_poll_and_drain_are_noops_that_keep_the_cursor() {
+        let mut b = DynamicBatcher::new(8, Duration::from_millis(0));
+        // Idle ticks: nothing pending, nothing returned, no rotation.
+        for _ in 0..100 {
+            assert!(b.poll(Instant::now()).is_empty());
+            assert!(b.drain().is_empty());
+        }
+        // The cursor did not move: the first real flush still starts at
+        // the first-registered queue.
+        b.push(req_for(0, Model::LeNet, Variant::Int4));
+        b.push(req_for(1, Model::Vgg16, Variant::Int4));
+        let flushed = b.poll(Instant::now() + Duration::from_millis(1));
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(flushed[0].model, Model::LeNet, "idle ticks never rotate");
     }
 
     #[test]
@@ -248,14 +279,14 @@ mod tests {
         b.push(InferenceRequest {
             id: 0,
             model: Model::LeNet,
-            image: vec![],
+            image: vec![].into(),
             variant: Variant::Int8,
             arrival: t0,
         });
         b.push(InferenceRequest {
             id: 1,
             model: Model::LeNet,
-            image: vec![],
+            image: vec![].into(),
             variant: Variant::Fp32,
             arrival: t0 + Duration::from_millis(5),
         });

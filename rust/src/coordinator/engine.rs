@@ -53,6 +53,15 @@
 //! [`SimCostTable`](crate::analyzer::simcost::SimCostTable) inside each
 //! registry plan — the analyzer never runs on the request path.
 //!
+//! The data plane is zero-copy in steady state (see `DESIGN.md` §3.1):
+//! request images are shared
+//! [`ImageBuf`](crate::coordinator::request::ImageBuf)s, workers pack
+//! batches into pooled input buffers and execute prepared programs that
+//! write logits into pooled shared buffers, and responses carry
+//! [`LogitsView`](crate::coordinator::request::LogitsView)s into those
+//! buffers instead of per-response copies — after warmup, a served
+//! request allocates nothing for its pixels or logits.
+//!
 //! **Shutdown** is graceful: [`Engine::drain`] flushes and waits until
 //! every accepted request has an outcome; [`Engine::shutdown`] (also run
 //! on drop) then disconnects the ingress queue, lets the batcher drain
@@ -70,7 +79,7 @@ use crate::cnn::models::{Model, SERVABLE_MODELS};
 use crate::config::OpimaConfig;
 use crate::coordinator::batcher::{Batch, DynamicBatcher};
 use crate::coordinator::registry::{augment_manifest, PlanRegistry};
-use crate::coordinator::request::{InferenceRequest, InferenceResponse, Variant};
+use crate::coordinator::request::{InferenceRequest, InferenceResponse, LogitsPool, Variant};
 use crate::coordinator::router::Router;
 use crate::coordinator::server::{LatencyBreakdown, ModelServingStats, ServerStats};
 use crate::coordinator::worker::{worker_loop, BatchOutcome, WorkerCtx};
@@ -378,6 +387,12 @@ impl Engine {
                             shard,
                             rx,
                             tx,
+                            plans: HashMap::new(),
+                            input: Vec::new(),
+                            // A handful of in-flight batch buffers per
+                            // worker: enough that the ring's eviction
+                            // cadence keeps recycling them under load.
+                            logits_pool: LogitsPool::new(8),
                         });
                     })
                     .map_err(spawn_err)?,

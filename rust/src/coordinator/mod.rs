@@ -48,7 +48,11 @@
 //! per-model batch queues → registry → worker pool → router → stats).
 //!
 //! - [`request`] — request/response types, the model field and the
-//!   quantization variants, and per-`(model, variant)` artifact naming.
+//!   quantization variants, per-`(model, variant)` artifact naming, and
+//!   the zero-copy buffer types: shared [`ImageBuf`] images, per-batch
+//!   shared logits published once and viewed per response via
+//!   [`LogitsView`], recycled through the per-worker [`LogitsPool`]
+//!   (see `DESIGN.md` §3.1).
 //! - [`batcher`] — dynamic batching: size- and deadline-triggered,
 //!   per-`(model, variant)` queues, round-robin fairness.
 //! - [`registry`] — the shared plan/cost registry: per-`(model,
@@ -76,5 +80,8 @@ pub mod worker;
 
 pub use engine::{Engine, EngineConfig};
 pub use registry::{ModelPlan, PlanRegistry};
-pub use request::{parse_mix, pick_weighted, InferenceRequest, InferenceResponse, Variant};
+pub use request::{
+    parse_mix, pick_weighted, ImageBuf, InferenceRequest, InferenceResponse, LogitsPool,
+    LogitsView, Variant,
+};
 pub use server::{LatencyBreakdown, ModelServingStats, Server, ServerConfig, ServerStats};

@@ -35,7 +35,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::analyzer::latency::{analyze_mapped, ModelAnalysis};
 use crate::analyzer::simcost::SimCostTable;
-use crate::analyzer::timeline::{simulate_analysis, BatchTimeline};
+use crate::analyzer::timeline::{simulate_analysis_makespan, TimelineSummary};
 use crate::cnn::graph::Network;
 use crate::cnn::models::{build_model, Model, SERVABLE_MODELS};
 use crate::config::OpimaConfig;
@@ -43,7 +43,7 @@ use crate::coordinator::engine::lock;
 use crate::coordinator::request::Variant;
 use crate::error::{Error, Result};
 use crate::mapper::plan::{map_network, CapacityWarning, MappedNetwork, Occupancy};
-use crate::runtime::{ArtifactInfo, Manifest};
+use crate::runtime::{ArtifactInfo, Manifest, ProgramHandle};
 
 /// Everything the serving path needs for one `(model, variant)` pair,
 /// compiled once and shared read-only behind an `Arc`.
@@ -62,9 +62,11 @@ pub struct ModelPlan {
     /// Whole-batch simulated cost at the serving batch size (pipelined
     /// timeline makespans, keyed by `(bits, batch)`).
     pub costs: SimCostTable,
-    /// The executor program: artifact name + tensor shapes the worker
-    /// runs for each batch of this pair.
-    pub program: ArtifactInfo,
+    /// The prepared executor program: artifact name + tensor shapes,
+    /// validated and flattened exactly once at plan build — workers run
+    /// batches through it with no per-batch manifest lookup,
+    /// `ArtifactInfo` clone or shape re-derivation.
+    pub program: ProgramHandle,
     /// Serving batch size the program and costs are built for.
     pub batch: usize,
 }
@@ -72,12 +74,12 @@ pub struct ModelPlan {
 impl ModelPlan {
     /// Flattened per-image element count the program's input expects.
     pub fn image_elems(&self) -> usize {
-        self.program.input_elems(0) / self.batch.max(1)
+        self.program.input_len(0) / self.batch.max(1)
     }
 
     /// Logits per inference in the program's output.
     pub fn classes(&self) -> usize {
-        self.program.output_elems() / self.batch.max(1)
+        self.program.output_len() / self.batch.max(1)
     }
 
     /// Whole-batch simulated `(latency_ms, energy_mj)`.
@@ -121,11 +123,13 @@ pub struct PlanRegistry {
     manifest: Manifest,
     batch: usize,
     slots: Mutex<HashMap<(Model, Variant), Arc<Slot>>>,
-    /// Scheduled batch timelines, keyed by `(model, variant, batch)` —
-    /// the serving batch size is prescheduled inside each plan's cost
-    /// table; this cache serves ad-hoc batch sizes (the `analyze`-style
-    /// queries) without re-running the event simulation.
-    timelines: Mutex<HashMap<(Model, Variant, usize), Arc<BatchTimeline>>>,
+    /// Scheduled batch-timeline summaries, keyed by `(model, variant,
+    /// batch)` — the serving batch size is prescheduled inside each
+    /// plan's cost table; this cache serves ad-hoc batch sizes (the
+    /// `analyze`-style queries) without re-running the simulation. Only
+    /// the scalar bounds are consumed here, so scheduling uses the
+    /// makespan-only fast path (no event vec is ever materialized).
+    timelines: Mutex<HashMap<(Model, Variant, usize), Arc<TimelineSummary>>>,
     builds: AtomicU64,
 }
 
@@ -189,9 +193,9 @@ impl PlanRegistry {
         }
     }
 
-    /// The pipelined batch timeline for `(model, variant, batch)`,
-    /// scheduling (and caching) it on first request. The plan is
-    /// resolved (and built if needed) *before* taking the cache lock,
+    /// The pipelined batch-timeline summary for `(model, variant,
+    /// batch)`, scheduling (and caching) it on first request. The plan
+    /// is resolved (and built if needed) *before* taking the cache lock,
     /// so the lock is never held across a plan build; the simulation
     /// itself runs under the lock, which makes each key's schedule run
     /// exactly once even under racing first requests.
@@ -200,13 +204,13 @@ impl PlanRegistry {
         model: Model,
         variant: Variant,
         batch: usize,
-    ) -> Result<Arc<BatchTimeline>> {
+    ) -> Result<Arc<TimelineSummary>> {
         let plan = self.resolve(model, variant)?;
         let mut cache = lock(&self.timelines);
         if let Some(t) = cache.get(&(model, variant, batch)) {
             return Ok(Arc::clone(t));
         }
-        let t = Arc::new(simulate_analysis(&self.hw, &plan.analysis, batch));
+        let t = Arc::new(simulate_analysis_makespan(&self.hw, &plan.analysis, batch));
         cache.insert((model, variant, batch), Arc::clone(&t));
         Ok(t)
     }
@@ -237,7 +241,9 @@ impl PlanRegistry {
         let analysis = analyze_mapped(&self.hw, &mapped, bits)?;
         let costs = SimCostTable::from_analysis(&self.hw, &analysis, self.batch);
         let name = variant.artifact_for(model, self.batch);
-        let program = self.manifest.get(&name)?.clone();
+        // The one-and-only ArtifactInfo clone for this pair: the handle
+        // shares it read-only with every worker for the engine's lifetime.
+        let program = ProgramHandle::new(self.manifest.get(&name)?.clone());
         Ok(ModelPlan {
             model,
             variant,
@@ -309,7 +315,7 @@ mod tests {
     fn resolves_lenet_from_manifest_artifacts() {
         let r = registry();
         let plan = r.resolve(Model::LeNet, Variant::Int4).unwrap();
-        assert_eq!(plan.program.name, "cnn_int4_b8");
+        assert_eq!(plan.program.name(), "cnn_int4_b8");
         assert_eq!(plan.image_elems(), 144);
         assert_eq!(plan.classes(), 4);
         let (lat, mj) = plan.sim_cost();
@@ -334,7 +340,7 @@ mod tests {
         let lenet = r.resolve(Model::LeNet, Variant::Int4).unwrap();
         let mobile = r.resolve(Model::MobileNet, Variant::Int4).unwrap();
         assert_eq!(r.builds(), 2);
-        assert_eq!(mobile.program.name, "mobilenet_int4_b8");
+        assert_eq!(mobile.program.name(), "mobilenet_int4_b8");
         assert_eq!(mobile.image_elems(), 32 * 32 * 3);
         assert_eq!(mobile.classes(), 1000);
         // A bigger model costs more simulated time and energy per batch.

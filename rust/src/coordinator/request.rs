@@ -1,10 +1,198 @@
-//! Request/response types for the serving path.
+//! Request/response types for the serving path, plus the shared-buffer
+//! types behind the zero-copy data plane.
+//!
+//! The steady-state serving path moves pixels and logits without
+//! per-request heap traffic:
+//!
+//! - [`ImageBuf`] — an `Arc<[f32]>`-backed image payload. Cloning a
+//!   request (submit, batch, requeue) bumps a reference count; the
+//!   pixels are copied exactly once, by the worker packing the batch
+//!   input.
+//! - [`LogitsView`] — a `(buffer, offset, len)` view into a batch's
+//!   shared logits buffer. Every response of a batch views one shared
+//!   `Arc<[f32]>`; nothing calls `row.to_vec()` per response.
+//! - [`LogitsPool`] — a per-worker recycler for those shared buffers: a
+//!   buffer becomes reusable once every response view into it has been
+//!   dropped, so steady-state batches allocate nothing for logits.
 
+use std::ops::Deref;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cnn::models::Model;
 use crate::error::{Error, Result};
 use crate::util::prng::Rng;
+
+/// A shared, immutable image payload (`Arc<[f32]>`-backed).
+///
+/// Cloning is a reference-count bump, so a request can be enqueued,
+/// batched, requeued or replayed without ever copying pixels. Derefs to
+/// `[f32]`, so existing `len()`/slice call sites read through it
+/// unchanged.
+#[derive(Debug, Clone)]
+pub struct ImageBuf(Arc<[f32]>);
+
+impl ImageBuf {
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl From<Vec<f32>> for ImageBuf {
+    fn from(v: Vec<f32>) -> Self {
+        Self(v.into())
+    }
+}
+
+impl From<&[f32]> for ImageBuf {
+    fn from(s: &[f32]) -> Self {
+        Self(s.into())
+    }
+}
+
+impl FromIterator<f32> for ImageBuf {
+    fn from_iter<I: IntoIterator<Item = f32>>(iter: I) -> Self {
+        Self(iter.into_iter().collect())
+    }
+}
+
+impl Deref for ImageBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+/// A response's logits: a `(offset, len)` view into the whole batch's
+/// shared logits buffer.
+///
+/// The worker publishes each batch's logits once as an `Arc<[f32]>`;
+/// every response of the batch holds a view into it instead of its own
+/// `row.to_vec()` copy. Derefs to `[f32]` (use `.to_vec()` only when an
+/// owned copy is genuinely needed). Holding a view keeps the whole batch
+/// buffer alive — by design: the buffer returns to its worker's
+/// [`LogitsPool`] and is recycled once the batch's last view drops.
+#[derive(Debug, Clone)]
+pub struct LogitsView {
+    buf: Arc<[f32]>,
+    offset: usize,
+    len: usize,
+}
+
+impl LogitsView {
+    /// View `len` values of `buf` starting at `offset`.
+    pub fn new(buf: Arc<[f32]>, offset: usize, len: usize) -> Self {
+        assert!(
+            offset + len <= buf.len(),
+            "logits view [{offset}, {offset}+{len}) out of buffer bounds {}",
+            buf.len()
+        );
+        Self { buf, offset, len }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf[self.offset..self.offset + self.len]
+    }
+}
+
+/// Owned-vector views for tests and ad-hoc response construction; the
+/// serving path always views a shared batch buffer instead.
+impl From<Vec<f32>> for LogitsView {
+    fn from(v: Vec<f32>) -> Self {
+        let len = v.len();
+        Self {
+            buf: v.into(),
+            offset: 0,
+            len,
+        }
+    }
+}
+
+impl Deref for LogitsView {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq for LogitsView {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+/// A bounded recycler of shared logits buffers (one per worker, no
+/// locking).
+///
+/// [`LogitsPool::take`] hands out an exclusively-owned `Arc<[f32]>` of
+/// the requested length, reusing a retired buffer whenever one is free —
+/// i.e. when every [`LogitsView`] into it has been dropped (responses
+/// evicted from the engine's bounded ring, or consumed by the caller).
+/// [`LogitsPool::put`] returns a buffer for recycling; beyond `cap`
+/// retained buffers the incoming one is dropped instead (it frees itself
+/// once its last view goes), so pool memory is bounded regardless of how
+/// long responses are held.
+#[derive(Debug)]
+pub struct LogitsPool {
+    bufs: Vec<Arc<[f32]>>,
+    cap: usize,
+}
+
+impl LogitsPool {
+    /// Pool retaining at most `cap` buffers (`cap ≥ 1`).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            bufs: Vec::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// An exclusively-owned buffer of exactly `len` elements: a retired
+    /// pooled buffer when one is free, freshly allocated otherwise.
+    /// `Arc::get_mut` on the returned buffer is guaranteed to succeed
+    /// until it is cloned.
+    pub fn take(&mut self, len: usize) -> Arc<[f32]> {
+        if let Some(i) = self
+            .bufs
+            .iter()
+            .position(|b| b.len() == len && Arc::strong_count(b) == 1)
+        {
+            return self.bufs.swap_remove(i);
+        }
+        Arc::from(vec![0f32; len])
+    }
+
+    /// Hand a buffer back for recycling (typically still viewed by the
+    /// batch's in-flight responses; it becomes reusable when they drop).
+    pub fn put(&mut self, buf: Arc<[f32]>) {
+        if self.bufs.len() < self.cap {
+            self.bufs.push(buf);
+            return;
+        }
+        // Full pool: the incoming buffer is the freshest evidence of
+        // what lengths current traffic needs. Replace a retired buffer
+        // of a *different* length (a model no longer being served)
+        // rather than dropping the incoming one, so a traffic shift can
+        // never pin the pool to a stale length and permanently defeat
+        // recycling. If every slot is same-length or still viewed, the
+        // incoming buffer is dropped (it frees once its last view goes).
+        let len = buf.len();
+        if let Some(i) = self
+            .bufs
+            .iter()
+            .position(|b| b.len() != len && Arc::strong_count(b) == 1)
+        {
+            self.bufs[i] = buf;
+        }
+    }
+
+    /// Buffers currently retained for reuse.
+    pub fn pooled(&self) -> usize {
+        self.bufs.len()
+    }
+}
 
 /// Parse a workload-mix spec like `lenet:4,vgg16:1` into `(model,
 /// weight)` pairs — the grammar behind the CLI's and the serving
@@ -116,8 +304,9 @@ pub struct InferenceRequest {
     /// Which CNN serves the request (see
     /// [`SERVABLE_MODELS`](crate::cnn::models::SERVABLE_MODELS)).
     pub model: Model,
-    /// Flattened image (`model.input_elems()` values, NHWC).
-    pub image: Vec<f32>,
+    /// Flattened image (`model.input_elems()` values, NHWC), shared —
+    /// cloning the request never copies pixels.
+    pub image: ImageBuf,
     pub variant: Variant,
     pub arrival: Instant,
 }
@@ -144,7 +333,9 @@ pub struct InferenceResponse {
     pub id: u64,
     /// The model that served this request (batches are single-model).
     pub model: Model,
-    pub logits: Vec<f32>,
+    /// This request's logits: a view into the batch's shared buffer
+    /// (derefs to `[f32]`; no per-response copy is ever made).
+    pub logits: LogitsView,
     pub predicted: usize,
     /// Wall time from arrival to the start of the batch's execution
     /// (batcher wait + dispatch queueing, ms).
@@ -254,7 +445,7 @@ mod tests {
         let r = InferenceResponse {
             id: 0,
             model: Model::LeNet,
-            logits: vec![0.0; 4],
+            logits: vec![0.0; 4].into(),
             predicted: 0,
             queue_ms: 1.5,
             exec_ms: 2.0,
@@ -266,5 +457,89 @@ mod tests {
         };
         assert!((r.total_ms() - 3.5).abs() < 1e-12);
         assert!(r.form_ms <= r.queue_ms);
+    }
+
+    #[test]
+    fn image_buf_clones_share_the_pixels() {
+        let img = ImageBuf::from(vec![1.0f32, 2.0, 3.0]);
+        let clone = img.clone();
+        // Same backing allocation — cloning a request never copies.
+        assert!(std::ptr::eq(img.as_slice(), clone.as_slice()));
+        assert_eq!(img.len(), 3);
+        assert_eq!(&img[1..], &[2.0, 3.0]);
+        let collected: ImageBuf = (0..4).map(|i| i as f32).collect();
+        assert_eq!(collected.as_slice(), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn logits_view_derefs_to_its_row() {
+        let buf: Arc<[f32]> = vec![0.0f32, 1.0, 2.0, 3.0, 4.0, 5.0].into();
+        let row0 = LogitsView::new(Arc::clone(&buf), 0, 3);
+        let row1 = LogitsView::new(Arc::clone(&buf), 3, 3);
+        assert_eq!(row0.as_slice(), &[0.0, 1.0, 2.0]);
+        assert_eq!(&row1[..], &[3.0, 4.0, 5.0]);
+        assert_eq!(row1.len(), 3);
+        // Rows of one batch share the backing buffer — no copies.
+        assert!(std::ptr::eq(row0.as_slice().as_ptr(), buf.as_ptr()));
+        assert_eq!(row0, LogitsView::from(vec![0.0, 1.0, 2.0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of buffer bounds")]
+    fn logits_view_rejects_out_of_bounds() {
+        let buf: Arc<[f32]> = vec![0.0f32; 4].into();
+        let _ = LogitsView::new(buf, 2, 3);
+    }
+
+    #[test]
+    fn logits_pool_recycles_only_free_buffers() {
+        let mut pool = LogitsPool::new(4);
+        let a = pool.take(8);
+        let a_ptr = a.as_ptr();
+        let view = LogitsView::new(Arc::clone(&a), 0, 4);
+        pool.put(a);
+        // Still viewed by a live response: must not be handed out again.
+        let b = pool.take(8);
+        assert_ne!(b.as_ptr(), a_ptr);
+        // A different length never matches either.
+        let c = pool.take(4);
+        assert_ne!(c.as_ptr(), a_ptr);
+        drop(view);
+        pool.put(b);
+        // The first buffer's views are gone — it is reused in place.
+        let mut again = pool.take(8);
+        assert_eq!(again.as_ptr(), a_ptr);
+        assert!(Arc::get_mut(&mut again).is_some(), "exclusively owned");
+    }
+
+    #[test]
+    fn logits_pool_is_bounded() {
+        let mut pool = LogitsPool::new(2);
+        for _ in 0..5 {
+            let b = pool.take(4);
+            pool.put(b);
+        }
+        assert!(pool.pooled() <= 2);
+    }
+
+    #[test]
+    fn logits_pool_adapts_to_a_traffic_shift() {
+        // A pool pinned full of one model's retired buffers must not
+        // defeat recycling forever when traffic shifts to another
+        // output length.
+        let mut pool = LogitsPool::new(2);
+        let a = pool.take(4);
+        let b = pool.take(4);
+        pool.put(a);
+        pool.put(b); // full: two free len-4 buffers
+        let big = pool.take(8); // fresh — no len-8 retiree yet
+        let big_ptr = big.as_ptr();
+        pool.put(big); // evicts one stale-length free slot
+        assert_eq!(pool.pooled(), 2);
+        assert_eq!(
+            pool.take(8).as_ptr(),
+            big_ptr,
+            "the shifted length is retained and recycled"
+        );
     }
 }

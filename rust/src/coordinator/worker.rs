@@ -5,14 +5,27 @@
 //! startup, other models compile on first batch), pulls formed batches
 //! from the shared batch channel, resolves each batch's `(model,
 //! variant)` through the shared [`PlanRegistry`] (plans build lazily,
-//! exactly once, under a per-key lock), executes the plan's program,
-//! maps the batch onto a simulated OPIMA instance via the shared
-//! [`Router`] (reservations tagged by model), folds the batch's latency
-//! samples into its own per-model streaming shard (fixed-memory
-//! histograms; `Engine::stats` merges the shards), and reports
-//! per-request responses plus the per-batch simulated cost back over
-//! the results channel.
+//! exactly once, under a per-key lock; resolved plans are memoized in a
+//! worker-local map so the steady state takes no registry lock at all),
+//! executes the plan's prepared program, maps the batch onto a simulated
+//! OPIMA instance via the shared [`Router`] (reservations tagged by
+//! model), folds the batch's latency samples into its own per-model
+//! streaming shard (fixed-memory histograms; `Engine::stats` merges the
+//! shards), and reports per-request responses plus the per-batch
+//! simulated cost back over the results channel.
+//!
+//! **Zero-copy steady state.** The batch data plane reuses memory end to
+//! end: request pixels live in shared
+//! [`ImageBuf`](crate::coordinator::request::ImageBuf)s (copied exactly
+//! once, into the worker's pooled `input` buffer when the batch is packed);
+//! the executor writes the batch's logits straight into a shared
+//! `Arc<[f32]>` recycled through the worker's [`LogitsPool`]; and each
+//! response carries a [`LogitsView`] `(offset, len)` into that buffer
+//! instead of a `row.to_vec()` copy. Per batch, the only heap traffic is
+//! the response vec itself (and a fresh logits buffer only while a
+//! previous batch's views are still alive); per response there is none.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -20,8 +33,8 @@ use std::time::Instant;
 use crate::cnn::models::Model;
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::engine::{lock, WorkerShard};
-use crate::coordinator::registry::PlanRegistry;
-use crate::coordinator::request::{InferenceResponse, SimMetering};
+use crate::coordinator::registry::{ModelPlan, PlanRegistry};
+use crate::coordinator::request::{InferenceResponse, LogitsPool, LogitsView, SimMetering, Variant};
 use crate::coordinator::router::Router;
 use crate::runtime::Executor;
 
@@ -41,6 +54,17 @@ pub(crate) struct WorkerCtx {
     pub shard: Arc<Mutex<WorkerShard>>,
     pub rx: Arc<Mutex<Receiver<Batch>>>,
     pub tx: Sender<BatchOutcome>,
+    /// Worker-local memo of resolved registry plans: after a pair's
+    /// first batch, resolution is a local map probe — no registry lock,
+    /// no slot lock, no `Arc` contention with other workers.
+    pub plans: HashMap<(Model, Variant), Arc<ModelPlan>>,
+    /// Reusable packed batch-input buffer (resized per batch, rows
+    /// overwritten in place, only a short batch's padding tail zeroed;
+    /// capacity grows to the largest model served and stays).
+    pub input: Vec<f32>,
+    /// Recycler for the shared per-batch logits buffers the responses
+    /// view into.
+    pub logits_pool: LogitsPool,
 }
 
 /// What one executed (or failed) batch sends to the stats sink.
@@ -78,18 +102,35 @@ fn fail(batch: &Batch, error: String) -> BatchOutcome {
     }
 }
 
+/// Resolve the batch's compiled plan: worker-local memo first, shared
+/// registry (lazy, cached, built exactly once across the pool) on a
+/// local miss. A model whose artifact or mapping is broken fails its
+/// batches loudly — errors are never memoized locally, so the registry
+/// keeps reporting them per batch; other models keep serving.
+fn resolve_plan(ctx: &mut WorkerCtx, batch: &Batch) -> crate::error::Result<Arc<ModelPlan>> {
+    let key = (batch.model, batch.variant);
+    if let Some(plan) = ctx.plans.get(&key) {
+        return Ok(Arc::clone(plan));
+    }
+    let plan = ctx.registry.resolve(batch.model, batch.variant)?;
+    ctx.plans.insert(key, Arc::clone(&plan));
+    Ok(plan)
+}
+
 fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
-    // Resolve the batch's compiled plan (lazy, cached, built exactly
-    // once across the pool). A model whose artifact or mapping is broken
-    // fails its batches loudly; other models keep serving.
-    let plan = match ctx.registry.resolve(batch.model, batch.variant) {
+    let plan = match resolve_plan(ctx, &batch) {
         Ok(p) => p,
         Err(e) => return fail(&batch, e.to_string()),
     };
     let bsz = ctx.batch_size;
     let elems = plan.image_elems();
-    // Pack (and zero-pad) the fixed-shape batch input.
-    let mut input = vec![0f32; bsz * elems];
+    // Pack (and zero-pad) the fixed-shape batch input into the worker's
+    // pooled buffer — each request's pixels are copied exactly once on
+    // their whole serving journey, right here. Every packed row is
+    // overwritten below, so only the padding tail of a short batch needs
+    // zeroing (a full batch pays no memset at all).
+    ctx.input.resize(bsz * elems, 0.0);
+    ctx.input[batch.requests.len() * elems..].fill(0.0);
     for (i, r) in batch.requests.iter().enumerate() {
         if r.image.len() != elems {
             return fail(
@@ -101,15 +142,21 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
                 ),
             );
         }
-        input[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+        ctx.input[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
     }
     let exec_start = Instant::now();
-    let logits = match ctx.executor.run_f32(&plan.program.name, &[&input]) {
-        Ok(l) => l,
-        Err(e) => return fail(&batch, e.to_string()),
-    };
+    // The batch's shared logits buffer: recycled from the pool when a
+    // previous batch's responses have all been dropped, written by the
+    // executor in place, then viewed (never copied) by every response.
+    let mut logits = ctx.logits_pool.take(plan.program.output_len());
+    {
+        let out = Arc::get_mut(&mut logits).expect("freshly taken pool buffer is unique");
+        if let Err(e) = ctx.executor.run_prepared(&plan.program, &[&ctx.input], out) {
+            return fail(&batch, e.to_string());
+        }
+    }
     let exec_ms = exec_start.elapsed().as_secs_f64() * 1e3;
-    let classes = logits.len() / bsz;
+    let classes = plan.classes();
 
     // Simulated hardware metering: place this *real* batch at the
     // earliest simulated time its mapper footprint fits on an OPIMA
@@ -124,7 +171,7 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
 
     let mut responses = Vec::with_capacity(batch.requests.len());
     for (i, r) in batch.requests.iter().enumerate() {
-        let row = &logits[i * classes..(i + 1) * classes];
+        let row = LogitsView::new(Arc::clone(&logits), i * classes, classes);
         let predicted = row
             .iter()
             .enumerate()
@@ -134,7 +181,7 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
         responses.push(InferenceResponse {
             id: r.id,
             model: batch.model,
-            logits: row.to_vec(),
+            logits: row,
             predicted,
             queue_ms: exec_start.saturating_duration_since(r.arrival).as_secs_f64() * 1e3,
             exec_ms,
@@ -152,6 +199,9 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
             batch_seq: batch.seq,
         });
     }
+    // Hand the buffer back for recycling: it becomes reusable the moment
+    // the batch's last response view is dropped.
+    ctx.logits_pool.put(logits);
     // Record latencies into this worker's per-model shard *before*
     // handing the outcome to the collector: once `drain` observes the
     // completion, the streaming aggregates already include it.

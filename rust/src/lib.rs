@@ -52,7 +52,10 @@
 //!   latency histograms merged in O(models × buckets) by `stats()`
 //!   (global + per-model breakdowns), and a fixed-capacity ring of
 //!   recent responses — memory stays constant over unbounded request
-//!   streams.
+//!   streams. The data plane is zero-copy in steady state: shared
+//!   `ImageBuf` request payloads, pooled batch-input buffers, prepared
+//!   executor programs writing into pooled shared logits buffers, and
+//!   `LogitsView` responses that view (never copy) their batch's row.
 //! - [`runtime`] — artifact loading/execution: PJRT (`xla` crate,
 //!   feature `pjrt`) or a deterministic sim backend for environments
 //!   without the XLA native library or AOT artifacts.

@@ -416,7 +416,8 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
         // Weighted random model pick — the mixed workload.
         let model = pick_weighted(&mut rng, &mix);
         let elems = server.image_elems_for(model);
-        let image: Vec<f32> = (0..elems).map(|_| rng.f64() as f32).collect();
+        let image: opima::coordinator::ImageBuf =
+            (0..elems).map(|_| rng.f64() as f32).collect();
         server.submit(InferenceRequest {
             id,
             model,

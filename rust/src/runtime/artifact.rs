@@ -1,7 +1,9 @@
-//! AOT artifact manifest (`artifacts/manifest.json`).
+//! AOT artifact manifest (`artifacts/manifest.json`) and the prepared
+//! [`ProgramHandle`] the serving path executes batches through.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::util::json::Json;
@@ -26,6 +28,66 @@ impl ArtifactInfo {
 
     pub fn output_elems(&self) -> usize {
         self.output_shape.iter().product()
+    }
+}
+
+/// A prepared executor program: one artifact's shapes validated and
+/// flattened exactly once, shared read-only behind an `Arc`.
+///
+/// The per-batch hot path used to re-fetch the [`ArtifactInfo`] from the
+/// manifest by name (a string hash lookup plus a deep clone) and
+/// re-derive every shape product on every `run_f32` call. A handle is
+/// built once — by [`Executor::prepare`](crate::runtime::Executor::prepare)
+/// or directly by the serving plan registry — and
+/// [`run_prepared`](crate::runtime::Executor::run_prepared) then only
+/// compares precomputed element counts: no string lookup, no
+/// `ArtifactInfo` clone, no re-validation per batch.
+#[derive(Debug, Clone)]
+pub struct ProgramHandle {
+    info: Arc<ArtifactInfo>,
+    /// Flattened element count per input, in input order.
+    input_lens: Vec<usize>,
+    /// Flattened element count of the single output.
+    output_len: usize,
+}
+
+impl ProgramHandle {
+    /// Flatten `info`'s shapes into the handle's precomputed counts.
+    pub fn new(info: ArtifactInfo) -> Self {
+        let input_lens = (0..info.input_shapes.len())
+            .map(|i| info.input_elems(i))
+            .collect();
+        let output_len = info.output_elems();
+        Self {
+            info: Arc::new(info),
+            input_lens,
+            output_len,
+        }
+    }
+
+    /// Artifact name the handle executes.
+    pub fn name(&self) -> &str {
+        &self.info.name
+    }
+
+    /// The full shape/dtype description behind the handle.
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    /// Flattened element counts per input.
+    pub fn input_lens(&self) -> &[usize] {
+        &self.input_lens
+    }
+
+    /// Flattened element count of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.input_lens[i]
+    }
+
+    /// Flattened element count of the output.
+    pub fn output_len(&self) -> usize {
+        self.output_len
     }
 }
 
@@ -179,6 +241,20 @@ mod tests {
         }
         assert_eq!(m.get("cnn_int4_b8").unwrap().bits, Some(4));
         assert_eq!(m.get("cnn_fp32_b8").unwrap().bits, None);
+    }
+
+    #[test]
+    fn program_handle_precomputes_flat_lens() {
+        let m = Manifest::synthetic(8, 12);
+        let h = ProgramHandle::new(m.get("cnn_int4_b8").unwrap().clone());
+        assert_eq!(h.name(), "cnn_int4_b8");
+        assert_eq!(h.input_lens(), &[8 * 12 * 12]);
+        assert_eq!(h.input_len(0), 1152);
+        assert_eq!(h.output_len(), 32);
+        assert_eq!(h.info().bits, Some(4));
+        // Clones share the Arc'd info — no deep copy per worker/batch.
+        let c = h.clone();
+        assert!(std::ptr::eq(h.info(), c.info()));
     }
 
     #[test]

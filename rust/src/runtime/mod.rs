@@ -3,7 +3,9 @@
 //!
 //! - [`artifact`] — `artifacts/manifest.json` parsing and path
 //!   resolution for the HLO text files emitted by `python/compile/aot.py`,
-//!   plus [`Manifest::synthetic`] for artifact-free sim runs.
+//!   plus [`Manifest::synthetic`] for artifact-free sim runs and the
+//!   prepared [`ProgramHandle`] (shapes validated once, no per-batch
+//!   manifest lookup or clone).
 //! - [`executor`] — the execution backends behind one `Executor` API:
 //!   PJRT (`xla` crate, feature `pjrt`): `PjRtClient::cpu()` →
 //!   `HloModuleProto::from_text_file` → compile (cached) → execute with
@@ -14,5 +16,5 @@
 pub mod artifact;
 pub mod executor;
 
-pub use artifact::{ArtifactInfo, Manifest};
+pub use artifact::{ArtifactInfo, Manifest, ProgramHandle};
 pub use executor::{Executor, ExecutorSpec};

@@ -1,0 +1,177 @@
+//! Allocation-regression harness for the zero-copy serving data plane
+//! (ISSUE 5 acceptance): a counting `#[global_allocator]` wraps the
+//! system allocator in **this test binary only**, and the single test
+//! below asserts that — after a warmup wave builds the plans, grows the
+//! pooled buffers and populates the histogram shards — serving another
+//! wave of requests through the sim backend performs no per-request
+//! heap allocation for images or logits.
+//!
+//! What legitimately still allocates in steady state is bounded and
+//! per-*batch*, not per-request: the batcher's drained-requests vec, the
+//! worker's responses vec, an occasional fresh logits buffer while a
+//! previous batch's views are still alive in the response ring, and the
+//! results channel's internals. The pre-zero-copy engine additionally
+//! paid, per batch, a fresh input `Vec` (one whole image copy *per
+//! request*), a manifest `ArtifactInfo` clone, a fresh logits `Vec`, and
+//! a `row.to_vec()` per response — which is exactly what the bounds
+//! below would catch coming back.
+//!
+//! The test is deliberately single-`#[test]`: the counters are global to
+//! the process, and libtest would otherwise interleave a second test's
+//! allocations into the measured window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use opima::cnn::Model;
+use opima::coordinator::engine::{Engine, EngineConfig};
+use opima::coordinator::request::{ImageBuf, InferenceRequest, Variant};
+use opima::runtime::{ExecutorSpec, Manifest};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator with global alloc/byte counters (dealloc is
+/// uncounted — the assertions are about allocation pressure).
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn snapshot() -> (u64, u64) {
+    (ALLOCS.load(Ordering::SeqCst), BYTES.load(Ordering::SeqCst))
+}
+
+const N: u64 = 256;
+const ELEMS: usize = 144;
+
+/// A wave of N LeNet int4 requests. The eight distinct images are built
+/// once and shared — cloning an `ImageBuf` into a request is a refcount
+/// bump, never a pixel copy.
+fn wave(images: &[ImageBuf]) -> Vec<InferenceRequest> {
+    (0..N)
+        .map(|id| InferenceRequest {
+            id,
+            model: Model::LeNet,
+            image: images[id as usize % images.len()].clone(),
+            variant: Variant::Int4,
+            arrival: Instant::now(),
+        })
+        .collect()
+}
+
+#[test]
+fn steady_state_serving_does_not_allocate_per_request_payloads() {
+    let engine = Engine::new(
+        EngineConfig {
+            workers: 1,
+            queue_capacity: 1024,
+            instances: 1,
+            // Large deadline: all batches form on the size trigger, and
+            // N is a multiple of 8, so the flow is deterministic.
+            max_wait: Duration::from_secs(60),
+            executor: ExecutorSpec::Sim { work_factor: 1 },
+            // Small ring: responses are evicted (and their logits views
+            // dropped) quickly, so the worker's logits pool can recycle.
+            history: 8,
+            ..EngineConfig::default()
+        },
+        Manifest::synthetic(8, 12),
+    )
+    .unwrap();
+    let images: Vec<ImageBuf> = (0..8)
+        .map(|b| {
+            (0..ELEMS)
+                .map(|i| ((b * ELEMS + i) % 7) as f32 * 0.1)
+                .collect()
+        })
+        .collect();
+
+    // Warmup: build the LeNet plan, grow the worker's input buffer,
+    // seed the logits pool, touch every histogram shard and channel.
+    for req in wave(&images) {
+        engine.submit_blocking(req).unwrap();
+    }
+    engine.drain().unwrap();
+    assert_eq!(engine.completed(), N);
+
+    // Pre-build the measured wave OUTSIDE the window (constructing the
+    // requests is the caller's traffic; serving them is what we meter).
+    let measured = wave(&images);
+
+    let (a0, b0) = snapshot();
+    for req in measured {
+        engine.submit_blocking(req).unwrap();
+    }
+    engine.drain().unwrap();
+    let (a1, b1) = snapshot();
+    assert_eq!(engine.completed(), 2 * N);
+
+    let allocs = a1 - a0;
+    let bytes = b1 - b0;
+    eprintln!("steady-state wave of {N}: {allocs} allocations, {bytes} bytes");
+
+    // Per-request payload traffic is zero, so what remains is bounded
+    // per-batch bookkeeping — far below one allocation per request. The
+    // old data plane could not pass this: `row.to_vec()` alone was one
+    // allocation per response (N of them), before the per-batch input
+    // Vec, logits Vec and ArtifactInfo clone.
+    assert!(
+        allocs < N,
+        "steady-state wave allocated {allocs} times for {N} requests \
+         (≥ 1/request ⇒ a per-request allocation crept back in)"
+    );
+    // And no per-request pixel/logits copies: one image is 576 B, so a
+    // data plane that copied each request's payload to the heap even
+    // once would exceed this budget on images alone.
+    let image_bytes = (ELEMS * std::mem::size_of::<f32>()) as u64;
+    assert!(
+        bytes < N * image_bytes,
+        "steady-state wave allocated {bytes} B for {N} requests \
+         (≥ {image_bytes} B/request ⇒ payloads are being copied per request)"
+    );
+
+    // The responses themselves are views into shared batch buffers:
+    // rows of one batch alias one allocation, not eight.
+    let responses = engine.responses();
+    assert_eq!(responses.len(), 8, "ring retains the last batch");
+    let seq = responses[0].batch_seq;
+    assert!(responses.iter().all(|r| r.batch_seq == seq));
+    let mut ptrs: Vec<usize> = responses
+        .iter()
+        .map(|r| r.logits.as_slice().as_ptr() as usize)
+        .collect();
+    ptrs.sort_unstable();
+    let span = ptrs[ptrs.len() - 1] - ptrs[0];
+    assert!(
+        span < 8 * 4 * std::mem::size_of::<f32>(),
+        "rows of one batch must alias one shared logits buffer (span {span} B)"
+    );
+    let mut engine = engine;
+    engine.shutdown().unwrap();
+}

@@ -190,7 +190,7 @@ fn serving_path_end_to_end() {
             .submit(InferenceRequest {
                 id,
                 model: opima::cnn::Model::LeNet,
-                image: image.clone(),
+                image: image.clone().into(),
                 variant: Variant::Fp32,
                 arrival: Instant::now(),
             })

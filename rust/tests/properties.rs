@@ -140,7 +140,7 @@ fn prop_batcher_conservation() {
             if let Some(batch) = b.push(InferenceRequest {
                 id,
                 model: models[rng.index(models.len())],
-                image: vec![],
+                image: vec![].into(),
                 variant,
                 arrival: std::time::Instant::now(),
             }) {
