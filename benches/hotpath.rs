@@ -96,6 +96,35 @@ fn main() {
             black_box(r.dispatch_for(Model::ResNet18, 400, i as f64, 1.5));
         }
     }));
+    // The global-engine dispatch path: the same 1k-batch workload, but
+    // every batch's priced event stream is admitted into the persistent
+    // per-instance stage pools (the acceptance bar: within 2× of the
+    // occupancy-only row above).
+    {
+        use opima::analyzer::contention::BatchStream;
+        let stream = BatchStream {
+            costs: &analysis.layer_costs,
+            batch: 8,
+            pipelined: analysis.occupancy.fits(),
+        };
+        let iso_ms = simulate_analysis_makespan(&cfg, &analysis, 8).makespan_ms();
+        report.add_stats(&measure("router/dispatch_batch_contended_1k", 5, scaled(500), || {
+            let mut r = Router::with_pools(4, 16_384, &cfg.pipeline);
+            for i in 0..1000 {
+                black_box(r.dispatch_batch(Model::ResNet18, 400, i as f64, stream, iso_ms));
+            }
+        }));
+        // Same admissions with the contention knob off — the optimistic
+        // occupancy-only pricing through the dispatch_batch entry point.
+        let mut optimistic = cfg.pipeline.clone();
+        optimistic.cross_batch_contention = false;
+        report.add_stats(&measure("router/dispatch_batch_optimistic_1k", 5, scaled(500), || {
+            let mut r = Router::with_pools(4, 16_384, &optimistic);
+            for i in 0..1000 {
+                black_box(r.dispatch_batch(Model::ResNet18, 400, i as f64, stream, iso_ms));
+            }
+        }));
+    }
 
     // --- serving data plane: old copy path vs pooled zero-copy path -------
     // What a worker pays per batch to (a) pack 8 images into the fixed-

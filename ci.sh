@@ -33,12 +33,33 @@ for f in BENCH_hotpath.json BENCH_serving_throughput.json; do
   test -s "$f" || { echo "missing bench summary $f"; exit 1; }
   grep -q '"results":\[' "$f" || { echo "bad schema in $f"; exit 1; }
 done
-# The zero-copy data-plane rows (copy vs pooled, ISSUE 5) must keep
-# landing in the hotpath summary.
+# The zero-copy data-plane rows (copy vs pooled, ISSUE 5) and the
+# router dispatch rows (occupancy-only vs global-engine, ISSUE 6) must
+# keep landing in the hotpath summary.
 for row in 'serving/pack_batch8_copy' 'serving/pack_batch8_pooled' \
-           'serving/respond_batch8_copy' 'serving/respond_batch8_pooled'; do
+           'serving/respond_batch8_copy' 'serving/respond_batch8_pooled' \
+           'router/dispatch_1k' 'router/dispatch_for_occupancy_1k' \
+           'router/dispatch_batch_contended_1k' 'router/dispatch_batch_optimistic_1k'; do
   grep -q "$row" BENCH_hotpath.json || { echo "missing $row row in BENCH_hotpath.json"; exit 1; }
 done
+
+# Bench-regression gate: the smoke-run summaries above vs the committed
+# baselines, with a generous tolerance (OPIMA_BENCH_TOL, default 5x) so
+# only order-of-magnitude rot trips it. First run on a toolchain-
+# equipped host seeds the baselines; commit them to arm the gate.
+echo "== bench-regression gate =="
+if ls benches/baseline/BENCH_*.json >/dev/null 2>&1; then
+  if command -v python3 >/dev/null 2>&1; then
+    python3 scripts/bench_gate.py benches/baseline .
+  else
+    echo "(python3 unavailable -- skipping bench-regression gate)"
+  fi
+else
+  mkdir -p benches/baseline
+  cp BENCH_hotpath.json BENCH_serving_throughput.json benches/baseline/
+  echo "(no committed baselines -- seeded benches/baseline/ from this run;"
+  echo " review and commit them to arm the regression gate)"
+fi
 
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings

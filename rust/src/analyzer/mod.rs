@@ -6,8 +6,13 @@
 //! (Fig. 8), energy-per-bit (Fig. 11) and FPS/W (Fig. 12) — and, since
 //! the timeline refactor, schedules whole batches as discrete events
 //! against resource pools ([`timeline`]) so batch latency reflects
-//! pipelining instead of the old `batch ×` analytical scaling.
+//! pipelining instead of the old `batch ×` analytical scaling. The
+//! [`contention`] engine extends that per-batch schedule across
+//! batches: a persistent per-instance event engine into which in-flight
+//! batches are admitted incrementally, competing for the shared
+//! aggregation/writeback pools — the honest fleet-scale makespan.
 
+pub mod contention;
 pub mod energy;
 pub mod latency;
 pub mod metrics;
@@ -16,6 +21,7 @@ pub mod report;
 pub mod simcost;
 pub mod timeline;
 
+pub use contention::{Admission, BatchStream, GlobalTimeline};
 pub use latency::{analyze_model, ModelAnalysis};
 pub use metrics::PlatformResult;
 pub use power::{power_breakdown, PowerBreakdown};

@@ -55,6 +55,45 @@ pub fn latency_summary_table(rows: &[(&str, &Summary)]) -> String {
     out
 }
 
+/// One model's row in the contended-vs-isolated report (`analyze
+/// --streams S`): S identical batch streams admitted onto one
+/// simulated instance, priced three ways.
+pub struct ContentionRow {
+    pub name: String,
+    /// One stream's isolated (sole-tenant) makespan (ms).
+    pub isolated_ms: f64,
+    /// Fleet makespan under occupancy-only co-residency (ms) — the
+    /// optimistic pre-contention model.
+    pub optimistic_ms: f64,
+    /// Fleet makespan with the streams contending for the shared
+    /// aggregation/writeback pools (ms) — the honest number.
+    pub contended_ms: f64,
+    /// `S ×` the isolated makespan (ms) — the no-overlap upper bound.
+    pub serialized_ms: f64,
+}
+
+/// Contended-vs-isolated serving report: what sharing the stage pools
+/// actually costs, bracketed by the co-residency bounds
+/// (isolated ≤ contended ≤ serialized).
+pub fn contention_table(streams: usize, rows: &[ContentionRow]) -> String {
+    let mut out = format!(
+        "| model | isolated (ms) | optimistic ×{streams} (ms) | contended ×{streams} (ms) | \
+         serialized ×{streams} (ms) | contention cost |\n|---|---|---|---|---|---|\n"
+    );
+    for r in rows {
+        let cost = if r.optimistic_ms > 0.0 {
+            r.contended_ms / r.optimistic_ms
+        } else {
+            1.0
+        };
+        out.push_str(&format!(
+            "| {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.2}× |\n",
+            r.name, r.isolated_ms, r.optimistic_ms, r.contended_ms, r.serialized_ms, cost
+        ));
+    }
+    out
+}
+
 /// Pipelined-vs-sequential batch report rows (the `analyze --batch`
 /// command): one timeline per model, with the analytical `batch ×`
 /// baseline, the pipelined makespan, and the bottleneck lower bound.
@@ -126,6 +165,34 @@ mod tests {
         let s = crate::analyzer::metrics::latency_summary(&[1.0, 2.0, 3.0]);
         let lt = latency_summary_table(&[("total", &s)]);
         assert!(lt.contains("total") && lt.contains("p99.9"));
+    }
+
+    #[test]
+    fn contention_table_renders() {
+        let out = contention_table(
+            4,
+            &[ContentionRow {
+                name: "resnet18".into(),
+                isolated_ms: 2.0,
+                optimistic_ms: 4.0,
+                contended_ms: 6.0,
+                serialized_ms: 8.0,
+            }],
+        );
+        assert!(out.contains("resnet18") && out.contains("contended ×4"));
+        assert!(out.contains("1.50×"), "{out}");
+        // Degenerate rows never print inf/NaN.
+        let z = contention_table(
+            1,
+            &[ContentionRow {
+                name: "empty".into(),
+                isolated_ms: 0.0,
+                optimistic_ms: 0.0,
+                contended_ms: 0.0,
+                serialized_ms: 0.0,
+            }],
+        );
+        assert!(z.contains("1.00×") && !z.contains("inf"), "{z}");
     }
 
     #[test]

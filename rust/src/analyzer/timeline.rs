@@ -121,13 +121,25 @@ impl TimelineSummary {
     }
 
     /// Pipelining gain over the old `batch ×` analytical model (≥ 1).
+    /// A degenerate schedule (empty cost slice or zero batch) has no
+    /// work on either side of the ratio, so it reports a neutral 1.0
+    /// instead of dividing toward `inf`.
     pub fn speedup(&self) -> f64 {
-        self.sequential_ns / self.makespan_ns.max(f64::MIN_POSITIVE)
+        if self.makespan_ns > 0.0 {
+            self.sequential_ns / self.makespan_ns
+        } else {
+            1.0
+        }
     }
 
-    /// How close the schedule runs to the bottleneck lower bound (≤ 1).
+    /// How close the schedule runs to the bottleneck lower bound (≤ 1);
+    /// 1.0 for the degenerate zero-makespan schedule.
     pub fn efficiency(&self) -> f64 {
-        self.bottleneck_ns / self.makespan_ns.max(f64::MIN_POSITIVE)
+        if self.makespan_ns > 0.0 {
+            self.bottleneck_ns / self.makespan_ns
+        } else {
+            1.0
+        }
     }
 }
 
@@ -158,6 +170,17 @@ impl std::ops::Deref for BatchTimeline {
     }
 }
 
+/// A stage pool as seen by the scheduling pass: book `dur` of work
+/// becoming ready at `ready`, returning the granted start time. The
+/// per-batch timeline backs this with a private [`Pool`]; the global
+/// contention engine ([`crate::analyzer::contention`]) backs it with
+/// persistent binary-heap pools shared across in-flight batches — both
+/// run the *same* [`run_stream`] pass, so their arithmetic can never
+/// drift apart.
+pub(crate) trait SlotPool {
+    fn acquire(&mut self, ready: f64, dur: f64) -> f64;
+}
+
 /// A counting resource pool: `capacity` slots, each busy until its
 /// recorded free time. Acquisition picks the earliest-free slot and
 /// starts no earlier than `ready` — events on one slot never overlap.
@@ -172,7 +195,9 @@ impl Pool {
             slots: vec![0.0; capacity.max(1)],
         }
     }
+}
 
+impl SlotPool for Pool {
     /// Book `dur` of work becoming ready at `ready`; returns the start.
     fn acquire(&mut self, ready: f64, dur: f64) -> f64 {
         let idx = self
@@ -186,6 +211,121 @@ impl Pool {
         self.slots[idx] = start + dur;
         start
     }
+}
+
+/// Reusable per-stream scheduling state: the per-layer exclusive-unit
+/// cursors, the per-layer writeback-order cursors, and the image
+/// retirement times. Owned by the caller so the global engine can admit
+/// batches in a steady state without reallocating.
+#[derive(Debug, Default, Clone)]
+pub(crate) struct StreamScratch {
+    /// Per-layer exclusive compute unit (subarray group + MDL array):
+    /// free once the image's aggregation has drained into SRAM.
+    layer_free: Vec<f64>,
+    /// Writebacks into one layer's input maps issue in image order.
+    wb_layer_free: Vec<f64>,
+    /// Retirement time of each image (for the in-flight window knob and
+    /// the serial fallback).
+    retired: Vec<f64>,
+}
+
+impl StreamScratch {
+    /// Reset for a fresh `layers × batch` stream, keeping allocations.
+    pub(crate) fn reset(&mut self, layers: usize, batch: usize) {
+        self.layer_free.clear();
+        self.layer_free.resize(layers, 0.0);
+        self.wb_layer_free.clear();
+        self.wb_layer_free.resize(layers, 0.0);
+        self.retired.clear();
+        self.retired.reserve(batch);
+    }
+}
+
+/// The per-batch scheduling pass, shared verbatim by the standalone
+/// timeline ([`schedule`]) and the global contention engine's admission
+/// ([`crate::analyzer::contention::GlobalTimeline`]). Chains every
+/// `(image, layer)` triple (Processing → Aggregation → Writeback)
+/// through the caller's stage pools and returns the stream's makespan
+/// in the caller's time domain (the standalone timeline runs at t = 0;
+/// the global engine runs relative to the batch's admission origin).
+/// `scratch` must be [`StreamScratch::reset`] for `costs.len() × batch`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_stream(
+    costs: &[LayerCost],
+    batch: usize,
+    pipelined: bool,
+    window: usize,
+    agg_pool: &mut dyn SlotPool,
+    wb_pool: &mut dyn SlotPool,
+    s: &mut StreamScratch,
+    mut events: Option<&mut Vec<Event>>,
+) -> f64 {
+    let nl = costs.len();
+    debug_assert_eq!(s.layer_free.len(), nl);
+    let mut makespan_ns = 0.0f64;
+    for image in 0..batch {
+        // Dataflow cursor: when this image's input to the next layer is
+        // available. The first layer's input load is not priced.
+        let mut ready = if !pipelined {
+            // Over-capacity: layers time-share the memory — image i may
+            // not enter until image i-1 fully retires.
+            s.retired.last().copied().unwrap_or(0.0)
+        } else if window > 0 && image >= window {
+            s.retired[image - window]
+        } else {
+            0.0
+        };
+        for (layer, c) in costs.iter().enumerate() {
+            // Processing: the layer's exclusive unit, once the previous
+            // image has drained out of it.
+            let m_start = ready.max(s.layer_free[layer]);
+            let m_end = m_start + c.mac_ns;
+            // Aggregation: continues on the layer unit but also needs a
+            // shared aggregation pipeline.
+            let a_start = agg_pool.acquire(m_end, c.aggregation_ns);
+            let a_end = a_start + c.aggregation_ns;
+            s.layer_free[layer] = a_end;
+            // Writeback targets layer k+1's input subarrays: wait until
+            // the previous image has finished reading them (WAR), keep
+            // per-layer image order, and take a writeback channel.
+            let war = if layer + 1 < nl {
+                s.layer_free[layer + 1]
+            } else {
+                0.0
+            };
+            let w_ready = a_end.max(war).max(s.wb_layer_free[layer]);
+            let w_start = wb_pool.acquire(w_ready, c.writeback_ns);
+            let w_end = w_start + c.writeback_ns;
+            s.wb_layer_free[layer] = w_end;
+            makespan_ns = makespan_ns.max(m_end).max(a_end).max(w_end);
+            if let Some(ev) = events.as_deref_mut() {
+                ev.push(Event {
+                    image,
+                    layer,
+                    phase: Phase::Processing,
+                    start_ns: m_start,
+                    end_ns: m_end,
+                });
+                ev.push(Event {
+                    image,
+                    layer,
+                    phase: Phase::Aggregation,
+                    start_ns: a_start,
+                    end_ns: a_end,
+                });
+                ev.push(Event {
+                    image,
+                    layer,
+                    phase: Phase::Writeback,
+                    start_ns: w_start,
+                    end_ns: w_end,
+                });
+            }
+            ready = w_end;
+        }
+        s.retired.push(ready);
+    }
+    makespan_ns
 }
 
 /// Schedule `batch` images through the priced layers, pipelined.
@@ -241,84 +381,26 @@ fn schedule(
     costs: &[LayerCost],
     batch: usize,
     pipelined: bool,
-    mut events: Option<&mut Vec<Event>>,
+    events: Option<&mut Vec<Event>>,
 ) -> TimelineSummary {
-    let nl = costs.len();
     let per_image_ns: f64 = costs.iter().map(LayerCost::total_ns).sum();
     let sequential_ns = per_image_ns * batch as f64;
     let bottleneck_ns = bottleneck(pipe, costs, batch, per_image_ns);
 
-    let mut makespan_ns = 0.0f64;
-    // Per-layer exclusive compute unit (subarray group + MDL array):
-    // free once the image's aggregation has drained into SRAM.
-    let mut layer_free = vec![0.0f64; nl];
-    // Writebacks into one layer's input maps issue in image order.
-    let mut wb_layer_free = vec![0.0f64; nl];
     let mut agg_pool = Pool::new(pipe.aggregation_units);
     let mut wb_pool = Pool::new(pipe.writeback_channels);
-    // Retirement time of each image (for the in-flight window knob and
-    // the serial fallback).
-    let mut retired = Vec::with_capacity(batch);
-    let window = pipe.max_in_flight_images;
-
-    for image in 0..batch {
-        // Dataflow cursor: when this image's input to the next layer is
-        // available. The first layer's input load is not priced.
-        let mut ready = if !pipelined {
-            // Over-capacity: layers time-share the memory — image i may
-            // not enter until image i-1 fully retires.
-            retired.last().copied().unwrap_or(0.0)
-        } else if window > 0 && image >= window {
-            retired[image - window]
-        } else {
-            0.0
-        };
-        for (layer, c) in costs.iter().enumerate() {
-            // Processing: the layer's exclusive unit, once the previous
-            // image has drained out of it.
-            let m_start = ready.max(layer_free[layer]);
-            let m_end = m_start + c.mac_ns;
-            // Aggregation: continues on the layer unit but also needs a
-            // shared aggregation pipeline.
-            let a_start = agg_pool.acquire(m_end, c.aggregation_ns);
-            let a_end = a_start + c.aggregation_ns;
-            layer_free[layer] = a_end;
-            // Writeback targets layer k+1's input subarrays: wait until
-            // the previous image has finished reading them (WAR), keep
-            // per-layer image order, and take a writeback channel.
-            let war = if layer + 1 < nl { layer_free[layer + 1] } else { 0.0 };
-            let w_ready = a_end.max(war).max(wb_layer_free[layer]);
-            let w_start = wb_pool.acquire(w_ready, c.writeback_ns);
-            let w_end = w_start + c.writeback_ns;
-            wb_layer_free[layer] = w_end;
-            makespan_ns = makespan_ns.max(m_end).max(a_end).max(w_end);
-            if let Some(ev) = events.as_deref_mut() {
-                ev.push(Event {
-                    image,
-                    layer,
-                    phase: Phase::Processing,
-                    start_ns: m_start,
-                    end_ns: m_end,
-                });
-                ev.push(Event {
-                    image,
-                    layer,
-                    phase: Phase::Aggregation,
-                    start_ns: a_start,
-                    end_ns: a_end,
-                });
-                ev.push(Event {
-                    image,
-                    layer,
-                    phase: Phase::Writeback,
-                    start_ns: w_start,
-                    end_ns: w_end,
-                });
-            }
-            ready = w_end;
-        }
-        retired.push(ready);
-    }
+    let mut scratch = StreamScratch::default();
+    scratch.reset(costs.len(), batch);
+    let makespan_ns = run_stream(
+        costs,
+        batch,
+        pipelined,
+        pipe.max_in_flight_images,
+        &mut agg_pool,
+        &mut wb_pool,
+        &mut scratch,
+        events,
+    );
     TimelineSummary {
         batch,
         makespan_ns,
@@ -519,6 +601,28 @@ mod tests {
         // The serial (over-capacity) fallback agrees too.
         let raw = simulate_makespan(&cfg, &a.layer_costs, 4);
         assert_eq!(raw.makespan_ns, simulate(&cfg, &a.layer_costs, 4).makespan_ns);
+    }
+
+    #[test]
+    fn degenerate_empty_schedule_reports_finite_ratios() {
+        // Empty cost slice and zero batch both produce a zero makespan;
+        // speedup/efficiency must report a neutral 1.0, never `inf` —
+        // contended reports print these ratios directly.
+        let cfg = OpimaConfig::paper();
+        for t in [
+            simulate_makespan(&cfg, &[], 4),
+            simulate_makespan(&cfg, &[], 0),
+        ] {
+            assert_eq!(t.makespan_ns, 0.0);
+            assert_eq!(t.speedup(), 1.0);
+            assert_eq!(t.efficiency(), 1.0);
+            assert!(t.speedup().is_finite() && t.efficiency().is_finite());
+        }
+        let (cfg, a) = analysis(4);
+        let t = simulate_analysis_makespan(&cfg, &a, 0);
+        assert_eq!(t.makespan_ns, 0.0);
+        assert_eq!(t.speedup(), 1.0);
+        assert_eq!(t.efficiency(), 1.0);
     }
 
     #[test]

@@ -261,6 +261,11 @@ pub struct PipelineParams {
     /// pipeline (aggregation-SRAM staging depth). 0 means no explicit
     /// bound — in-flight depth is limited only by the resource pools.
     pub max_in_flight_images: usize,
+    /// Whether co-resident batches on one simulated instance contend
+    /// for the shared aggregation/writeback pools (the global
+    /// contention timeline, honest) or only for subarray occupancy
+    /// (the pre-contention optimistic model). Default: true.
+    pub cross_batch_contention: bool,
 }
 
 impl Default for PipelineParams {
@@ -269,6 +274,7 @@ impl Default for PipelineParams {
             writeback_channels: 1,
             aggregation_units: 4,
             max_in_flight_images: 0,
+            cross_batch_contention: true,
         }
     }
 }
@@ -383,6 +389,10 @@ impl OpimaConfig {
                 doc.usize_or("pipeline.aggregation_units", p.aggregation_units);
             p.max_in_flight_images =
                 doc.usize_or("pipeline.max_in_flight_images", p.max_in_flight_images);
+            p.cross_batch_contention = doc
+                .get("pipeline.cross_batch_contention")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(p.cross_batch_contention);
         }
         {
             let l = &mut cfg.losses;
@@ -477,6 +487,7 @@ impl OpimaConfig {
                 ("writeback_channels".into(), V::Int(pl.writeback_channels as i64)),
                 ("aggregation_units".into(), V::Int(pl.aggregation_units as i64)),
                 ("max_in_flight_images".into(), V::Int(pl.max_in_flight_images as i64)),
+                ("cross_batch_contention".into(), V::Bool(pl.cross_batch_contention)),
             ]),
         );
         let l = &self.losses;
@@ -573,6 +584,12 @@ mod tests {
         assert_eq!(parsed.pipeline.writeback_channels, 2);
         assert_eq!(parsed.pipeline.aggregation_units, 4, "default kept");
         assert_eq!(parsed.pipeline.max_in_flight_images, 3);
+        assert!(parsed.pipeline.cross_batch_contention, "default kept");
+        let parsed = OpimaConfig::from_toml(
+            "[pipeline]\ncross_batch_contention = false\n",
+        )
+        .unwrap();
+        assert!(!parsed.pipeline.cross_batch_contention);
     }
 
     #[test]

@@ -31,8 +31,10 @@
 //!   executor programs, built exactly once under a per-key lock — and
 //!   place each real batch at the earliest *simulated* time its mapper
 //!   footprint fits on an OPIMA instance via the shared,
-//!   occupancy-aware [`Router`] (models whose footprints fit together
-//!   co-reside; reservations are tagged by model).
+//!   contention-aware [`Router`] (models whose footprints fit together
+//!   co-reside; co-resident batches contend for the instance's shared
+//!   aggregation/writeback pools through the global contention
+//!   timeline; reservations are tagged by model).
 //! - **Streaming stats**: each worker folds its batches' latencies into
 //!   its own per-model shard of log-bucketed histograms
 //!   ([`util::histogram`](crate::util::histogram)) — an uncontended
@@ -318,10 +320,13 @@ impl Engine {
         let variants = [Variant::Fp32, Variant::Int8, Variant::Int4];
         let registry = Arc::new(PlanRegistry::new(cfg.hw.clone(), manifest.clone()));
         // Each simulated instance is a whole OPIMA module: batches
-        // co-reside when their mapper footprints fit in its subarrays.
-        let router = Arc::new(Mutex::new(Router::with_capacity(
+        // co-reside when their mapper footprints fit in its subarrays,
+        // and co-resident batches contend for the module's shared
+        // aggregation/writeback pools (sized by the pipeline config).
+        let router = Arc::new(Mutex::new(Router::with_pools(
             cfg.instances,
             cfg.hw.geometry.total_subarrays(),
+            &cfg.hw.pipeline,
         )));
         let sink = Arc::new(StatsSink::new(cfg.history));
         let shards: Vec<Arc<Mutex<WorkerShard>>> = (0..cfg.workers)

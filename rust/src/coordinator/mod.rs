@@ -80,6 +80,7 @@ pub mod worker;
 
 pub use engine::{Engine, EngineConfig};
 pub use registry::{ModelPlan, PlanRegistry};
+pub use router::Router;
 pub use request::{
     parse_mix, pick_weighted, ImageBuf, InferenceRequest, InferenceResponse, LogitsPool,
     LogitsView, Variant,

@@ -33,6 +33,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::analyzer::contention::BatchStream;
 use crate::analyzer::latency::{analyze_mapped, ModelAnalysis};
 use crate::analyzer::simcost::SimCostTable;
 use crate::analyzer::timeline::{simulate_analysis_makespan, TimelineSummary};
@@ -101,6 +102,19 @@ impl ModelPlan {
     /// when it fits.
     pub fn capacity_warning(&self) -> Option<CapacityWarning> {
         self.occupancy().warning_for(&self.mapped.name)
+    }
+
+    /// The plan's priced event stream at its serving batch size — what
+    /// [`Router::dispatch_batch`](crate::coordinator::router::Router::dispatch_batch)
+    /// admits into the global contention timeline. Over-capacity
+    /// mappings stream serialized, mirroring the isolated timeline's
+    /// fallback.
+    pub fn stream(&self) -> BatchStream<'_> {
+        BatchStream {
+            costs: &self.analysis.layer_costs,
+            batch: self.batch,
+            pipelined: self.occupancy().fits(),
+        }
     }
 }
 

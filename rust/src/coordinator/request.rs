@@ -315,8 +315,14 @@ pub struct InferenceRequest {
 /// carried this request.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SimMetering {
-    /// What the OPIMA hardware would have taken for the batch (ms).
+    /// What the OPIMA hardware would have taken for the batch in
+    /// isolation (ms) — the per-batch timeline's makespan.
     pub hw_latency_ms: f64,
+    /// The batch's simulated window on its instance under co-residency
+    /// (ms): the global contention timeline's start→end, ≥
+    /// `hw_latency_ms` (equal when the batch had the instance's stage
+    /// pools to itself, or with `cross_batch_contention` off).
+    pub hw_contended_ms: f64,
     /// Dynamic energy of the batch (mJ).
     pub hw_energy_mj: f64,
 }

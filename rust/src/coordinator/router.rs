@@ -1,81 +1,66 @@
-//! Occupancy-aware routing across simulated OPIMA instances.
+//! Contention-aware routing across simulated OPIMA instances.
 //!
 //! A deployment can attach several OPIMA memory modules. The router
-//! used to reduce each instance to a single scalar busy horizon —
-//! one batch at a time per module, regardless of how little of the
-//! module the batch's model actually occupies. It now tracks
-//! per-instance **subarray occupancy**: every reservation carries the
-//! mapper footprint of the model it serves, and a batch is placed at
-//! the earliest simulated time at which its footprint fits alongside
-//! the reservations already running there. Two models whose footprints
-//! fit together co-reside on one instance instead of serializing — the
-//! decision is driven by the mapper's occupancy, not a scalar horizon.
+//! owns the placement **policy** — earliest feasible start wins, ties
+//! break toward the least-dispatched instance, reservations are tagged
+//! by model so makespans are reportable per model — and prices every
+//! placement against the persistent
+//! [`GlobalTimeline`](crate::analyzer::contention::GlobalTimeline):
+//! one event engine per instance tracking subarray occupancy *and* the
+//! shared aggregation/writeback stage pools across all in-flight
+//! batches.
 //!
-//! Reservations can be tagged with the model that booked them
-//! ([`Router::dispatch_for`]), so the simulated makespan is reportable
-//! per model as well as globally; per-model reports are sorted by model
-//! for stable output. The footprint-free [`Router::dispatch`] books the
-//! instance exclusively (the whole capacity) and keeps the old
-//! serialize-per-instance semantics.
+//! Two admission models coexist:
 //!
-//! **Modeling assumption:** co-residency is gated on the *subarray*
-//! footprint only — the first-order resource that determines whether a
-//! model's stationary operands can be resident at all. Co-resident
-//! batches are assumed to also share the aggregation/writeback stage
-//! pools without contention, even though each batch's duration was
-//! priced by the timeline assuming sole use of them; co-resident
-//! makespans are therefore optimistic by up to the writeback-channel
-//! share. Modeling cross-batch stage contention would require one
-//! global event timeline across all in-flight batches (a candidate
-//! follow-up), not per-batch durations.
+//! - [`Router::dispatch`] / [`Router::dispatch_for`] commit **occupancy
+//!   only** (the optimistic pre-contention model): the batch's duration
+//!   is the caller's isolated estimate and co-resident batches are
+//!   assumed not to contend for stage pools. These keep the historical
+//!   semantics (and the historical numbers) for callers that have no
+//!   layer stream to admit.
+//! - [`Router::dispatch_batch`] admits the batch's priced **event
+//!   stream** into the instance's persistent pools, so co-resident
+//!   batches genuinely compete for aggregation units and writeback
+//!   channels: the committed end is the *contended* end. With one batch
+//!   in flight the admission is bit-exact with the isolated per-batch
+//!   timeline, so single-tenant numbers are unchanged. Setting
+//!   [`PipelineParams::cross_batch_contention`] to `false` downgrades
+//!   this path to the occupancy-only model.
 //!
-//! The feasibility check is conservative: a candidate window is charged
-//! every reservation it overlaps, so occupancy is never undercounted
-//! (sequential reservations inside one window may be double-counted,
-//! delaying a placement but never overbooking the memory). Expired
-//! reservations are pruned against the latest dispatch clock, and the
-//! per-instance ledger is **bounded**: when simulated time runs ahead
-//! of real time (the oversubscribed regime this router exists to
-//! model) old reservations never expire, so past
-//! [`MAX_RESERVATIONS_PER_INSTANCE`] the earliest-ending half is
-//! compacted into a per-instance *floor* — no new reservation may
-//! start before it. Compaction is conservative (placements only move
-//! later, never overbook) and keeps dispatch O(bounded) instead of
-//! growing with every batch ever served.
+//! Placement probes use the isolated duration as the occupancy window
+//! (cheap, and available before admission); the committed reservation
+//! then covers the contended window, which is never shorter — the
+//! feasibility accounting stays conservative. Dispatch cost is
+//! O(batch × layers × log pools) for the admission plus
+//! O(instances × ledger) for the probe; ledgers are end-sorted (probes
+//! allocate nothing), the retirement frontier prunes them only when the
+//! dispatch clock actually advances, and the oversubscribed regime is
+//! bounded by folding old reservations into a per-instance floor (see
+//! [`MAX_RESERVATIONS_PER_INSTANCE`]).
 
 use std::collections::BTreeMap;
 
+use crate::analyzer::contention::{BatchStream, GlobalTimeline};
 use crate::cnn::models::Model;
+use crate::config::PipelineParams;
 
-/// Ledger bound per instance; beyond this the earliest-ending half of
-/// the reservations is folded into the instance's start floor.
-pub const MAX_RESERVATIONS_PER_INSTANCE: usize = 128;
+pub use crate::analyzer::contention::MAX_RESERVATIONS_PER_INSTANCE;
 
-/// One committed slice of simulated instance time.
-#[derive(Debug, Clone, Copy)]
-struct Reservation {
-    start_ms: f64,
-    end_ms: f64,
-    subarrays: usize,
-}
+/// The router's clock is milliseconds (serving wall clock); the global
+/// engine runs in nanoseconds (the timeline's domain).
+const NS_PER_MS: f64 = 1e6;
 
-/// Tracks per-instance reservations and occupancy.
+/// Routes batches onto simulated instances, priced by the global
+/// contention timeline.
 #[derive(Debug, Clone)]
 pub struct Router {
-    /// Subarray capacity of each instance.
-    capacity: usize,
-    /// Active (not yet pruned) reservations per instance.
-    reservations: Vec<Vec<Reservation>>,
-    /// Batches dispatched per instance.
+    /// The persistent per-instance event engine.
+    timeline: GlobalTimeline,
+    /// Batches dispatched per instance (placement tie-break).
     dispatched: Vec<u64>,
-    /// Latest reservation end (ms) per instance.
-    horizons: Vec<f64>,
-    /// Per-instance compaction floor (ms): simulated time before which
-    /// no new reservation may start, raised when old reservations are
-    /// folded away to bound the ledger.
-    floors: Vec<f64>,
-    /// Latest `now` seen — the prune frontier.
-    frontier: f64,
+    /// Whether [`Router::dispatch_batch`] admits into the shared stage
+    /// pools (honest) or books occupancy only (optimistic).
+    contended: bool,
     /// Latest reservation end (ms) per tagging model — that model's
     /// simulated makespan. `BTreeMap` so iteration is model-sorted.
     model_end: BTreeMap<Model, f64>,
@@ -88,36 +73,47 @@ impl Router {
         Self::with_capacity(instances, 1)
     }
 
-    /// Router over instances with `subarray_capacity` subarrays each;
-    /// [`Router::dispatch_for`] co-schedules batches whose footprints
-    /// fit together.
+    /// Router over instances with `subarray_capacity` subarrays each
+    /// and default pipeline pools; [`Router::dispatch_for`]
+    /// co-schedules batches whose footprints fit together.
     pub fn with_capacity(instances: usize, subarray_capacity: usize) -> Self {
+        Self::with_pools(instances, subarray_capacity, &PipelineParams::default())
+    }
+
+    /// Router whose per-instance stage pools are sized by `pipe` —
+    /// [`Router::dispatch_batch`] admits batches into them so
+    /// co-resident batches contend for aggregation units and writeback
+    /// channels (unless `pipe.cross_batch_contention` is off).
+    pub fn with_pools(instances: usize, subarray_capacity: usize, pipe: &PipelineParams) -> Self {
         assert!(instances >= 1);
         Self {
-            capacity: subarray_capacity.max(1),
-            reservations: vec![Vec::new(); instances],
+            timeline: GlobalTimeline::new(instances, subarray_capacity, pipe),
             dispatched: vec![0; instances],
-            horizons: vec![0.0; instances],
-            floors: vec![0.0; instances],
-            frontier: 0.0,
+            contended: pipe.cross_batch_contention,
             model_end: BTreeMap::new(),
         }
     }
 
     pub fn instances(&self) -> usize {
-        self.horizons.len()
+        self.timeline.instances()
     }
 
     /// Subarray capacity of each instance.
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.timeline.capacity()
+    }
+
+    /// The global engine pricing this router's placements (read-only —
+    /// audits and tests).
+    pub fn timeline(&self) -> &GlobalTimeline {
+        &self.timeline
     }
 
     /// Book a whole instance exclusively for a batch arriving at
     /// `now_ms` with simulated duration `dur_ms`. Returns (instance,
     /// start_ms, end_ms) and commits the reservation.
     pub fn dispatch(&mut self, now_ms: f64, dur_ms: f64) -> (usize, f64, f64) {
-        self.place(None, self.capacity, now_ms, dur_ms)
+        self.place(None, self.capacity(), now_ms, dur_ms)
     }
 
     /// Occupancy-aware dispatch: place a batch of `model` with the
@@ -126,7 +122,9 @@ impl Router {
     /// [`Router::model_makespan_ms`] can report when the simulated
     /// hardware finished that model's work. Footprints larger than an
     /// instance are clamped to the full instance (the model time-shares
-    /// the memory; the registry surfaces the capacity warning).
+    /// the memory; the registry surfaces the capacity warning). This
+    /// path books occupancy only — co-resident stage pools are assumed
+    /// free; [`Router::dispatch_batch`] is the honest path.
     pub fn dispatch_for(
         &mut self,
         model: Model,
@@ -137,6 +135,33 @@ impl Router {
         self.place(Some(model), subarrays, now_ms, dur_ms)
     }
 
+    /// Contention-aware dispatch: place the batch like
+    /// [`Router::dispatch_for`] (earliest feasible occupancy window of
+    /// the *isolated* duration `isolated_ms`), then admit its priced
+    /// event stream into the chosen instance's persistent stage pools.
+    /// The returned (and committed) end is the **contended** end —
+    /// never earlier than `start + isolated_ms`, and bit-exactly equal
+    /// to it when the batch has the instance's pools to itself. With
+    /// `cross_batch_contention` off this is exactly `dispatch_for`.
+    pub fn dispatch_batch(
+        &mut self,
+        model: Model,
+        subarrays: usize,
+        now_ms: f64,
+        stream: BatchStream<'_>,
+        isolated_ms: f64,
+    ) -> (usize, f64, f64) {
+        if !self.contended {
+            return self.place(Some(model), subarrays, now_ms, isolated_ms);
+        }
+        let fp = subarrays.clamp(1, self.capacity());
+        let base_ns = self.timeline.advance(now_ms * NS_PER_MS);
+        let (idx, start_ns) = self.choose(fp, base_ns, isolated_ms * NS_PER_MS);
+        let adm = self.timeline.admit(idx, fp, start_ns, stream, None);
+        self.finish(Some(model), idx, adm.start_ms(), adm.end_ms())
+    }
+
+    /// Occupancy-only placement (both legacy dispatch paths).
     fn place(
         &mut self,
         model: Option<Model>,
@@ -144,79 +169,46 @@ impl Router {
         now_ms: f64,
         dur_ms: f64,
     ) -> (usize, f64, f64) {
-        let fp = subarrays.clamp(1, self.capacity);
-        self.frontier = self.frontier.max(now_ms);
+        let fp = subarrays.clamp(1, self.capacity());
         // Place against the frontier, not the caller's clock: workers
-        // race, and a stale `now_ms` below the latest prune point would
-        // see already-pruned reservations as free capacity (overbooking
-        // the instance). Clamping forward keeps the never-undercount
-        // invariant; a placement never starts before the latest
-        // observed dispatch clock anyway.
-        let now_ms = self.frontier;
-        let frontier = self.frontier;
-        for (rs, floor) in self.reservations.iter_mut().zip(self.floors.iter_mut()) {
-            rs.retain(|r| r.end_ms > frontier);
-            // When simulated time runs ahead of the wall clock nothing
-            // expires; fold the earliest-ending half into the floor so
-            // memory and dispatch cost stay bounded.
-            if rs.len() >= MAX_RESERVATIONS_PER_INSTANCE {
-                rs.sort_by(|a, b| a.end_ms.total_cmp(&b.end_ms));
-                let cut = rs.len() - MAX_RESERVATIONS_PER_INSTANCE / 2;
-                *floor = floor.max(rs[cut - 1].end_ms);
-                rs.drain(..cut);
-            }
-        }
-        // Earliest feasible start wins; ties (e.g. small footprints that
-        // fit everywhere immediately) break toward the least-dispatched
-        // instance so load still spreads across modules.
-        let (idx, start) = (0..self.instances())
-            .map(|i| (i, self.earliest_start(i, fp, now_ms, dur_ms)))
+        // race, and a stale `now_ms` below the latest retirement point
+        // would see already-retired reservations as free capacity
+        // (overbooking the instance). Clamping forward keeps the
+        // never-undercount invariant; a placement never starts before
+        // the latest observed dispatch clock anyway.
+        let base_ns = self.timeline.advance(now_ms * NS_PER_MS);
+        let dur_ns = dur_ms * NS_PER_MS;
+        let (idx, start_ns) = self.choose(fp, base_ns, dur_ns);
+        let end_ns = self.timeline.occupy(idx, fp, start_ns, dur_ns);
+        self.finish(model, idx, start_ns / NS_PER_MS, end_ns / NS_PER_MS)
+    }
+
+    /// Earliest feasible start wins; ties (e.g. small footprints that
+    /// fit everywhere immediately) break toward the least-dispatched
+    /// instance so load still spreads across modules.
+    fn choose(&self, fp: usize, base_ns: f64, dur_ns: f64) -> (usize, f64) {
+        (0..self.instances())
+            .map(|i| (i, self.timeline.earliest_start(i, fp, base_ns, dur_ns)))
             .min_by(|a, b| {
                 a.1.total_cmp(&b.1)
                     .then_with(|| self.dispatched[a.0].cmp(&self.dispatched[b.0]))
             })
-            .expect("non-empty");
-        let end = start + dur_ms;
-        self.reservations[idx].push(Reservation {
-            start_ms: start,
-            end_ms: end,
-            subarrays: fp,
-        });
-        self.dispatched[idx] += 1;
-        self.horizons[idx] = self.horizons[idx].max(end);
-        if let Some(m) = model {
-            let e = self.model_end.entry(m).or_insert(0.0);
-            *e = e.max(end);
-        }
-        (idx, start, end)
+            .expect("non-empty")
     }
 
-    /// Earliest `t ≥ max(now, floor)` at which `fp` subarrays are free
-    /// on instance `i` for the whole window `[t, t + dur)`, by the
-    /// conservative overlap count. Candidates are the base time and
-    /// each reservation end.
-    fn earliest_start(&self, i: usize, fp: usize, now_ms: f64, dur_ms: f64) -> f64 {
-        let rs = &self.reservations[i];
-        let base = now_ms.max(self.floors[i]);
-        let mut candidates: Vec<f64> = std::iter::once(base)
-            .chain(rs.iter().map(|r| r.end_ms).filter(|&e| e > base))
-            .collect();
-        candidates.sort_by(|a, b| a.total_cmp(b));
-        for t in candidates {
-            let used: usize = rs
-                .iter()
-                .filter(|r| r.start_ms < t + dur_ms && r.end_ms > t)
-                .map(|r| r.subarrays)
-                .sum();
-            if used + fp <= self.capacity {
-                return t;
-            }
+    fn finish(
+        &mut self,
+        model: Option<Model>,
+        idx: usize,
+        start_ms: f64,
+        end_ms: f64,
+    ) -> (usize, f64, f64) {
+        self.dispatched[idx] += 1;
+        if let Some(m) = model {
+            let e = self.model_end.entry(m).or_insert(0.0);
+            *e = e.max(end_ms);
         }
-        // Unreachable by construction: at the latest reservation end no
-        // reservation overlaps the window and `fp ≤ capacity`, so the
-        // loop always returns there at the latest. Kept as a defensive
-        // fallback rather than a panic in the serving path.
-        self.horizons[i].max(base)
+        (idx, start_ms, end_ms)
     }
 
     /// Per-instance dispatched-batch counts.
@@ -226,7 +218,7 @@ impl Router {
 
     /// Simulated makespan across instances.
     pub fn makespan_ms(&self) -> f64 {
-        self.horizons.iter().cloned().fold(0.0, f64::max)
+        self.timeline.makespan_ns() / NS_PER_MS
     }
 
     /// Simulated makespan of one model's tagged reservations (0 when the
@@ -245,6 +237,17 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pim::scheduler::LayerCost;
+
+    fn lc(mac_ns: f64, aggregation_ns: f64, writeback_ns: f64) -> LayerCost {
+        LayerCost {
+            processing_ns: mac_ns + aggregation_ns,
+            mac_ns,
+            aggregation_ns,
+            writeback_ns,
+            ..LayerCost::default()
+        }
+    }
 
     #[test]
     fn balances_across_instances() {
@@ -359,7 +362,7 @@ mod tests {
             assert!(s >= last_start, "starts must not regress");
             last_start = s;
         }
-        assert!(r.reservations[0].len() <= MAX_RESERVATIONS_PER_INSTANCE);
+        assert!(r.timeline().live_reservations(0) <= MAX_RESERVATIONS_PER_INSTANCE);
         // Work is conserved: 2000 serialized 5 ms batches.
         assert!((r.makespan_ms() - 2000.0 * 5.0).abs() < 1e-6);
     }
@@ -373,5 +376,63 @@ mod tests {
         let (i, s, _) = r.dispatch_for(Model::MobileNet, 80, 0.0, 5.0);
         assert_eq!(i, 1);
         assert_eq!(s, 10.0);
+    }
+
+    #[test]
+    fn contended_dispatch_prices_pool_sharing() {
+        let costs = vec![lc(100.0, 40.0, 60.0), lc(80.0, 30.0, 50.0)];
+        let stream = BatchStream {
+            costs: &costs,
+            batch: 8,
+            pipelined: true,
+        };
+        let pipe = PipelineParams::default();
+        // Isolated duration of that stream (drained single-instance
+        // engine at t = 0).
+        let iso_ms = GlobalTimeline::new(1, 100, &pipe)
+            .admit(0, 10, 0.0, stream, None)
+            .makespan_ns
+            / 1e6;
+        let mut r = Router::with_pools(1, 100, &pipe);
+        // Alone in flight: bit-exact with the isolated timeline.
+        let (_, s0, e0) = r.dispatch_batch(Model::LeNet, 10, 0.0, stream, iso_ms);
+        assert_eq!(s0, 0.0);
+        assert_eq!(e0, iso_ms);
+        // Co-resident (footprints fit together): the second batch
+        // shares the writeback channel, so its window must stretch
+        // beyond the isolated estimate — the honest makespan.
+        let (_, s1, e1) = r.dispatch_batch(Model::MobileNet, 10, 0.0, stream, iso_ms);
+        assert_eq!(s1, 0.0, "occupancy still co-resides");
+        assert!(e1 - s1 > iso_ms, "no contention priced: {} vs {iso_ms}", e1 - s1);
+        // Bounded by full serialization.
+        assert!(r.makespan_ms() <= 2.0 * iso_ms + 1e-9);
+        assert!(r.model_makespan_ms(Model::MobileNet) >= r.model_makespan_ms(Model::LeNet));
+    }
+
+    #[test]
+    fn contention_knob_off_reproduces_occupancy_only_dispatch() {
+        let costs = vec![lc(100.0, 40.0, 60.0)];
+        let stream = BatchStream {
+            costs: &costs,
+            batch: 4,
+            pipelined: true,
+        };
+        let pipe = PipelineParams {
+            cross_batch_contention: false,
+            ..PipelineParams::default()
+        };
+        let mut honest = Router::with_pools(1, 100, &PipelineParams::default());
+        let mut optimistic = Router::with_pools(1, 100, &pipe);
+        let mut legacy = Router::with_pools(1, 100, &pipe);
+        for _ in 0..3 {
+            optimistic.dispatch_batch(Model::LeNet, 10, 0.0, stream, 2.5);
+            legacy.dispatch_for(Model::LeNet, 10, 0.0, 2.5);
+            honest.dispatch_batch(Model::LeNet, 10, 0.0, stream, 2.5);
+        }
+        assert_eq!(optimistic.makespan_ms(), legacy.makespan_ms());
+        assert!(
+            honest.makespan_ms() >= optimistic.makespan_ms(),
+            "the optimistic model must never exceed the honest one"
+        );
     }
 }

@@ -7,9 +7,11 @@
 //! variant)` through the shared [`PlanRegistry`] (plans build lazily,
 //! exactly once, under a per-key lock; resolved plans are memoized in a
 //! worker-local map so the steady state takes no registry lock at all),
-//! executes the plan's prepared program, maps the batch onto a simulated
-//! OPIMA instance via the shared [`Router`] (reservations tagged by
-//! model), folds the batch's latency samples into its own per-model
+//! executes the plan's prepared program, admits the batch's priced
+//! event stream onto a simulated OPIMA instance via the shared
+//! [`Router`] (reservations tagged by model; co-resident batches
+//! contend for the shared stage pools through the global contention
+//! timeline), folds the batch's latency samples into its own per-model
 //! streaming shard (fixed-memory histograms; `Engine::stats` merges the
 //! shards), and reports per-request responses plus the per-batch
 //! simulated cost back over the results channel.
@@ -161,13 +163,20 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
     // Simulated hardware metering: place this *real* batch at the
     // earliest simulated time its mapper footprint fits on an OPIMA
     // instance (models whose footprints fit together co-reside), tagged
-    // with the model so makespan is reportable per model.
+    // with the model so makespan is reportable per model — and admit
+    // its priced event stream into the instance's persistent stage
+    // pools, so co-resident batches contend for aggregation units and
+    // writeback channels instead of optimistically sharing them.
     let (sim_lat, sim_mj) = plan.sim_cost();
     let epoch = *lock(&ctx.epoch);
     let now_ms = exec_start.saturating_duration_since(epoch).as_secs_f64() * 1e3;
-    let instance = lock(&ctx.router)
-        .dispatch_for(batch.model, plan.occupancy().subarrays_used, now_ms, sim_lat)
-        .0;
+    let (instance, sim_start, sim_end) = lock(&ctx.router).dispatch_batch(
+        batch.model,
+        plan.occupancy().subarrays_used,
+        now_ms,
+        plan.stream(),
+        sim_lat,
+    );
 
     let mut responses = Vec::with_capacity(batch.requests.len());
     for (i, r) in batch.requests.iter().enumerate() {
@@ -192,6 +201,7 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
                 * 1e3,
             sim: SimMetering {
                 hw_latency_ms: sim_lat,
+                hw_contended_ms: sim_end - sim_start,
                 hw_energy_mj: sim_mj,
             },
             instance,

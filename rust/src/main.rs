@@ -7,8 +7,10 @@
 //!   groups                    Fig. 7  subarray-group selection sweep
 //!   power                     Fig. 8  power breakdown
 //!   latency  [--bits 4|8] [--model NAME]   Fig. 9 latency breakdown
-//!   analyze  [--batch N] [--bits 4|8] [--model NAME]
-//!                             pipelined-vs-sequential batch timeline
+//!   analyze  [--batch N] [--bits 4|8] [--model NAME] [--streams S]
+//!                             pipelined-vs-sequential batch timeline;
+//!                             --streams ≥ 2 reports contended-vs-isolated
+//!                             co-residency through the global engine
 //!   compare  [--bits 4|8]     Figs. 10–12 cross-platform comparison
 //!   memtest  [--ops N]        memory-mode self-test (read/write sweep)
 //!   serve    [--requests N] [--variant v] [--instances K] [--workers W]
@@ -259,6 +261,10 @@ fn cmd_analyze(cfg: &OpimaConfig, args: &Args) -> Result<()> {
         .unwrap_or("4")
         .parse()
         .map_err(|_| Error::Config("bad --bits".into()))?;
+    let streams = args.usize_or("streams", 1)?;
+    if streams > 1 {
+        return cmd_analyze_contended(cfg, &models, bits, batch, streams);
+    }
     println!(
         "Pipelined batch timeline vs the analytical batch × sum ({bits}-bit, \
          batch {batch})\n"
@@ -283,6 +289,64 @@ fn cmd_analyze(cfg: &OpimaConfig, args: &Args) -> Result<()> {
     for w in &warnings {
         println!("warning: {w}");
     }
+    Ok(())
+}
+
+/// `analyze --streams S`: admit S identical batch streams of each model
+/// onto one simulated instance and price the co-residency three ways —
+/// occupancy-only (the optimistic pre-contention model), through the
+/// global contention timeline (honest), and fully serialized (the
+/// no-overlap upper bound).
+fn cmd_analyze_contended(
+    cfg: &OpimaConfig,
+    models: &[Model],
+    bits: u32,
+    batch: usize,
+    streams: usize,
+) -> Result<()> {
+    use opima::analyzer::contention::BatchStream;
+    use opima::coordinator::Router;
+
+    println!(
+        "Contended vs isolated co-residency ({bits}-bit, batch {batch}, \
+         {streams} concurrent streams on one instance)\n"
+    );
+    let capacity = cfg.geometry.total_subarrays();
+    let mut honest_pipe = cfg.pipeline.clone();
+    honest_pipe.cross_batch_contention = true;
+    let mut optimistic_pipe = cfg.pipeline.clone();
+    optimistic_pipe.cross_batch_contention = false;
+    let mut rows = Vec::new();
+    for m in models {
+        let net = build_model(*m)?;
+        let a = opima::analyzer::analyze_model(cfg, &net, bits)?;
+        let iso = opima::analyzer::simulate_analysis_makespan(cfg, &a, batch);
+        let stream = BatchStream {
+            costs: &a.layer_costs,
+            batch,
+            pipelined: a.occupancy.fits(),
+        };
+        let fp = a.occupancy.subarrays_used;
+        let mut honest = Router::with_pools(1, capacity, &honest_pipe);
+        let mut optimistic = Router::with_pools(1, capacity, &optimistic_pipe);
+        for _ in 0..streams {
+            honest.dispatch_batch(*m, fp, 0.0, stream, iso.makespan_ms());
+            optimistic.dispatch_batch(*m, fp, 0.0, stream, iso.makespan_ms());
+        }
+        rows.push(report::ContentionRow {
+            name: m.name().to_string(),
+            isolated_ms: iso.makespan_ms(),
+            optimistic_ms: optimistic.makespan_ms(),
+            contended_ms: honest.makespan_ms(),
+            serialized_ms: iso.makespan_ms() * streams as f64,
+        });
+    }
+    print!("{}", report::contention_table(streams, &rows));
+    println!(
+        "\n(optimistic books subarray occupancy only; contended admits every \
+         stream into the shared aggregation/writeback pools — the honest \
+         fleet makespan, bounded by the serialized sum)"
+    );
     Ok(())
 }
 

@@ -1,0 +1,280 @@
+//! Property tests over the global contention timeline (ISSUE 6).
+//!
+//! The bounds the engine promises, over random CNN pairs:
+//! - **isolated ≤ contended**: admitting a batch into shared pools can
+//!   only delay it versus having the instance to itself,
+//! - **contended ≤ serialized sum**: co-residency never costs more than
+//!   running the streams back to back,
+//! - **bit-exact single-batch equality**: one batch in flight on a
+//!   drained instance reproduces `simulate_analysis_makespan` exactly,
+//!   at any admission time — the paper reproduction is untouched,
+//! - **no pool oversubscription**: at every event boundary across all
+//!   co-resident batches, at most `aggregation_units` aggregations and
+//!   `writeback_channels` writebacks are in flight,
+//! - **retirement invariance**: dropping retired occupancy never
+//!   changes the placements or makespans of still-live work,
+//! - and end-to-end: every served response's contended window covers
+//!   its isolated latency.
+//!
+//! proptest is unavailable offline, so these use the in-repo
+//! deterministic PRNG with many random cases (seeds printed on failure).
+
+use opima::analyzer::contention::{BatchStream, GlobalTimeline};
+use opima::analyzer::latency::analyze_model;
+use opima::analyzer::timeline::{simulate_analysis_makespan, Phase};
+use opima::analyzer::ModelAnalysis;
+use opima::cnn::graph::{Network, NetworkBuilder};
+use opima::cnn::layer::TensorShape;
+use opima::cnn::Model;
+use opima::coordinator::Router;
+use opima::util::prng::Rng;
+use opima::OpimaConfig;
+
+/// Build a random small CNN: a few conv/pool stages and an FC head.
+fn random_net(rng: &mut Rng, case: usize) -> Network {
+    let side = 8 + 4 * rng.index(4); // 8..20
+    let cin = 1 + rng.index(3);
+    let mut b = NetworkBuilder::new(&format!("rand{case}"), TensorShape::new(side, side, cin));
+    let stages = 1 + rng.index(3);
+    for _ in 0..stages {
+        let k = [1usize, 3, 3, 5][rng.index(4)];
+        let cout = 4 << rng.index(3);
+        b.conv(k, k, cout, 1, k / 2).unwrap();
+        if rng.index(2) == 0 {
+            b.pool(2, 2).unwrap();
+        }
+    }
+    b.fc(1 + rng.index(16)).unwrap();
+    b.build()
+}
+
+fn stream(a: &ModelAnalysis, batch: usize) -> BatchStream<'_> {
+    BatchStream {
+        costs: &a.layer_costs,
+        batch,
+        pipelined: a.occupancy.fits(),
+    }
+}
+
+#[test]
+fn prop_isolated_le_contended_le_serialized_sum() {
+    let cfg = OpimaConfig::paper();
+    let mut rng = Rng::new(6060);
+    for case in 0..30 {
+        // A random CNN pair, each with its own batch, co-admitted onto
+        // one instance big enough that occupancy always co-resides —
+        // all queueing in this test comes from pool contention.
+        let a1 = analyze_model(&cfg, &random_net(&mut rng, case), [4u32, 8][rng.index(2)]).unwrap();
+        let a2 =
+            analyze_model(&cfg, &random_net(&mut rng, 100 + case), [4u32, 8][rng.index(2)]).unwrap();
+        let b1 = 1 + rng.index(12);
+        let b2 = 1 + rng.index(12);
+        let iso1 = simulate_analysis_makespan(&cfg, &a1, b1).makespan_ns;
+        let iso2 = simulate_analysis_makespan(&cfg, &a2, b2).makespan_ns;
+        let mut gt = GlobalTimeline::new(1, usize::MAX / 2, &cfg.pipeline);
+        let adm1 = gt.admit(0, a1.occupancy.subarrays_used, 0.0, stream(&a1, b1), None);
+        let adm2 = gt.admit(0, a2.occupancy.subarrays_used, 0.0, stream(&a2, b2), None);
+        // Isolated ≤ contended, per batch.
+        assert!(
+            adm1.makespan_ns >= iso1 - 1e-6,
+            "case {case}: first admission beat its isolated makespan"
+        );
+        assert!(
+            adm2.makespan_ns >= iso2 - 1e-6,
+            "case {case}: contended {} < isolated {iso2}",
+            adm2.makespan_ns
+        );
+        // Contended ≤ serialized sum, for the fleet.
+        let serialized = iso1 + iso2;
+        assert!(
+            gt.makespan_ns() <= serialized * (1.0 + 1e-12) + 1e-6,
+            "case {case}: contended fleet {} exceeds serialized {serialized}",
+            gt.makespan_ns()
+        );
+    }
+}
+
+#[test]
+fn prop_single_batch_admission_bit_exact_with_isolated_timeline() {
+    let cfg = OpimaConfig::paper();
+    let mut rng = Rng::new(7171);
+    for case in 0..30 {
+        let a = analyze_model(&cfg, &random_net(&mut rng, case), [4u32, 8][rng.index(2)]).unwrap();
+        let batch = 1 + rng.index(16);
+        let iso = simulate_analysis_makespan(&cfg, &a, batch).makespan_ns;
+        let fp = a.occupancy.subarrays_used;
+        let mut gt = GlobalTimeline::new(2, usize::MAX / 2, &cfg.pipeline);
+        // Bit-exact at t = 0 on a fresh instance…
+        let adm = gt.admit(0, fp, 0.0, stream(&a, batch), None);
+        assert_eq!(adm.makespan_ns, iso, "case {case}: fresh-instance admission drifted");
+        // …at an arbitrary origin on the other (idle) instance…
+        let origin = rng.f64() * 1e9;
+        let adm = gt.admit(1, fp, origin, stream(&a, batch), None);
+        assert_eq!(adm.makespan_ns, iso, "case {case}: origin-shifted admission drifted");
+        // …and again on instance 0 once its pools have fully drained —
+        // the retirement frontier does not reset pools, draining does.
+        let drained = gt.horizon_ns(0).max(gt.horizon_ns(1)) + 1.0;
+        gt.advance(drained);
+        let adm = gt.admit(0, fp, drained, stream(&a, batch), None);
+        assert_eq!(adm.makespan_ns, iso, "case {case}: drained re-admission drifted");
+    }
+}
+
+#[test]
+fn prop_pools_never_oversubscribed_across_coresident_batches() {
+    let cfg = OpimaConfig::paper();
+    let mut rng = Rng::new(8282);
+    for case in 0..12 {
+        let a1 = analyze_model(&cfg, &random_net(&mut rng, case), 4).unwrap();
+        let a2 = analyze_model(&cfg, &random_net(&mut rng, 200 + case), 8).unwrap();
+        let mut gt = GlobalTimeline::new(1, usize::MAX / 2, &cfg.pipeline);
+        let mut events = Vec::new();
+        // Three streams co-admitted at staggered origins, all sharing
+        // one instance's pools; events come back in absolute time.
+        gt.admit(0, 1, 0.0, stream(&a1, 1 + rng.index(6)), Some(&mut events));
+        gt.admit(0, 1, 0.0, stream(&a2, 1 + rng.index(6)), Some(&mut events));
+        let mid = gt.makespan_ns() * rng.f64() * 0.5;
+        gt.admit(0, 1, mid, stream(&a1, 1 + rng.index(6)), Some(&mut events));
+        // At every event start, count in-flight events per shared pool
+        // across ALL batches: never above the pool's capacity.
+        for (phase, cap) in [
+            (Phase::Aggregation, cfg.pipeline.aggregation_units),
+            (Phase::Writeback, cfg.pipeline.writeback_channels),
+        ] {
+            let spans: Vec<(f64, f64)> = events
+                .iter()
+                .filter(|e| e.phase == phase && e.end_ns > e.start_ns)
+                .map(|e| (e.start_ns, e.end_ns))
+                .collect();
+            for &(s, _) in &spans {
+                let live = spans.iter().filter(|&&(a_, b_)| a_ <= s && s < b_).count();
+                assert!(
+                    live <= cap,
+                    "case {case}: {live} concurrent {phase:?} events exceed pool of {cap}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_retirement_never_changes_live_placements() {
+    let cfg = OpimaConfig::paper();
+    let mut rng = Rng::new(9393);
+    for case in 0..20 {
+        let a = analyze_model(&cfg, &random_net(&mut rng, case), 4).unwrap();
+        let batch = 1 + rng.index(8);
+        let fp = 40 + rng.index(30);
+        // Seed both engines with identical admissions.
+        let mut pruned = GlobalTimeline::new(1, 100, &cfg.pipeline);
+        let mut unpruned = pruned.clone();
+        let mut t = 0.0;
+        for _ in 0..6 {
+            let s = pruned.earliest_start(0, fp, t, 1e6);
+            pruned.admit(0, fp, s, stream(&a, batch), None);
+            unpruned.admit(0, fp, s, stream(&a, batch), None);
+            t = s;
+        }
+        // Retire everything ending before a mid-timeline frontier in
+        // one engine only (`advance` also moves the frontier; probe the
+        // other engine from the same base so placement bases agree).
+        let mid = pruned.makespan_ns() * rng.f64();
+        pruned.advance(mid);
+        assert!(
+            pruned.live_reservations(0) <= unpruned.live_reservations(0),
+            "case {case}: retirement grew the ledger"
+        );
+        // Still-live work is untouched: the same new admission gets the
+        // same placement and the same contended makespan in both.
+        let sp = pruned.earliest_start(0, fp, mid, 1e6);
+        let su = unpruned.earliest_start(0, fp, mid, 1e6);
+        assert_eq!(sp, su, "case {case}: retirement moved the next placement");
+        let ap = pruned.admit(0, fp, sp, stream(&a, batch), None);
+        let au = unpruned.admit(0, fp, su, stream(&a, batch), None);
+        assert_eq!(
+            ap.makespan_ns, au.makespan_ns,
+            "case {case}: retirement changed a live batch's makespan"
+        );
+        assert_eq!(ap.end_ns, au.end_ns);
+        assert_eq!(pruned.makespan_ns(), unpruned.makespan_ns());
+    }
+}
+
+#[test]
+fn prop_router_contended_bounds_over_random_pairs() {
+    // The same bounds hold through the Router's placement policy
+    // (earliest feasible start, contended commit).
+    let cfg = OpimaConfig::paper();
+    let mut rng = Rng::new(4747);
+    for case in 0..15 {
+        let a1 = analyze_model(&cfg, &random_net(&mut rng, case), 4).unwrap();
+        let a2 = analyze_model(&cfg, &random_net(&mut rng, 300 + case), 8).unwrap();
+        let b1 = 1 + rng.index(10);
+        let b2 = 1 + rng.index(10);
+        let iso1 = simulate_analysis_makespan(&cfg, &a1, b1).makespan_ms();
+        let iso2 = simulate_analysis_makespan(&cfg, &a2, b2).makespan_ms();
+        let mut r = Router::with_pools(1, cfg.geometry.total_subarrays(), &cfg.pipeline);
+        let (_, s1, e1) =
+            r.dispatch_batch(Model::LeNet, a1.occupancy.subarrays_used, 0.0, stream(&a1, b1), iso1);
+        let (_, s2, e2) =
+            r.dispatch_batch(Model::Vgg16, a2.occupancy.subarrays_used, 0.0, stream(&a2, b2), iso2);
+        assert!(e1 - s1 >= iso1 - 1e-9, "case {case}: batch 1 beat isolation");
+        assert!(e2 - s2 >= iso2 - 1e-9, "case {case}: batch 2 beat isolation");
+        assert!(
+            r.makespan_ms() <= s2 + iso1 + iso2 + 1e-6,
+            "case {case}: fleet exceeded queueing + serialized sum"
+        );
+        assert_eq!(r.model_makespan_ms(Model::LeNet), e1);
+        assert_eq!(r.model_makespan_ms(Model::Vgg16), e2);
+    }
+}
+
+#[test]
+fn served_responses_carry_contended_window_covering_isolated_latency() {
+    // End to end through the engine: every response's contended window
+    // is at least its isolated hardware latency (equal when alone).
+    use opima::coordinator::engine::{Engine, EngineConfig};
+    use opima::coordinator::request::{InferenceRequest, Variant};
+    use opima::runtime::{ExecutorSpec, Manifest};
+    use std::time::{Duration, Instant};
+
+    let mut e = Engine::new(
+        EngineConfig {
+            workers: 2,
+            queue_capacity: 256,
+            instances: 2,
+            max_wait: Duration::from_millis(1),
+            executor: ExecutorSpec::Sim { work_factor: 1 },
+            history: 4096,
+            ..EngineConfig::default()
+        },
+        Manifest::synthetic(8, 12),
+    )
+    .unwrap();
+    for id in 0..64u64 {
+        let model = if id % 2 == 0 { Model::LeNet } else { Model::ResNet18 };
+        let elems = model.input_elems();
+        e.submit_blocking(InferenceRequest {
+            id,
+            model,
+            image: (0..elems).map(|i| ((id as usize + i) % 13) as f32 * 0.1).collect(),
+            variant: Variant::Int4,
+            arrival: Instant::now(),
+        })
+        .unwrap();
+    }
+    e.drain().unwrap();
+    let rs = e.responses();
+    assert!(!rs.is_empty());
+    for r in &rs {
+        assert!(r.sim.hw_latency_ms > 0.0);
+        assert!(
+            r.sim.hw_contended_ms >= r.sim.hw_latency_ms - 1e-9,
+            "response {}: contended {} < isolated {}",
+            r.id,
+            r.sim.hw_contended_ms,
+            r.sim.hw_latency_ms
+        );
+    }
+    e.shutdown().unwrap();
+}

@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Bench-regression gate over the BENCH_<name>.json summaries.
+
+Usage: bench_gate.py <baseline_dir> <current_dir>
+
+Compares every committed baseline summary in <baseline_dir> against the
+freshly produced counterpart in <current_dir>, row by row (matched by
+the row's "name"). A row regresses when its current mean_ns exceeds
+baseline mean_ns x OPIMA_BENCH_TOL (default 5.0 -- generous on purpose:
+CI machines vary and the smoke runs take one sample, so only
+order-of-magnitude rot should trip the gate). Sub-microsecond baseline
+rows are skipped outright: at that scale a single sample is timer
+noise, not signal.
+
+When the current hotpath summary is a full (non-smoke) run, the ISSUE 6
+acceptance bound is also enforced: global-engine dispatch
+(router/dispatch_batch_contended_1k) must land within 2x of the
+occupancy-only router (router/dispatch_for_occupancy_1k).
+
+Exit status: 0 clean, 1 regression (or malformed/missing summaries).
+"""
+
+import json
+import os
+import sys
+
+TOL = float(os.environ.get("OPIMA_BENCH_TOL", "5.0"))
+# Baseline rows faster than this are single-sample timer noise; skip.
+MIN_BASELINE_NS = 1000.0
+# ISSUE 6 acceptance: contended dispatch within 2x of occupancy-only.
+DISPATCH_BOUND = 2.0
+DISPATCH_CONTENDED = "router/dispatch_batch_contended_1k"
+DISPATCH_OCCUPANCY = "router/dispatch_for_occupancy_1k"
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_by_name(doc):
+    return {r["name"]: r for r in doc.get("results", []) if "name" in r}
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__.strip())
+        return 1
+    baseline_dir, current_dir = sys.argv[1], sys.argv[2]
+    names = sorted(
+        f for f in os.listdir(baseline_dir)
+        if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not names:
+        print("bench_gate: no baselines in", baseline_dir, "- nothing to gate")
+        return 0
+    failures = []
+    for name in names:
+        base = load(os.path.join(baseline_dir, name))
+        cur_path = os.path.join(current_dir, name)
+        if not os.path.exists(cur_path):
+            failures.append(f"{name}: baseline exists but current run produced no summary")
+            continue
+        cur = load(cur_path)
+        cur_rows = rows_by_name(cur)
+        for row_name, b in sorted(rows_by_name(base).items()):
+            b_mean = b.get("mean_ns")
+            if b_mean is None:
+                continue  # non-timing row (e.g. req_per_s); not gated
+            c = cur_rows.get(row_name)
+            if c is None:
+                failures.append(f"{name}: row '{row_name}' vanished from the current run")
+                continue
+            c_mean = c.get("mean_ns")
+            if c_mean is None or b_mean < MIN_BASELINE_NS:
+                continue
+            ratio = c_mean / b_mean
+            verdict = "FAIL" if ratio > TOL else "ok"
+            print(f"bench_gate: {row_name:<48} {b_mean:>14.0f} -> {c_mean:>14.0f} ns "
+                  f"({ratio:.2f}x, tol {TOL:.1f}x) {verdict}")
+            if ratio > TOL:
+                failures.append(f"{name}: '{row_name}' regressed {ratio:.2f}x (> {TOL:.1f}x)")
+        # The contended-vs-occupancy dispatch bound, on trustworthy
+        # (non-smoke) hotpath numbers only.
+        if name == "BENCH_hotpath.json" and not cur.get("smoke", True):
+            con = cur_rows.get(DISPATCH_CONTENDED, {}).get("mean_ns")
+            occ = cur_rows.get(DISPATCH_OCCUPANCY, {}).get("mean_ns")
+            if con and occ:
+                ratio = con / occ
+                print(f"bench_gate: contended/occupancy dispatch ratio {ratio:.2f}x "
+                      f"(bound {DISPATCH_BOUND:.1f}x)")
+                if ratio > DISPATCH_BOUND:
+                    failures.append(
+                        f"{name}: contended dispatch {ratio:.2f}x occupancy-only "
+                        f"(bound {DISPATCH_BOUND:.1f}x)")
+    for f in failures:
+        print("bench_gate: FAIL:", f)
+    if not failures:
+        print("bench_gate: OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
