@@ -18,6 +18,7 @@ fn total_ms(cfg: &OpimaConfig, m: Model) -> f64 {
     analyze_model(cfg, &build_model(m).unwrap(), 4)
         .unwrap()
         .total_ms()
+        .raw()
 }
 
 fn main() {
@@ -85,8 +86,8 @@ fn main() {
         let a = analyze_model(&cfg, &build_model(Model::ResNet18).unwrap(), 4).unwrap();
         table_row(&[
             format!("{wns}"),
-            format!("{:.3}", a.total_ms()),
-            format!("{:.0}%", 100.0 * a.writeback_ms / a.total_ms()),
+            format!("{:.3}", a.total_ms().raw()),
+            format!("{:.0}%", 100.0 * (a.writeback_ms / a.total_ms())),
         ]);
     }
 
@@ -112,8 +113,8 @@ fn main() {
         let a = analyze_model(&cfg, &build_model(Model::MobileNet).unwrap(), 4).unwrap();
         table_row(&[
             format!("{lanes}"),
-            format!("{:.3}", a.processing_ms),
-            format!("{:.3}", a.total_ms()),
+            format!("{:.3}", a.processing_ms.raw()),
+            format!("{:.3}", a.total_ms().raw()),
         ]);
     }
 

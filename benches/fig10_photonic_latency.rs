@@ -32,13 +32,13 @@ fn main() {
         let p = PhPim::new(&cfg).evaluate(&net, 4);
         table_row(&[
             m.name().to_string(),
-            format!("{:.3}", o.latency_ms),
-            format!("{:.3}", c.latency_ms),
-            format!("{:.3}", p.latency_ms),
+            format!("{:.3}", o.latency_ms.raw()),
+            format!("{:.3}", c.latency_ms.raw()),
+            format!("{:.3}", p.latency_ms.raw()),
         ]);
-        opima_l.push(o.latency_ms);
-        cl_l.push(c.latency_ms);
-        ph_l.push(p.latency_ms);
+        opima_l.push(o.latency_ms.raw());
+        cl_l.push(c.latency_ms.raw());
+        ph_l.push(p.latency_ms.raw());
     }
     let vs_cl = geomean_ratio(&cl_l, &opima_l);
     let vs_ph = geomean_ratio(&ph_l, &opima_l);

@@ -26,9 +26,9 @@ fn main() {
             let a = analyze_model(&cfg, &net, bits).unwrap();
             table_row(&[
                 a.name.clone(),
-                format!("{:.3}", a.processing_ms),
-                format!("{:.3}", a.writeback_ms),
-                format!("{:.3}", a.total_ms()),
+                format!("{:.3}", a.processing_ms.raw()),
+                format!("{:.3}", a.writeback_ms.raw()),
+                format!("{:.3}", a.total_ms().raw()),
             ]);
             by_name.insert(a.name.clone(), a);
         }
@@ -37,7 +37,7 @@ fn main() {
     // Paper-shape assertions.
     let g = |n: &str| by_name.get(n).unwrap();
     assert!(g("resnet18_4b").writeback_ms > g("resnet18_4b").processing_ms);
-    assert!(g("squeezenet_4b").writeback_ms > 0.0);
+    assert!(g("squeezenet_4b").writeback_ms.raw() > 0.0);
     assert!(g("vgg16_4b").writeback_ms > g("vgg16_4b").processing_ms);
     assert!(g("mobilenet_4b").processing_ms > g("mobilenet_4b").writeback_ms);
     assert!(g("inceptionv2_4b").processing_ms > g("resnet18_4b").processing_ms);

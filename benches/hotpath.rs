@@ -20,6 +20,7 @@ use opima::pim::PimScheduler;
 use opima::runtime::{Executor, Manifest};
 use opima::util::bench::{black_box, measure, scaled, JsonReport};
 use opima::util::prng::Rng;
+use opima::util::units::{ms, Millis};
 use opima::OpimaConfig;
 
 fn main() {
@@ -87,13 +88,13 @@ fn main() {
     report.add_stats(&measure("router/dispatch_1k", 5, scaled(500), || {
         let mut r = Router::new(4);
         for i in 0..1000 {
-            black_box(r.dispatch(i as f64, 1.5));
+            black_box(r.dispatch(ms(i as f64), ms(1.5)));
         }
     }));
     report.add_stats(&measure("router/dispatch_for_occupancy_1k", 5, scaled(500), || {
         let mut r = Router::with_capacity(4, 16_384);
         for i in 0..1000 {
-            black_box(r.dispatch_for(Model::ResNet18, 400, i as f64, 1.5));
+            black_box(r.dispatch_for(Model::ResNet18, 400, ms(i as f64), ms(1.5)));
         }
     }));
     // The global-engine dispatch path: the same 1k-batch workload, but
@@ -111,7 +112,7 @@ fn main() {
         report.add_stats(&measure("router/dispatch_batch_contended_1k", 5, scaled(500), || {
             let mut r = Router::with_pools(4, 16_384, &cfg.pipeline);
             for i in 0..1000 {
-                black_box(r.dispatch_batch(Model::ResNet18, 400, i as f64, stream, iso_ms));
+                black_box(r.dispatch_batch(Model::ResNet18, 400, ms(i as f64), stream, iso_ms));
             }
         }));
         // Same admissions with the contention knob off — the optimistic
@@ -121,10 +122,29 @@ fn main() {
         report.add_stats(&measure("router/dispatch_batch_optimistic_1k", 5, scaled(500), || {
             let mut r = Router::with_pools(4, 16_384, &optimistic);
             for i in 0..1000 {
-                black_box(r.dispatch_batch(Model::ResNet18, 400, i as f64, stream, iso_ms));
+                black_box(r.dispatch_batch(Model::ResNet18, 400, ms(i as f64), stream, iso_ms));
             }
         }));
     }
+
+    // --- units layer overhead smoke ---------------------------------------
+    // The `#[repr(transparent)]` newtypes must be free: the same 10k-step
+    // accumulate loop over raw f64 vs `Millis` should optimize to identical
+    // code. Two adjacent rows make any regression visible in the JSON.
+    report.add_stats(&measure("units/overhead_smoke_raw_f64", 5, scaled(2000), || {
+        let mut acc = 0.0f64;
+        for i in 0..10_000u64 {
+            acc += black_box(i as f64) * 0.001;
+        }
+        black_box(acc);
+    }));
+    report.add_stats(&measure("units/overhead_smoke_newtype", 5, scaled(2000), || {
+        let mut acc = Millis::ZERO;
+        for i in 0..10_000u64 {
+            acc += black_box(ms(i as f64)) * 0.001;
+        }
+        black_box(acc.raw());
+    }));
 
     // --- serving data plane: old copy path vs pooled zero-copy path -------
     // What a worker pays per batch to (a) pack 8 images into the fixed-

@@ -19,6 +19,7 @@ use opima::runtime::{Executor, ExecutorSpec, Manifest};
 use opima::util::bench::{smoke, table_header, table_row, JsonReport};
 use opima::util::json::Json;
 use opima::util::prng::Rng;
+use opima::util::units::{ms, Millis};
 
 /// Sim backend work factor: ~2 ms per batch on a laptop-class core, so
 /// a 512-request run keeps the worker pool genuinely busy. Smoke mode
@@ -102,7 +103,7 @@ fn sync_seed_path(manifest: &Manifest) -> f64 {
 /// `(req/s, p50 ms, p99 ms)` — the percentiles come from the engine's
 /// streaming histograms, so collecting them costs O(buckets) regardless
 /// of how many requests were served.
-fn engine_path(manifest: &Manifest, workers: usize) -> (f64, f64, f64) {
+fn engine_path(manifest: &Manifest, workers: usize) -> (f64, Millis, Millis) {
     let mut engine = Engine::new(
         EngineConfig {
             workers,
@@ -137,8 +138,8 @@ fn engine_path(manifest: &Manifest, workers: usize) -> (f64, f64, f64) {
     engine.shutdown().unwrap();
     (
         stats.served as f64 / elapsed,
-        stats.latency.total.p50,
-        stats.latency.total.p99,
+        ms(stats.latency.total.p50),
+        ms(stats.latency.total.p99),
     )
 }
 
@@ -155,7 +156,7 @@ fn main() {
     let sync_rps = sync_seed_path(&manifest);
     // The sync replica has no latency accounting (the seed didn't
     // either), so its percentile cells are blank.
-    let mut rows: Vec<(String, f64, Option<(f64, f64)>)> =
+    let mut rows: Vec<(String, f64, Option<(Millis, Millis)>)> =
         vec![("sync seed path (inline)".into(), sync_rps, None)];
     for workers in [1usize, 2, 4] {
         let (rps, p50, p99) = engine_path(&manifest, workers);
@@ -168,7 +169,7 @@ fn main() {
     );
     for (name, rps, pcts) in &rows {
         let (p50, p99) = match pcts {
-            Some((a, b)) => (format!("{a:.2}"), format!("{b:.2}")),
+            Some((a, b)) => (format!("{:.2}", a.raw()), format!("{:.2}", b.raw())),
             None => ("-".into(), "-".into()),
         };
         table_row(&[
@@ -188,8 +189,8 @@ fn main() {
             ("requests", Json::Num(n_requests() as f64)),
         ];
         if let Some((p50, p99)) = pcts {
-            fields.push(("p50_ms", Json::Num(*p50)));
-            fields.push(("p99_ms", Json::Num(*p99)));
+            fields.push(("p50_ms", Json::Num(p50.raw())));
+            fields.push(("p99_ms", Json::Num(p99.raw())));
         }
         report.add(name, &fields);
     }

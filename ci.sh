@@ -10,6 +10,12 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# The invariant linter runs FIRST — stdlib-python, no build needed, so
+# unit-convention violations fail in seconds, before any compilation.
+echo "== lint_invariants (self-test + tree) =="
+python3 scripts/lint_invariants.py --self-test
+python3 scripts/lint_invariants.py
+
 echo "== cargo build --release =="
 cargo build --release
 
@@ -39,7 +45,8 @@ done
 for row in 'serving/pack_batch8_copy' 'serving/pack_batch8_pooled' \
            'serving/respond_batch8_copy' 'serving/respond_batch8_pooled' \
            'router/dispatch_1k' 'router/dispatch_for_occupancy_1k' \
-           'router/dispatch_batch_contended_1k' 'router/dispatch_batch_optimistic_1k'; do
+           'router/dispatch_batch_contended_1k' 'router/dispatch_batch_optimistic_1k' \
+           'units/overhead_smoke_raw_f64' 'units/overhead_smoke_newtype'; do
   grep -q "$row" BENCH_hotpath.json || { echo "missing $row row in BENCH_hotpath.json"; exit 1; }
 done
 

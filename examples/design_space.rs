@@ -28,7 +28,7 @@ fn main() -> opima::Result<()> {
             groups,
             p.mac_throughput / 1e12,
             power_breakdown(&cfg).total_w(),
-            a.total_ms(),
+            a.total_ms().raw(),
             p.macs_per_watt / 1e9
         );
     }
@@ -45,8 +45,8 @@ fn main() -> opima::Result<()> {
             "| {} | {} | {:.3} | {:.2} |",
             accum,
             p.macs_per_cycle,
-            a.total_ms(),
-            a.dynamic_mj
+            a.total_ms().raw(),
+            a.dynamic_mj.raw()
         );
     }
 
@@ -57,7 +57,7 @@ fn main() -> opima::Result<()> {
         let mut cfg = OpimaConfig::paper();
         cfg.geometry.bits_per_cell = bpc;
         let a = analyze_model(&cfg, &net, 8)?;
-        println!("| {} | {:.3} | {:.2} |", bpc, a.total_ms(), a.dynamic_mj);
+        println!("| {} | {:.3} | {:.2} |", bpc, a.total_ms().raw(), a.dynamic_mj.raw());
     }
 
     println!("\n## Clock rate\n");
@@ -67,7 +67,12 @@ fn main() -> opima::Result<()> {
         let mut cfg = OpimaConfig::paper();
         cfg.timing.clock_ghz = ghz;
         let a = analyze_model(&cfg, &net, 4)?;
-        println!("| {} | {:.4} | {:.3} |", ghz, a.processing_ms, a.total_ms());
+        println!(
+            "| {} | {:.4} | {:.3} |",
+            ghz,
+            a.processing_ms.raw(),
+            a.total_ms().raw()
+        );
     }
 
     println!("\ndesign_space OK");

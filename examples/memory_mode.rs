@@ -61,7 +61,7 @@ fn main() -> opima::Result<()> {
         s.bytes_written,
         s.write_energy_pj / 1e6
     );
-    println!("  simulated busy time: {:.2} ms", s.busy_ns / 1e6);
+    println!("  simulated busy time: {:.2} ms", s.busy_ns.to_millis().raw());
 
     // Reserved rows must reject memory traffic while PIM holds them.
     let reserved_band = reserved[0] as u64;

@@ -42,9 +42,9 @@ fn main() -> opima::Result<()> {
     println!("memory mode: 256 B round-trip OK");
     println!(
         "  write: {:.1} ns, {:.1} nJ   read: {:.1} ns, {:.2} nJ\n",
-        w.latency_ns,
+        w.latency_ns.raw(),
         w.energy_pj / 1e3,
-        r.latency_ns,
+        r.latency_ns.raw(),
         r.energy_pj / 1e3
     );
 
@@ -54,14 +54,15 @@ fn main() -> opima::Result<()> {
     println!("ResNet18 (4-bit) on OPIMA:");
     println!(
         "  processing {:.3} ms + writeback {:.3} ms = {:.3} ms  ({:.0} FPS)",
-        a.processing_ms,
-        a.writeback_ms,
-        a.total_ms(),
+        a.processing_ms.raw(),
+        a.writeback_ms.raw(),
+        a.total_ms().raw(),
         a.fps()
     );
     println!(
         "  dynamic energy {:.2} mJ over {} MACs\n",
-        a.dynamic_mj, a.macs
+        a.dynamic_mj.raw(),
+        a.macs
     );
 
     // --- 4. the functional kernel on PJRT -------------------------------

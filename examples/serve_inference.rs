@@ -150,7 +150,10 @@ fn run_mix(
     );
     println!(
         "  wall {:.0} ms  throughput {:.0} req/s  p50 {:.2} ms  p99 {:.2} ms",
-        s.wall_ms, s.throughput_rps, s.latency.total.p50, s.latency.total.p99
+        s.wall_ms.raw(),
+        s.throughput_rps,
+        s.latency.total.p50,
+        s.latency.total.p99
     );
     println!("  per-model: model served batches p50ms p99ms energy_mJ makespan_ms");
     for m in &s.per_model {
@@ -161,8 +164,8 @@ fn run_mix(
             m.batches,
             m.latency.total.p50,
             m.latency.total.p99,
-            m.sim_energy_mj,
-            m.sim_makespan_ms
+            m.sim_energy_mj.raw(),
+            m.sim_makespan_ms.raw()
         );
     }
     assert_eq!(s.served as usize, n_requests, "every request answered");
@@ -286,7 +289,7 @@ fn main() -> opima::Result<()> {
         );
         println!(
             "  wall {:.0} ms  throughput {:.0} req/s  p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms  p99.9 {:.2} ms",
-            s.wall_ms,
+            s.wall_ms.raw(),
             s.throughput_rps,
             s.latency.total.p50,
             s.latency.total.p90,
@@ -295,11 +298,15 @@ fn main() -> opima::Result<()> {
         );
         println!(
             "  latency split: mean form {:.3} ms  mean queue {:.3} ms  mean exec {:.3} ms",
-            s.mean_form_ms, s.mean_queue_ms, s.mean_exec_ms
+            s.mean_form_ms.raw(),
+            s.mean_queue_ms.raw(),
+            s.mean_exec_ms.raw()
         );
         println!(
             "  simulated OPIMA hw: makespan {:.2} ms, dynamic energy {:.3} mJ ({} rejected)",
-            s.sim_makespan_ms, s.sim_energy_mj, s.rejected
+            s.sim_makespan_ms.raw(),
+            s.sim_energy_mj.raw(),
+            s.rejected
         );
         assert_eq!(s.served as usize, n_requests, "every request answered");
         if functional {

@@ -63,15 +63,16 @@ use std::collections::BinaryHeap;
 use crate::analyzer::timeline::{run_stream, Event, SlotPool, StreamScratch};
 use crate::config::PipelineParams;
 use crate::pim::scheduler::LayerCost;
+use crate::util::units::{Millis, Nanos};
 
 /// Ledger bound per instance; beyond this the earliest-ending half of
 /// the occupancy reservations is folded into the instance's start
 /// floor.
 pub const MAX_RESERVATIONS_PER_INSTANCE: usize = 128;
 
-/// Total-order wrapper so `f64` free times can live in a heap.
+/// Total-order wrapper so [`Nanos`] free times can live in a heap.
 #[derive(Debug, Clone, Copy, PartialEq)]
-struct FreeAt(f64);
+struct FreeAt(Nanos);
 
 impl Eq for FreeAt {}
 
@@ -87,8 +88,8 @@ impl Ord for FreeAt {
     }
 }
 
-/// A persistent stage pool: a min-heap of absolute slot free times
-/// (ns). Acquire pops the earliest-free slot and pushes its new free
+/// A persistent stage pool: a min-heap of absolute slot free times.
+/// Acquire pops the earliest-free slot and pushes its new free
 /// time back — O(log capacity), and the state survives across
 /// admissions, which is exactly what makes co-resident batches contend.
 #[derive(Debug, Clone)]
@@ -100,7 +101,7 @@ impl PoolHeap {
     fn new(capacity: usize) -> Self {
         let mut free = BinaryHeap::with_capacity(capacity.max(1));
         for _ in 0..capacity.max(1) {
-            free.push(Reverse(FreeAt(0.0)));
+            free.push(Reverse(FreeAt(Nanos::ZERO)));
         }
         Self { free }
     }
@@ -110,12 +111,12 @@ impl PoolHeap {
 /// in a batch's own time frame (t = 0 at the admission origin).
 struct RelPool<'a> {
     heap: &'a mut PoolHeap,
-    /// Absolute admission time (ns) of the batch being scheduled.
-    origin: f64,
+    /// Absolute admission time of the batch being scheduled.
+    origin: Nanos,
 }
 
 impl SlotPool for RelPool<'_> {
-    fn acquire(&mut self, ready: f64, dur: f64) -> f64 {
+    fn acquire(&mut self, ready: Nanos, dur: Nanos) -> Nanos {
         let Reverse(FreeAt(free_abs)) =
             self.heap.free.pop().expect("pool has at least one slot");
         // A slot that drained at or before this batch's origin grants
@@ -133,11 +134,11 @@ impl SlotPool for RelPool<'_> {
     }
 }
 
-/// One committed slice of simulated subarray occupancy (absolute ns).
+/// One committed slice of simulated subarray occupancy (absolute time).
 #[derive(Debug, Clone, Copy)]
 struct Reservation {
-    start_ns: f64,
-    end_ns: f64,
+    start_ns: Nanos,
+    end_ns: Nanos,
     subarrays: usize,
 }
 
@@ -149,11 +150,11 @@ struct Instance {
     /// feasibility scans walk candidates in order without allocating,
     /// and retirement is a prefix drain.
     reservations: Vec<Reservation>,
-    /// Simulated time (ns) before which no new reservation may start,
+    /// Simulated time before which no new reservation may start,
     /// raised when old reservations fold away to bound the ledger.
-    floor_ns: f64,
-    /// Latest reservation end (ns) ever committed here.
-    horizon_ns: f64,
+    floor_ns: Nanos,
+    /// Latest reservation end ever committed here.
+    horizon_ns: Nanos,
     /// Shared aggregation-unit pool (persists across admissions).
     agg: PoolHeap,
     /// Shared writeback-channel pool (persists across admissions).
@@ -164,8 +165,8 @@ impl Instance {
     fn new(pipe: &PipelineParams) -> Self {
         Self {
             reservations: Vec::new(),
-            floor_ns: 0.0,
-            horizon_ns: 0.0,
+            floor_ns: Nanos::ZERO,
+            horizon_ns: Nanos::ZERO,
             agg: PoolHeap::new(pipe.aggregation_units),
             wb: PoolHeap::new(pipe.writeback_channels),
         }
@@ -175,7 +176,7 @@ impl Instance {
     /// then compact **this instance only** if it outgrew the bound
     /// (the frontier prune in [`GlobalTimeline::advance`] handles the
     /// expiring case; this handles the oversubscribed one).
-    fn commit(&mut self, fp: usize, start_ns: f64, end_ns: f64) {
+    fn commit(&mut self, fp: usize, start_ns: Nanos, end_ns: Nanos) {
         let at = self.reservations.partition_point(|r| r.end_ns <= end_ns);
         self.reservations.insert(
             at,
@@ -207,35 +208,35 @@ pub struct BatchStream<'a> {
     pub pipelined: bool,
 }
 
-/// The committed outcome of one admission (absolute ns).
+/// The committed outcome of one admission (absolute time).
 #[derive(Debug, Clone, Copy)]
 pub struct Admission {
     /// When the batch entered the instance.
-    pub start_ns: f64,
+    pub start_ns: Nanos,
     /// When its last event drained.
-    pub end_ns: f64,
+    pub end_ns: Nanos,
     /// Contended whole-batch makespan, relative to the admission start
     /// (`end_ns − start_ns` up to rounding; this is the exact stream
     /// makespan the scheduling pass returned).
-    pub makespan_ns: f64,
+    pub makespan_ns: Nanos,
 }
 
 impl Admission {
-    pub fn start_ms(&self) -> f64 {
-        self.start_ns / 1e6
+    pub fn start_ms(&self) -> Millis {
+        self.start_ns.to_millis()
     }
 
-    pub fn end_ms(&self) -> f64 {
-        self.end_ns / 1e6
+    pub fn end_ms(&self) -> Millis {
+        self.end_ns.to_millis()
     }
 
-    pub fn makespan_ms(&self) -> f64 {
-        self.makespan_ns / 1e6
+    pub fn makespan_ms(&self) -> Millis {
+        self.makespan_ns.to_millis()
     }
 }
 
 /// The persistent global engine: one [`Instance`] per simulated module.
-/// All times are absolute nanoseconds; callers holding a millisecond
+/// All times are absolute [`Nanos`]; callers holding a millisecond
 /// clock (the router) convert at the boundary.
 #[derive(Debug, Clone)]
 pub struct GlobalTimeline {
@@ -243,8 +244,8 @@ pub struct GlobalTimeline {
     capacity: usize,
     pipe: PipelineParams,
     instances: Vec<Instance>,
-    /// Latest observed dispatch clock (ns) — the retirement frontier.
-    frontier_ns: f64,
+    /// Latest observed dispatch clock — the retirement frontier.
+    frontier_ns: Nanos,
     /// Reusable per-admission scheduling state (no steady-state allocs).
     scratch: StreamScratch,
 }
@@ -256,7 +257,7 @@ impl GlobalTimeline {
             capacity: subarray_capacity.max(1),
             pipe: pipe.clone(),
             instances: (0..instances).map(|_| Instance::new(pipe)).collect(),
-            frontier_ns: 0.0,
+            frontier_ns: Nanos::ZERO,
             scratch: StreamScratch::default(),
         }
     }
@@ -270,8 +271,8 @@ impl GlobalTimeline {
         self.capacity
     }
 
-    /// The retirement frontier (ns): the latest dispatch clock observed.
-    pub fn frontier_ns(&self) -> f64 {
+    /// The retirement frontier: the latest dispatch clock observed.
+    pub fn frontier_ns(&self) -> Nanos {
         self.frontier_ns
     }
 
@@ -280,7 +281,7 @@ impl GlobalTimeline {
     /// end-sorted, so retirement is a prefix drain per instance — and it
     /// runs only when the frontier **strictly advances**, not on every
     /// dispatch. Returns the (possibly clamped) frontier.
-    pub fn advance(&mut self, now_ns: f64) -> f64 {
+    pub fn advance(&mut self, now_ns: Nanos) -> Nanos {
         if now_ns > self.frontier_ns {
             self.frontier_ns = now_ns;
             for inst in &mut self.instances {
@@ -299,7 +300,7 @@ impl GlobalTimeline {
     /// it overlaps, so occupancy is never undercounted). Candidates are
     /// the base time and each reservation end, visited in order straight
     /// off the end-sorted ledger — no allocation, no sort.
-    pub fn earliest_start(&self, i: usize, fp: usize, base_ns: f64, dur_ns: f64) -> f64 {
+    pub fn earliest_start(&self, i: usize, fp: usize, base_ns: Nanos, dur_ns: Nanos) -> Nanos {
         let inst = &self.instances[i];
         let fp = fp.clamp(1, self.capacity);
         let base = base_ns.max(inst.floor_ns);
@@ -324,7 +325,7 @@ impl GlobalTimeline {
     /// Whether `fp` subarrays fit on top of the reservations overlapping
     /// `[t, t + dur)`. End-sorted ledger: everything ending at or before
     /// `t` is skipped in O(log n).
-    fn feasible_at(&self, rs: &[Reservation], fp: usize, t: f64, dur_ns: f64) -> bool {
+    fn feasible_at(&self, rs: &[Reservation], fp: usize, t: Nanos, dur_ns: Nanos) -> bool {
         let from = rs.partition_point(|r| r.end_ns <= t);
         let used: usize = rs[from..]
             .iter()
@@ -337,7 +338,7 @@ impl GlobalTimeline {
     /// Occupancy-only admission (the optimistic pre-contention model):
     /// commit `[start, start + dur)` on instance `i` without touching
     /// the shared stage pools. Returns the end time.
-    pub fn occupy(&mut self, i: usize, fp: usize, start_ns: f64, dur_ns: f64) -> f64 {
+    pub fn occupy(&mut self, i: usize, fp: usize, start_ns: Nanos, dur_ns: Nanos) -> Nanos {
         let fp = fp.clamp(1, self.capacity);
         let end_ns = start_ns + dur_ns;
         self.instances[i].commit(fp, start_ns, end_ns);
@@ -355,7 +356,7 @@ impl GlobalTimeline {
         &mut self,
         i: usize,
         fp: usize,
-        start_ns: f64,
+        start_ns: Nanos,
         stream: BatchStream<'_>,
         mut events: Option<&mut Vec<Event>>,
     ) -> Admission {
@@ -405,17 +406,17 @@ impl GlobalTimeline {
         }
     }
 
-    /// Latest committed end (ns) across all instances — the global
+    /// Latest committed end across all instances — the global
     /// simulated makespan (monotone; retirement never lowers it).
-    pub fn makespan_ns(&self) -> f64 {
+    pub fn makespan_ns(&self) -> Nanos {
         self.instances
             .iter()
             .map(|i| i.horizon_ns)
-            .fold(0.0, f64::max)
+            .fold(Nanos::ZERO, Nanos::max)
     }
 
-    /// Latest committed end (ns) on instance `i`.
-    pub fn horizon_ns(&self, i: usize) -> f64 {
+    /// Latest committed end on instance `i`.
+    pub fn horizon_ns(&self, i: usize) -> Nanos {
         self.instances[i].horizon_ns
     }
 
@@ -424,8 +425,8 @@ impl GlobalTimeline {
         self.instances[i].reservations.len()
     }
 
-    /// Compaction floor (ns) of instance `i`.
-    pub fn floor_ns(&self, i: usize) -> f64 {
+    /// Compaction floor of instance `i`.
+    pub fn floor_ns(&self, i: usize) -> Nanos {
         self.instances[i].floor_ns
     }
 }
@@ -433,13 +434,14 @@ impl GlobalTimeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::units::ns;
 
     fn lc(mac_ns: f64, aggregation_ns: f64, writeback_ns: f64) -> LayerCost {
         LayerCost {
-            processing_ns: mac_ns + aggregation_ns,
-            mac_ns,
-            aggregation_ns,
-            writeback_ns,
+            processing_ns: ns(mac_ns + aggregation_ns),
+            mac_ns: ns(mac_ns),
+            aggregation_ns: ns(aggregation_ns),
+            writeback_ns: ns(writeback_ns),
             ..LayerCost::default()
         }
     }
@@ -462,12 +464,14 @@ mod tests {
         let c = costs();
         // Reference: the standalone per-batch pass on fresh pools.
         let mut gt_fresh = GlobalTimeline::new(1, 64, &pipe);
-        let iso = gt_fresh.admit(0, 8, 0.0, stream(&c, 6), None).makespan_ns;
+        let iso = gt_fresh
+            .admit(0, 8, Nanos::ZERO, stream(&c, 6), None)
+            .makespan_ns;
         // Same batch admitted at an arbitrary origin onto drained pools.
         let mut gt = GlobalTimeline::new(1, 64, &pipe);
-        let a = gt.admit(0, 8, 12_345.5, stream(&c, 6), None);
+        let a = gt.admit(0, 8, ns(12_345.5), stream(&c, 6), None);
         assert_eq!(a.makespan_ns, iso, "drained-instance admission must be exact");
-        assert_eq!(a.end_ns, 12_345.5 + iso);
+        assert_eq!(a.end_ns, ns(12_345.5) + iso);
     }
 
     #[test]
@@ -478,55 +482,57 @@ mod tests {
         };
         let c = costs();
         let mut gt = GlobalTimeline::new(1, 64, &pipe);
-        let a0 = gt.admit(0, 8, 0.0, stream(&c, 4), None);
+        let a0 = gt.admit(0, 8, Nanos::ZERO, stream(&c, 4), None);
         // Second batch co-admitted at t=0: the writeback channel is
         // busy, so its makespan must exceed its isolated one.
         let mut fresh = GlobalTimeline::new(1, 64, &pipe);
-        let iso = fresh.admit(0, 8, 0.0, stream(&c, 4), None).makespan_ns;
-        let a1 = gt.admit(0, 8, 0.0, stream(&c, 4), None);
+        let iso = fresh
+            .admit(0, 8, Nanos::ZERO, stream(&c, 4), None)
+            .makespan_ns;
+        let a1 = gt.admit(0, 8, Nanos::ZERO, stream(&c, 4), None);
         assert!(a1.makespan_ns > iso, "co-resident batch saw no contention");
         // And bounded by full serialization behind the first batch.
-        assert!(a1.end_ns <= a0.end_ns + iso + 1e-6);
+        assert!(a1.end_ns <= a0.end_ns + iso + ns(1e-6));
     }
 
     #[test]
     fn advance_is_a_prefix_drain_and_monotone() {
         let pipe = PipelineParams::default();
         let mut gt = GlobalTimeline::new(1, 100, &pipe);
-        gt.occupy(0, 10, 0.0, 50.0);
-        gt.occupy(0, 10, 0.0, 100.0);
-        gt.occupy(0, 10, 0.0, 150.0);
+        gt.occupy(0, 10, Nanos::ZERO, ns(50.0));
+        gt.occupy(0, 10, Nanos::ZERO, ns(100.0));
+        gt.occupy(0, 10, Nanos::ZERO, ns(150.0));
         assert_eq!(gt.live_reservations(0), 3);
-        gt.advance(100.0);
+        gt.advance(ns(100.0));
         assert_eq!(gt.live_reservations(0), 1, "ends ≤ frontier retire");
         // A stale clock neither regresses the frontier nor re-prunes.
-        assert_eq!(gt.advance(10.0), 100.0);
+        assert_eq!(gt.advance(ns(10.0)), ns(100.0));
         assert_eq!(gt.live_reservations(0), 1);
-        assert_eq!(gt.makespan_ns(), 150.0, "retirement keeps the horizon");
+        assert_eq!(gt.makespan_ns(), ns(150.0), "retirement keeps the horizon");
     }
 
     #[test]
     fn ledger_compacts_into_floor_when_nothing_expires() {
         let pipe = PipelineParams::default();
         let mut gt = GlobalTimeline::new(1, 100, &pipe);
-        let mut t = 0.0;
+        let mut t = Nanos::ZERO;
         for _ in 0..1000 {
             // Footprint 60: no two fit together, every window serializes.
-            let s = gt.earliest_start(0, 60, 0.0, 5.0);
+            let s = gt.earliest_start(0, 60, Nanos::ZERO, ns(5.0));
             assert!(s >= t, "starts must not regress");
-            t = gt.occupy(0, 60, s, 5.0);
+            t = gt.occupy(0, 60, s, ns(5.0));
         }
         assert!(gt.live_reservations(0) <= MAX_RESERVATIONS_PER_INSTANCE);
-        assert!(gt.floor_ns(0) > 0.0, "compaction must have folded");
-        assert!((gt.makespan_ns() - 1000.0 * 5.0).abs() < 1e-6);
+        assert!(gt.floor_ns(0) > Nanos::ZERO, "compaction must have folded");
+        assert!((gt.makespan_ns() - ns(1000.0 * 5.0)).abs().raw() < 1e-6);
     }
 
     #[test]
     fn oversized_footprint_clamps_to_capacity() {
         let pipe = PipelineParams::default();
         let mut gt = GlobalTimeline::new(1, 100, &pipe);
-        gt.occupy(0, 10_000, 0.0, 10.0);
-        let s = gt.earliest_start(0, 1, 0.0, 1.0);
-        assert_eq!(s, 10.0, "a clamped full-capacity window excludes others");
+        gt.occupy(0, 10_000, Nanos::ZERO, ns(10.0));
+        let s = gt.earliest_start(0, 1, Nanos::ZERO, ns(1.0));
+        assert_eq!(s, ns(10.0), "a clamped full-capacity window excludes others");
     }
 }

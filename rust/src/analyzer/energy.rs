@@ -3,52 +3,60 @@
 use crate::analyzer::latency::ModelAnalysis;
 use crate::analyzer::power::power_breakdown;
 use crate::config::OpimaConfig;
+use crate::util::units::Millijoules;
 
-/// Energy breakdown for one inference (all in mJ).
+/// Energy breakdown for one inference.
 #[derive(Debug, Clone)]
 pub struct EnergyBreakdown {
     /// OPCM cell reads (5 pJ × one per nibble MAC).
-    pub reads_mj: f64,
+    pub reads_mj: Millijoules,
     /// MDL lasers (wall-plug while lit + drive DACs).
-    pub mdl_mj: f64,
+    pub mdl_mj: Millijoules,
     /// Aggregation unit (ADC + SRAM + shift-add + DAC/VCSEL regen).
-    pub aggregation_mj: f64,
+    pub aggregation_mj: Millijoules,
     /// Output feature-map writeback (250 pJ OPCM writes).
-    pub writeback_mj: f64,
+    pub writeback_mj: Millijoules,
     /// Static envelope × latency (the full-power accounting used for
     /// cross-platform comparisons that meter at the wall).
-    pub static_mj: f64,
+    pub static_mj: Millijoules,
 }
 
 impl EnergyBreakdown {
     /// Dynamic (activity-proportional) energy.
-    pub fn dynamic_mj(&self) -> f64 {
+    pub fn dynamic_mj(&self) -> Millijoules {
         self.reads_mj + self.mdl_mj + self.aggregation_mj + self.writeback_mj
     }
 
     /// Wall energy (dynamic + static envelope over the run).
-    pub fn wall_mj(&self) -> f64 {
+    pub fn wall_mj(&self) -> Millijoules {
         self.dynamic_mj() + self.static_mj
     }
 }
 
 /// Compute the energy breakdown for an analyzed model.
 pub fn energy_breakdown(cfg: &OpimaConfig, analysis: &ModelAnalysis) -> EnergyBreakdown {
-    let reads_mj = analysis.layer_costs.iter().map(|c| c.read_pj).sum::<f64>() / 1e9;
-    let mdl_mj = analysis.layer_costs.iter().map(|c| c.mdl_pj).sum::<f64>() / 1e9;
-    let aggregation_mj = analysis
-        .layer_costs
-        .iter()
-        .map(|c| c.aggregation_pj)
-        .sum::<f64>()
-        / 1e9;
-    let writeback_mj = analysis
-        .layer_costs
-        .iter()
-        .map(|c| c.writeback_pj)
-        .sum::<f64>()
-        / 1e9;
-    let static_mj = power_breakdown(cfg).total_w() * analysis.total_ms() * 1e-3 * 1e3;
+    let reads_mj =
+        Millijoules::from_picojoules(analysis.layer_costs.iter().map(|c| c.read_pj).sum::<f64>());
+    let mdl_mj =
+        Millijoules::from_picojoules(analysis.layer_costs.iter().map(|c| c.mdl_pj).sum::<f64>());
+    let aggregation_mj = Millijoules::from_picojoules(
+        analysis
+            .layer_costs
+            .iter()
+            .map(|c| c.aggregation_pj)
+            .sum::<f64>(),
+    );
+    let writeback_mj = Millijoules::from_picojoules(
+        analysis
+            .layer_costs
+            .iter()
+            .map(|c| c.writeback_pj)
+            .sum::<f64>(),
+    );
+    // Cross-unit chain W × ms → mJ, priced with the explicit s↔ms factor
+    // trail (1e-3 · 1e3 are power/energy scalings, not time conversions).
+    let static_mj =
+        Millijoules::new(power_breakdown(cfg).total_w() * analysis.total_ms().raw() * 1e-3 * 1e3);
     EnergyBreakdown {
         reads_mj,
         mdl_mj,
@@ -72,7 +80,7 @@ mod tests {
         let e = energy_breakdown(&cfg, &a);
         // 5 pJ per MAC at 4-bit (one TDM step).
         let expect = net.macs() as f64 * 5.0 / 1e9;
-        assert!((e.reads_mj - expect).abs() / expect < 1e-9);
+        assert!((e.reads_mj.raw() - expect).abs() / expect < 1e-9);
     }
 
     #[test]
@@ -81,8 +89,8 @@ mod tests {
         let net = build_model(Model::InceptionV2).unwrap();
         let a = analyze_model(&cfg, &net, 4).unwrap();
         let e = energy_breakdown(&cfg, &a);
-        assert!(e.reads_mj > 0.0 && e.mdl_mj > 0.0);
-        assert!(e.aggregation_mj > 0.0 && e.writeback_mj > 0.0);
+        assert!(e.reads_mj > Millijoules::ZERO && e.mdl_mj > Millijoules::ZERO);
+        assert!(e.aggregation_mj > Millijoules::ZERO && e.writeback_mj > Millijoules::ZERO);
         assert!(e.wall_mj() > e.dynamic_mj());
     }
 

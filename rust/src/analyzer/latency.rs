@@ -5,6 +5,7 @@ use crate::config::OpimaConfig;
 use crate::error::Result;
 use crate::mapper::plan::{map_network, MappedNetwork, Occupancy};
 use crate::pim::scheduler::{LayerCost, PimScheduler};
+use crate::util::units::{Millijoules, Millis, Nanos};
 
 /// Full analysis of one (model, bit-width) pair on OPIMA.
 #[derive(Debug, Clone)]
@@ -12,12 +13,12 @@ pub struct ModelAnalysis {
     pub name: String,
     pub bits: u32,
     pub layer_costs: Vec<LayerCost>,
-    /// In-memory processing time (MACs + aggregation), ms.
-    pub processing_ms: f64,
-    /// Non-linearity + OPCM write-back time, ms.
-    pub writeback_ms: f64,
-    /// Dynamic energy per inference, mJ.
-    pub dynamic_mj: f64,
+    /// In-memory processing time (MACs + aggregation).
+    pub processing_ms: Millis,
+    /// Non-linearity + OPCM write-back time.
+    pub writeback_ms: Millis,
+    /// Dynamic energy per inference.
+    pub dynamic_mj: Millijoules,
     /// Total MACs.
     pub macs: u64,
     /// Subarray occupancy of the mapping vs. the geometry's capacity —
@@ -27,12 +28,12 @@ pub struct ModelAnalysis {
 }
 
 impl ModelAnalysis {
-    pub fn total_ms(&self) -> f64 {
+    pub fn total_ms(&self) -> Millis {
         self.processing_ms + self.writeback_ms
     }
 
     pub fn fps(&self) -> f64 {
-        1e3 / self.total_ms()
+        1e3 / self.total_ms().raw()
     }
 }
 
@@ -53,9 +54,10 @@ pub fn analyze_mapped(
 ) -> Result<ModelAnalysis> {
     let sched = PimScheduler::new(cfg)?;
     let layer_costs = sched.cost_network(&mapped.works)?;
-    let processing_ms = layer_costs.iter().map(|c| c.processing_ns).sum::<f64>() / 1e6;
-    let writeback_ms = layer_costs.iter().map(|c| c.writeback_ns).sum::<f64>() / 1e6;
-    let dynamic_mj = layer_costs.iter().map(|c| c.dynamic_pj()).sum::<f64>() / 1e9;
+    let processing_ms = layer_costs.iter().map(|c| c.processing_ns).sum::<Nanos>().to_millis();
+    let writeback_ms = layer_costs.iter().map(|c| c.writeback_ns).sum::<Nanos>().to_millis();
+    let dynamic_mj =
+        Millijoules::from_picojoules(layer_costs.iter().map(|c| c.dynamic_pj()).sum::<f64>());
     Ok(ModelAnalysis {
         name: mapped.name.clone(),
         bits,
@@ -84,7 +86,7 @@ mod tests {
         for m in [Model::ResNet18, Model::InceptionV2, Model::MobileNet] {
             let a = analyze(m, 4);
             assert!(
-                (0.05..50.0).contains(&a.total_ms()),
+                (0.05..50.0).contains(&a.total_ms().raw()),
                 "{}: {} ms",
                 a.name,
                 a.total_ms()
@@ -145,6 +147,6 @@ mod tests {
     #[test]
     fn dynamic_energy_millijoule_class() {
         let a = analyze(Model::ResNet18, 4);
-        assert!((0.5..50.0).contains(&a.dynamic_mj), "{} mJ", a.dynamic_mj);
+        assert!((0.5..50.0).contains(&a.dynamic_mj.raw()), "{}", a.dynamic_mj);
     }
 }

@@ -11,21 +11,22 @@
 
 use crate::cnn::graph::Network;
 use crate::util::histogram::{Histogram, Summary};
+use crate::util::units::{Millijoules, Millis};
 
 /// Result of running one model on one platform.
 #[derive(Debug, Clone)]
 pub struct PlatformResult {
     pub platform: String,
     pub model: String,
-    pub latency_ms: f64,
+    pub latency_ms: Millis,
     pub power_w: f64,
     /// Energy per inference under the platform's accounting convention.
-    pub energy_mj: f64,
+    pub energy_mj: Millijoules,
 }
 
 impl PlatformResult {
     pub fn fps(&self) -> f64 {
-        1e3 / self.latency_ms
+        1e3 / self.latency_ms.raw()
     }
 
     pub fn fps_per_w(&self) -> f64 {
@@ -34,7 +35,7 @@ impl PlatformResult {
 
     /// Energy per processed bit (pJ/bit) for a given workload bit count.
     pub fn epb_pj(&self, workload_bits: u64) -> f64 {
-        self.energy_mj * 1e9 / workload_bits as f64
+        self.energy_mj.raw() * 1e9 / workload_bits as f64
     }
 }
 
@@ -77,12 +78,13 @@ mod tests {
 
     #[test]
     fn derived_metrics() {
+        use crate::util::units::{mj, ms};
         let r = PlatformResult {
             platform: "x".into(),
             model: "m".into(),
-            latency_ms: 2.0,
+            latency_ms: ms(2.0),
             power_w: 100.0,
-            energy_mj: 200.0,
+            energy_mj: mj(200.0),
         };
         assert!((r.fps() - 500.0).abs() < 1e-9);
         assert!((r.fps_per_w() - 5.0).abs() < 1e-9);

@@ -51,7 +51,7 @@ pub fn power_breakdown(cfg: &OpimaConfig) -> PowerBreakdown {
 
     // MDL arrays: one active subarray row slice per group per bank.
     let mdl_w = active_mdls(g, groups, cfg.pim.optical_accum) as f64
-        * cfg.power.mdl_wallplug_mw
+        * cfg.power.mdl_wallplug_mw.raw()
         / 1e3;
 
     // E-O interface: ADC + DAC arrays at their duty factor, VCSEL
@@ -69,7 +69,7 @@ pub fn power_breakdown(cfg: &OpimaConfig) -> PowerBreakdown {
         * 1e-12
         * f_hz
         * DAC_ACTIVITY;
-    let vcsel_w = (g.banks * groups) as f64 * 16.0 * cfg.power.vcsel_mw / 1e3;
+    let vcsel_w = (g.banks * groups) as f64 * 16.0 * cfg.power.vcsel_mw.raw() / 1e3;
     let eo_interface_w = adc_w + dac_w + vcsel_w + cfg.power.controller_w;
 
     // External laser driving concurrent main-memory traffic.
@@ -78,11 +78,11 @@ pub fn power_breakdown(cfg: &OpimaConfig) -> PowerBreakdown {
     // SOA stages: per bank, amplification on the memory data paths (one
     // SOA per subarray column line) plus aggregation-path boosters.
     let soa_count = g.banks * (g.subarray_cols + groups);
-    let soa_w = soa_count as f64 * cfg.power.soa_bias_mw / 1e3;
+    let soa_w = soa_count as f64 * cfg.power.soa_bias_mw.raw() / 1e3;
 
     // EO-tuned MR access rings on all PIM-active + memory-active rows.
     let active_rings = g.banks * (groups * cfg.pim.optical_accum + 1) * g.cols_per_subarray * 2;
-    let mr_w = active_rings as f64 * cfg.power.mr_tuning_mw / 1e3;
+    let mr_w = active_rings as f64 * cfg.power.mr_tuning_mw.raw() / 1e3;
 
     // Aggregation-unit digital logic (shift-add + SRAM) per bank.
     let agg_w = cfg.power.aggregation_logic_w * g.banks as f64 * (groups as f64 / 16.0).max(0.25);

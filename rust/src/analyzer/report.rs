@@ -5,6 +5,7 @@ use crate::analyzer::metrics::PlatformResult;
 use crate::analyzer::power::PowerBreakdown;
 use crate::analyzer::timeline::BatchTimeline;
 use crate::util::histogram::Summary;
+use crate::util::units::Millis;
 
 /// Fig. 9-style latency breakdown rows.
 pub fn latency_table(analyses: &[ModelAnalysis]) -> String {
@@ -12,12 +13,13 @@ pub fn latency_table(analyses: &[ModelAnalysis]) -> String {
         "| model | processing (ms) | writeback (ms) | total (ms) |\n|---|---|---|---|\n",
     );
     for a in analyses {
+        // Column headers carry the unit; print the bare scalar.
         out.push_str(&format!(
             "| {} | {:.3} | {:.3} | {:.3} |\n",
             a.name,
-            a.processing_ms,
-            a.writeback_ms,
-            a.total_ms()
+            a.processing_ms.raw(),
+            a.writeback_ms.raw(),
+            a.total_ms().raw()
         ));
     }
     out
@@ -60,16 +62,16 @@ pub fn latency_summary_table(rows: &[(&str, &Summary)]) -> String {
 /// simulated instance, priced three ways.
 pub struct ContentionRow {
     pub name: String,
-    /// One stream's isolated (sole-tenant) makespan (ms).
-    pub isolated_ms: f64,
-    /// Fleet makespan under occupancy-only co-residency (ms) — the
+    /// One stream's isolated (sole-tenant) makespan.
+    pub isolated_ms: Millis,
+    /// Fleet makespan under occupancy-only co-residency — the
     /// optimistic pre-contention model.
-    pub optimistic_ms: f64,
+    pub optimistic_ms: Millis,
     /// Fleet makespan with the streams contending for the shared
-    /// aggregation/writeback pools (ms) — the honest number.
-    pub contended_ms: f64,
-    /// `S ×` the isolated makespan (ms) — the no-overlap upper bound.
-    pub serialized_ms: f64,
+    /// aggregation/writeback pools — the honest number.
+    pub contended_ms: Millis,
+    /// `S ×` the isolated makespan — the no-overlap upper bound.
+    pub serialized_ms: Millis,
 }
 
 /// Contended-vs-isolated serving report: what sharing the stage pools
@@ -81,14 +83,19 @@ pub fn contention_table(streams: usize, rows: &[ContentionRow]) -> String {
          serialized ×{streams} (ms) | contention cost |\n|---|---|---|---|---|---|\n"
     );
     for r in rows {
-        let cost = if r.optimistic_ms > 0.0 {
+        let cost = if r.optimistic_ms > Millis::ZERO {
             r.contended_ms / r.optimistic_ms
         } else {
             1.0
         };
         out.push_str(&format!(
             "| {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.2}× |\n",
-            r.name, r.isolated_ms, r.optimistic_ms, r.contended_ms, r.serialized_ms, cost
+            r.name,
+            r.isolated_ms.raw(),
+            r.optimistic_ms.raw(),
+            r.contended_ms.raw(),
+            r.serialized_ms.raw(),
+            cost
         ));
     }
     out
@@ -107,10 +114,10 @@ pub fn timeline_table(rows: &[(&str, &BatchTimeline)]) -> String {
             "| {} | {} | {:.3} | {:.3} | {:.2}× | {:.3} | {:.0}% |\n",
             name,
             t.batch,
-            t.sequential_ms(),
-            t.makespan_ms(),
+            t.sequential_ms().raw(),
+            t.makespan_ms().raw(),
             t.speedup(),
-            t.bottleneck_ms(),
+            t.bottleneck_ms().raw(),
             100.0 * t.efficiency()
         ));
     }
@@ -126,9 +133,9 @@ pub fn comparison_table(results: &[PlatformResult], workload_bits: u64) -> Strin
         out.push_str(&format!(
             "| {} | {:.3} | {:.1} | {:.2} | {:.3} | {:.1} | {:.2} |\n",
             r.platform,
-            r.latency_ms,
+            r.latency_ms.raw(),
             r.power_w,
-            r.energy_mj,
+            r.energy_mj.raw(),
             r.epb_pj(workload_bits),
             r.fps(),
             r.fps_per_w()
@@ -156,10 +163,10 @@ mod tests {
         let r = PlatformResult {
             platform: "OPIMA".into(),
             model: "resnet18".into(),
-            latency_ms: 1.0,
+            latency_ms: crate::util::units::ms(1.0),
             power_w: 55.9,
-            energy_mj: 5.0,
-            };
+            energy_mj: crate::util::units::mj(5.0),
+        };
         let c = comparison_table(&[r], 1_000_000);
         assert!(c.contains("OPIMA"));
         let s = crate::analyzer::metrics::latency_summary(&[1.0, 2.0, 3.0]);
@@ -169,14 +176,15 @@ mod tests {
 
     #[test]
     fn contention_table_renders() {
+        use crate::util::units::ms;
         let out = contention_table(
             4,
             &[ContentionRow {
                 name: "resnet18".into(),
-                isolated_ms: 2.0,
-                optimistic_ms: 4.0,
-                contended_ms: 6.0,
-                serialized_ms: 8.0,
+                isolated_ms: ms(2.0),
+                optimistic_ms: ms(4.0),
+                contended_ms: ms(6.0),
+                serialized_ms: ms(8.0),
             }],
         );
         assert!(out.contains("resnet18") && out.contains("contended ×4"));
@@ -186,10 +194,10 @@ mod tests {
             1,
             &[ContentionRow {
                 name: "empty".into(),
-                isolated_ms: 0.0,
-                optimistic_ms: 0.0,
-                contended_ms: 0.0,
-                serialized_ms: 0.0,
+                isolated_ms: Millis::ZERO,
+                optimistic_ms: Millis::ZERO,
+                contended_ms: Millis::ZERO,
+                serialized_ms: Millis::ZERO,
             }],
         );
         assert!(z.contains("1.00×") && !z.contains("inf"), "{z}");

@@ -20,6 +20,7 @@ use crate::analyzer::timeline::{simulate_analysis_makespan, TimelineSummary};
 use crate::cnn::graph::Network;
 use crate::config::OpimaConfig;
 use crate::error::Result;
+use crate::util::units::{Millijoules, Millis};
 
 /// Simulated cost of serving one whole batch at a given operand width
 /// and batch size.
@@ -29,14 +30,14 @@ pub struct SimCost {
     pub bits: u32,
     /// Images per batch this entry is priced for.
     pub batch: usize,
-    /// Pipelined OPIMA latency for the whole batch (ms) — the timeline
+    /// Pipelined OPIMA latency for the whole batch — the timeline
     /// makespan, sublinear in `batch` when the mapping pipelines.
-    pub latency_ms: f64,
-    /// Simulated dynamic energy for the whole batch (mJ) — linear in
+    pub latency_ms: Millis,
+    /// Simulated dynamic energy for the whole batch — linear in
     /// `batch`.
-    pub energy_mj: f64,
-    /// The pre-timeline analytical cost (`batch ×` single inference, ms).
-    pub sequential_ms: f64,
+    pub energy_mj: Millijoules,
+    /// The pre-timeline analytical cost (`batch ×` single inference).
+    pub sequential_ms: Millis,
     /// False when the mapping was over capacity and the timeline ran
     /// strictly serialized (`latency_ms == sequential_ms`).
     pub pipelined: bool,
@@ -109,12 +110,12 @@ impl SimCostTable {
 
     /// Whole-batch `(latency_ms, energy_mj)` at operand width `bits`
     /// and the table's serving batch size.
-    pub fn get(&self, bits: u32) -> Option<(f64, f64)> {
+    pub fn get(&self, bits: u32) -> Option<(Millis, Millijoules)> {
         self.get_at(bits, self.batch)
     }
 
     /// Whole-batch `(latency_ms, energy_mj)` at `(bits, batch)`.
-    pub fn get_at(&self, bits: u32, batch: usize) -> Option<(f64, f64)> {
+    pub fn get_at(&self, bits: u32, batch: usize) -> Option<(Millis, Millijoules)> {
         self.entry(bits, batch).map(|e| (e.latency_ms, e.energy_mj))
     }
 
@@ -183,7 +184,7 @@ mod tests {
         let (l4, e4) = t.get(4).unwrap();
         assert!(l4 < l8, "TDM: 8-bit costs more time ({l4} vs {l8})");
         assert!(e4 < e8);
-        assert!(l4 > 0.0 && e4 > 0.0);
+        assert!(l4.raw() > 0.0 && e4.raw() > 0.0);
     }
 
     #[test]
@@ -210,10 +211,15 @@ mod tests {
         let (l8, e8) = t8.get(4).unwrap();
         assert!(l8 < 8.0 * l1, "pipelining must beat {} vs {}", l8, 8.0 * l1);
         assert!(l8 > l1, "more images cannot be faster");
-        assert!((e8 - 8.0 * e1).abs() < 1e-9 * e8.max(1.0), "energy is linear");
+        assert!(
+            (e8 - 8.0 * e1).abs().raw() < 1e-9 * e8.raw().max(1.0),
+            "energy is linear"
+        );
         let entry = t8.entry(4, 8).unwrap();
         assert!(entry.pipelined);
-        assert!((entry.sequential_ms - 8.0 * l1).abs() < 1e-9 * entry.sequential_ms);
+        assert!(
+            (entry.sequential_ms - 8.0 * l1).abs().raw() < 1e-9 * entry.sequential_ms.raw()
+        );
     }
 
     #[test]
@@ -223,7 +229,7 @@ mod tests {
         let a = analyze_model(&cfg, &net, 4).unwrap();
         let t = SimCostTable::build(&cfg, &net, 4, &[4]).unwrap();
         let (l1, e1) = t.get_at(4, 1).unwrap();
-        assert!((l1 - a.total_ms()).abs() <= 1e-9 * a.total_ms());
-        assert!((e1 - a.dynamic_mj).abs() <= 1e-9 * a.dynamic_mj);
+        assert!((l1 - a.total_ms()).abs().raw() <= 1e-9 * a.total_ms().raw());
+        assert!((e1 - a.dynamic_mj).abs().raw() <= 1e-9 * a.dynamic_mj.raw());
     }
 }

@@ -58,6 +58,7 @@
 use crate::analyzer::latency::ModelAnalysis;
 use crate::config::{OpimaConfig, PipelineParams};
 use crate::pim::scheduler::LayerCost;
+use crate::util::units::{Millis, Nanos};
 
 /// Which hardware stage an event occupies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,8 +77,8 @@ pub struct Event {
     pub image: usize,
     pub layer: usize,
     pub phase: Phase,
-    pub start_ns: f64,
-    pub end_ns: f64,
+    pub start_ns: Nanos,
+    pub end_ns: Nanos,
 }
 
 /// The scalar outcome of scheduling a batch: the makespan plus the
@@ -92,32 +93,32 @@ pub struct Event {
 pub struct TimelineSummary {
     /// Images scheduled.
     pub batch: usize,
-    /// End of the last event — the simulated whole-batch latency (ns).
-    pub makespan_ns: f64,
-    /// `batch ×` the analytical single-inference sum (ns) — the old
+    /// End of the last event — the simulated whole-batch latency.
+    pub makespan_ns: Nanos,
+    /// `batch ×` the analytical single-inference sum — the old
     /// cost model, and a hard upper bound on the makespan.
-    pub sequential_ns: f64,
-    /// Lower bound from the busiest resource (ns): no feasible schedule
+    pub sequential_ns: Nanos,
+    /// Lower bound from the busiest resource: no feasible schedule
     /// can beat `max(single-image critical path, per-resource work)`.
-    pub bottleneck_ns: f64,
-    /// Analytical single-inference total (ns).
-    pub per_image_ns: f64,
+    pub bottleneck_ns: Nanos,
+    /// Analytical single-inference total.
+    pub per_image_ns: Nanos,
     /// False when the mapping is over capacity and the schedule fell
     /// back to strict serial execution.
     pub pipelined: bool,
 }
 
 impl TimelineSummary {
-    pub fn makespan_ms(&self) -> f64 {
-        self.makespan_ns / 1e6
+    pub fn makespan_ms(&self) -> Millis {
+        self.makespan_ns.to_millis()
     }
 
-    pub fn sequential_ms(&self) -> f64 {
-        self.sequential_ns / 1e6
+    pub fn sequential_ms(&self) -> Millis {
+        self.sequential_ns.to_millis()
     }
 
-    pub fn bottleneck_ms(&self) -> f64 {
-        self.bottleneck_ns / 1e6
+    pub fn bottleneck_ms(&self) -> Millis {
+        self.bottleneck_ns.to_millis()
     }
 
     /// Pipelining gain over the old `batch ×` analytical model (≥ 1).
@@ -125,7 +126,7 @@ impl TimelineSummary {
     /// work on either side of the ratio, so it reports a neutral 1.0
     /// instead of dividing toward `inf`.
     pub fn speedup(&self) -> f64 {
-        if self.makespan_ns > 0.0 {
+        if self.makespan_ns > Nanos::ZERO {
             self.sequential_ns / self.makespan_ns
         } else {
             1.0
@@ -135,7 +136,7 @@ impl TimelineSummary {
     /// How close the schedule runs to the bottleneck lower bound (≤ 1);
     /// 1.0 for the degenerate zero-makespan schedule.
     pub fn efficiency(&self) -> f64 {
-        if self.makespan_ns > 0.0 {
+        if self.makespan_ns > Nanos::ZERO {
             self.bottleneck_ns / self.makespan_ns
         } else {
             1.0
@@ -178,7 +179,7 @@ impl std::ops::Deref for BatchTimeline {
 /// run the *same* [`run_stream`] pass, so their arithmetic can never
 /// drift apart.
 pub(crate) trait SlotPool {
-    fn acquire(&mut self, ready: f64, dur: f64) -> f64;
+    fn acquire(&mut self, ready: Nanos, dur: Nanos) -> Nanos;
 }
 
 /// A counting resource pool: `capacity` slots, each busy until its
@@ -186,20 +187,20 @@ pub(crate) trait SlotPool {
 /// starts no earlier than `ready` — events on one slot never overlap.
 #[derive(Debug)]
 struct Pool {
-    slots: Vec<f64>,
+    slots: Vec<Nanos>,
 }
 
 impl Pool {
     fn new(capacity: usize) -> Self {
         Self {
-            slots: vec![0.0; capacity.max(1)],
+            slots: vec![Nanos::ZERO; capacity.max(1)],
         }
     }
 }
 
 impl SlotPool for Pool {
     /// Book `dur` of work becoming ready at `ready`; returns the start.
-    fn acquire(&mut self, ready: f64, dur: f64) -> f64 {
+    fn acquire(&mut self, ready: Nanos, dur: Nanos) -> Nanos {
         let idx = self
             .slots
             .iter()
@@ -221,21 +222,21 @@ impl SlotPool for Pool {
 pub(crate) struct StreamScratch {
     /// Per-layer exclusive compute unit (subarray group + MDL array):
     /// free once the image's aggregation has drained into SRAM.
-    layer_free: Vec<f64>,
+    layer_free: Vec<Nanos>,
     /// Writebacks into one layer's input maps issue in image order.
-    wb_layer_free: Vec<f64>,
+    wb_layer_free: Vec<Nanos>,
     /// Retirement time of each image (for the in-flight window knob and
     /// the serial fallback).
-    retired: Vec<f64>,
+    retired: Vec<Nanos>,
 }
 
 impl StreamScratch {
     /// Reset for a fresh `layers × batch` stream, keeping allocations.
     pub(crate) fn reset(&mut self, layers: usize, batch: usize) {
         self.layer_free.clear();
-        self.layer_free.resize(layers, 0.0);
+        self.layer_free.resize(layers, Nanos::ZERO);
         self.wb_layer_free.clear();
-        self.wb_layer_free.resize(layers, 0.0);
+        self.wb_layer_free.resize(layers, Nanos::ZERO);
         self.retired.clear();
         self.retired.reserve(batch);
     }
@@ -259,21 +260,21 @@ pub(crate) fn run_stream(
     wb_pool: &mut dyn SlotPool,
     s: &mut StreamScratch,
     mut events: Option<&mut Vec<Event>>,
-) -> f64 {
+) -> Nanos {
     let nl = costs.len();
     debug_assert_eq!(s.layer_free.len(), nl);
-    let mut makespan_ns = 0.0f64;
+    let mut makespan_ns = Nanos::ZERO;
     for image in 0..batch {
         // Dataflow cursor: when this image's input to the next layer is
         // available. The first layer's input load is not priced.
         let mut ready = if !pipelined {
             // Over-capacity: layers time-share the memory — image i may
             // not enter until image i-1 fully retires.
-            s.retired.last().copied().unwrap_or(0.0)
+            s.retired.last().copied().unwrap_or(Nanos::ZERO)
         } else if window > 0 && image >= window {
             s.retired[image - window]
         } else {
-            0.0
+            Nanos::ZERO
         };
         for (layer, c) in costs.iter().enumerate() {
             // Processing: the layer's exclusive unit, once the previous
@@ -291,7 +292,7 @@ pub(crate) fn run_stream(
             let war = if layer + 1 < nl {
                 s.layer_free[layer + 1]
             } else {
-                0.0
+                Nanos::ZERO
             };
             let w_ready = a_end.max(war).max(s.wb_layer_free[layer]);
             let w_start = wb_pool.acquire(w_ready, c.writeback_ns);
@@ -383,7 +384,7 @@ fn schedule(
     pipelined: bool,
     events: Option<&mut Vec<Event>>,
 ) -> TimelineSummary {
-    let per_image_ns: f64 = costs.iter().map(LayerCost::total_ns).sum();
+    let per_image_ns: Nanos = costs.iter().map(LayerCost::total_ns).sum();
     let sequential_ns = per_image_ns * batch as f64;
     let bottleneck_ns = bottleneck(pipe, costs, batch, per_image_ns);
 
@@ -417,18 +418,18 @@ fn bottleneck(
     pipe: &PipelineParams,
     costs: &[LayerCost],
     batch: usize,
-    per_image_ns: f64,
-) -> f64 {
+    per_image_ns: Nanos,
+) -> Nanos {
     let b = batch as f64;
     // Each layer's exclusive unit holds one image for mac + aggregation.
     let max_unit = costs
         .iter()
         .map(|c| c.mac_ns + c.aggregation_ns)
-        .fold(0.0f64, f64::max);
+        .fold(Nanos::ZERO, Nanos::max);
     // Writebacks into one layer are image-ordered.
-    let max_wb = costs.iter().map(|c| c.writeback_ns).fold(0.0f64, f64::max);
-    let agg_total: f64 = costs.iter().map(|c| c.aggregation_ns).sum();
-    let wb_total: f64 = costs.iter().map(|c| c.writeback_ns).sum();
+    let max_wb = costs.iter().map(|c| c.writeback_ns).fold(Nanos::ZERO, Nanos::max);
+    let agg_total: Nanos = costs.iter().map(|c| c.aggregation_ns).sum();
+    let wb_total: Nanos = costs.iter().map(|c| c.writeback_ns).sum();
     per_image_ns
         .max(b * max_unit)
         .max(b * max_wb)
@@ -465,7 +466,7 @@ mod tests {
     fn batch_one_equals_analytical_sum() {
         let (cfg, a) = analysis(4);
         let t = simulate_analysis(&cfg, &a, 1);
-        let total_ns = a.total_ms() * 1e6;
+        let total_ns = a.total_ms().to_nanos();
         assert!(
             (t.makespan_ns - total_ns).abs() <= 1e-9 * total_ns,
             "batch-1 makespan {} != analytical {}",
@@ -488,7 +489,7 @@ mod tests {
                 t.sequential_ns
             );
             assert!(
-                t.makespan_ns + 1e-6 >= t.bottleneck_ns,
+                t.makespan_ns + Nanos::new(1e-6) >= t.bottleneck_ns,
                 "batch {batch}: beat the bottleneck bound"
             );
             assert!(t.speedup() > 1.0);
@@ -499,7 +500,7 @@ mod tests {
     #[test]
     fn makespan_monotone_in_batch() {
         let (cfg, a) = analysis(4);
-        let mut prev = 0.0;
+        let mut prev = Nanos::ZERO;
         for batch in 1..=16 {
             let t = simulate_analysis(&cfg, &a, batch);
             assert!(t.makespan_ns >= prev, "batch {batch} shrank the makespan");
@@ -514,8 +515,8 @@ mod tests {
         let a = analyze_model(&cfg, &build_model(Model::ResNet18).unwrap(), 4).unwrap();
         let t = simulate_analysis(&cfg, &a, 8);
         assert!(t.pipelined);
-        assert!(t.makespan_ns < 8.0 * a.total_ms() * 1e6);
-        assert!(t.makespan_ns + 1e-3 >= t.bottleneck_ns);
+        assert!(t.makespan_ns < 8.0 * a.total_ms().to_nanos());
+        assert!(t.makespan_ns + Nanos::new(1e-3) >= t.bottleneck_ns);
     }
 
     #[test]
@@ -525,7 +526,7 @@ mod tests {
         // Per (layer, phase=Processing∪Aggregation): one image at a time.
         let nl = a.layer_costs.len();
         for layer in 0..nl {
-            let mut spans: Vec<(f64, f64)> = t
+            let mut spans: Vec<(Nanos, Nanos)> = t
                 .events
                 .iter()
                 .filter(|e| e.layer == layer && e.phase != Phase::Writeback)
@@ -536,14 +537,14 @@ mod tests {
             // must not interleave on the layer unit.
             for pair in spans.chunks(2).collect::<Vec<_>>().windows(2) {
                 assert!(
-                    pair[0][1].1 <= pair[1][0].0 + 1e-9,
+                    pair[0][1].1 <= pair[1][0].0 + Nanos::new(1e-9),
                     "layer {layer}: images overlap on the exclusive unit"
                 );
             }
         }
         // Writeback channel pool: at no event boundary do more than
         // `writeback_channels` trains overlap.
-        let wb: Vec<(f64, f64)> = t
+        let wb: Vec<(Nanos, Nanos)> = t
             .events
             .iter()
             .filter(|e| e.phase == Phase::Writeback)
@@ -579,7 +580,7 @@ mod tests {
         let mut wide = cfg.clone();
         wide.pipeline.writeback_channels = 4;
         let t = simulate_analysis(&wide, &a, 16);
-        assert!(t.makespan_ns <= base.makespan_ns + 1e-6);
+        assert!(t.makespan_ns <= base.makespan_ns + Nanos::new(1e-6));
     }
 
     #[test]
@@ -613,14 +614,14 @@ mod tests {
             simulate_makespan(&cfg, &[], 4),
             simulate_makespan(&cfg, &[], 0),
         ] {
-            assert_eq!(t.makespan_ns, 0.0);
+            assert_eq!(t.makespan_ns, Nanos::ZERO);
             assert_eq!(t.speedup(), 1.0);
             assert_eq!(t.efficiency(), 1.0);
             assert!(t.speedup().is_finite() && t.efficiency().is_finite());
         }
         let (cfg, a) = analysis(4);
         let t = simulate_analysis_makespan(&cfg, &a, 0);
-        assert_eq!(t.makespan_ns, 0.0);
+        assert_eq!(t.makespan_ns, Nanos::ZERO);
         assert_eq!(t.speedup(), 1.0);
         assert_eq!(t.efficiency(), 1.0);
     }

@@ -55,9 +55,9 @@ impl CrossLight {
         PlatformResult {
             platform: "CrossLight".into(),
             model: net.name.clone(),
-            latency_ms,
+            latency_ms: crate::util::units::ms(latency_ms),
             power_w: self.power_w,
-            energy_mj,
+            energy_mj: crate::util::units::mj(energy_mj),
         }
     }
 }
@@ -74,7 +74,7 @@ mod tests {
         let r = cl.evaluate(&vgg, 4);
         // VGG16 weights alone are 134M × 4 bits = 67 MB — a large DRAM
         // bill at 38.4 GB/s.
-        assert!(r.latency_ms > 100.0, "{}", r.latency_ms);
+        assert!(r.latency_ms.raw() > 100.0, "{}", r.latency_ms);
     }
 
     #[test]
@@ -82,7 +82,7 @@ mod tests {
         let cl = CrossLight::default();
         let net = build_model(Model::ResNet18).unwrap();
         let r = cl.evaluate(&net, 4);
-        assert!((10.0..60.0).contains(&r.latency_ms), "{}", r.latency_ms);
-        assert!(r.energy_mj > 0.5);
+        assert!((10.0..60.0).contains(&r.latency_ms.raw()), "{}", r.latency_ms);
+        assert!(r.energy_mj.raw() > 0.5);
     }
 }

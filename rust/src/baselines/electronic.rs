@@ -12,6 +12,7 @@
 use crate::analyzer::metrics::PlatformResult;
 use crate::cnn::graph::Network;
 use crate::phys::params::EnergyParams;
+use crate::util::units::{ms, Millijoules, Millis};
 
 /// An electronic platform model.
 #[derive(Debug, Clone)]
@@ -23,8 +24,8 @@ pub struct ElectronicPlatform {
     pub utilization: f64,
     /// Board/package power under load (W).
     pub power_w: f64,
-    /// Fixed per-inference overhead (ms): kernel launch, staging, sync.
-    pub overhead_ms: f64,
+    /// Fixed per-inference overhead: kernel launch, staging, sync.
+    pub overhead_ms: Millis,
     /// Native operand width (bits) for the deployed precision.
     pub native_bits: u32,
 }
@@ -33,11 +34,11 @@ impl ElectronicPlatform {
     pub fn evaluate(&self, net: &Network, _bits: u32) -> PlatformResult {
         let e = EnergyParams::default();
         let compute_ms = net.macs() as f64 / (self.peak_macs_per_s * self.utilization) * 1e3;
-        let latency_ms = compute_ms + self.overhead_ms;
+        let latency_ms = ms(compute_ms) + self.overhead_ms;
         // DRAM traffic: weights once + activations twice (write + read).
         let moved_bits = (net.params() + 2 * net.activation_elems()) * self.native_bits as u64;
         let dram_mj = moved_bits as f64 * e.dram_access_pj_per_bit / 1e9;
-        let energy_mj = self.power_w * latency_ms + dram_mj; // W·ms = mJ
+        let energy_mj = Millijoules::new(self.power_w * latency_ms.raw() + dram_mj); // W·ms = mJ
         PlatformResult {
             platform: self.name.into(),
             model: net.name.clone(),
@@ -55,7 +56,7 @@ pub fn np100() -> ElectronicPlatform {
         peak_macs_per_s: 4.65e12,
         utilization: 0.013,
         power_w: 250.0,
-        overhead_ms: 0.10,
+        overhead_ms: ms(0.10),
         native_bits: 32,
     }
 }
@@ -67,7 +68,7 @@ pub fn e7742() -> ElectronicPlatform {
         peak_macs_per_s: 2.3e12,
         utilization: 0.0105,
         power_w: 225.0,
-        overhead_ms: 0.25,
+        overhead_ms: ms(0.25),
         native_bits: 32,
     }
 }
@@ -81,7 +82,7 @@ pub fn orin() -> ElectronicPlatform {
         peak_macs_per_s: 68.5e12,
         utilization: 0.00022,
         power_w: 60.0,
-        overhead_ms: 2.0,
+        overhead_ms: ms(2.0),
         native_bits: 8,
     }
 }
@@ -111,8 +112,8 @@ mod tests {
         ] {
             let r = p.evaluate(&net, 4);
             assert!(
-                (lo..hi).contains(&r.latency_ms),
-                "{}: {} ms",
+                (lo..hi).contains(&r.latency_ms.raw()),
+                "{}: {}",
                 r.platform,
                 r.latency_ms
             );
@@ -124,8 +125,8 @@ mod tests {
         let net = build_model(Model::Vgg16).unwrap();
         let p = np100();
         let r = p.evaluate(&net, 4);
-        let compute_only = p.power_w * r.latency_ms;
-        assert!(r.energy_mj > compute_only);
+        let compute_only = p.power_w * r.latency_ms.raw();
+        assert!(r.energy_mj.raw() > compute_only);
     }
 
     #[test]

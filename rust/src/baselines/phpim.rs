@@ -17,6 +17,7 @@ use crate::analyzer::metrics::PlatformResult;
 use crate::cnn::graph::Network;
 use crate::config::OpimaConfig;
 use crate::phys::params::EnergyParams;
+use crate::util::units::{ns, Millijoules, Millis, Nanos};
 
 #[derive(Debug, Clone)]
 pub struct PhPim {
@@ -26,8 +27,8 @@ pub struct PhPim {
     pub mac_energy_pj: f64,
     /// EPCM write energy per cell (nJ) — Table I.
     pub epcm_write_nj: f64,
-    /// EPCM write latency per cell batch (ns): electrical, fast.
-    pub epcm_write_ns: f64,
+    /// EPCM write latency per cell batch: electrical, fast.
+    pub epcm_write_ns: Nanos,
     /// Concurrent EPCM write lanes.
     pub write_lanes: usize,
     /// DDR5 bandwidth (bits/s).
@@ -44,7 +45,7 @@ impl PhPim {
             sustained_macs_per_s: 0.04e12,
             mac_energy_pj: 1.1,
             epcm_write_nj: cfg.energy.epcm_write_nj,
-            epcm_write_ns: 100.0,
+            epcm_write_ns: ns(100.0),
             write_lanes: 512,
             dram_bits_per_s: 4800e6 * 64.0,
             power_w: 31.0,
@@ -65,8 +66,8 @@ impl PhPim {
         // fast (100 ns trains, wide lanes) but at 860 nJ per cell.
         let cells =
             (net.activation_elems() * bits as u64).div_ceil(self.bits_per_cell as u64) as f64;
-        let write_ms = cells / self.write_lanes as f64 * self.epcm_write_ns * 1e-6;
-        let latency_ms = compute_ms + 0.5 * dram_ms + write_ms + 0.05;
+        let write_ms = (cells / self.write_lanes as f64 * self.epcm_write_ns).to_millis();
+        let latency_ms = compute_ms + 0.5 * dram_ms + write_ms.raw() + 0.05;
         let energy_mj = macs * passes * self.mac_energy_pj / 1e9
             + cells * self.epcm_write_nj * 1e3 / 1e9 // nJ → pJ → mJ
             + act_bits * e.dram_access_pj_per_bit / 1e9;
@@ -76,9 +77,9 @@ impl PhPim {
         PlatformResult {
             platform: "PhPIM".into(),
             model: net.name.clone(),
-            latency_ms,
+            latency_ms: Millis::new(latency_ms),
             power_w,
-            energy_mj,
+            energy_mj: Millijoules::new(energy_mj),
         }
     }
 }
@@ -94,7 +95,7 @@ mod tests {
         let net = build_model(Model::ResNet18).unwrap();
         let r = PhPim::new(&cfg).evaluate(&net, 4);
         // 614 k cells × 860 nJ ≈ 530 mJ — orders beyond the compute term.
-        assert!(r.energy_mj > 100.0, "{} mJ", r.energy_mj);
+        assert!(r.energy_mj.raw() > 100.0, "{}", r.energy_mj);
     }
 
     #[test]
@@ -107,7 +108,7 @@ mod tests {
         let p = PhPim::new(&cfg);
         let compute_ms = macs / p.sustained_macs_per_s * 1e3;
         let cells = (net.activation_elems() * 4).div_ceil(4) as f64;
-        let write_ms = cells / p.write_lanes as f64 * p.epcm_write_ns * 1e-6;
-        assert!(write_ms < 0.5 * compute_ms);
+        let write_ms = (cells / p.write_lanes as f64 * p.epcm_write_ns).to_millis();
+        assert!(write_ms.raw() < 0.5 * compute_ms);
     }
 }

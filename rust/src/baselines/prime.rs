@@ -47,9 +47,9 @@ impl Prime {
         PlatformResult {
             platform: "PRIME".into(),
             model: net.name.clone(),
-            latency_ms,
+            latency_ms: crate::util::units::ms(latency_ms),
             power_w: self.power_w,
-            energy_mj,
+            energy_mj: crate::util::units::mj(energy_mj),
         }
     }
 }
@@ -63,8 +63,8 @@ mod tests {
     fn prime_evaluates_sanely() {
         let net = build_model(Model::ResNet18).unwrap();
         let r = Prime::default().evaluate(&net, 4);
-        assert!((20.0..100.0).contains(&r.latency_ms), "{}", r.latency_ms);
-        assert!(r.energy_mj > 1.0, "ADC-heavy energy: {}", r.energy_mj);
+        assert!((20.0..100.0).contains(&r.latency_ms.raw()), "{}", r.latency_ms);
+        assert!(r.energy_mj.raw() > 1.0, "ADC-heavy energy: {}", r.energy_mj);
     }
 
     #[test]

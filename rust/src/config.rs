@@ -10,6 +10,7 @@
 
 use crate::error::{Error, Result};
 use crate::phys::params::{EnergyParams, LossParams};
+use crate::util::units::{Milliwatts, Nanos};
 
 /// Memory/PIM geometry (paper §V first paragraph).
 #[derive(Debug, Clone, PartialEq)]
@@ -140,35 +141,35 @@ pub struct Timing {
     /// Photonic MAC/memory clock in GHz (MDL modulation rate; COMET-class
     /// OPCM memories run a 5 GHz optical clock).
     pub clock_ghz: f64,
-    /// OPCM read latency in ns (laser settle + propagation + PD/ADC).
-    pub read_ns: f64,
-    /// OPCM MLC write latency in ns. Multi-level programming is an
+    /// OPCM read latency (laser settle + propagation + PD/ADC).
+    pub read_ns: Nanos,
+    /// OPCM MLC write latency. Multi-level programming is an
     /// iterative pulse-and-verify train (partial crystallization must hit
     /// one of 16 transmission targets), putting MLC writes in the µs
     /// class — this is what makes writeback dominate CNN inference
     /// latency in the paper's Fig. 9.
-    pub write_ns: f64,
-    /// Aggregation-unit pipeline latency in ns (PD + ADC + shift-add).
-    pub aggregation_ns: f64,
-    /// E-O-E controller round-trip for writeback staging, per tile, in ns.
-    pub writeback_overhead_ns: f64,
+    pub write_ns: Nanos,
+    /// Aggregation-unit pipeline latency (PD + ADC + shift-add).
+    pub aggregation_ns: Nanos,
+    /// E-O-E controller round-trip for writeback staging, per tile.
+    pub writeback_overhead_ns: Nanos,
 }
 
 impl Default for Timing {
     fn default() -> Self {
         Self {
             clock_ghz: 5.0,
-            read_ns: 0.8,
-            write_ns: 1000.0,
-            aggregation_ns: 1.2,
-            writeback_overhead_ns: 4.0,
+            read_ns: Nanos::new(0.8),
+            write_ns: Nanos::new(1000.0),
+            aggregation_ns: Nanos::new(1.2),
+            writeback_overhead_ns: Nanos::new(4.0),
         }
     }
 }
 
 impl Timing {
-    pub fn cycle_ns(&self) -> f64 {
-        1.0 / self.clock_ghz
+    pub fn cycle_ns(&self) -> Nanos {
+        Nanos::new(1.0 / self.clock_ghz)
     }
 }
 
@@ -176,16 +177,16 @@ impl Timing {
 #[derive(Debug, Clone, PartialEq)]
 
 pub struct PowerModel {
-    /// Wall-plug power per active microdisk laser, in mW.
-    pub mdl_wallplug_mw: f64,
+    /// Wall-plug power per active microdisk laser.
+    pub mdl_wallplug_mw: Milliwatts,
     /// External (main-memory) laser wall-plug power, in W.
     pub external_laser_w: f64,
-    /// Per-SOA bias power, in mW.
-    pub soa_bias_mw: f64,
-    /// EO MR tuning power per active ring, in mW (free-carrier injection).
-    pub mr_tuning_mw: f64,
-    /// VCSEL regeneration power per active channel, in mW.
-    pub vcsel_mw: f64,
+    /// Per-SOA bias power.
+    pub soa_bias_mw: Milliwatts,
+    /// EO MR tuning power per active ring (free-carrier injection).
+    pub mr_tuning_mw: Milliwatts,
+    /// VCSEL regeneration power per active channel.
+    pub vcsel_mw: Milliwatts,
     /// Aggregation-unit SRAM + shift-add logic per bank, in W.
     pub aggregation_logic_w: f64,
     /// E-O-E controller (serdes, caching, command decode), in W.
@@ -195,11 +196,11 @@ pub struct PowerModel {
 impl Default for PowerModel {
     fn default() -> Self {
         Self {
-            mdl_wallplug_mw: 0.6,
+            mdl_wallplug_mw: Milliwatts::new(0.6),
             external_laser_w: 4.0,
-            soa_bias_mw: 12.0,
-            mr_tuning_mw: 0.04,
-            vcsel_mw: 2.5,
+            soa_bias_mw: Milliwatts::new(12.0),
+            mr_tuning_mw: Milliwatts::new(0.04),
+            vcsel_mw: Milliwatts::new(2.5),
             aggregation_logic_w: 0.45,
             controller_w: 5.2,
         }
@@ -357,19 +358,23 @@ impl OpimaConfig {
         {
             let t = &mut cfg.timing;
             t.clock_ghz = doc.f64_or("timing.clock_ghz", t.clock_ghz);
-            t.read_ns = doc.f64_or("timing.read_ns", t.read_ns);
-            t.write_ns = doc.f64_or("timing.write_ns", t.write_ns);
-            t.aggregation_ns = doc.f64_or("timing.aggregation_ns", t.aggregation_ns);
-            t.writeback_overhead_ns =
-                doc.f64_or("timing.writeback_overhead_ns", t.writeback_overhead_ns);
+            t.read_ns = Nanos::new(doc.f64_or("timing.read_ns", t.read_ns.raw()));
+            t.write_ns = Nanos::new(doc.f64_or("timing.write_ns", t.write_ns.raw()));
+            t.aggregation_ns =
+                Nanos::new(doc.f64_or("timing.aggregation_ns", t.aggregation_ns.raw()));
+            t.writeback_overhead_ns = Nanos::new(
+                doc.f64_or("timing.writeback_overhead_ns", t.writeback_overhead_ns.raw()),
+            );
         }
         {
             let p = &mut cfg.power;
-            p.mdl_wallplug_mw = doc.f64_or("power.mdl_wallplug_mw", p.mdl_wallplug_mw);
+            p.mdl_wallplug_mw =
+                Milliwatts::new(doc.f64_or("power.mdl_wallplug_mw", p.mdl_wallplug_mw.raw()));
             p.external_laser_w = doc.f64_or("power.external_laser_w", p.external_laser_w);
-            p.soa_bias_mw = doc.f64_or("power.soa_bias_mw", p.soa_bias_mw);
-            p.mr_tuning_mw = doc.f64_or("power.mr_tuning_mw", p.mr_tuning_mw);
-            p.vcsel_mw = doc.f64_or("power.vcsel_mw", p.vcsel_mw);
+            p.soa_bias_mw = Milliwatts::new(doc.f64_or("power.soa_bias_mw", p.soa_bias_mw.raw()));
+            p.mr_tuning_mw =
+                Milliwatts::new(doc.f64_or("power.mr_tuning_mw", p.mr_tuning_mw.raw()));
+            p.vcsel_mw = Milliwatts::new(doc.f64_or("power.vcsel_mw", p.vcsel_mw.raw()));
             p.aggregation_logic_w = doc.f64_or("power.aggregation_logic_w", p.aggregation_logic_w);
             p.controller_w = doc.f64_or("power.controller_w", p.controller_w);
         }
@@ -451,21 +456,21 @@ impl OpimaConfig {
             "timing".into(),
             BTreeMap::from([
                 ("clock_ghz".into(), V::Float(t.clock_ghz)),
-                ("read_ns".into(), V::Float(t.read_ns)),
-                ("write_ns".into(), V::Float(t.write_ns)),
-                ("aggregation_ns".into(), V::Float(t.aggregation_ns)),
-                ("writeback_overhead_ns".into(), V::Float(t.writeback_overhead_ns)),
+                ("read_ns".into(), V::Float(t.read_ns.raw())),
+                ("write_ns".into(), V::Float(t.write_ns.raw())),
+                ("aggregation_ns".into(), V::Float(t.aggregation_ns.raw())),
+                ("writeback_overhead_ns".into(), V::Float(t.writeback_overhead_ns.raw())),
             ]),
         );
         let p = &self.power;
         sections.insert(
             "power".into(),
             BTreeMap::from([
-                ("mdl_wallplug_mw".into(), V::Float(p.mdl_wallplug_mw)),
+                ("mdl_wallplug_mw".into(), V::Float(p.mdl_wallplug_mw.raw())),
                 ("external_laser_w".into(), V::Float(p.external_laser_w)),
-                ("soa_bias_mw".into(), V::Float(p.soa_bias_mw)),
-                ("mr_tuning_mw".into(), V::Float(p.mr_tuning_mw)),
-                ("vcsel_mw".into(), V::Float(p.vcsel_mw)),
+                ("soa_bias_mw".into(), V::Float(p.soa_bias_mw.raw())),
+                ("mr_tuning_mw".into(), V::Float(p.mr_tuning_mw.raw())),
+                ("vcsel_mw".into(), V::Float(p.vcsel_mw.raw())),
                 ("aggregation_logic_w".into(), V::Float(p.aggregation_logic_w)),
                 ("controller_w".into(), V::Float(p.controller_w)),
             ]),
@@ -561,7 +566,7 @@ mod tests {
     #[test]
     fn write_slower_than_read_enforced() {
         let mut c = OpimaConfig::paper();
-        c.timing.write_ns = 0.1;
+        c.timing.write_ns = Nanos::new(0.1);
         assert!(c.validate().is_err());
     }
 

@@ -89,6 +89,7 @@ use crate::error::{Error, Result};
 use crate::runtime::{Executor, ExecutorSpec, Manifest};
 use crate::util::histogram::Histogram;
 use crate::util::ring::Ring;
+use crate::util::units::{Millijoules, Millis};
 
 /// Longest the batcher sleeps while requests are pending; deadline and
 /// flush handling are late by at most this much.
@@ -151,7 +152,7 @@ pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 pub(crate) struct ModelSink {
     pub batches: u64,
     pub failed: u64,
-    pub energy_mj: f64,
+    pub energy_mj: Millijoules,
 }
 
 /// Aggregates written by the collector thread, read by `stats()`/waiters.
@@ -169,7 +170,7 @@ pub(crate) struct SinkState {
     /// Simulated energy summed once per *executed batch* (zero-padded
     /// partial batches pay full-batch energy, responses are not
     /// double-counted).
-    pub batch_energy_mj: f64,
+    pub batch_energy_mj: Millijoules,
     /// Per-model batch/failure/energy aggregates.
     pub models: HashMap<Model, ModelSink>,
     /// Requests with an outcome (responses + failed).
@@ -193,7 +194,7 @@ impl StatsSink {
                 recent: Ring::new(history),
                 batches: 0,
                 failed: 0,
-                batch_energy_mj: 0.0,
+                batch_energy_mj: Millijoules::ZERO,
                 models: HashMap::new(),
                 completed: 0,
                 last_done: None,
@@ -638,10 +639,9 @@ impl Engine {
         (st.recent.since(from), st.recent.pushed())
     }
 
-    /// Per-batch simulated `(latency_ms, energy_mj)` for a `(model,
-    /// variant)` pair, resolving (and, on first use, building) its
-    /// registry plan.
-    pub fn sim_cost(&self, model: Model, variant: Variant) -> Result<(f64, f64)> {
+    /// Per-batch simulated `(latency, energy)` for a `(model, variant)`
+    /// pair, resolving (and, on first use, building) its registry plan.
+    pub fn sim_cost(&self, model: Model, variant: Variant) -> Result<(Millis, Millijoules)> {
         Ok(self.registry.resolve(model, variant)?.sim_cost())
     }
 
@@ -702,7 +702,7 @@ impl Engine {
                 end,
             )
         };
-        let wall_ms = end.saturating_duration_since(epoch).as_secs_f64() * 1e3;
+        let wall_ms = Millis::from_duration(end.saturating_duration_since(epoch));
         let latency = agg.breakdown();
         let n = latency.total.count;
         // Per-model breakdown in `SERVABLE_MODELS` order, covering every
@@ -726,7 +726,7 @@ impl Engine {
                     .iter()
                     .find(|(sm, _)| *sm == m)
                     .map(|(_, e)| *e)
-                    .unwrap_or(0.0),
+                    .unwrap_or(Millis::ZERO),
                 latency: latb,
             });
         }
@@ -736,15 +736,15 @@ impl Engine {
             failed,
             rejected: self.rejected.load(Ordering::Acquire),
             wall_ms,
-            mean_queue_ms: latency.queue.mean,
-            mean_exec_ms: latency.exec.mean,
-            mean_form_ms: latency.form.mean,
-            p50_total_ms: latency.total.p50,
-            p99_total_ms: latency.total.p99,
+            mean_queue_ms: Millis::new(latency.queue.mean),
+            mean_exec_ms: Millis::new(latency.exec.mean),
+            mean_form_ms: Millis::new(latency.form.mean),
+            p50_total_ms: Millis::new(latency.total.p50),
+            p99_total_ms: Millis::new(latency.total.p99),
             throughput_rps: if n == 0 {
                 0.0
             } else {
-                n as f64 / (wall_ms / 1e3).max(1e-9)
+                n as f64 / (wall_ms.raw() / 1e3).max(1e-9)
             },
             sim_energy_mj,
             sim_makespan_ms,
@@ -926,13 +926,13 @@ mod tests {
         let s = e.stats();
         assert_eq!(s.served, 16);
         assert_eq!(s.batches, 2, "16 requests at batch 8 → 2 full batches");
-        assert!(s.sim_energy_mj > 0.0);
+        assert!(s.sim_energy_mj > Millijoules::ZERO);
         // Streaming percentiles come from the merged worker shards and
         // cover every response.
         assert_eq!(s.latency.total.count, 16);
         assert!(s.latency.total.p50 <= s.latency.total.p99 + 1e-12);
         assert!(s.latency.total.p999 <= s.latency.total.max + 1e-12);
-        assert!((s.latency.queue.mean - s.mean_queue_ms).abs() < 1e-12);
+        assert!((s.latency.queue.mean - s.mean_queue_ms.raw()).abs() < 1e-12);
         // Single-model run: the per-model breakdown is that one model
         // and it carries the global totals.
         assert_eq!(s.per_model.len(), 1);
@@ -940,8 +940,8 @@ mod tests {
         assert_eq!(m.model, Model::LeNet);
         assert_eq!(m.served, 16);
         assert_eq!(m.batches, 2);
-        assert!((m.sim_energy_mj - s.sim_energy_mj).abs() < 1e-12);
-        assert!(m.sim_makespan_ms > 0.0 && m.sim_makespan_ms <= s.sim_makespan_ms);
+        assert!((m.sim_energy_mj - s.sim_energy_mj).abs().raw() < 1e-12);
+        assert!(m.sim_makespan_ms.raw() > 0.0 && m.sim_makespan_ms <= s.sim_makespan_ms);
         // The LeNet plan was compiled exactly once for the whole run.
         assert_eq!(e.registry().builds(), 1);
         e.shutdown().unwrap();

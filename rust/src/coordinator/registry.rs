@@ -45,6 +45,7 @@ use crate::coordinator::request::Variant;
 use crate::error::{Error, Result};
 use crate::mapper::plan::{map_network, CapacityWarning, MappedNetwork, Occupancy};
 use crate::runtime::{ArtifactInfo, Manifest, ProgramHandle};
+use crate::util::units::{Millijoules, Millis};
 
 /// Everything the serving path needs for one `(model, variant)` pair,
 /// compiled once and shared read-only behind an `Arc`.
@@ -83,8 +84,8 @@ impl ModelPlan {
         self.program.output_len() / self.batch.max(1)
     }
 
-    /// Whole-batch simulated `(latency_ms, energy_mj)`.
-    pub fn sim_cost(&self) -> (f64, f64) {
+    /// Whole-batch simulated `(latency, energy)`.
+    pub fn sim_cost(&self) -> (Millis, Millijoules) {
         self.costs
             .get(self.variant.pim_bits())
             .expect("table built with this variant's width")
@@ -333,7 +334,7 @@ mod tests {
         assert_eq!(plan.image_elems(), 144);
         assert_eq!(plan.classes(), 4);
         let (lat, mj) = plan.sim_cost();
-        assert!(lat > 0.0 && mj > 0.0);
+        assert!(lat.raw() > 0.0 && mj.raw() > 0.0);
         assert!(!plan.mapped.works.is_empty());
         assert_eq!(r.builds(), 1);
     }

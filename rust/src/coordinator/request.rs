@@ -22,6 +22,7 @@ use std::time::Instant;
 use crate::cnn::models::Model;
 use crate::error::{Error, Result};
 use crate::util::prng::Rng;
+use crate::util::units::{Millijoules, Millis};
 
 /// A shared, immutable image payload (`Arc<[f32]>`-backed).
 ///
@@ -316,15 +317,15 @@ pub struct InferenceRequest {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SimMetering {
     /// What the OPIMA hardware would have taken for the batch in
-    /// isolation (ms) — the per-batch timeline's makespan.
-    pub hw_latency_ms: f64,
-    /// The batch's simulated window on its instance under co-residency
-    /// (ms): the global contention timeline's start→end, ≥
+    /// isolation — the per-batch timeline's makespan.
+    pub hw_latency_ms: Millis,
+    /// The batch's simulated window on its instance under co-residency:
+    /// the global contention timeline's start→end, ≥
     /// `hw_latency_ms` (equal when the batch had the instance's stage
     /// pools to itself, or with `cross_batch_contention` off).
-    pub hw_contended_ms: f64,
-    /// Dynamic energy of the batch (mJ).
-    pub hw_energy_mj: f64,
+    pub hw_contended_ms: Millis,
+    /// Dynamic energy of the batch.
+    pub hw_energy_mj: Millijoules,
 }
 
 /// One classification response.
@@ -344,14 +345,14 @@ pub struct InferenceResponse {
     pub logits: LogitsView,
     pub predicted: usize,
     /// Wall time from arrival to the start of the batch's execution
-    /// (batcher wait + dispatch queueing, ms).
-    pub queue_ms: f64,
+    /// (batcher wait + dispatch queueing).
+    pub queue_ms: Millis,
     /// Wall time of the execution of the whole batch that carried this
-    /// request (ms) — not an amortized per-request share.
-    pub exec_ms: f64,
+    /// request — not an amortized per-request share.
+    pub exec_ms: Millis,
     /// Wall time from arrival to batch formation (dynamic-batcher
-    /// latency, ms); the remainder of `queue_ms` is dispatch queueing.
-    pub form_ms: f64,
+    /// latency); the remainder of `queue_ms` is dispatch queueing.
+    pub form_ms: Millis,
     /// Simulated OPIMA hardware cost of the batch that carried this
     /// request (full-batch numbers, not per-request shares).
     pub sim: SimMetering,
@@ -366,15 +367,21 @@ pub struct InferenceResponse {
 }
 
 impl InferenceResponse {
-    /// Wall time from arrival to completion (ms).
-    pub fn total_ms(&self) -> f64 {
+    /// Wall time from arrival to completion.
+    pub fn total_ms(&self) -> Millis {
         self.queue_ms + self.exec_ms
     }
 
-    /// The `(total, queue, exec, form)` latency sample (ms) this
-    /// response contributes to the engine's streaming histograms.
+    /// The `(total, queue, exec, form)` latency sample (raw ms scalars)
+    /// this response contributes to the engine's streaming histograms —
+    /// the histogram substrate works on bare f64 samples.
     pub fn latency_sample(&self) -> (f64, f64, f64, f64) {
-        (self.total_ms(), self.queue_ms, self.exec_ms, self.form_ms)
+        (
+            self.total_ms().raw(),
+            self.queue_ms.raw(),
+            self.exec_ms.raw(),
+            self.form_ms.raw(),
+        )
     }
 }
 
@@ -453,15 +460,15 @@ mod tests {
             model: Model::LeNet,
             logits: vec![0.0; 4].into(),
             predicted: 0,
-            queue_ms: 1.5,
-            exec_ms: 2.0,
-            form_ms: 0.5,
+            queue_ms: crate::util::units::ms(1.5),
+            exec_ms: crate::util::units::ms(2.0),
+            form_ms: crate::util::units::ms(0.5),
             sim: SimMetering::default(),
             instance: 0,
             worker: 0,
             batch_seq: 0,
         };
-        assert!((r.total_ms() - 3.5).abs() < 1e-12);
+        assert!((r.total_ms() - crate::util::units::ms(3.5)).abs().raw() < 1e-12);
         assert!(r.form_ms <= r.queue_ms);
     }
 

@@ -43,12 +43,9 @@ use std::collections::BTreeMap;
 use crate::analyzer::contention::{BatchStream, GlobalTimeline};
 use crate::cnn::models::Model;
 use crate::config::PipelineParams;
+use crate::util::units::{Millis, Nanos};
 
 pub use crate::analyzer::contention::MAX_RESERVATIONS_PER_INSTANCE;
-
-/// The router's clock is milliseconds (serving wall clock); the global
-/// engine runs in nanoseconds (the timeline's domain).
-const NS_PER_MS: f64 = 1e6;
 
 /// Routes batches onto simulated instances, priced by the global
 /// contention timeline.
@@ -61,9 +58,9 @@ pub struct Router {
     /// Whether [`Router::dispatch_batch`] admits into the shared stage
     /// pools (honest) or books occupancy only (optimistic).
     contended: bool,
-    /// Latest reservation end (ms) per tagging model — that model's
+    /// Latest reservation end per tagging model — that model's
     /// simulated makespan. `BTreeMap` so iteration is model-sorted.
-    model_end: BTreeMap<Model, f64>,
+    model_end: BTreeMap<Model, Millis>,
 }
 
 impl Router {
@@ -112,7 +109,7 @@ impl Router {
     /// Book a whole instance exclusively for a batch arriving at
     /// `now_ms` with simulated duration `dur_ms`. Returns (instance,
     /// start_ms, end_ms) and commits the reservation.
-    pub fn dispatch(&mut self, now_ms: f64, dur_ms: f64) -> (usize, f64, f64) {
+    pub fn dispatch(&mut self, now_ms: Millis, dur_ms: Millis) -> (usize, Millis, Millis) {
         self.place(None, self.capacity(), now_ms, dur_ms)
     }
 
@@ -129,9 +126,9 @@ impl Router {
         &mut self,
         model: Model,
         subarrays: usize,
-        now_ms: f64,
-        dur_ms: f64,
-    ) -> (usize, f64, f64) {
+        now_ms: Millis,
+        dur_ms: Millis,
+    ) -> (usize, Millis, Millis) {
         self.place(Some(model), subarrays, now_ms, dur_ms)
     }
 
@@ -147,16 +144,19 @@ impl Router {
         &mut self,
         model: Model,
         subarrays: usize,
-        now_ms: f64,
+        now_ms: Millis,
         stream: BatchStream<'_>,
-        isolated_ms: f64,
-    ) -> (usize, f64, f64) {
+        isolated_ms: Millis,
+    ) -> (usize, Millis, Millis) {
         if !self.contended {
             return self.place(Some(model), subarrays, now_ms, isolated_ms);
         }
         let fp = subarrays.clamp(1, self.capacity());
-        let base_ns = self.timeline.advance(now_ms * NS_PER_MS);
-        let (idx, start_ns) = self.choose(fp, base_ns, isolated_ms * NS_PER_MS);
+        // The router's clock is milliseconds (serving wall clock); the
+        // global engine runs in nanoseconds. Convert exactly once here,
+        // at admission.
+        let base_ns = self.timeline.advance(now_ms.to_nanos());
+        let (idx, start_ns) = self.choose(fp, base_ns, isolated_ms.to_nanos());
         let adm = self.timeline.admit(idx, fp, start_ns, stream, None);
         self.finish(Some(model), idx, adm.start_ms(), adm.end_ms())
     }
@@ -166,9 +166,9 @@ impl Router {
         &mut self,
         model: Option<Model>,
         subarrays: usize,
-        now_ms: f64,
-        dur_ms: f64,
-    ) -> (usize, f64, f64) {
+        now_ms: Millis,
+        dur_ms: Millis,
+    ) -> (usize, Millis, Millis) {
         let fp = subarrays.clamp(1, self.capacity());
         // Place against the frontier, not the caller's clock: workers
         // race, and a stale `now_ms` below the latest retirement point
@@ -176,17 +176,17 @@ impl Router {
         // (overbooking the instance). Clamping forward keeps the
         // never-undercount invariant; a placement never starts before
         // the latest observed dispatch clock anyway.
-        let base_ns = self.timeline.advance(now_ms * NS_PER_MS);
-        let dur_ns = dur_ms * NS_PER_MS;
+        let base_ns = self.timeline.advance(now_ms.to_nanos());
+        let dur_ns = dur_ms.to_nanos();
         let (idx, start_ns) = self.choose(fp, base_ns, dur_ns);
         let end_ns = self.timeline.occupy(idx, fp, start_ns, dur_ns);
-        self.finish(model, idx, start_ns / NS_PER_MS, end_ns / NS_PER_MS)
+        self.finish(model, idx, start_ns.to_millis(), end_ns.to_millis())
     }
 
     /// Earliest feasible start wins; ties (e.g. small footprints that
     /// fit everywhere immediately) break toward the least-dispatched
     /// instance so load still spreads across modules.
-    fn choose(&self, fp: usize, base_ns: f64, dur_ns: f64) -> (usize, f64) {
+    fn choose(&self, fp: usize, base_ns: Nanos, dur_ns: Nanos) -> (usize, Nanos) {
         (0..self.instances())
             .map(|i| (i, self.timeline.earliest_start(i, fp, base_ns, dur_ns)))
             .min_by(|a, b| {
@@ -200,12 +200,12 @@ impl Router {
         &mut self,
         model: Option<Model>,
         idx: usize,
-        start_ms: f64,
-        end_ms: f64,
-    ) -> (usize, f64, f64) {
+        start_ms: Millis,
+        end_ms: Millis,
+    ) -> (usize, Millis, Millis) {
         self.dispatched[idx] += 1;
         if let Some(m) = model {
-            let e = self.model_end.entry(m).or_insert(0.0);
+            let e = self.model_end.entry(m).or_insert(Millis::ZERO);
             *e = e.max(end_ms);
         }
         (idx, start_ms, end_ms)
@@ -217,19 +217,19 @@ impl Router {
     }
 
     /// Simulated makespan across instances.
-    pub fn makespan_ms(&self) -> f64 {
-        self.timeline.makespan_ns() / NS_PER_MS
+    pub fn makespan_ms(&self) -> Millis {
+        self.timeline.makespan_ns().to_millis()
     }
 
     /// Simulated makespan of one model's tagged reservations (0 when the
     /// model never dispatched).
-    pub fn model_makespan_ms(&self, model: Model) -> f64 {
-        self.model_end.get(&model).copied().unwrap_or(0.0)
+    pub fn model_makespan_ms(&self, model: Model) -> Millis {
+        self.model_end.get(&model).copied().unwrap_or(Millis::ZERO)
     }
 
     /// All per-model makespans recorded so far, sorted by model
     /// (declaration order), so reports built from this are stable.
-    pub fn model_makespans(&self) -> Vec<(Model, f64)> {
+    pub fn model_makespans(&self) -> Vec<(Model, Millis)> {
         self.model_end.iter().map(|(m, e)| (*m, *e)).collect()
     }
 }
@@ -238,13 +238,14 @@ impl Router {
 mod tests {
     use super::*;
     use crate::pim::scheduler::LayerCost;
+    use crate::util::units::{ms, ns};
 
     fn lc(mac_ns: f64, aggregation_ns: f64, writeback_ns: f64) -> LayerCost {
         LayerCost {
-            processing_ns: mac_ns + aggregation_ns,
-            mac_ns,
-            aggregation_ns,
-            writeback_ns,
+            processing_ns: ns(mac_ns + aggregation_ns),
+            mac_ns: ns(mac_ns),
+            aggregation_ns: ns(aggregation_ns),
+            writeback_ns: ns(writeback_ns),
             ..LayerCost::default()
         }
     }
@@ -252,34 +253,34 @@ mod tests {
     #[test]
     fn balances_across_instances() {
         let mut r = Router::new(2);
-        let (i0, s0, _) = r.dispatch(0.0, 10.0);
-        let (i1, s1, _) = r.dispatch(0.0, 10.0);
+        let (i0, s0, _) = r.dispatch(ms(0.0), ms(10.0));
+        let (i1, s1, _) = r.dispatch(ms(0.0), ms(10.0));
         assert_ne!(i0, i1, "second batch goes to the idle instance");
-        assert_eq!(s0, 0.0);
-        assert_eq!(s1, 0.0);
+        assert_eq!(s0, Millis::ZERO);
+        assert_eq!(s1, Millis::ZERO);
         // Third batch queues behind the earlier-finishing one.
-        let (_, s2, e2) = r.dispatch(0.0, 5.0);
-        assert_eq!(s2, 10.0);
-        assert_eq!(e2, 15.0);
+        let (_, s2, e2) = r.dispatch(ms(0.0), ms(5.0));
+        assert_eq!(s2, ms(10.0));
+        assert_eq!(e2, ms(15.0));
     }
 
     #[test]
     fn load_counts() {
         let mut r = Router::new(3);
         for _ in 0..9 {
-            r.dispatch(0.0, 1.0);
+            r.dispatch(ms(0.0), ms(1.0));
         }
         assert_eq!(r.load().iter().sum::<u64>(), 9);
         assert!(r.load().iter().all(|&c| c == 3), "{:?}", r.load());
-        assert!((r.makespan_ms() - 3.0).abs() < 1e-12);
+        assert!((r.makespan_ms() - ms(3.0)).abs().raw() < 1e-12);
     }
 
     #[test]
     fn respects_arrival_time() {
         let mut r = Router::new(1);
-        let (_, s, e) = r.dispatch(100.0, 5.0);
-        assert_eq!(s, 100.0);
-        assert_eq!(e, 105.0);
+        let (_, s, e) = r.dispatch(ms(100.0), ms(5.0));
+        assert_eq!(s, ms(100.0));
+        assert_eq!(e, ms(105.0));
     }
 
     #[test]
@@ -288,15 +289,15 @@ mod tests {
         // behaviour exactly.
         let mut r = Router::with_capacity(1, 16_384);
         let cap = r.capacity();
-        r.dispatch_for(Model::LeNet, cap, 0.0, 10.0);
-        r.dispatch_for(Model::Vgg16, cap, 0.0, 30.0);
-        r.dispatch_for(Model::LeNet, cap, 0.0, 10.0);
+        r.dispatch_for(Model::LeNet, cap, ms(0.0), ms(10.0));
+        r.dispatch_for(Model::Vgg16, cap, ms(0.0), ms(30.0));
+        r.dispatch_for(Model::LeNet, cap, ms(0.0), ms(10.0));
         // Serialized on one instance: lenet [0,10], vgg [10,40],
         // lenet [40,50].
-        assert_eq!(r.model_makespan_ms(Model::LeNet), 50.0);
-        assert_eq!(r.model_makespan_ms(Model::Vgg16), 40.0);
-        assert_eq!(r.makespan_ms(), 50.0);
-        assert_eq!(r.model_makespan_ms(Model::MobileNet), 0.0);
+        assert_eq!(r.model_makespan_ms(Model::LeNet), ms(50.0));
+        assert_eq!(r.model_makespan_ms(Model::Vgg16), ms(40.0));
+        assert_eq!(r.makespan_ms(), ms(50.0));
+        assert_eq!(r.model_makespan_ms(Model::MobileNet), Millis::ZERO);
         assert_eq!(r.model_makespans().len(), 2);
     }
 
@@ -305,32 +306,32 @@ mod tests {
         // Two models that together fit in one instance overlap in
         // simulated time instead of serializing.
         let mut r = Router::with_capacity(1, 1000);
-        let (_, s0, _) = r.dispatch_for(Model::LeNet, 100, 0.0, 10.0);
-        let (_, s1, _) = r.dispatch_for(Model::MobileNet, 400, 0.0, 20.0);
-        assert_eq!(s0, 0.0);
-        assert_eq!(s1, 0.0, "fits alongside — co-resident");
-        assert_eq!(r.makespan_ms(), 20.0);
+        let (_, s0, _) = r.dispatch_for(Model::LeNet, 100, ms(0.0), ms(10.0));
+        let (_, s1, _) = r.dispatch_for(Model::MobileNet, 400, ms(0.0), ms(20.0));
+        assert_eq!(s0, Millis::ZERO);
+        assert_eq!(s1, Millis::ZERO, "fits alongside — co-resident");
+        assert_eq!(r.makespan_ms(), ms(20.0));
         // A third model that does NOT fit (100+400+600 > 1000) queues
         // until enough occupancy frees: at t=10 lenet releases 100.
-        let (_, s2, e2) = r.dispatch_for(Model::Vgg16, 600, 0.0, 5.0);
-        assert_eq!(s2, 10.0);
-        assert_eq!(e2, 15.0);
+        let (_, s2, e2) = r.dispatch_for(Model::Vgg16, 600, ms(0.0), ms(5.0));
+        assert_eq!(s2, ms(10.0));
+        assert_eq!(e2, ms(15.0));
     }
 
     #[test]
     fn oversized_footprint_clamps_to_exclusive() {
         let mut r = Router::with_capacity(1, 100);
-        r.dispatch_for(Model::Vgg16, 10_000, 0.0, 10.0);
-        let (_, s, _) = r.dispatch_for(Model::LeNet, 1, 0.0, 1.0);
-        assert_eq!(s, 10.0, "a clamped full-capacity batch excludes others");
+        r.dispatch_for(Model::Vgg16, 10_000, ms(0.0), ms(10.0));
+        let (_, s, _) = r.dispatch_for(Model::LeNet, 1, ms(0.0), ms(1.0));
+        assert_eq!(s, ms(10.0), "a clamped full-capacity batch excludes others");
     }
 
     #[test]
     fn model_makespans_sorted_by_model() {
         let mut r = Router::with_capacity(2, 100);
-        r.dispatch_for(Model::Vgg16, 10, 0.0, 5.0);
-        r.dispatch_for(Model::LeNet, 10, 0.0, 5.0);
-        r.dispatch_for(Model::MobileNet, 10, 0.0, 5.0);
+        r.dispatch_for(Model::Vgg16, 10, ms(0.0), ms(5.0));
+        r.dispatch_for(Model::LeNet, 10, ms(0.0), ms(5.0));
+        r.dispatch_for(Model::MobileNet, 10, ms(0.0), ms(5.0));
         let spans = r.model_makespans();
         let models: Vec<Model> = spans.iter().map(|(m, _)| *m).collect();
         assert_eq!(models, vec![Model::LeNet, Model::MobileNet, Model::Vgg16]);
@@ -342,10 +343,10 @@ mod tests {
         // frontier; placement must clamp forward so pruned occupancy
         // can never be overbooked.
         let mut r = Router::with_capacity(1, 100);
-        r.dispatch_for(Model::LeNet, 60, 103.0, 5.0);
-        let (_, s, _) = r.dispatch_for(Model::Vgg16, 60, 100.0, 5.0);
-        assert!(s >= 103.0, "stale now started before the frontier: {s}");
-        assert_eq!(s, 108.0, "60+60 > 100: serialized behind the first");
+        r.dispatch_for(Model::LeNet, 60, ms(103.0), ms(5.0));
+        let (_, s, _) = r.dispatch_for(Model::Vgg16, 60, ms(100.0), ms(5.0));
+        assert!(s >= ms(103.0), "stale now started before the frontier: {s}");
+        assert_eq!(s, ms(108.0), "60+60 > 100: serialized behind the first");
     }
 
     #[test]
@@ -355,27 +356,27 @@ mod tests {
         // ever expires. The ledger must compact instead of growing, and
         // placements must stay feasible and non-decreasing per instance.
         let mut r = Router::with_capacity(1, 100);
-        let mut last_start = 0.0f64;
+        let mut last_start = Millis::ZERO;
         for _ in 0..2000 {
             // Footprint 60: no two fit together, so every batch queues.
-            let (_, s, _) = r.dispatch_for(Model::Vgg16, 60, 0.0, 5.0);
+            let (_, s, _) = r.dispatch_for(Model::Vgg16, 60, ms(0.0), ms(5.0));
             assert!(s >= last_start, "starts must not regress");
             last_start = s;
         }
         assert!(r.timeline().live_reservations(0) <= MAX_RESERVATIONS_PER_INSTANCE);
         // Work is conserved: 2000 serialized 5 ms batches.
-        assert!((r.makespan_ms() - 2000.0 * 5.0).abs() < 1e-6);
+        assert!((r.makespan_ms() - ms(2000.0 * 5.0)).abs().raw() < 1e-6);
     }
 
     #[test]
     fn picks_instance_with_earliest_feasible_start() {
         let mut r = Router::with_capacity(2, 100);
         // Saturate instance 0 until t=50; instance 1 until t=10.
-        r.dispatch_for(Model::Vgg16, 100, 0.0, 50.0);
-        r.dispatch_for(Model::LeNet, 100, 0.0, 10.0);
-        let (i, s, _) = r.dispatch_for(Model::MobileNet, 80, 0.0, 5.0);
+        r.dispatch_for(Model::Vgg16, 100, ms(0.0), ms(50.0));
+        r.dispatch_for(Model::LeNet, 100, ms(0.0), ms(10.0));
+        let (i, s, _) = r.dispatch_for(Model::MobileNet, 80, ms(0.0), ms(5.0));
         assert_eq!(i, 1);
-        assert_eq!(s, 10.0);
+        assert_eq!(s, ms(10.0));
     }
 
     #[test]
@@ -390,22 +391,22 @@ mod tests {
         // Isolated duration of that stream (drained single-instance
         // engine at t = 0).
         let iso_ms = GlobalTimeline::new(1, 100, &pipe)
-            .admit(0, 10, 0.0, stream, None)
+            .admit(0, 10, Nanos::ZERO, stream, None)
             .makespan_ns
-            / 1e6;
+            .to_millis();
         let mut r = Router::with_pools(1, 100, &pipe);
         // Alone in flight: bit-exact with the isolated timeline.
-        let (_, s0, e0) = r.dispatch_batch(Model::LeNet, 10, 0.0, stream, iso_ms);
-        assert_eq!(s0, 0.0);
+        let (_, s0, e0) = r.dispatch_batch(Model::LeNet, 10, ms(0.0), stream, iso_ms);
+        assert_eq!(s0, Millis::ZERO);
         assert_eq!(e0, iso_ms);
         // Co-resident (footprints fit together): the second batch
         // shares the writeback channel, so its window must stretch
         // beyond the isolated estimate — the honest makespan.
-        let (_, s1, e1) = r.dispatch_batch(Model::MobileNet, 10, 0.0, stream, iso_ms);
-        assert_eq!(s1, 0.0, "occupancy still co-resides");
+        let (_, s1, e1) = r.dispatch_batch(Model::MobileNet, 10, ms(0.0), stream, iso_ms);
+        assert_eq!(s1, Millis::ZERO, "occupancy still co-resides");
         assert!(e1 - s1 > iso_ms, "no contention priced: {} vs {iso_ms}", e1 - s1);
         // Bounded by full serialization.
-        assert!(r.makespan_ms() <= 2.0 * iso_ms + 1e-9);
+        assert!(r.makespan_ms() <= 2.0 * iso_ms + ms(1e-9));
         assert!(r.model_makespan_ms(Model::MobileNet) >= r.model_makespan_ms(Model::LeNet));
     }
 
@@ -425,9 +426,9 @@ mod tests {
         let mut optimistic = Router::with_pools(1, 100, &pipe);
         let mut legacy = Router::with_pools(1, 100, &pipe);
         for _ in 0..3 {
-            optimistic.dispatch_batch(Model::LeNet, 10, 0.0, stream, 2.5);
-            legacy.dispatch_for(Model::LeNet, 10, 0.0, 2.5);
-            honest.dispatch_batch(Model::LeNet, 10, 0.0, stream, 2.5);
+            optimistic.dispatch_batch(Model::LeNet, 10, ms(0.0), stream, ms(2.5));
+            legacy.dispatch_for(Model::LeNet, 10, ms(0.0), ms(2.5));
+            honest.dispatch_batch(Model::LeNet, 10, ms(0.0), stream, ms(2.5));
         }
         assert_eq!(optimistic.makespan_ms(), legacy.makespan_ms());
         assert!(

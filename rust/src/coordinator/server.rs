@@ -29,6 +29,7 @@ use crate::coordinator::request::{InferenceRequest, InferenceResponse, Variant};
 use crate::error::Result;
 use crate::runtime::{ExecutorSpec, Manifest};
 use crate::util::histogram::Summary;
+use crate::util::units::{Millijoules, Millis};
 
 /// Server configuration (a facade over [`EngineConfig`]).
 #[derive(Debug, Clone)]
@@ -91,11 +92,11 @@ pub struct ModelServingStats {
     pub batches: u64,
     /// Requests lost to failed batch executions of this model.
     pub failed: u64,
-    /// Simulated hardware energy of this model's batches (mJ).
-    pub sim_energy_mj: f64,
+    /// Simulated hardware energy of this model's batches.
+    pub sim_energy_mj: Millijoules,
     /// Simulated hardware time at which this model's last batch finished
-    /// (ms) — its tagged makespan on the shared instances.
-    pub sim_makespan_ms: f64,
+    /// — its tagged makespan on the shared instances.
+    pub sim_makespan_ms: Millis,
     /// This model's streaming latency breakdown.
     pub latency: LatencyBreakdown,
 }
@@ -110,19 +111,19 @@ pub struct ServerStats {
     pub failed: u64,
     /// Submissions rejected with backpressure.
     pub rejected: u64,
-    pub wall_ms: f64,
-    /// Mean wall time from arrival to batch-execution start (ms).
-    pub mean_queue_ms: f64,
-    /// Mean whole-batch execution wall time over responses (ms).
-    pub mean_exec_ms: f64,
-    /// Mean wall time from arrival to batch formation (ms).
-    pub mean_form_ms: f64,
+    pub wall_ms: Millis,
+    /// Mean wall time from arrival to batch-execution start.
+    pub mean_queue_ms: Millis,
+    /// Mean whole-batch execution wall time over responses.
+    pub mean_exec_ms: Millis,
+    /// Mean wall time from arrival to batch formation.
+    pub mean_form_ms: Millis,
     /// Convenience copy of `latency.total.p50`, kept for API
     /// compatibility (the CLI prints the `latency` table instead).
-    pub p50_total_ms: f64,
+    pub p50_total_ms: Millis,
     /// Convenience copy of `latency.total.p99`, kept for API
     /// compatibility (the CLI prints the `latency` table instead).
-    pub p99_total_ms: f64,
+    pub p99_total_ms: Millis,
     /// Full streaming percentile breakdown (total/queue/exec/form).
     pub latency: LatencyBreakdown,
     /// Per-model breakdown (in
@@ -131,11 +132,11 @@ pub struct ServerStats {
     /// and latency counts each sum to the global figures.
     pub per_model: Vec<ModelServingStats>,
     pub throughput_rps: f64,
-    /// Simulated hardware energy, summed once per executed batch (mJ) —
+    /// Simulated hardware energy, summed once per executed batch —
     /// zero-padded partial batches pay full-batch energy exactly once.
-    pub sim_energy_mj: f64,
-    /// Simulated hardware makespan (ms) — what the OPIMA modules spent.
-    pub sim_makespan_ms: f64,
+    pub sim_energy_mj: Millijoules,
+    /// Simulated hardware makespan — what the OPIMA modules spent.
+    pub sim_makespan_ms: Millis,
 }
 
 /// The OPIMA inference server (synchronous facade).
@@ -229,7 +230,7 @@ impl Server {
         self.engine.batch_size()
     }
 
-    fn sim_cost(&self, v: Variant) -> (f64, f64) {
+    fn sim_cost(&self, v: Variant) -> (Millis, Millijoules) {
         self.engine
             .sim_cost(Model::LeNet, v)
             .expect("lenet plans build from the synthetic manifest")
@@ -291,7 +292,7 @@ mod tests {
         let stats = s.stats();
         assert_eq!(stats.served, 2 * bsz as u64);
         assert_eq!(stats.batches, 2);
-        assert!(stats.sim_energy_mj > 0.0);
+        assert!(stats.sim_energy_mj > Millijoules::ZERO);
         assert!(stats.throughput_rps > 0.0);
         // The streaming breakdown covers every response with ordered
         // percentiles.
@@ -357,7 +358,7 @@ mod tests {
         let stats = s.stats();
         assert_eq!(stats.batches, 1);
         assert!(
-            (stats.sim_energy_mj - batch_mj).abs() < 1e-12 * batch_mj.max(1.0),
+            (stats.sim_energy_mj - batch_mj).abs().raw() < 1e-12 * batch_mj.raw().max(1.0),
             "partial batch energy {} != full batch {}",
             stats.sim_energy_mj,
             batch_mj
@@ -374,10 +375,12 @@ mod tests {
         }
         s.flush().unwrap();
         for r in &s.drain_responses() {
-            assert!(r.queue_ms >= 0.0 && r.exec_ms >= 0.0 && r.form_ms >= 0.0);
+            assert!(
+                r.queue_ms >= Millis::ZERO && r.exec_ms >= Millis::ZERO && r.form_ms >= Millis::ZERO
+            );
             // The batch formed before it started executing.
             assert!(
-                r.form_ms <= r.queue_ms + 1e-9,
+                r.form_ms <= r.queue_ms + crate::util::units::ms(1e-9),
                 "form {} > queue {}",
                 r.form_ms,
                 r.queue_ms
@@ -385,7 +388,7 @@ mod tests {
             assert!(r.total_ms() >= r.exec_ms);
         }
         let stats = s.stats();
-        assert!(stats.mean_form_ms <= stats.mean_queue_ms + 1e-9);
+        assert!(stats.mean_form_ms <= stats.mean_queue_ms + crate::util::units::ms(1e-9));
     }
 
     #[test]
@@ -444,14 +447,20 @@ mod tests {
         assert_eq!(stats.per_model.len(), 2);
         let served_sum: u64 = stats.per_model.iter().map(|m| m.served).sum();
         let batch_sum: u64 = stats.per_model.iter().map(|m| m.batches).sum();
-        let energy_sum: f64 = stats.per_model.iter().map(|m| m.sim_energy_mj).sum();
+        let energy_sum: Millijoules = stats.per_model.iter().map(|m| m.sim_energy_mj).sum();
         assert_eq!(served_sum, stats.served);
         assert_eq!(batch_sum, stats.batches);
-        assert!((energy_sum - stats.sim_energy_mj).abs() < 1e-9 * stats.sim_energy_mj.max(1.0));
+        assert!(
+            (energy_sum - stats.sim_energy_mj).abs().raw()
+                < 1e-9 * stats.sim_energy_mj.raw().max(1.0)
+        );
         // MobileNet is the heavier model on the simulated hardware.
         let find = |m: Model| stats.per_model.iter().find(|x| x.model == m).unwrap();
         assert!(find(Model::MobileNet).sim_energy_mj > find(Model::LeNet).sim_energy_mj);
-        assert!(find(Model::MobileNet).sim_makespan_ms <= stats.sim_makespan_ms + 1e-12);
+        assert!(
+            find(Model::MobileNet).sim_makespan_ms
+                <= stats.sim_makespan_ms + crate::util::units::ms(1e-12)
+        );
     }
 
     #[test]

@@ -39,6 +39,7 @@ use crate::coordinator::registry::{ModelPlan, PlanRegistry};
 use crate::coordinator::request::{InferenceResponse, LogitsPool, LogitsView, SimMetering, Variant};
 use crate::coordinator::router::Router;
 use crate::runtime::Executor;
+use crate::util::units::{Millijoules, Millis};
 
 /// Everything one worker thread owns or shares.
 pub(crate) struct WorkerCtx {
@@ -77,9 +78,9 @@ pub(crate) struct BatchOutcome {
     /// Requests whose batch failed to execute (no responses for them).
     pub failed: u64,
     pub error: Option<String>,
-    /// Full-batch simulated energy (mJ) — counted once per executed
-    /// batch, so zero-padded partial batches still pay full-batch cost.
-    pub sim_energy_mj: f64,
+    /// Full-batch simulated energy — counted once per executed batch,
+    /// so zero-padded partial batches still pay full-batch cost.
+    pub sim_energy_mj: Millijoules,
 }
 
 /// Pull batches until the channel closes (engine shutdown).
@@ -100,7 +101,7 @@ fn fail(batch: &Batch, error: String) -> BatchOutcome {
         responses: Vec::new(),
         failed: batch.requests.len() as u64,
         error: Some(error),
-        sim_energy_mj: 0.0,
+        sim_energy_mj: Millijoules::ZERO,
     }
 }
 
@@ -157,7 +158,7 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
             return fail(&batch, e.to_string());
         }
     }
-    let exec_ms = exec_start.elapsed().as_secs_f64() * 1e3;
+    let exec_ms = Millis::from_duration(exec_start.elapsed());
     let classes = plan.classes();
 
     // Simulated hardware metering: place this *real* batch at the
@@ -169,7 +170,7 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
     // writeback channels instead of optimistically sharing them.
     let (sim_lat, sim_mj) = plan.sim_cost();
     let epoch = *lock(&ctx.epoch);
-    let now_ms = exec_start.saturating_duration_since(epoch).as_secs_f64() * 1e3;
+    let now_ms = Millis::from_duration(exec_start.saturating_duration_since(epoch));
     let (instance, sim_start, sim_end) = lock(&ctx.router).dispatch_batch(
         batch.model,
         plan.occupancy().subarrays_used,
@@ -192,13 +193,9 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
             model: batch.model,
             logits: row,
             predicted,
-            queue_ms: exec_start.saturating_duration_since(r.arrival).as_secs_f64() * 1e3,
+            queue_ms: Millis::from_duration(exec_start.saturating_duration_since(r.arrival)),
             exec_ms,
-            form_ms: batch
-                .formed_at
-                .saturating_duration_since(r.arrival)
-                .as_secs_f64()
-                * 1e3,
+            form_ms: Millis::from_duration(batch.formed_at.saturating_duration_since(r.arrival)),
             sim: SimMetering {
                 hw_latency_ms: sim_lat,
                 hw_contended_ms: sim_end - sim_start,

@@ -61,8 +61,15 @@
 //!   without the XLA native library or AOT artifacts.
 //! - [`util`] — dependency-free substrates: JSON/TOML-lite parsing, the
 //!   deterministic PRNG (unbiased bounded sampling), the bench harness,
-//!   and the shared streaming histogram + bounded ring behind both the
-//!   serving stats and the offline analyzer percentiles.
+//!   the compile-time units layer ([`util::units`]: `Nanos`/`Millis`/
+//!   `Millijoules`/`Milliwatts`/`Bytes` newtypes that make ns/ms/mJ
+//!   confusion a type error; see DESIGN.md §4), and the shared streaming
+//!   histogram + bounded ring behind both the serving stats and the
+//!   offline analyzer percentiles.
+
+// The whole stack is a software model — there is no FFI, no hand-rolled
+// pointer work, and nothing here should ever need `unsafe`.
+#![deny(unsafe_code)]
 
 // modules added incrementally below
 pub mod analyzer;

@@ -33,6 +33,7 @@ use opima::phys::{crossing, dse};
 use opima::pim::group;
 use opima::runtime::Manifest;
 use opima::util::prng::Rng;
+use opima::util::units::Millis;
 use opima::OpimaConfig;
 
 fn main() {
@@ -330,8 +331,8 @@ fn cmd_analyze_contended(
         let mut honest = Router::with_pools(1, capacity, &honest_pipe);
         let mut optimistic = Router::with_pools(1, capacity, &optimistic_pipe);
         for _ in 0..streams {
-            honest.dispatch_batch(*m, fp, 0.0, stream, iso.makespan_ms());
-            optimistic.dispatch_batch(*m, fp, 0.0, stream, iso.makespan_ms());
+            honest.dispatch_batch(*m, fp, Millis::ZERO, stream, iso.makespan_ms());
+            optimistic.dispatch_batch(*m, fp, Millis::ZERO, stream, iso.makespan_ms());
         }
         rows.push(report::ContentionRow {
             name: m.name().to_string(),
@@ -424,8 +425,8 @@ fn cmd_memtest(cfg: &OpimaConfig, args: &Args) -> Result<()> {
     println!("memtest OK: {ops} write/read pairs, {verified} bytes verified");
     println!(
         "  simulated: {:.1} µs busy, {:.2} µJ ({:.1} pJ/B write, {:.1} pJ/B read)",
-        s.busy_ns / 1e3,
-        s.total_energy_pj() / 1e6,
+        s.busy_ns.raw() / 1e3,
+        s.total_energy_pj() / 1e6, // pJ → µJ display scale // lint: allow(time-literal)
         s.write_energy_pj / s.bytes_written as f64,
         s.read_energy_pj / s.bytes_read as f64
     );
@@ -500,7 +501,8 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
     );
     println!(
         "  wall: {:.1} ms   throughput: {:.0} req/s",
-        s.wall_ms, s.throughput_rps
+        s.wall_ms.raw(),
+        s.throughput_rps
     );
     print!(
         "{}",
@@ -513,7 +515,8 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
     );
     println!(
         "  simulated OPIMA hardware: {:.2} ms makespan, {:.2} mJ dynamic energy",
-        s.sim_makespan_ms, s.sim_energy_mj
+        s.sim_makespan_ms.raw(),
+        s.sim_energy_mj.raw()
     );
     println!("\nper-model breakdown:");
     println!("| model | served | batches | failed | p50 ms | p99 ms | energy mJ | makespan ms |");
@@ -527,8 +530,8 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
             m.failed,
             m.latency.total.p50,
             m.latency.total.p99,
-            m.sim_energy_mj,
-            m.sim_makespan_ms
+            m.sim_energy_mj.raw(),
+            m.sim_makespan_ms.raw()
         );
     }
     let per_model_sum: u64 = s.per_model.iter().map(|m| m.served).sum();

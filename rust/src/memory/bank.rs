@@ -10,14 +10,15 @@
 use crate::config::Geometry;
 use crate::error::{Error, Result};
 use crate::memory::timing::GST_SWITCH_RECONFIG_NS;
+use crate::util::units::Nanos;
 
 /// Per-bank dynamic state.
 #[derive(Debug, Clone)]
 pub struct BankState {
     /// Which subarray row the GST switch column currently targets.
     pub routed_row: Option<usize>,
-    /// Time (ns) until which the bank datapath is busy.
-    pub busy_until_ns: f64,
+    /// Time until which the bank datapath is busy.
+    pub busy_until_ns: Nanos,
     /// Subarray rows currently reserved by the PIM engine.
     pub pim_reserved: Vec<bool>,
     subarray_rows: usize,
@@ -27,7 +28,7 @@ impl BankState {
     pub fn new(geom: &Geometry) -> Self {
         Self {
             routed_row: None,
-            busy_until_ns: 0.0,
+            busy_until_ns: Nanos::ZERO,
             pim_reserved: vec![false; geom.subarray_rows],
             subarray_rows: geom.subarray_rows,
         }
@@ -64,7 +65,7 @@ impl BankState {
 
     /// Route the GST switch column to `row`, returning the earliest time
     /// the datapath is usable given current routing and busy window.
-    pub fn route_to(&mut self, row: usize, now_ns: f64) -> Result<f64> {
+    pub fn route_to(&mut self, row: usize, now_ns: Nanos) -> Result<Nanos> {
         if row >= self.subarray_rows {
             return Err(Error::Command(format!("subarray row {row} out of range")));
         }
@@ -84,7 +85,7 @@ impl BankState {
     }
 
     /// Mark the datapath busy until `until_ns`.
-    pub fn occupy(&mut self, until_ns: f64) {
+    pub fn occupy(&mut self, until_ns: Nanos) {
         self.busy_until_ns = self.busy_until_ns.max(until_ns);
     }
 }
@@ -100,7 +101,7 @@ mod tests {
     #[test]
     fn routing_same_row_is_free_different_row_costs() {
         let mut b = bank();
-        let t0 = b.route_to(5, 0.0).unwrap();
+        let t0 = b.route_to(5, Nanos::ZERO).unwrap();
         assert_eq!(t0, GST_SWITCH_RECONFIG_NS);
         b.occupy(t0);
         let t1 = b.route_to(5, t0).unwrap();
@@ -113,10 +114,10 @@ mod tests {
     fn reservations_block_memory_routing() {
         let mut b = bank();
         b.reserve(10).unwrap();
-        assert!(b.route_to(10, 0.0).is_err());
+        assert!(b.route_to(10, Nanos::ZERO).is_err());
         assert_eq!(b.rows_available(), 63);
         b.release(10).unwrap();
-        assert!(b.route_to(10, 0.0).is_ok());
+        assert!(b.route_to(10, Nanos::ZERO).is_ok());
         assert_eq!(b.rows_available(), 64);
     }
 
@@ -132,9 +133,9 @@ mod tests {
     #[test]
     fn busy_window_serializes() {
         let mut b = bank();
-        let t0 = b.route_to(1, 0.0).unwrap();
-        b.occupy(t0 + 100.0);
-        let t1 = b.route_to(1, 0.0).unwrap();
-        assert_eq!(t1, t0 + 100.0);
+        let t0 = b.route_to(1, Nanos::ZERO).unwrap();
+        b.occupy(t0 + Nanos::new(100.0));
+        let t1 = b.route_to(1, Nanos::ZERO).unwrap();
+        assert_eq!(t1, t0 + Nanos::new(100.0));
     }
 }

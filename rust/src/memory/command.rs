@@ -1,5 +1,7 @@
 //! Memory command descriptors.
 
+use crate::util::units::Nanos;
+
 /// What a command does.
 #[derive(Debug, Clone, PartialEq)]
 pub enum CommandKind {
@@ -14,18 +16,18 @@ pub enum CommandKind {
 pub struct MemCommand {
     pub id: u64,
     pub kind: CommandKind,
-    /// Issue timestamp (ns).
-    pub issued_ns: f64,
+    /// Issue timestamp.
+    pub issued_ns: Nanos,
 }
 
 /// Completion record for a command.
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: u64,
-    /// When the command finished (ns).
-    pub finished_ns: f64,
-    /// Total latency including queueing (ns).
-    pub latency_ns: f64,
+    /// When the command finished.
+    pub finished_ns: Nanos,
+    /// Total latency including queueing.
+    pub latency_ns: Nanos,
     /// Energy consumed (pJ).
     pub energy_pj: f64,
     /// Data returned (reads only).

@@ -12,6 +12,7 @@ use crate::memory::bank::BankState;
 use crate::memory::cell::{bytes_to_levels, levels_to_bytes, CellStore};
 use crate::memory::command::{CommandKind, Completion, MemCommand};
 use crate::memory::timing::{read_latency_ns, write_latency_ns};
+use crate::util::units::Nanos;
 
 /// Aggregate statistics.
 #[derive(Debug, Clone, Default)]
@@ -22,7 +23,7 @@ pub struct MemStats {
     pub bytes_written: u64,
     pub read_energy_pj: f64,
     pub write_energy_pj: f64,
-    pub busy_ns: f64,
+    pub busy_ns: Nanos,
 }
 
 impl MemStats {
@@ -39,7 +40,7 @@ pub struct MemoryController {
     stores: Vec<CellStore>,
     stats: MemStats,
     next_id: u64,
-    now_ns: f64,
+    now_ns: Nanos,
 }
 
 impl MemoryController {
@@ -56,7 +57,7 @@ impl MemoryController {
             cfg: cfg.clone(),
             stats: MemStats::default(),
             next_id: 0,
-            now_ns: 0.0,
+            now_ns: Nanos::ZERO,
         })
     }
 
@@ -68,7 +69,7 @@ impl MemoryController {
         &self.stats
     }
 
-    pub fn now_ns(&self) -> f64 {
+    pub fn now_ns(&self) -> Nanos {
         self.now_ns
     }
 
@@ -77,7 +78,7 @@ impl MemoryController {
     }
 
     /// Advance the wall clock (e.g. between request arrivals).
-    pub fn advance_to(&mut self, t_ns: f64) {
+    pub fn advance_to(&mut self, t_ns: Nanos) {
         self.now_ns = self.now_ns.max(t_ns);
     }
 
@@ -250,6 +251,7 @@ mod tests {
         let data: Vec<u8> = (0..=255).collect();
         c.write(4096, &data).unwrap();
         let r = c.read(4096, 256).unwrap();
+        assert!(r.finished_ns >= r.latency_ns);
         assert_eq!(r.data.unwrap(), data);
     }
 
@@ -335,8 +337,8 @@ mod tests {
         // same wall-clock time (bank interleaving).
         let bpr = 128u64; // bytes per row (256 cells × 4 bits)
         let r0 = c.read(0, 64).unwrap();
-        c.advance_to(0.0);
+        c.advance_to(Nanos::ZERO);
         let r1 = c.read(bpr, 64).unwrap(); // next row → bank 1
-        assert!((r0.latency_ns - r1.latency_ns).abs() < 1e-6);
+        assert!((r0.latency_ns - r1.latency_ns).abs().raw() < 1e-6);
     }
 }

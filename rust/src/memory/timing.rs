@@ -7,15 +7,16 @@
 //! reconfiguration delay (amorphous↔crystalline transition of the switch).
 
 use crate::config::Timing;
+use crate::util::units::Nanos;
 
-/// GST waveguide-switch reconfiguration time (ns): a partial phase
+/// GST waveguide-switch reconfiguration time: a partial phase
 /// transition, far faster than a full MLC data write but not free.
-pub const GST_SWITCH_RECONFIG_NS: f64 = 10.0;
+pub const GST_SWITCH_RECONFIG_NS: Nanos = Nanos::new(10.0);
 
 /// Latency of a row read burst of `cells` cells (they stream on WDM
 /// signals in parallel; the transit is one shot, ADC conversion is
 /// pipelined per cell batch).
-pub fn read_latency_ns(t: &Timing, cells: usize) -> f64 {
+pub fn read_latency_ns(t: &Timing, cells: usize) -> Nanos {
     // One optical transit + pipelined ADC batches (32 λ per ADC bank).
     let batches = cells.div_ceil(32) as f64;
     t.read_ns + t.cycle_ns() * batches
@@ -24,9 +25,9 @@ pub fn read_latency_ns(t: &Timing, cells: usize) -> f64 {
 /// Latency of writing `cells` cells in one row (pulse trains run
 /// concurrently across the row's wavelengths; duration is set by the
 /// worst-case level transition, i.e. the full write_ns figure).
-pub fn write_latency_ns(t: &Timing, cells: usize) -> f64 {
+pub fn write_latency_ns(t: &Timing, cells: usize) -> Nanos {
     if cells == 0 {
-        return 0.0;
+        return Nanos::ZERO;
     }
     // The optical power budget limits concurrent MLC programming to a
     // quarter-row per pulse train (write power ≫ read power).
@@ -57,7 +58,7 @@ mod tests {
     #[test]
     fn write_zero_cells_is_free() {
         let t = Timing::default();
-        assert_eq!(write_latency_ns(&t, 0), 0.0);
+        assert_eq!(write_latency_ns(&t, 0), Nanos::ZERO);
     }
 
     #[test]

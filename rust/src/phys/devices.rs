@@ -7,6 +7,7 @@
 
 
 use super::params::LossParams;
+use crate::util::units::Milliwatts;
 
 /// A photonic element along an optical path.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -65,8 +66,8 @@ pub fn path_loss_db(path: &[Device], p: &LossParams) -> f64 {
     path.iter().map(|d| d.loss_db(p)).sum()
 }
 
-/// Remaining optical power (mW) after a path, given launch power (mW).
-pub fn output_power_mw(launch_mw: f64, path: &[Device], p: &LossParams) -> f64 {
+/// Remaining optical power after a path, given launch power.
+pub fn output_power_mw(launch_mw: Milliwatts, path: &[Device], p: &LossParams) -> Milliwatts {
     launch_mw * 10f64.powf(-path_loss_db(path, p) / 10.0)
 }
 
@@ -109,7 +110,7 @@ mod tests {
         let total = path_loss_db(&path, &p);
         // 0.02 + 0.05 + 0.005 + 1.6 + 3.01 + 1.6 − 20 ≈ −13.7 dB (net gain).
         assert!(total < 0.0, "SOA should more than recover losses: {total}");
-        let out = output_power_mw(1.0, &path, &p);
-        assert!(out > 1.0);
+        let out = output_power_mw(crate::util::units::mw(1.0), &path, &p);
+        assert!(out.raw() > 1.0);
     }
 }

@@ -12,6 +12,7 @@
 use super::devices::{path_loss_db, Device};
 use super::params::LossParams;
 use crate::config::Geometry;
+use crate::util::units::Milliwatts;
 
 /// Photodetector sensitivity (dBm) for reliable level discrimination at
 /// baseline (1-bit) readout. Each extra bit of cell density halves the
@@ -32,8 +33,8 @@ pub struct LinkBudget {
     pub soa_count: usize,
     /// Residual loss after amplification (dB; can be negative = net gain).
     pub net_loss_db: f64,
-    /// Minimum launch power per wavelength (mW) for `bits_per_cell` readout.
-    pub min_launch_mw: f64,
+    /// Minimum launch power per wavelength for `bits_per_cell` readout.
+    pub min_launch_mw: Milliwatts,
 }
 
 /// Worst-case PIM read path inside one subarray: MDL launch, coupler, row
@@ -106,10 +107,15 @@ pub fn memory_read_path(geom: &Geometry) -> Vec<Device> {
 
 /// Solve the link budget: insert SOAs until the arriving power at the PD
 /// exceeds the sensitivity needed for `bits_per_cell` discrimination.
-pub fn solve(path: &[Device], losses: &LossParams, bits_per_cell: u32, launch_mw: f64) -> LinkBudget {
+pub fn solve(
+    path: &[Device],
+    losses: &LossParams,
+    bits_per_cell: u32,
+    launch_mw: Milliwatts,
+) -> LinkBudget {
     let raw_loss_db = path_loss_db(path, losses);
     let required_dbm = PD_SENSITIVITY_DBM + SNR_PER_BIT_DB * bits_per_cell as f64;
-    let launch_dbm = 10.0 * launch_mw.log10();
+    let launch_dbm = 10.0 * launch_mw.raw().log10();
 
     let mut soa_count = 0;
     let mut net_loss_db = raw_loss_db;
@@ -124,7 +130,7 @@ pub fn solve(path: &[Device], losses: &LossParams, bits_per_cell: u32, launch_mw
         raw_loss_db,
         soa_count,
         net_loss_db,
-        min_launch_mw: 10f64.powf(min_launch_dbm / 10.0),
+        min_launch_mw: Milliwatts::new(10f64.powf(min_launch_dbm / 10.0)),
     }
 }
 
@@ -137,12 +143,12 @@ mod tests {
         let geom = Geometry::default();
         let losses = LossParams::default();
         let path = pim_read_path(&geom);
-        let budget = solve(&path, &losses, geom.bits_per_cell, 1.0);
+        let budget = solve(&path, &losses, geom.bits_per_cell, crate::util::units::mw(1.0));
         // The per-λ launch power must be in the MDL range (≲ a few mW),
         // otherwise the local-laser design of §IV.C.2 would not work.
         assert!(
-            budget.min_launch_mw < 5.0,
-            "PIM link needs {} mW",
+            budget.min_launch_mw.raw() < 5.0,
+            "PIM link needs {}",
             budget.min_launch_mw
         );
     }
@@ -154,7 +160,7 @@ mod tests {
         let path = memory_read_path(&geom);
         // Per-wavelength launch power is ~1 mW: the external comb's output
         // is divided across the WDM degree.
-        let budget = solve(&path, &losses, geom.bits_per_cell, 1.0);
+        let budget = solve(&path, &losses, geom.bits_per_cell, crate::util::units::mw(1.0));
         assert!(budget.soa_count >= 1, "bank paths need SOA stages (§IV.B)");
         assert!(budget.soa_count <= 4, "SOA chains must stay short");
     }
@@ -164,8 +170,8 @@ mod tests {
         let geom = Geometry::default();
         let losses = LossParams::default();
         let path = pim_read_path(&geom);
-        let b2 = solve(&path, &losses, 2, 1.0);
-        let b4 = solve(&path, &losses, 4, 1.0);
+        let b2 = solve(&path, &losses, 2, crate::util::units::mw(1.0));
+        let b4 = solve(&path, &losses, 4, crate::util::units::mw(1.0));
         assert!(b4.min_launch_mw > b2.min_launch_mw);
     }
 

@@ -9,6 +9,7 @@
 //! pipeline latency contribution per MAC burst.
 
 use crate::config::OpimaConfig;
+use crate::util::units::Nanos;
 
 /// Energy/latency cost of aggregating one burst of MAC results.
 #[derive(Debug, Clone, Copy, Default)]
@@ -17,7 +18,7 @@ pub struct AggregationCost {
     pub sram_pj: f64,
     pub shift_add_pj: f64,
     pub dac_pj: f64,
-    pub latency_ns: f64,
+    pub latency_ns: Nanos,
 }
 
 impl AggregationCost {
@@ -101,7 +102,7 @@ mod tests {
         let small = cost(&cfg, 16_384, 0, 0, 0);
         let large = cost(&cfg, 10 * 16_384, 0, 0, 0);
         assert!(large.latency_ns > small.latency_ns);
-        assert!((small.latency_ns - cfg.timing.aggregation_ns).abs() < 1e-12);
+        assert!((small.latency_ns - cfg.timing.aggregation_ns).abs().raw() < 1e-12);
     }
 
     #[test]
@@ -109,6 +110,6 @@ mod tests {
         let cfg = OpimaConfig::paper();
         let c = cost(&cfg, 0, 0, 0, 0);
         assert_eq!(c.total_pj(), 0.0);
-        assert!(c.latency_ns > 0.0);
+        assert!(c.latency_ns > Nanos::ZERO);
     }
 }

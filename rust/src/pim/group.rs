@@ -68,7 +68,7 @@ pub fn evaluate(cfg: &OpimaConfig, groups: usize) -> Result<GroupingPoint> {
     let mac_throughput = mpc as f64 * f_hz;
 
     // PIM power: lit MDLs + per-group aggregation interfaces + controller.
-    let mdl_w = active_mdls(geom, groups, accum) as f64 * cfg.power.mdl_wallplug_mw / 1e3;
+    let mdl_w = active_mdls(geom, groups, accum) as f64 * cfg.power.mdl_wallplug_mw.raw() / 1e3;
     // ADC/DAC interface energy at the achieved conversion rate: one ADC
     // conversion per λ-lane result per cycle, one DAC regeneration per
     // group output channel.
@@ -84,7 +84,7 @@ pub fn evaluate(cfg: &OpimaConfig, groups: usize) -> Result<GroupingPoint> {
         * 1e-12
         * f_hz
         * DAC_ACTIVITY;
-    let vcsel_w = (geom.banks * groups) as f64 * 16.0 * cfg.power.vcsel_mw / 1e3;
+    let vcsel_w = (geom.banks * groups) as f64 * 16.0 * cfg.power.vcsel_mw.raw() / 1e3;
     let agg_logic_w = cfg.power.aggregation_logic_w * (groups as f64 / 16.0).max(0.25)
         * geom.banks as f64;
     let power_w = mdl_w + adc_w + dac_w + vcsel_w + agg_logic_w + cfg.power.controller_w;

@@ -68,12 +68,12 @@ impl MdlArray {
         lanes as f64 * cfg.energy.dac_conversion_pj(cfg.geometry.bits_per_cell)
     }
 
-    /// Wall-plug power while lit (mW).
-    pub fn power_mw(&self, cfg: &OpimaConfig) -> f64 {
+    /// Wall-plug power while lit.
+    pub fn power_mw(&self, cfg: &OpimaConfig) -> crate::util::units::Milliwatts {
         if self.is_lit() {
             self.lanes as f64 * cfg.power.mdl_wallplug_mw
         } else {
-            0.0
+            crate::util::units::Milliwatts::ZERO
         }
     }
 }
@@ -104,9 +104,9 @@ mod tests {
     fn power_only_when_lit() {
         let cfg = OpimaConfig::paper();
         let mut a = MdlArray::new(256);
-        assert_eq!(a.power_mw(&cfg), 0.0);
+        assert_eq!(a.power_mw(&cfg), crate::util::units::Milliwatts::ZERO);
         a.program(&[1; 256], 4).unwrap();
-        assert!((a.power_mw(&cfg) - 256.0 * cfg.power.mdl_wallplug_mw).abs() < 1e-12);
+        assert!((a.power_mw(&cfg) - 256.0 * cfg.power.mdl_wallplug_mw).abs().raw() < 1e-12);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::config::OpimaConfig;
 use crate::error::Result;
 use crate::memory::timing::write_latency_ns;
 use crate::pim::{aggregation, tdm, wdm};
+use crate::util::units::Nanos;
 
 /// A unit of CNN work as emitted by the mapper (one layer, one inference).
 #[derive(Debug, Clone)]
@@ -40,15 +41,15 @@ pub struct LayerCost {
     pub name: String,
     /// In-memory MAC + aggregation time (the paper's "processing").
     /// Always equal to `mac_ns + aggregation_ns`.
-    pub processing_ns: f64,
+    pub processing_ns: Nanos,
     /// In-waveguide MAC time alone (MDL cycles) — the stage the timeline
     /// schedules against the layer's subarray/MDL resources.
-    pub mac_ns: f64,
+    pub mac_ns: Nanos,
     /// Aggregation-unit pipeline time alone (PD + ADC + shift-add) — the
     /// stage the timeline schedules against the shared aggregation units.
-    pub aggregation_ns: f64,
+    pub aggregation_ns: Nanos,
     /// Non-linearity application + OPCM write of output maps ("writeback").
-    pub writeback_ns: f64,
+    pub writeback_ns: Nanos,
     /// OPCM cell read energy (pJ).
     pub read_pj: f64,
     /// MDL laser energy: wall-plug power × lit time + programming DACs (pJ).
@@ -66,7 +67,7 @@ pub struct LayerCost {
 }
 
 impl LayerCost {
-    pub fn total_ns(&self) -> f64 {
+    pub fn total_ns(&self) -> Nanos {
         self.processing_ns + self.writeback_ns
     }
 
@@ -137,7 +138,9 @@ impl PimScheduler {
         let read_pj = nibble_macs as f64 * cfg.energy.opcm_read_pj;
         // MDL wall-plug while processing (lit lanes only) + program DACs.
         let mdl_power_mw = lanes as f64 * cfg.power.mdl_wallplug_mw;
-        let mdl_pj = mdl_power_mw * 1e-3 * processing_ns * 1e-9 * 1e12
+        // Cross-unit energy = power × time chain, priced with the explicit
+        // mW→W and ns→s factor trail (1e-3/1e-9 are not time conversions).
+        let mdl_pj = mdl_power_mw.raw() * 1e-3 * processing_ns.raw() * 1e-9 * 1e12
             + programs as f64
                 * cfg.geometry.cols_per_subarray as f64
                 * cfg.energy.dac_conversion_pj(cfg.geometry.bits_per_cell);
@@ -202,9 +205,11 @@ mod tests {
         // must partition the analytical totals exactly.
         let s = sched();
         let c = s.cost_layer(&conv_work(1_000_000, 3, 10_000)).unwrap();
-        assert!(c.mac_ns > 0.0 && c.aggregation_ns > 0.0);
-        assert!((c.processing_ns - (c.mac_ns + c.aggregation_ns)).abs() < 1e-9);
-        assert!((c.total_ns() - (c.mac_ns + c.aggregation_ns + c.writeback_ns)).abs() < 1e-9);
+        assert!(c.mac_ns > Nanos::ZERO && c.aggregation_ns > Nanos::ZERO);
+        assert!((c.processing_ns - (c.mac_ns + c.aggregation_ns)).abs().raw() < 1e-9);
+        assert!(
+            (c.total_ns() - (c.mac_ns + c.aggregation_ns + c.writeback_ns)).abs().raw() < 1e-9
+        );
         assert_eq!(c.subarrays, 4, "footprint carried through pricing");
     }
 

@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use crate::util::histogram::nearest_rank;
 use crate::util::json::Json;
+use crate::util::units::{Millis, Nanos};
 
 /// Re-exported black box.
 pub fn black_box<T>(x: T) -> T {
@@ -21,32 +22,20 @@ pub fn black_box<T>(x: T) -> T {
 pub struct Stats {
     pub name: String,
     pub samples: usize,
-    pub mean_ns: f64,
-    pub median_ns: f64,
-    pub std_ns: f64,
-    pub min_ns: f64,
-    pub max_ns: f64,
+    pub mean_ns: Nanos,
+    pub median_ns: Nanos,
+    pub std_ns: Nanos,
+    pub min_ns: Nanos,
+    pub max_ns: Nanos,
 }
 
 impl Stats {
     pub fn mean_us(&self) -> f64 {
-        self.mean_ns / 1e3
+        self.mean_ns.raw() / 1e3
     }
 
-    pub fn mean_ms(&self) -> f64 {
-        self.mean_ns / 1e6
-    }
-}
-
-fn fmt_time(ns: f64) -> String {
-    if ns < 1e3 {
-        format!("{ns:.1} ns")
-    } else if ns < 1e6 {
-        format!("{:.2} µs", ns / 1e3)
-    } else if ns < 1e9 {
-        format!("{:.3} ms", ns / 1e6)
-    } else {
-        format!("{:.3} s", ns / 1e9)
+    pub fn mean_ms(&self) -> Millis {
+        self.mean_ns.to_millis()
     }
 }
 
@@ -68,20 +57,20 @@ pub fn measure<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) 
     let stats = Stats {
         name: name.to_string(),
         samples,
-        mean_ns: mean,
+        mean_ns: Nanos::new(mean),
         // Nearest-rank (ceil(p·n) - 1): `times[samples / 2]` overshoots
         // for even n (at n=2 it reports the max as the median).
-        median_ns: nearest_rank(&times, 0.5),
-        std_ns: var.sqrt(),
-        min_ns: times[0],
-        max_ns: times[samples - 1],
+        median_ns: Nanos::new(nearest_rank(&times, 0.5)),
+        std_ns: Nanos::new(var.sqrt()),
+        min_ns: Nanos::new(times[0]),
+        max_ns: Nanos::new(times[samples - 1]),
     };
     println!(
         "bench {:<44} mean {:>12}  median {:>12}  σ {:>10}  ({} samples)",
         stats.name,
-        fmt_time(stats.mean_ns),
-        fmt_time(stats.median_ns),
-        fmt_time(stats.std_ns),
+        stats.mean_ns.human(),
+        stats.median_ns.human(),
+        stats.std_ns.human(),
         samples
     );
     stats
@@ -140,11 +129,11 @@ impl JsonReport {
             &s.name,
             &[
                 ("samples", Json::Num(s.samples as f64)),
-                ("mean_ns", Json::Num(s.mean_ns)),
-                ("median_ns", Json::Num(s.median_ns)),
-                ("std_ns", Json::Num(s.std_ns)),
-                ("min_ns", Json::Num(s.min_ns)),
-                ("max_ns", Json::Num(s.max_ns)),
+                ("mean_ns", Json::Num(s.mean_ns.raw())),
+                ("median_ns", Json::Num(s.median_ns.raw())),
+                ("std_ns", Json::Num(s.std_ns.raw())),
+                ("min_ns", Json::Num(s.min_ns.raw())),
+                ("max_ns", Json::Num(s.max_ns.raw())),
             ],
         );
     }
@@ -195,7 +184,7 @@ mod tests {
         });
         assert_eq!(s.samples, 20);
         assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
-        assert!(s.mean_ns > 0.0);
+        assert!(s.mean_ns > Nanos::ZERO);
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //!   streaming stats and the offline analyzer.
 //! - [`ring`] — fixed-capacity ring buffer with monotonic sequence
 //!   numbers (the engine's bounded response history).
+//! - [`units`] — zero-cost units-of-measure newtypes (`Nanos`, `Millis`,
+//!   `Millijoules`, `Milliwatts`, `Bytes`) and the only sanctioned
+//!   ns↔ms conversion sites in the crate.
 
 pub mod bench;
 pub mod histogram;
@@ -28,3 +31,4 @@ pub mod json;
 pub mod prng;
 pub mod ring;
 pub mod tomlite;
+pub mod units;

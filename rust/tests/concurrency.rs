@@ -72,7 +72,10 @@ fn multi_producer_exactly_once() {
         assert_eq!(r.logits.len(), 4);
         assert!(r.logits.iter().all(|v| v.is_finite()));
         assert!(r.predicted < 4);
-        assert!(r.form_ms <= r.queue_ms + 1e-9, "formed before executing");
+        assert!(
+            r.form_ms <= r.queue_ms + opima::util::units::ms(1e-9),
+            "formed before executing"
+        );
         assert!(r.instance < 2);
         assert!(r.worker < 4);
     }
@@ -86,8 +89,8 @@ fn multi_producer_exactly_once() {
     // Batches can hold at most 8 requests, so at least ⌈n/8⌉ executed;
     // energy is accounted once per executed batch.
     assert!(stats.batches >= n / 8);
-    assert!(stats.sim_energy_mj > 0.0 && stats.sim_energy_mj.is_finite());
-    assert!(stats.sim_makespan_ms > 0.0);
+    assert!(stats.sim_energy_mj.raw() > 0.0 && stats.sim_energy_mj.is_finite());
+    assert!(stats.sim_makespan_ms.raw() > 0.0);
     e.shutdown().unwrap();
 }
 

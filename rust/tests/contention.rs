@@ -28,6 +28,7 @@ use opima::cnn::layer::TensorShape;
 use opima::cnn::Model;
 use opima::coordinator::Router;
 use opima::util::prng::Rng;
+use opima::util::units::{ms, ns, Millis, Nanos};
 use opima::OpimaConfig;
 
 /// Build a random small CNN: a few conv/pool stages and an FC head.
@@ -72,22 +73,22 @@ fn prop_isolated_le_contended_le_serialized_sum() {
         let iso1 = simulate_analysis_makespan(&cfg, &a1, b1).makespan_ns;
         let iso2 = simulate_analysis_makespan(&cfg, &a2, b2).makespan_ns;
         let mut gt = GlobalTimeline::new(1, usize::MAX / 2, &cfg.pipeline);
-        let adm1 = gt.admit(0, a1.occupancy.subarrays_used, 0.0, stream(&a1, b1), None);
-        let adm2 = gt.admit(0, a2.occupancy.subarrays_used, 0.0, stream(&a2, b2), None);
+        let adm1 = gt.admit(0, a1.occupancy.subarrays_used, Nanos::ZERO, stream(&a1, b1), None);
+        let adm2 = gt.admit(0, a2.occupancy.subarrays_used, Nanos::ZERO, stream(&a2, b2), None);
         // Isolated ≤ contended, per batch.
         assert!(
-            adm1.makespan_ns >= iso1 - 1e-6,
+            adm1.makespan_ns >= iso1 - ns(1e-6),
             "case {case}: first admission beat its isolated makespan"
         );
         assert!(
-            adm2.makespan_ns >= iso2 - 1e-6,
+            adm2.makespan_ns >= iso2 - ns(1e-6),
             "case {case}: contended {} < isolated {iso2}",
             adm2.makespan_ns
         );
         // Contended ≤ serialized sum, for the fleet.
         let serialized = iso1 + iso2;
         assert!(
-            gt.makespan_ns() <= serialized * (1.0 + 1e-12) + 1e-6,
+            gt.makespan_ns() <= serialized * (1.0 + 1e-12) + ns(1e-6),
             "case {case}: contended fleet {} exceeds serialized {serialized}",
             gt.makespan_ns()
         );
@@ -105,15 +106,15 @@ fn prop_single_batch_admission_bit_exact_with_isolated_timeline() {
         let fp = a.occupancy.subarrays_used;
         let mut gt = GlobalTimeline::new(2, usize::MAX / 2, &cfg.pipeline);
         // Bit-exact at t = 0 on a fresh instance…
-        let adm = gt.admit(0, fp, 0.0, stream(&a, batch), None);
+        let adm = gt.admit(0, fp, Nanos::ZERO, stream(&a, batch), None);
         assert_eq!(adm.makespan_ns, iso, "case {case}: fresh-instance admission drifted");
         // …at an arbitrary origin on the other (idle) instance…
-        let origin = rng.f64() * 1e9;
+        let origin = ns(rng.f64() * 1e9);
         let adm = gt.admit(1, fp, origin, stream(&a, batch), None);
         assert_eq!(adm.makespan_ns, iso, "case {case}: origin-shifted admission drifted");
         // …and again on instance 0 once its pools have fully drained —
         // the retirement frontier does not reset pools, draining does.
-        let drained = gt.horizon_ns(0).max(gt.horizon_ns(1)) + 1.0;
+        let drained = gt.horizon_ns(0).max(gt.horizon_ns(1)) + ns(1.0);
         gt.advance(drained);
         let adm = gt.admit(0, fp, drained, stream(&a, batch), None);
         assert_eq!(adm.makespan_ns, iso, "case {case}: drained re-admission drifted");
@@ -131,8 +132,8 @@ fn prop_pools_never_oversubscribed_across_coresident_batches() {
         let mut events = Vec::new();
         // Three streams co-admitted at staggered origins, all sharing
         // one instance's pools; events come back in absolute time.
-        gt.admit(0, 1, 0.0, stream(&a1, 1 + rng.index(6)), Some(&mut events));
-        gt.admit(0, 1, 0.0, stream(&a2, 1 + rng.index(6)), Some(&mut events));
+        gt.admit(0, 1, Nanos::ZERO, stream(&a1, 1 + rng.index(6)), Some(&mut events));
+        gt.admit(0, 1, Nanos::ZERO, stream(&a2, 1 + rng.index(6)), Some(&mut events));
         let mid = gt.makespan_ns() * rng.f64() * 0.5;
         gt.admit(0, 1, mid, stream(&a1, 1 + rng.index(6)), Some(&mut events));
         // At every event start, count in-flight events per shared pool
@@ -141,7 +142,7 @@ fn prop_pools_never_oversubscribed_across_coresident_batches() {
             (Phase::Aggregation, cfg.pipeline.aggregation_units),
             (Phase::Writeback, cfg.pipeline.writeback_channels),
         ] {
-            let spans: Vec<(f64, f64)> = events
+            let spans: Vec<(Nanos, Nanos)> = events
                 .iter()
                 .filter(|e| e.phase == phase && e.end_ns > e.start_ns)
                 .map(|e| (e.start_ns, e.end_ns))
@@ -168,9 +169,9 @@ fn prop_retirement_never_changes_live_placements() {
         // Seed both engines with identical admissions.
         let mut pruned = GlobalTimeline::new(1, 100, &cfg.pipeline);
         let mut unpruned = pruned.clone();
-        let mut t = 0.0;
+        let mut t = Nanos::ZERO;
         for _ in 0..6 {
-            let s = pruned.earliest_start(0, fp, t, 1e6);
+            let s = pruned.earliest_start(0, fp, t, ns(1e6));
             pruned.admit(0, fp, s, stream(&a, batch), None);
             unpruned.admit(0, fp, s, stream(&a, batch), None);
             t = s;
@@ -186,8 +187,8 @@ fn prop_retirement_never_changes_live_placements() {
         );
         // Still-live work is untouched: the same new admission gets the
         // same placement and the same contended makespan in both.
-        let sp = pruned.earliest_start(0, fp, mid, 1e6);
-        let su = unpruned.earliest_start(0, fp, mid, 1e6);
+        let sp = pruned.earliest_start(0, fp, mid, ns(1e6));
+        let su = unpruned.earliest_start(0, fp, mid, ns(1e6));
         assert_eq!(sp, su, "case {case}: retirement moved the next placement");
         let ap = pruned.admit(0, fp, sp, stream(&a, batch), None);
         let au = unpruned.admit(0, fp, su, stream(&a, batch), None);
@@ -214,14 +215,24 @@ fn prop_router_contended_bounds_over_random_pairs() {
         let iso1 = simulate_analysis_makespan(&cfg, &a1, b1).makespan_ms();
         let iso2 = simulate_analysis_makespan(&cfg, &a2, b2).makespan_ms();
         let mut r = Router::with_pools(1, cfg.geometry.total_subarrays(), &cfg.pipeline);
-        let (_, s1, e1) =
-            r.dispatch_batch(Model::LeNet, a1.occupancy.subarrays_used, 0.0, stream(&a1, b1), iso1);
-        let (_, s2, e2) =
-            r.dispatch_batch(Model::Vgg16, a2.occupancy.subarrays_used, 0.0, stream(&a2, b2), iso2);
-        assert!(e1 - s1 >= iso1 - 1e-9, "case {case}: batch 1 beat isolation");
-        assert!(e2 - s2 >= iso2 - 1e-9, "case {case}: batch 2 beat isolation");
+        let (_, s1, e1) = r.dispatch_batch(
+            Model::LeNet,
+            a1.occupancy.subarrays_used,
+            Millis::ZERO,
+            stream(&a1, b1),
+            iso1,
+        );
+        let (_, s2, e2) = r.dispatch_batch(
+            Model::Vgg16,
+            a2.occupancy.subarrays_used,
+            Millis::ZERO,
+            stream(&a2, b2),
+            iso2,
+        );
+        assert!(e1 - s1 >= iso1 - ms(1e-9), "case {case}: batch 1 beat isolation");
+        assert!(e2 - s2 >= iso2 - ms(1e-9), "case {case}: batch 2 beat isolation");
         assert!(
-            r.makespan_ms() <= s2 + iso1 + iso2 + 1e-6,
+            r.makespan_ms() <= s2 + iso1 + iso2 + ms(1e-6),
             "case {case}: fleet exceeded queueing + serialized sum"
         );
         assert_eq!(r.model_makespan_ms(Model::LeNet), e1);
@@ -267,9 +278,9 @@ fn served_responses_carry_contended_window_covering_isolated_latency() {
     let rs = e.responses();
     assert!(!rs.is_empty());
     for r in &rs {
-        assert!(r.sim.hw_latency_ms > 0.0);
+        assert!(r.sim.hw_latency_ms > Millis::ZERO);
         assert!(
-            r.sim.hw_contended_ms >= r.sim.hw_latency_ms - 1e-9,
+            r.sim.hw_contended_ms >= r.sim.hw_latency_ms - ms(1e-9),
             "response {}: contended {} < isolated {}",
             r.id,
             r.sim.hw_contended_ms,

@@ -48,14 +48,14 @@ fn link_budgets_close_for_paper_geometry() {
         &link::pim_read_path(&cfg.geometry),
         &cfg.losses,
         cfg.geometry.bits_per_cell,
-        1.0,
+        opima::util::units::mw(1.0),
     );
-    assert!(pim.min_launch_mw < 5.0, "MDL-class power: {}", pim.min_launch_mw);
+    assert!(pim.min_launch_mw.raw() < 5.0, "MDL-class power: {}", pim.min_launch_mw);
     let mem = link::solve(
         &link::memory_read_path(&cfg.geometry),
         &cfg.losses,
         cfg.geometry.bits_per_cell,
-        1.0,
+        opima::util::units::mw(1.0),
     );
     assert!(mem.soa_count >= 1 && mem.soa_count <= 4);
 }
@@ -81,10 +81,10 @@ fn every_model_flows_through_the_whole_stack() {
             let mapped = map_network(&cfg, &net, bits).unwrap();
             let a = analyze_model(&cfg, &net, bits).unwrap();
             assert_eq!(a.layer_costs.len(), mapped.works.len());
-            assert!(a.total_ms() > 0.0);
+            assert!(a.total_ms().raw() > 0.0);
             let e = energy_breakdown(&cfg, &a);
-            assert!(e.dynamic_mj() > 0.0);
-            assert!((a.dynamic_mj - e.dynamic_mj()).abs() < 1e-9);
+            assert!(e.dynamic_mj().raw() > 0.0);
+            assert!((a.dynamic_mj - e.dynamic_mj()).abs().raw() < 1e-9);
         }
     }
 }
@@ -145,12 +145,12 @@ fn power_envelope_stable_across_workloads() {
 fn config_overrides_propagate_to_results() {
     let base = OpimaConfig::paper();
     let mut fast = base.clone();
-    fast.timing.write_ns = 100.0; // 10× faster MLC writes
+    fast.timing.write_ns = opima::util::units::ns(100.0); // 10× faster MLC writes
     let net = build_model(Model::ResNet18).unwrap();
     let a_base = analyze_model(&base, &net, 4).unwrap();
     let a_fast = analyze_model(&fast, &net, 4).unwrap();
     assert!(a_fast.writeback_ms < a_base.writeback_ms / 5.0);
-    assert!((a_fast.processing_ms - a_base.processing_ms).abs() < 1e-9);
+    assert!((a_fast.processing_ms - a_base.processing_ms).abs().raw() < 1e-9);
 }
 
 #[test]

@@ -19,6 +19,7 @@ use opima::coordinator::engine::{Engine, EngineConfig};
 use opima::coordinator::registry::{augment_manifest, PlanRegistry};
 use opima::coordinator::request::{InferenceRequest, Variant};
 use opima::runtime::{ExecutorSpec, Manifest};
+use opima::util::units::{ms, Millijoules, Millis};
 use opima::OpimaConfig;
 
 fn engine(workers: usize) -> Engine {
@@ -166,12 +167,12 @@ fn per_model_served_counts_sum_to_global() {
     let served_sum: u64 = s.per_model.iter().map(|m| m.served).sum();
     let batch_sum: u64 = s.per_model.iter().map(|m| m.batches).sum();
     let failed_sum: u64 = s.per_model.iter().map(|m| m.failed).sum();
-    let energy_sum: f64 = s.per_model.iter().map(|m| m.sim_energy_mj).sum();
+    let energy_sum: Millijoules = s.per_model.iter().map(|m| m.sim_energy_mj).sum();
     assert_eq!(served_sum, s.served, "per-model served partitions global");
     assert_eq!(batch_sum, s.batches, "per-model batches partition global");
     assert_eq!(failed_sum, s.failed);
     assert!(
-        (energy_sum - s.sim_energy_mj).abs() <= 1e-9 * s.sim_energy_mj.max(1.0),
+        (energy_sum - s.sim_energy_mj).abs().raw() <= 1e-9 * s.sim_energy_mj.raw().max(1.0),
         "per-model energy {energy_sum} != global {}",
         s.sim_energy_mj
     );
@@ -193,9 +194,9 @@ fn per_model_served_counts_sum_to_global() {
     for m in &s.per_model {
         assert_eq!(m.latency.total.count, m.served);
         assert!(m.latency.total.p50 <= m.latency.total.p99 + 1e-12);
-        assert!(m.sim_makespan_ms > 0.0);
-        assert!(m.sim_makespan_ms <= s.sim_makespan_ms + 1e-12);
-        assert!(m.sim_energy_mj > 0.0);
+        assert!(m.sim_makespan_ms > Millis::ZERO);
+        assert!(m.sim_makespan_ms <= s.sim_makespan_ms + ms(1e-12));
+        assert!(m.sim_energy_mj > Millijoules::ZERO);
     }
     // The heaviest model dominates the simulated energy bill.
     let energy_of = |m: Model| {
@@ -203,7 +204,7 @@ fn per_model_served_counts_sum_to_global() {
             .iter()
             .find(|x| x.model == m)
             .map(|x| x.sim_energy_mj)
-            .unwrap_or(0.0)
+            .unwrap_or(Millijoules::ZERO)
     };
     assert!(energy_of(Model::ResNet18) > energy_of(Model::LeNet));
     e.shutdown().unwrap();

@@ -16,6 +16,7 @@ use opima::memory::MemoryController;
 use opima::pim::tdm;
 use opima::util::json::Json;
 use opima::util::prng::Rng;
+use opima::util::units::{ms, ns, Millis};
 
 const CASES: usize = 300;
 
@@ -185,9 +186,9 @@ fn prop_router_work_conservation() {
         for _ in 0..n {
             let dur = 0.1 + rng.f64() * 10.0;
             total += dur;
-            let (idx, start, end) = r.dispatch(0.0, dur);
-            assert!((end - start - dur).abs() < 1e-9);
-            intervals[idx].push((start, end));
+            let (idx, start, end) = r.dispatch(Millis::ZERO, ms(dur));
+            assert!((end - start - ms(dur)).abs().raw() < 1e-9);
+            intervals[idx].push((start.raw(), end.raw()));
         }
         // No overlapping reservations per instance.
         for (i, iv) in intervals.iter_mut().enumerate() {
@@ -199,7 +200,7 @@ fn prop_router_work_conservation() {
                 );
             }
         }
-        let makespan = r.makespan_ms();
+        let makespan = r.makespan_ms().raw();
         assert!(makespan <= total + 1e-6, "case {case}");
         assert!(
             makespan + 1e-6 >= total / instances as f64,
@@ -307,7 +308,7 @@ fn prop_config_toml_roundtrip_random() {
         let divisors: Vec<usize> = (1..=rows).filter(|g| rows % g == 0).collect();
         cfg.geometry.subarray_groups = divisors[rng.index(divisors.len())];
         cfg.timing.clock_ghz = 1.0 + rng.f64() * 9.0;
-        cfg.timing.write_ns = cfg.timing.read_ns + rng.f64() * 2000.0;
+        cfg.timing.write_ns = cfg.timing.read_ns + ns(rng.f64() * 2000.0);
         cfg.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
         let text = cfg.to_toml();
         let back = OpimaConfig::from_toml(&text)

@@ -119,7 +119,7 @@ fn soak_sink_memory_bounded_stats_complete() {
     assert_eq!(s.latency.total.count, N);
     assert_eq!(s.latency.queue.count, N);
     assert!(s.batches >= N / 8);
-    assert!(s.sim_energy_mj > 0.0);
+    assert!(s.sim_energy_mj.raw() > 0.0);
     // Percentiles are present, ordered, and inside the observed range.
     assert!(s.latency.total.p50 > 0.0);
     assert!(s.latency.total.p50 <= s.latency.total.p90 + 1e-12);
@@ -128,7 +128,7 @@ fn soak_sink_memory_bounded_stats_complete() {
     assert!(s.latency.total.p999 <= s.latency.total.max + 1e-12);
     assert!(s.latency.total.min <= s.latency.total.p50 + 1e-12);
     // Exact means keep the stage accounting identity: form ≤ queue.
-    assert!(s.mean_form_ms <= s.mean_queue_ms + 1e-9);
+    assert!(s.mean_form_ms <= s.mean_queue_ms + opima::util::units::ms(1e-9));
     e.shutdown().unwrap();
 }
 

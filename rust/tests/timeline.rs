@@ -17,6 +17,7 @@ use opima::cnn::graph::{Network, NetworkBuilder};
 use opima::cnn::layer::TensorShape;
 use opima::cnn::{build_model, Model};
 use opima::util::prng::Rng;
+use opima::util::units::{ns, Nanos};
 use opima::OpimaConfig;
 
 /// Build a random small CNN: a few conv/pool stages and an FC head.
@@ -48,7 +49,7 @@ fn prop_timeline_bounds_hold_for_random_nets() {
         let batch = 1 + rng.index(24);
         let t = simulate_analysis(&cfg, &a, batch);
         assert_eq!(t.batch, batch);
-        let seq = a.total_ms() * 1e6 * batch as f64;
+        let seq = a.total_ms().to_nanos() * batch as f64;
         assert!(
             (t.sequential_ns - seq).abs() <= 1e-9 * seq,
             "case {case}: sequential mismatch"
@@ -60,7 +61,7 @@ fn prop_timeline_bounds_hold_for_random_nets() {
             t.sequential_ns
         );
         assert!(
-            t.makespan_ns + 1e-6 >= t.bottleneck_ns,
+            t.makespan_ns + ns(1e-6) >= t.bottleneck_ns,
             "case {case}: makespan {} beats the bottleneck bound {}",
             t.makespan_ns,
             t.bottleneck_ns
@@ -70,9 +71,9 @@ fn prop_timeline_bounds_hold_for_random_nets() {
             .layer_costs
             .iter()
             .map(|c| (c.mac_ns + c.aggregation_ns).max(c.writeback_ns))
-            .fold(0.0f64, f64::max);
+            .fold(Nanos::ZERO, |acc, v| acc.max(v));
         assert!(
-            t.bottleneck_ns + 1e-6 >= max_stage * batch as f64,
+            t.bottleneck_ns + ns(1e-6) >= max_stage * batch as f64,
             "case {case}: bottleneck below max_stage × images"
         );
     }
@@ -87,9 +88,9 @@ fn prop_batch_one_matches_analytical_totals() {
         let bits = [4u32, 8][rng.index(2)];
         let a = analyze_model(&cfg, &net, bits).unwrap();
         let t = simulate_analysis(&cfg, &a, 1);
-        let total_ns = a.total_ms() * 1e6;
+        let total_ns = a.total_ms().to_nanos();
         assert!(
-            (t.makespan_ns - total_ns).abs() <= 1e-9 * total_ns.max(1.0),
+            (t.makespan_ns - total_ns).abs() <= 1e-9 * total_ns.max(ns(1.0)),
             "case {case}: batch-1 timeline {} != analytical {}",
             t.makespan_ns,
             total_ns
@@ -104,11 +105,11 @@ fn prop_makespan_monotone_in_batch() {
     for case in 0..20 {
         let net = random_net(&mut rng, case);
         let a = analyze_model(&cfg, &net, 4).unwrap();
-        let mut prev = 0.0f64;
+        let mut prev = Nanos::ZERO;
         for batch in [1usize, 2, 3, 5, 8, 13, 21] {
             let t = simulate_analysis(&cfg, &a, batch);
             assert!(
-                t.makespan_ns >= prev - 1e-9,
+                t.makespan_ns >= prev - ns(1e-9),
                 "case {case}: batch {batch} shrank the makespan"
             );
             prev = t.makespan_ns;
@@ -128,13 +129,13 @@ fn multi_row_kernel_models_batch8_strictly_sublinear() {
         for batch in [8usize, 16] {
             let t = simulate_analysis(&cfg, &a, batch);
             assert!(t.pipelined);
-            let linear = batch as f64 * a.total_ms() * 1e6;
+            let linear = batch as f64 * a.total_ms().to_nanos();
             assert!(
                 t.makespan_ns < linear,
                 "{model:?} batch {batch}: {} !< {linear}",
                 t.makespan_ns
             );
-            assert!(t.makespan_ns + 1e-3 >= t.bottleneck_ns);
+            assert!(t.makespan_ns + ns(1e-3) >= t.bottleneck_ns);
             assert!(t.speedup() > 1.0);
         }
     }

@@ -1,0 +1,33 @@
+// Known-bad fixture for `scripts/lint_invariants.py --self-test`.
+// Every rule must fire at least once on this file. It is NOT part of
+// the crate (lives outside rust/src) and is never compiled.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+// [units-f64] quantity-suffixed f64 field instead of a units newtype.
+pub struct BadSummary {
+    pub makespan_ns: f64,
+    pub energy_mj: f64,
+}
+
+// [units-f64] suffixed f64 params, by value and by reference.
+fn bad_admit(window_ms: f64, budget_mw: &mut f64) -> f64 {
+    // [time-literal] ad-hoc ms->ns conversion outside units.rs.
+    window_ms * 1e6 + *budget_mw * 1e-6
+}
+
+fn bad_lock(shared: &Mutex<u64>) -> u64 {
+    // [lock-unwrap] panics forever on a poisoned lock.
+    *shared.lock().unwrap()
+}
+
+fn bad_lock_expect(shared: &Mutex<u64>) -> u64 {
+    // [lock-unwrap] expect is no better.
+    *shared.lock().expect("poisoned")
+}
+
+fn bad_clock() -> Instant {
+    // [instant] wall-clock read (fixture is posed under analyzer/).
+    Instant::now()
+}

@@ -1,0 +1,192 @@
+#!/usr/bin/env python3
+"""Repo invariant linter: static rules the Rust type system can't carry.
+
+The units layer (rust/src/util/units.rs) makes ns/ms/mJ confusion a
+compile error wherever quantities are *typed* — this linter closes the
+residual conventions around it:
+
+  units-f64     No f64 field/param whose name ends in _ns/_ms/_mj/_mw
+                outside util/units.rs. New quantity-bearing declarations
+                must use the newtypes (Nanos/Millis/Millijoules/
+                Milliwatts), not the old naming convention.
+  time-literal  No bare 1e6 / 1e-6 time-conversion literal outside
+                util/units.rs. All ns<->ms conversions must route
+                through Nanos::to_millis / Millis::to_nanos so the
+                factor exists in exactly one place.
+  lock-unwrap   No .unwrap()/.expect() directly on lock()/read()/write()
+                results in rust/src non-test code. Use the poisoned-lock
+                idiom (unwrap_or_else(PoisonError::into_inner), see
+                coordinator/engine.rs) so a panicked worker can't wedge
+                the server.
+  instant       No Instant::now() inside rust/src/analyzer/ — simulated
+                time must never read the wall clock.
+
+Scope and escape hatches:
+  * Only rust/src/**/*.rs is scanned (benches, examples, rust/tests and
+    scripts are out of scope — tests legitimately poke raw scalars).
+  * Lines after a `#[cfg(test)]` marker in a file are skipped: in this
+    repo, test modules sit at the bottom of each source file.
+  * A line carrying `// lint: allow(<rule>)` is exempt from <rule>.
+    Each allow should carry an in-line justification.
+
+Stdlib-only and line-oriented by design: no rustc, no pip, no parsing —
+it must run first in ci.sh, before anything is built.
+
+Usage:
+  python3 scripts/lint_invariants.py               lint the tree
+  python3 scripts/lint_invariants.py --self-test   verify rules fire on
+                                                   the known-bad fixture
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SRC_ROOT = REPO_ROOT / "rust" / "src"
+UNITS_FILE = SRC_ROOT / "util" / "units.rs"
+FIXTURE = REPO_ROOT / "scripts" / "lint_fixtures" / "known_bad.rs"
+
+TEST_MARKER = "#[cfg(test)]"
+ALLOW_RE = re.compile(r"//\s*lint:\s*allow\(([a-z0-9_,\s-]+)\)")
+
+
+def in_analyzer(path: Path) -> bool:
+    return "analyzer" in path.parts
+
+
+def not_units(path: Path) -> bool:
+    return path.name != "units.rs" or path.parent.name != "util"
+
+
+# Each rule: (name, compiled regex, file predicate, human message).
+RULES = [
+    (
+        "units-f64",
+        re.compile(r"\b\w+_(?:ns|ms|mj|mw)\s*:\s*&?(?:mut\s+)?f64\b"),
+        not_units,
+        "quantity-suffixed f64 declaration — use Nanos/Millis/Millijoules/"
+        "Milliwatts from util/units.rs",
+    ),
+    (
+        "time-literal",
+        re.compile(r"(?<![\w.])1e-?6(?![\d._])"),
+        not_units,
+        "bare 1e6/1e-6 time-conversion literal — route through "
+        "Nanos::to_millis / Millis::to_nanos",
+    ),
+    (
+        "lock-unwrap",
+        re.compile(r"\.(?:lock|read|write)\(\)\s*\.\s*(?:unwrap|expect)\s*\("),
+        lambda path: True,
+        "unwrap/expect on a lock result — use the poisoned-lock idiom "
+        "(unwrap_or_else(PoisonError::into_inner))",
+    ),
+    (
+        "instant",
+        re.compile(r"\bInstant::now\s*\("),
+        in_analyzer,
+        "wall-clock read inside analyzer/ — simulated time only",
+    ),
+]
+
+
+def lint_lines(path: Path, lines, active_rules):
+    """Yield (path, lineno, rule, message) for each violation."""
+    in_tests = False
+    for lineno, line in enumerate(lines, start=1):
+        if TEST_MARKER in line:
+            in_tests = True
+        if in_tests:
+            continue
+        allow = ALLOW_RE.search(line)
+        allowed = set()
+        if allow:
+            allowed = {r.strip() for r in allow.group(1).split(",")}
+        for name, pattern, _, message in active_rules:
+            if name in allowed:
+                continue
+            if pattern.search(line):
+                yield (path, lineno, name, message)
+
+
+def lint_file(path: Path):
+    active = [r for r in RULES if r[2](path)]
+    if not active:
+        return []
+    lines = path.read_text(encoding="utf-8").splitlines()
+    return list(lint_lines(path, lines, active))
+
+
+def lint_tree():
+    violations = []
+    for path in sorted(SRC_ROOT.rglob("*.rs")):
+        violations.extend(lint_file(path))
+    return violations
+
+
+def report(violations) -> int:
+    for path, lineno, rule, message in violations:
+        rel = path.relative_to(REPO_ROOT) if path.is_absolute() else path
+        print(f"{rel}:{lineno}: [{rule}] {message}")
+    if violations:
+        print(f"lint_invariants: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    print("lint_invariants: clean")
+    return 0
+
+
+GOOD_SNIPPET = """\
+use crate::util::units::{Millis, Nanos};
+pub struct Summary { pub makespan_ns: Nanos, pub window_ms: Millis }
+fn admit(window_ms: Millis) -> Nanos { window_ms.to_nanos() }
+fn guard(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+const SCALE: f64 = 1e-3; // non-time scaling literals stay legal
+fn shown(pj: f64) -> f64 { pj / 1e6 } // lint: allow(time-literal) pJ->uJ display
+#[cfg(test)]
+mod tests {
+    fn raw(makespan_ns: f64) -> f64 { makespan_ns / 1e6 } // tests exempt
+}
+"""
+
+
+def self_test() -> int:
+    """The seeded-bad fixture must trip every rule; the good snippet none."""
+    ok = True
+    if not FIXTURE.is_file():
+        print(f"self-test: missing fixture {FIXTURE}", file=sys.stderr)
+        return 1
+    # The fixture is checked as if it lived at rust/src/analyzer/bad.rs so
+    # every rule (including the analyzer-scoped `instant`) is in force.
+    posed = SRC_ROOT / "analyzer" / "known_bad.rs"
+    lines = FIXTURE.read_text(encoding="utf-8").splitlines()
+    active = [r for r in RULES if r[2](posed)]
+    hits = list(lint_lines(posed, lines, active))
+    fired = {rule for _, _, rule, _ in hits}
+    expected = {name for name, _, _, _ in RULES}
+    missing = expected - fired
+    if missing:
+        print(f"self-test: rules never fired on fixture: {sorted(missing)}",
+              file=sys.stderr)
+        ok = False
+    good_hits = list(lint_lines(posed, GOOD_SNIPPET.splitlines(), active))
+    if good_hits:
+        print("self-test: false positives on known-good snippet:",
+              file=sys.stderr)
+        for _, lineno, rule, _ in good_hits:
+            print(f"  line {lineno}: [{rule}]", file=sys.stderr)
+        ok = False
+    print("self-test: ok" if ok else "self-test: FAILED")
+    return 0 if ok else 1
+
+
+def main(argv) -> int:
+    if "--self-test" in argv:
+        return self_test()
+    return report(lint_tree())
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
