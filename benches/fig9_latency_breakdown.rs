@@ -47,6 +47,49 @@ fn main() {
     assert!((3.0..5.0).contains(&ratio), "8b/4b processing ratio {ratio}");
     println!("\nall Fig. 9 shape checks passed");
 
+    // Writeback pricing models (`[memory] writeback_model`): the same
+    // batch-8 stream priced under the flat scalar and the two command-
+    // level controllers. The scheduled controller may only ever claw
+    // time back from the naive reference, and at batch 1 the command
+    // decomposition must collapse to the flat figure bit-exactly.
+    use opima::analyzer::timeline::simulate_analysis_makespan;
+    use opima::config::WritebackModel;
+    table_header(
+        "Writeback model comparison (batch 8, ms)",
+        &["model", "flat", "naive", "scheduled"],
+    );
+    for m in ALL_MODELS {
+        let a = analyze_model(&cfg, &build_model(m).unwrap(), 4).unwrap();
+        let mut per = [0.0f64; 3];
+        let mut per1 = [0.0f64; 3];
+        for (i, wm) in WritebackModel::ALL.iter().enumerate() {
+            let mut c = cfg.clone();
+            c.memory.writeback_model = *wm;
+            c.pipeline.writeback_channels = 2;
+            per[i] = simulate_analysis_makespan(&c, &a, 8).makespan_ms().raw();
+            c.pipeline.writeback_channels = cfg.pipeline.writeback_channels;
+            per1[i] = simulate_analysis_makespan(&c, &a, 1).makespan_ns.raw();
+        }
+        table_row(&[
+            a.name.clone(),
+            format!("{:.3}", per[0]),
+            format!("{:.3}", per[1]),
+            format!("{:.3}", per[2]),
+        ]);
+        assert!(
+            per[2] <= per[1] + 1e-9,
+            "{}: scheduled {} above naive {}",
+            a.name,
+            per[2],
+            per[1]
+        );
+        if m == opima::cnn::Model::ResNet18 {
+            assert_eq!(per1[0], per1[1], "naive must recover flat at batch 1");
+            assert_eq!(per1[0], per1[2], "scheduled must recover flat at batch 1");
+        }
+    }
+    println!("\nwriteback model ordering checks passed");
+
     let net = build_model(opima::cnn::Model::ResNet18).unwrap();
     measure("fig9/analyze_resnet18_4b", 3, 50, || {
         black_box(analyze_model(&cfg, &net, 4).unwrap());

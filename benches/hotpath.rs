@@ -67,6 +67,66 @@ fn main() {
         black_box(mem.read(addr, 128).unwrap());
     }));
 
+    // --- command-level writeback controllers -------------------------------
+    // Admission throughput of the naive/scheduled pair on a contended
+    // 1k-job stream (8 trains each, ready at half the previous drain so
+    // jobs overlap). ci.sh pins both row names; the deterministic
+    // makespan row below feeds scripts/bench_gate.py's scheduled ≤ naive
+    // ordering check on non-smoke runs.
+    {
+        use opima::memory::{
+            NaiveWritebackController, ScheduledWritebackController, WbJob, WritebackController,
+        };
+        use opima::util::json::Json;
+        use opima::util::units::{ns, Nanos};
+        let jobs: Vec<WbJob> = (0..1000u64)
+            .map(|id| WbJob {
+                id,
+                row: id % 48,
+                trains: 8,
+                train_ns: ns(1000.0),
+                settle_ns: ns(120.0),
+                flat_ns: ns(8.0 * 1000.0 + 120.0),
+            })
+            .collect();
+        report.add_stats(&measure("memory/writeback_naive_1k", 5, scaled(200), || {
+            let mut c = NaiveWritebackController::new(4);
+            let mut end = Nanos::ZERO;
+            for j in &jobs {
+                end = c.admit(Nanos::ZERO, end * 0.5, j).1;
+            }
+            black_box(end);
+        }));
+        report.add_stats(&measure("memory/writeback_scheduled_1k", 5, scaled(200), || {
+            let mut c = ScheduledWritebackController::new(4, 2);
+            let mut end = Nanos::ZERO;
+            for j in &jobs {
+                end = end.max(c.admit(Nanos::ZERO, end * 0.5, j).1);
+            }
+            black_box(end);
+        }));
+        // Value row (no mean_ns ⇒ the timing gate skips it): the two
+        // controllers' simulated makespans over the same stream.
+        let run = |naive: bool| -> f64 {
+            let mut n = NaiveWritebackController::new(4);
+            let mut s = ScheduledWritebackController::new(4, 2);
+            let mut end = Nanos::ZERO;
+            for j in &jobs {
+                let c: &mut dyn WritebackController =
+                    if naive { &mut n } else { &mut s };
+                end = end.max(c.admit(Nanos::ZERO, end * 0.5, j).1);
+            }
+            end.raw()
+        };
+        report.add(
+            "memory/writeback_model_makespan",
+            &[
+                ("naive_ns", Json::Num(run(true))),
+                ("scheduled_ns", Json::Num(run(false))),
+            ],
+        );
+    }
+
     // --- coordinator components ------------------------------------------
     let mut rng = Rng::new(1);
     report.add_stats(&measure("batcher/push_flush_batch8", 10, scaled(2000), || {

@@ -39,13 +39,16 @@ for f in BENCH_hotpath.json BENCH_serving_throughput.json; do
   test -s "$f" || { echo "missing bench summary $f"; exit 1; }
   grep -q '"results":\[' "$f" || { echo "bad schema in $f"; exit 1; }
 done
-# The zero-copy data-plane rows (copy vs pooled, ISSUE 5) and the
-# router dispatch rows (occupancy-only vs global-engine, ISSUE 6) must
-# keep landing in the hotpath summary.
+# The zero-copy data-plane rows (copy vs pooled, ISSUE 5), the router
+# dispatch rows (occupancy-only vs global-engine, ISSUE 6) and the
+# command-level writeback controller rows (naive vs scheduled, ISSUE 8)
+# must keep landing in the hotpath summary.
 for row in 'serving/pack_batch8_copy' 'serving/pack_batch8_pooled' \
            'serving/respond_batch8_copy' 'serving/respond_batch8_pooled' \
            'router/dispatch_1k' 'router/dispatch_for_occupancy_1k' \
            'router/dispatch_batch_contended_1k' 'router/dispatch_batch_optimistic_1k' \
+           'memory/writeback_naive_1k' 'memory/writeback_scheduled_1k' \
+           'memory/writeback_model_makespan' \
            'units/overhead_smoke_raw_f64' 'units/overhead_smoke_newtype'; do
   grep -q "$row" BENCH_hotpath.json || { echo "missing $row row in BENCH_hotpath.json"; exit 1; }
 done

@@ -60,8 +60,11 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::analyzer::timeline::{run_stream, Event, SlotPool, StreamScratch};
-use crate::config::PipelineParams;
+use crate::analyzer::timeline::{
+    run_stream, CommandSink, Event, FlatSink, SlotPool, StreamScratch, WB_BATCH_ROW_STRIDE,
+};
+use crate::config::{PipelineParams, WritebackModel};
+use crate::memory::writeback::{NaiveWritebackController, ScheduledWritebackController};
 use crate::pim::scheduler::LayerCost;
 use crate::util::units::{Millis, Nanos};
 
@@ -134,6 +137,18 @@ impl SlotPool for RelPool<'_> {
     }
 }
 
+/// The writeback stage of one instance, per `[memory] writeback_model`:
+/// the flat slot heap (default — byte-identical to the pre-command
+/// engine) or one persistent command-level controller whose bank and
+/// GST-route state carries across admissions, so co-resident batches
+/// collide on real banks and row switches, not just on channel counts.
+#[derive(Debug, Clone)]
+enum WbSlots {
+    Flat(PoolHeap),
+    Naive(NaiveWritebackController),
+    Scheduled(ScheduledWritebackController),
+}
+
 /// One committed slice of simulated subarray occupancy (absolute time).
 #[derive(Debug, Clone, Copy)]
 struct Reservation {
@@ -157,18 +172,35 @@ struct Instance {
     horizon_ns: Nanos,
     /// Shared aggregation-unit pool (persists across admissions).
     agg: PoolHeap,
-    /// Shared writeback-channel pool (persists across admissions).
-    wb: PoolHeap,
+    /// Shared writeback stage (persists across admissions).
+    wb: WbSlots,
+    /// Monotone command-level job ids issued on this instance.
+    wb_jobs: u64,
+    /// Batches ever admitted here — the row-id tag that keeps
+    /// co-resident batches on distinct subarray rows.
+    wb_batches: u64,
 }
 
 impl Instance {
     fn new(pipe: &PipelineParams) -> Self {
+        Self::with_memory(pipe, WritebackModel::Flat, 1)
+    }
+
+    fn with_memory(pipe: &PipelineParams, model: WritebackModel, banks: usize) -> Self {
         Self {
             reservations: Vec::new(),
             floor_ns: Nanos::ZERO,
             horizon_ns: Nanos::ZERO,
             agg: PoolHeap::new(pipe.aggregation_units),
-            wb: PoolHeap::new(pipe.writeback_channels),
+            wb: match model {
+                WritebackModel::Flat => WbSlots::Flat(PoolHeap::new(pipe.writeback_channels)),
+                WritebackModel::Naive => WbSlots::Naive(NaiveWritebackController::new(banks)),
+                WritebackModel::Scheduled => WbSlots::Scheduled(
+                    ScheduledWritebackController::new(banks, pipe.writeback_channels),
+                ),
+            },
+            wb_jobs: 0,
+            wb_batches: 0,
         }
     }
 
@@ -252,11 +284,28 @@ pub struct GlobalTimeline {
 
 impl GlobalTimeline {
     pub fn new(instances: usize, subarray_capacity: usize, pipe: &PipelineParams) -> Self {
+        Self::with_memory(instances, subarray_capacity, pipe, WritebackModel::Flat, 1)
+    }
+
+    /// Like [`Self::new`] but pricing writebacks with the configured
+    /// command-level model (`[memory] writeback_model`); `banks` is the
+    /// per-instance OPCM bank count the controllers stripe program
+    /// trains over. `WritebackModel::Flat` matches [`Self::new`]
+    /// bit-exactly regardless of `banks`.
+    pub fn with_memory(
+        instances: usize,
+        subarray_capacity: usize,
+        pipe: &PipelineParams,
+        model: WritebackModel,
+        banks: usize,
+    ) -> Self {
         assert!(instances >= 1);
         Self {
             capacity: subarray_capacity.max(1),
             pipe: pipe.clone(),
-            instances: (0..instances).map(|_| Instance::new(pipe)).collect(),
+            instances: (0..instances)
+                .map(|_| Instance::with_memory(pipe, model, banks))
+                .collect(),
             frontier_ns: Nanos::ZERO,
             scratch: StreamScratch::default(),
         }
@@ -370,26 +419,75 @@ impl GlobalTimeline {
         scratch.reset(stream.costs.len(), stream.batch);
         let inst = &mut instances[i];
         let appended_from = events.as_deref().map_or(0, |ev| ev.len());
+        // Row-id tag for this admission: co-resident batches write
+        // distinct subarray rows, so their trains never coalesce on the
+        // GST switches (flat model: unused).
+        let row_base = inst.wb_batches * WB_BATCH_ROW_STRIDE;
         let makespan_ns = {
+            let Instance {
+                agg, wb, wb_jobs, ..
+            } = inst;
             let mut agg = RelPool {
-                heap: &mut inst.agg,
+                heap: agg,
                 origin: start_ns,
             };
-            let mut wb = RelPool {
-                heap: &mut inst.wb,
-                origin: start_ns,
-            };
-            run_stream(
-                stream.costs,
-                stream.batch,
-                stream.pipelined,
-                pipe.max_in_flight_images,
-                &mut agg,
-                &mut wb,
-                scratch,
-                events.as_deref_mut(),
-            )
+            match wb {
+                WbSlots::Flat(heap) => {
+                    let mut pool = RelPool {
+                        heap,
+                        origin: start_ns,
+                    };
+                    let mut sink = FlatSink(&mut pool);
+                    run_stream(
+                        stream.costs,
+                        stream.batch,
+                        stream.pipelined,
+                        pipe.max_in_flight_images,
+                        &mut agg,
+                        &mut sink,
+                        scratch,
+                        events.as_deref_mut(),
+                    )
+                }
+                WbSlots::Naive(ctl) => {
+                    let mut sink = CommandSink {
+                        ctl,
+                        origin: start_ns,
+                        next_job: wb_jobs,
+                        row_base,
+                    };
+                    run_stream(
+                        stream.costs,
+                        stream.batch,
+                        stream.pipelined,
+                        pipe.max_in_flight_images,
+                        &mut agg,
+                        &mut sink,
+                        scratch,
+                        events.as_deref_mut(),
+                    )
+                }
+                WbSlots::Scheduled(ctl) => {
+                    let mut sink = CommandSink {
+                        ctl,
+                        origin: start_ns,
+                        next_job: wb_jobs,
+                        row_base,
+                    };
+                    run_stream(
+                        stream.costs,
+                        stream.batch,
+                        stream.pipelined,
+                        pipe.max_in_flight_images,
+                        &mut agg,
+                        &mut sink,
+                        scratch,
+                        events.as_deref_mut(),
+                    )
+                }
+            }
         };
+        inst.wb_batches += 1;
         if let Some(ev) = events.as_deref_mut() {
             // run_stream emitted the batch frame; shift to absolute.
             for e in &mut ev[appended_from..] {
@@ -525,6 +623,57 @@ mod tests {
         assert!(gt.live_reservations(0) <= MAX_RESERVATIONS_PER_INSTANCE);
         assert!(gt.floor_ns(0) > Nanos::ZERO, "compaction must have folded");
         assert!((gt.makespan_ns() - ns(1000.0 * 5.0)).abs().raw() < 1e-6);
+    }
+
+    /// A drained command-model instance prices a batch identically at
+    /// any admission origin — the same bit-exactness contract the flat
+    /// heap pools honor ([`RelPool`]).
+    #[test]
+    fn command_model_admission_is_origin_invariant() {
+        for model in [WritebackModel::Naive, WritebackModel::Scheduled] {
+            let pipe = PipelineParams::default();
+            let c = costs();
+            let mut at_zero = GlobalTimeline::with_memory(1, 64, &pipe, model, 4);
+            let iso = at_zero
+                .admit(0, 8, Nanos::ZERO, stream(&c, 6), None)
+                .makespan_ns;
+            let mut shifted = GlobalTimeline::with_memory(1, 64, &pipe, model, 4);
+            let a = shifted.admit(0, 8, ns(12_345.5), stream(&c, 6), None);
+            assert_eq!(a.makespan_ns, iso, "{model:?} drifted under a shifted origin");
+        }
+    }
+
+    /// Co-resident batches contend through the persistent bank/channel
+    /// state of both command controllers, and the scheduled controller
+    /// never prices the pair above the naive reference.
+    #[test]
+    fn command_model_coresidents_contend_and_stay_ordered() {
+        let pipe = PipelineParams {
+            writeback_channels: 1,
+            ..PipelineParams::default()
+        };
+        let c = costs();
+        let mut ends = Vec::new();
+        for model in [WritebackModel::Naive, WritebackModel::Scheduled] {
+            let mut gt = GlobalTimeline::with_memory(1, 64, &pipe, model, 4);
+            gt.admit(0, 8, Nanos::ZERO, stream(&c, 4), None);
+            let mut fresh = GlobalTimeline::with_memory(1, 64, &pipe, model, 4);
+            let iso = fresh
+                .admit(0, 8, Nanos::ZERO, stream(&c, 4), None)
+                .makespan_ns;
+            let a1 = gt.admit(0, 8, Nanos::ZERO, stream(&c, 4), None);
+            assert!(
+                a1.makespan_ns > iso,
+                "{model:?} co-resident batch saw no contention"
+            );
+            ends.push(a1.end_ns);
+        }
+        assert!(
+            ends[1] <= ends[0] + ns(1e-6),
+            "scheduled {} must not trail naive {}",
+            ends[1],
+            ends[0]
+        );
     }
 
     #[test]

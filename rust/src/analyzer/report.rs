@@ -101,6 +101,54 @@ pub fn contention_table(streams: usize, rows: &[ContentionRow]) -> String {
     out
 }
 
+/// One model's row in the writeback-model comparison (`analyze`): the
+/// same batch priced under the flat scalar and the two command-level
+/// controllers (`[memory] writeback_model`).
+pub struct WritebackRow {
+    pub name: String,
+    pub batch: usize,
+    /// Flat scalar writebacks — the historical default.
+    pub flat_ms: Millis,
+    /// Command-level, strictly serialized (the reference controller).
+    pub naive_ms: Millis,
+    /// Command-level, bank-parallel and row-switch-aware.
+    pub scheduled_ms: Millis,
+}
+
+/// Flat-vs-naive-vs-scheduled writeback pricing report. The two ratio
+/// columns bracket the command model: `naive/flat` is what honest
+/// command serialization costs over the scalar, `scheduled/naive` is
+/// what the optimized controller claws back (≤ 1 by construction).
+pub fn writeback_table(rows: &[WritebackRow]) -> String {
+    let mut out = String::from(
+        "| model | batch | flat (ms) | naive (ms) | scheduled (ms) | \
+         naive/flat | scheduled/naive |\n|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let vs_flat = if r.flat_ms > Millis::ZERO {
+            r.naive_ms / r.flat_ms
+        } else {
+            1.0
+        };
+        let vs_naive = if r.naive_ms > Millis::ZERO {
+            r.scheduled_ms / r.naive_ms
+        } else {
+            1.0
+        };
+        out.push_str(&format!(
+            "| {} | {} | {:.3} | {:.3} | {:.3} | {:.2}× | {:.2}× |\n",
+            r.name,
+            r.batch,
+            r.flat_ms.raw(),
+            r.naive_ms.raw(),
+            r.scheduled_ms.raw(),
+            vs_flat,
+            vs_naive
+        ));
+    }
+    out
+}
+
 /// Pipelined-vs-sequential batch report rows (the `analyze --batch`
 /// command): one timeline per model, with the analytical `batch ×`
 /// baseline, the pipelined makespan, and the bottleneck lower bound.
@@ -201,6 +249,28 @@ mod tests {
             }],
         );
         assert!(z.contains("1.00×") && !z.contains("inf"), "{z}");
+    }
+
+    #[test]
+    fn writeback_table_renders_and_guards_zero() {
+        use crate::util::units::ms;
+        let out = writeback_table(&[WritebackRow {
+            name: "resnet18".into(),
+            batch: 8,
+            flat_ms: ms(2.0),
+            naive_ms: ms(3.0),
+            scheduled_ms: ms(2.4),
+        }]);
+        assert!(out.contains("resnet18") && out.contains("scheduled/naive"));
+        assert!(out.contains("1.50×") && out.contains("0.80×"), "{out}");
+        let z = writeback_table(&[WritebackRow {
+            name: "empty".into(),
+            batch: 1,
+            flat_ms: Millis::ZERO,
+            naive_ms: Millis::ZERO,
+            scheduled_ms: Millis::ZERO,
+        }]);
+        assert!(z.contains("1.00×") && !z.contains("inf") && !z.contains("NaN"), "{z}");
     }
 
     #[test]

@@ -14,6 +14,12 @@
 //! pipelinable mappings), while `energy_mj` stays linear — overlap moves
 //! work in time, it does not remove any. The old scaling is preserved in
 //! [`SimCost::sequential_ms`] so reports can show the gain.
+//!
+//! Entries inherit the configured `[memory] writeback_model`: under a
+//! command-level model each entry's makespan prices writebacks through
+//! the route/write/settle decomposition ([`crate::memory::writeback`])
+//! instead of the flat scalar — identical at the uncontended batch-1
+//! limit, honest once writebacks queue within the batch.
 
 use crate::analyzer::latency::{analyze_model, ModelAnalysis};
 use crate::analyzer::timeline::{simulate_analysis_makespan, TimelineSummary};

@@ -19,10 +19,18 @@
 //! - Resource pools: each layer's subarray/MDL group is *exclusive*
 //!   (one image in flight per layer — the mapper's input-stationary
 //!   placement holds exactly one image's maps per layer); aggregation
-//!   events draw from [`PipelineParams::aggregation_units`]; writeback
-//!   events draw from [`PipelineParams::writeback_channels`] (the
-//!   optical write-power budget already caps the lanes *inside* one
-//!   train, this caps concurrent trains).
+//!   events draw from
+//!   [`PipelineParams::aggregation_units`](crate::config::PipelineParams::aggregation_units);
+//!   writeback events go through a [`WritebackSink`] selected by
+//!   `[memory] writeback_model`: the default **flat** sink draws whole
+//!   `writeback_ns` scalars from
+//!   [`PipelineParams::writeback_channels`](crate::config::PipelineParams::writeback_channels)
+//!   slots (the optical write-power budget already caps the lanes
+//!   *inside* one train, this caps concurrent trains), while the
+//!   **naive**/**scheduled** sinks replay each layer's route/write/
+//!   settle command decomposition through the controllers in
+//!   [`crate::memory::writeback`] (there, `writeback_channels` caps
+//!   concurrent *trains* — a finer grain; see DESIGN.md §2.7).
 //! - Hazards: layer `k` of image `i` cannot start before image `i`'s
 //!   layer-`(k-1)` writeback lands (dataflow, RAW); the writeback of
 //!   image `i`'s layer `k` cannot start before image `i-1` has finished
@@ -56,7 +64,10 @@
 //! use, since they only consume the scalar [`TimelineSummary`] bounds.
 
 use crate::analyzer::latency::ModelAnalysis;
-use crate::config::{OpimaConfig, PipelineParams};
+use crate::config::{OpimaConfig, WritebackModel};
+use crate::memory::writeback::{
+    NaiveWritebackController, ScheduledWritebackController, WbJob, WritebackController,
+};
 use crate::pim::scheduler::LayerCost;
 use crate::util::units::{Millis, Nanos};
 
@@ -214,6 +225,83 @@ impl SlotPool for Pool {
     }
 }
 
+/// The writeback stage as seen by the scheduling pass: issue one
+/// layer's writeback becoming ready at `ready`, returning its
+/// `(start, end)` window. Two implementations exist: [`FlatSink`]
+/// preserves the historical flat-scalar arithmetic byte for byte
+/// (one `SlotPool::acquire` of `writeback_ns`), and [`CommandSink`]
+/// replays the layer's command decomposition through one of the
+/// [`crate::memory::writeback`] controllers. `[memory] writeback_model`
+/// picks the implementation; everything else in the pass is shared.
+pub(crate) trait WritebackSink {
+    fn issue(&mut self, ready: Nanos, cost: &LayerCost, layer: usize) -> (Nanos, Nanos);
+}
+
+/// The flat model: the whole `writeback_ns` scalar occupies one
+/// writeback-channel slot. Default — bit-identical to the pre-command
+/// timeline.
+pub(crate) struct FlatSink<'a>(pub &'a mut dyn SlotPool);
+
+impl WritebackSink for FlatSink<'_> {
+    fn issue(&mut self, ready: Nanos, cost: &LayerCost, _layer: usize) -> (Nanos, Nanos) {
+        let start = self.0.acquire(ready, cost.writeback_ns);
+        (start, start + cost.writeback_ns)
+    }
+}
+
+/// Row-id stride between co-resident batches: distinct batches write
+/// distinct subarray rows, so their bursts never coalesce on the GST
+/// switches. Comfortably above any real layer count.
+pub(crate) const WB_BATCH_ROW_STRIDE: u64 = 1 << 20;
+
+/// The command model: each writeback is decomposed into a [`WbJob`] and
+/// admitted into a persistent controller in the caller's relative time
+/// frame (the standalone timeline runs at `origin = 0`; the contention
+/// engine at the batch's admission origin).
+pub(crate) struct CommandSink<'a> {
+    pub ctl: &'a mut dyn WritebackController,
+    pub origin: Nanos,
+    /// Monotone job ids across the controller's lifetime.
+    pub next_job: &'a mut u64,
+    /// Row-id base for this stream (`batch tag × WB_BATCH_ROW_STRIDE`).
+    pub row_base: u64,
+}
+
+impl WritebackSink for CommandSink<'_> {
+    fn issue(&mut self, ready: Nanos, cost: &LayerCost, layer: usize) -> (Nanos, Nanos) {
+        let job = command_job(cost, *self.next_job, self.row_base + layer as u64);
+        *self.next_job += 1;
+        self.ctl.admit(self.origin, ready, &job)
+    }
+}
+
+/// Decompose one layer cost into a command-level writeback job. Costs
+/// priced by [`crate::pim::scheduler::PimScheduler`] carry the real
+/// decomposition; hand-built costs (tests, fixtures) with `wb_trains =
+/// 0` fall back to a single train of the whole flat figure, so the
+/// uncontended-limit recovery holds for them too.
+pub(crate) fn command_job(c: &LayerCost, id: u64, row: u64) -> WbJob {
+    if c.wb_trains == 0 {
+        WbJob {
+            id,
+            row,
+            trains: if c.writeback_ns > Nanos::ZERO { 1 } else { 0 },
+            train_ns: c.writeback_ns,
+            settle_ns: Nanos::ZERO,
+            flat_ns: c.writeback_ns,
+        }
+    } else {
+        WbJob {
+            id,
+            row,
+            trains: c.wb_trains,
+            train_ns: c.wb_train_ns,
+            settle_ns: c.wb_settle_ns,
+            flat_ns: c.writeback_ns,
+        }
+    }
+}
+
 /// Reusable per-stream scheduling state: the per-layer exclusive-unit
 /// cursors, the per-layer writeback-order cursors, and the image
 /// retirement times. Owned by the caller so the global engine can admit
@@ -257,7 +345,7 @@ pub(crate) fn run_stream(
     pipelined: bool,
     window: usize,
     agg_pool: &mut dyn SlotPool,
-    wb_pool: &mut dyn SlotPool,
+    wb: &mut dyn WritebackSink,
     s: &mut StreamScratch,
     mut events: Option<&mut Vec<Event>>,
 ) -> Nanos {
@@ -295,8 +383,7 @@ pub(crate) fn run_stream(
                 Nanos::ZERO
             };
             let w_ready = a_end.max(war).max(s.wb_layer_free[layer]);
-            let w_start = wb_pool.acquire(w_ready, c.writeback_ns);
-            let w_end = w_start + c.writeback_ns;
+            let (w_start, w_end) = wb.issue(w_ready, c, layer);
             s.wb_layer_free[layer] = w_end;
             makespan_ns = makespan_ns.max(m_end).max(a_end).max(w_end);
             if let Some(ev) = events.as_deref_mut() {
@@ -335,13 +422,13 @@ pub(crate) fn run_stream(
 /// [`simulate_analysis`], which falls back to serial execution when the
 /// stationary operands don't fit in memory.
 pub fn simulate(cfg: &OpimaConfig, costs: &[LayerCost], batch: usize) -> BatchTimeline {
-    full_schedule(&cfg.pipeline, costs, batch, true)
+    full_schedule(cfg, costs, batch, true)
 }
 
 /// Schedule a whole [`ModelAnalysis`] at `batch`, honouring its
 /// occupancy: an over-capacity mapping runs strictly serialized.
 pub fn simulate_analysis(cfg: &OpimaConfig, a: &ModelAnalysis, batch: usize) -> BatchTimeline {
-    full_schedule(&cfg.pipeline, &a.layer_costs, batch, a.occupancy.fits())
+    full_schedule(cfg, &a.layer_costs, batch, a.occupancy.fits())
 }
 
 /// Makespan-only counterpart of [`simulate`]: the identical scheduling
@@ -349,7 +436,7 @@ pub fn simulate_analysis(cfg: &OpimaConfig, a: &ModelAnalysis, batch: usize) -> 
 /// serving-side consumers (plan registry, cost tables) only read the
 /// scalar bounds, so they never pay for the schedule they discard.
 pub fn simulate_makespan(cfg: &OpimaConfig, costs: &[LayerCost], batch: usize) -> TimelineSummary {
-    schedule(&cfg.pipeline, costs, batch, true, None)
+    schedule(cfg, costs, batch, true, None)
 }
 
 /// Makespan-only counterpart of [`simulate_analysis`].
@@ -358,50 +445,73 @@ pub fn simulate_analysis_makespan(
     a: &ModelAnalysis,
     batch: usize,
 ) -> TimelineSummary {
-    schedule(&cfg.pipeline, &a.layer_costs, batch, a.occupancy.fits(), None)
+    schedule(cfg, &a.layer_costs, batch, a.occupancy.fits(), None)
 }
 
 /// Run [`schedule`] with event materialization and package the full
 /// timeline.
 fn full_schedule(
-    pipe: &PipelineParams,
+    cfg: &OpimaConfig,
     costs: &[LayerCost],
     batch: usize,
     pipelined: bool,
 ) -> BatchTimeline {
     let mut events = Vec::with_capacity(batch * costs.len() * 3);
-    let summary = schedule(pipe, costs, batch, pipelined, Some(&mut events));
+    let summary = schedule(cfg, costs, batch, pipelined, Some(&mut events));
     BatchTimeline { summary, events }
 }
 
 /// The scheduling pass. With `events: None` this is the makespan-only
 /// fast path: identical arithmetic (the running makespan maximum visits
 /// the same event end times in the same order), no event allocation.
+/// `[memory] writeback_model` selects the writeback sink; the flat
+/// default reproduces the historical arithmetic byte for byte.
 fn schedule(
-    pipe: &PipelineParams,
+    cfg: &OpimaConfig,
     costs: &[LayerCost],
     batch: usize,
     pipelined: bool,
     events: Option<&mut Vec<Event>>,
 ) -> TimelineSummary {
+    let pipe = &cfg.pipeline;
     let per_image_ns: Nanos = costs.iter().map(LayerCost::total_ns).sum();
     let sequential_ns = per_image_ns * batch as f64;
-    let bottleneck_ns = bottleneck(pipe, costs, batch, per_image_ns);
+    let bottleneck_ns = bottleneck(cfg, costs, batch, per_image_ns);
 
     let mut agg_pool = Pool::new(pipe.aggregation_units);
-    let mut wb_pool = Pool::new(pipe.writeback_channels);
     let mut scratch = StreamScratch::default();
     scratch.reset(costs.len(), batch);
-    let makespan_ns = run_stream(
-        costs,
-        batch,
-        pipelined,
-        pipe.max_in_flight_images,
-        &mut agg_pool,
-        &mut wb_pool,
-        &mut scratch,
-        events,
-    );
+    let window = pipe.max_in_flight_images;
+    let makespan_ns = match cfg.memory.writeback_model {
+        WritebackModel::Flat => {
+            let mut wb_pool = Pool::new(pipe.writeback_channels);
+            let mut sink = FlatSink(&mut wb_pool);
+            run_stream(costs, batch, pipelined, window, &mut agg_pool, &mut sink, &mut scratch, events)
+        }
+        WritebackModel::Naive => {
+            let mut ctl = NaiveWritebackController::new(cfg.geometry.banks);
+            let mut next_job = 0u64;
+            let mut sink = CommandSink {
+                ctl: &mut ctl,
+                origin: Nanos::ZERO,
+                next_job: &mut next_job,
+                row_base: 0,
+            };
+            run_stream(costs, batch, pipelined, window, &mut agg_pool, &mut sink, &mut scratch, events)
+        }
+        WritebackModel::Scheduled => {
+            let mut ctl =
+                ScheduledWritebackController::new(cfg.geometry.banks, pipe.writeback_channels);
+            let mut next_job = 0u64;
+            let mut sink = CommandSink {
+                ctl: &mut ctl,
+                origin: Nanos::ZERO,
+                next_job: &mut next_job,
+                row_base: 0,
+            };
+            run_stream(costs, batch, pipelined, window, &mut agg_pool, &mut sink, &mut scratch, events)
+        }
+    };
     TimelineSummary {
         batch,
         makespan_ns,
@@ -414,27 +524,71 @@ fn schedule(
 
 /// Lower bound on any feasible schedule: the single-image critical path,
 /// or the busiest resource's total work divided by its capacity.
+///
+/// The flat and naive models share one formula (naive only *adds*
+/// serialization on top of flat, so flat's bound stays valid). The
+/// scheduled controller can overlap a single job's trains across
+/// channels and banks, so its per-layer and critical-path terms use the
+/// per-job floor `ceil(trains / min(channels, banks)) × train + settle`
+/// and its channel term counts train work only (settle drains
+/// off-channel).
 fn bottleneck(
-    pipe: &PipelineParams,
+    cfg: &OpimaConfig,
     costs: &[LayerCost],
     batch: usize,
     per_image_ns: Nanos,
 ) -> Nanos {
+    let pipe = &cfg.pipeline;
     let b = batch as f64;
     // Each layer's exclusive unit holds one image for mac + aggregation.
     let max_unit = costs
         .iter()
         .map(|c| c.mac_ns + c.aggregation_ns)
         .fold(Nanos::ZERO, Nanos::max);
-    // Writebacks into one layer are image-ordered.
-    let max_wb = costs.iter().map(|c| c.writeback_ns).fold(Nanos::ZERO, Nanos::max);
     let agg_total: Nanos = costs.iter().map(|c| c.aggregation_ns).sum();
-    let wb_total: Nanos = costs.iter().map(|c| c.writeback_ns).sum();
-    per_image_ns
-        .max(b * max_unit)
-        .max(b * max_wb)
-        .max(b * agg_total / pipe.aggregation_units.max(1) as f64)
-        .max(b * wb_total / pipe.writeback_channels.max(1) as f64)
+    match cfg.memory.writeback_model {
+        WritebackModel::Flat | WritebackModel::Naive => {
+            // Writebacks into one layer are image-ordered.
+            let max_wb =
+                costs.iter().map(|c| c.writeback_ns).fold(Nanos::ZERO, Nanos::max);
+            let wb_total: Nanos = costs.iter().map(|c| c.writeback_ns).sum();
+            per_image_ns
+                .max(b * max_unit)
+                .max(b * max_wb)
+                .max(b * agg_total / pipe.aggregation_units.max(1) as f64)
+                .max(b * wb_total / pipe.writeback_channels.max(1) as f64)
+        }
+        WritebackModel::Scheduled => {
+            let eff = pipe.writeback_channels.min(cfg.geometry.banks).max(1) as u64;
+            let job_floor = |c: &LayerCost| -> Nanos {
+                if c.wb_trains == 0 {
+                    c.writeback_ns
+                } else {
+                    c.wb_trains.div_ceil(eff) as f64 * c.wb_train_ns + c.wb_settle_ns
+                }
+            };
+            let critical: Nanos = costs
+                .iter()
+                .map(|c| c.mac_ns + c.aggregation_ns + job_floor(c))
+                .sum();
+            let max_wb = costs.iter().map(job_floor).fold(Nanos::ZERO, Nanos::max);
+            let train_work: Nanos = costs
+                .iter()
+                .map(|c| {
+                    if c.wb_trains == 0 {
+                        c.writeback_ns
+                    } else {
+                        c.wb_trains as f64 * c.wb_train_ns
+                    }
+                })
+                .sum();
+            critical
+                .max(b * max_unit)
+                .max(b * max_wb)
+                .max(b * agg_total / pipe.aggregation_units.max(1) as f64)
+                .max(b * train_work / pipe.writeback_channels.max(1) as f64)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -624,6 +778,60 @@ mod tests {
         assert_eq!(t.makespan_ns, Nanos::ZERO);
         assert_eq!(t.speedup(), 1.0);
         assert_eq!(t.efficiency(), 1.0);
+    }
+
+    #[test]
+    fn command_models_recover_flat_at_batch_one() {
+        // The uncontended limit: at batch 1 with one writeback channel,
+        // every writeback runs as a gapless serial chain from its ready
+        // time, so both command controllers return exactly the flat
+        // analytical window — bit-identical makespans. This needs a real
+        // model: every inter-writeback gap must cover the GST row-switch
+        // reconfiguration (true for all Table II CNNs; sub-10ns-gap toy
+        // nets surface genuine route stalls — see DESIGN.md §2.7).
+        let cfg = OpimaConfig::paper();
+        let a = analyze_model(&cfg, &build_model(Model::ResNet18).unwrap(), 4).unwrap();
+        let flat = simulate_analysis_makespan(&cfg, &a, 1);
+        for model in [WritebackModel::Naive, WritebackModel::Scheduled] {
+            let mut c = cfg.clone();
+            c.memory.writeback_model = model;
+            let t = simulate_analysis_makespan(&c, &a, 1);
+            assert_eq!(
+                t.makespan_ns, flat.makespan_ns,
+                "{model} batch-1 makespan drifted from flat"
+            );
+        }
+    }
+
+    #[test]
+    fn command_models_bounded_and_ordered_at_batch() {
+        let (cfg, a) = analysis(4);
+        for batch in [2usize, 8, 16] {
+            let flat = simulate_analysis_makespan(&cfg, &a, batch);
+            let mut nc = cfg.clone();
+            nc.memory.writeback_model = WritebackModel::Naive;
+            let naive = simulate_analysis_makespan(&nc, &a, batch);
+            let mut sc = cfg.clone();
+            sc.memory.writeback_model = WritebackModel::Scheduled;
+            let sched = simulate_analysis_makespan(&sc, &a, batch);
+            let eps = Nanos::new(1e-6);
+            assert!(
+                naive.makespan_ns + eps >= flat.makespan_ns,
+                "batch {batch}: naive {} < flat {}",
+                naive.makespan_ns,
+                flat.makespan_ns
+            );
+            assert!(
+                naive.makespan_ns + eps >= sched.makespan_ns,
+                "batch {batch}: naive {} < scheduled {}",
+                naive.makespan_ns,
+                sched.makespan_ns
+            );
+            assert!(
+                sched.makespan_ns + eps >= sched.bottleneck_ns,
+                "batch {batch}: scheduled beat its own lower bound"
+            );
+        }
     }
 
     #[test]

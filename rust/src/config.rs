@@ -280,6 +280,75 @@ impl Default for PipelineParams {
     }
 }
 
+/// How the simulation timeline prices the writeback stage.
+///
+/// `Flat` is the historical model: each layer's whole
+/// `LayerCost::writeback_ns` scalar occupies one writeback-channel slot.
+/// The command-level models decompose every writeback into
+/// route/write/settle command sequences against per-bank busy windows
+/// and GST row-switch penalties ([`crate::memory::writeback`]); they
+/// recover the flat figure bit-exactly at the uncontended batch-1 limit
+/// and diverge from it only under contention (DESIGN.md §2.7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WritebackModel {
+    /// Flat per-layer scalar through the channel slot pool — the
+    /// default, keeping every existing scalar bit-identical.
+    #[default]
+    Flat,
+    /// Command-level reference controller: every writeback's command
+    /// sequence strictly serialized behind the previous one
+    /// ([`crate::memory::writeback::NaiveWritebackController`]).
+    Naive,
+    /// Command-level scheduled controller: bank-parallel,
+    /// burst-coalescing, row-switch-aware
+    /// ([`crate::memory::writeback::ScheduledWritebackController`]).
+    Scheduled,
+}
+
+impl WritebackModel {
+    /// Every model, in reporting order (flat, naive, scheduled).
+    pub const ALL: [WritebackModel; 3] = [
+        WritebackModel::Flat,
+        WritebackModel::Naive,
+        WritebackModel::Scheduled,
+    ];
+
+    /// The TOML spelling of this variant.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WritebackModel::Flat => "flat",
+            WritebackModel::Naive => "naive",
+            WritebackModel::Scheduled => "scheduled",
+        }
+    }
+
+    /// Parse the TOML spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "flat" => Ok(WritebackModel::Flat),
+            "naive" => Ok(WritebackModel::Naive),
+            "scheduled" => Ok(WritebackModel::Scheduled),
+            other => Err(Error::Config(format!(
+                "memory.writeback_model must be \"flat\", \"naive\" or \
+                 \"scheduled\", got \"{other}\""
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for WritebackModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Memory-controller modeling knobs (TOML `[memory]`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemoryParams {
+    /// Which writeback pricing model the timeline uses.
+    pub writeback_model: WritebackModel,
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 
@@ -289,6 +358,7 @@ pub struct OpimaConfig {
     pub power: PowerModel,
     pub pim: PimParams,
     pub pipeline: PipelineParams,
+    pub memory: MemoryParams,
     pub losses: LossParams,
     pub energy: EnergyParams,
 }
@@ -400,6 +470,12 @@ impl OpimaConfig {
                 .unwrap_or(p.cross_batch_contention);
         }
         {
+            let m = &mut cfg.memory;
+            if let Some(s) = doc.get("memory.writeback_model").and_then(|v| v.as_str()) {
+                m.writeback_model = WritebackModel::parse(s)?;
+            }
+        }
+        {
             let l = &mut cfg.losses;
             l.directional_coupler_db =
                 doc.f64_or("losses.directional_coupler_db", l.directional_coupler_db);
@@ -494,6 +570,14 @@ impl OpimaConfig {
                 ("max_in_flight_images".into(), V::Int(pl.max_in_flight_images as i64)),
                 ("cross_batch_contention".into(), V::Bool(pl.cross_batch_contention)),
             ]),
+        );
+        let m = &self.memory;
+        sections.insert(
+            "memory".into(),
+            BTreeMap::from([(
+                "writeback_model".into(),
+                V::Str(m.writeback_model.as_str().into()),
+            )]),
         );
         let l = &self.losses;
         sections.insert(
@@ -595,6 +679,29 @@ mod tests {
         )
         .unwrap();
         assert!(!parsed.pipeline.cross_batch_contention);
+    }
+
+    #[test]
+    fn writeback_model_knob_parses() {
+        assert_eq!(
+            OpimaConfig::paper().memory.writeback_model,
+            WritebackModel::Flat,
+            "default must stay flat so existing scalars are bit-identical"
+        );
+        for (text, want) in [
+            ("flat", WritebackModel::Flat),
+            ("naive", WritebackModel::Naive),
+            ("scheduled", WritebackModel::Scheduled),
+        ] {
+            let toml = format!("[memory]\nwriteback_model = \"{text}\"\n");
+            let parsed = OpimaConfig::from_toml(&toml).unwrap();
+            assert_eq!(parsed.memory.writeback_model, want);
+            assert_eq!(want.as_str(), text);
+        }
+        assert!(
+            OpimaConfig::from_toml("[memory]\nwriteback_model = \"dram\"\n").is_err(),
+            "unknown model names must be rejected, not defaulted"
+        );
     }
 
     #[test]

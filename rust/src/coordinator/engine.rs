@@ -324,11 +324,10 @@ impl Engine {
         // co-reside when their mapper footprints fit in its subarrays,
         // and co-resident batches contend for the module's shared
         // aggregation/writeback pools (sized by the pipeline config).
-        let router = Arc::new(Mutex::new(Router::with_pools(
-            cfg.instances,
-            cfg.hw.geometry.total_subarrays(),
-            &cfg.hw.pipeline,
-        )));
+        // The writeback stage is priced per `[memory] writeback_model`:
+        // flat scalars by default, or command-level naive/scheduled
+        // controllers against the geometry's banks.
+        let router = Arc::new(Mutex::new(Router::with_hw(cfg.instances, &cfg.hw)));
         let sink = Arc::new(StatsSink::new(cfg.history));
         let shards: Vec<Arc<Mutex<WorkerShard>>> = (0..cfg.workers)
             .map(|_| Arc::new(Mutex::new(WorkerShard::default())))

@@ -42,7 +42,7 @@ use std::collections::BTreeMap;
 
 use crate::analyzer::contention::{BatchStream, GlobalTimeline};
 use crate::cnn::models::Model;
-use crate::config::PipelineParams;
+use crate::config::{OpimaConfig, PipelineParams};
 use crate::util::units::{Millis, Nanos};
 
 pub use crate::analyzer::contention::MAX_RESERVATIONS_PER_INSTANCE;
@@ -87,6 +87,28 @@ impl Router {
             timeline: GlobalTimeline::new(instances, subarray_capacity, pipe),
             dispatched: vec![0; instances],
             contended: pipe.cross_batch_contention,
+            model_end: BTreeMap::new(),
+        }
+    }
+
+    /// Router sized from the full hardware config: capacity and bank
+    /// count from the geometry, stage pools from the pipeline params,
+    /// and the writeback stage priced by `[memory] writeback_model`
+    /// (flat — the default — reproduces [`Router::with_pools`]
+    /// bit-exactly; naive/scheduled admit each batch's writebacks as
+    /// command sequences against persistent per-bank state).
+    pub fn with_hw(instances: usize, cfg: &OpimaConfig) -> Self {
+        assert!(instances >= 1);
+        Self {
+            timeline: GlobalTimeline::with_memory(
+                instances,
+                cfg.geometry.total_subarrays(),
+                &cfg.pipeline,
+                cfg.memory.writeback_model,
+                cfg.geometry.banks,
+            ),
+            dispatched: vec![0; instances],
+            contended: cfg.pipeline.cross_batch_contention,
             model_end: BTreeMap::new(),
         }
     }
@@ -408,6 +430,47 @@ mod tests {
         // Bounded by full serialization.
         assert!(r.makespan_ms() <= 2.0 * iso_ms + ms(1e-9));
         assert!(r.model_makespan_ms(Model::MobileNet) >= r.model_makespan_ms(Model::LeNet));
+    }
+
+    /// `with_hw` at the default (flat) model is the same router
+    /// `with_pools` builds; switching `[memory] writeback_model` to a
+    /// command controller only ever prices co-residency higher, and
+    /// scheduled never above naive.
+    #[test]
+    fn with_hw_flat_matches_with_pools_and_command_models_order() {
+        use crate::config::WritebackModel;
+        let costs = vec![lc(100.0, 40.0, 60.0), lc(80.0, 30.0, 50.0)];
+        let stream = BatchStream {
+            costs: &costs,
+            batch: 8,
+            pipelined: true,
+        };
+        let cfg = OpimaConfig::paper();
+        let mut flat_hw = Router::with_hw(1, &cfg);
+        let mut flat_pools = Router::with_pools(1, cfg.geometry.total_subarrays(), &cfg.pipeline);
+        let mut ends = Vec::new();
+        for model in [WritebackModel::Naive, WritebackModel::Scheduled] {
+            let mut c = cfg.clone();
+            c.memory.writeback_model = model;
+            let mut r = Router::with_hw(1, &c);
+            r.dispatch_batch(Model::LeNet, 10, ms(0.0), stream, ms(0.001));
+            let (_, _, e) = r.dispatch_batch(Model::MobileNet, 10, ms(0.0), stream, ms(0.001));
+            ends.push(e);
+        }
+        flat_hw.dispatch_batch(Model::LeNet, 10, ms(0.0), stream, ms(0.001));
+        flat_pools.dispatch_batch(Model::LeNet, 10, ms(0.0), stream, ms(0.001));
+        let (_, _, fe) = flat_hw.dispatch_batch(Model::MobileNet, 10, ms(0.0), stream, ms(0.001));
+        let (_, _, pe) =
+            flat_pools.dispatch_batch(Model::MobileNet, 10, ms(0.0), stream, ms(0.001));
+        assert_eq!(fe, pe, "flat with_hw must be bit-exact with with_pools");
+        assert_eq!(flat_hw.makespan_ms(), flat_pools.makespan_ms());
+        assert!(ends[0] >= fe, "naive must not undercut flat: {} < {fe}", ends[0]);
+        assert!(
+            ends[1] <= ends[0] + ms(1e-9),
+            "scheduled {} must not trail naive {}",
+            ends[1],
+            ends[0]
+        );
     }
 
     #[test]

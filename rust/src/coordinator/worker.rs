@@ -167,7 +167,10 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
     // with the model so makespan is reportable per model — and admit
     // its priced event stream into the instance's persistent stage
     // pools, so co-resident batches contend for aggregation units and
-    // writeback channels instead of optimistically sharing them.
+    // writeback channels instead of optimistically sharing them. Under
+    // `[memory] writeback_model = naive|scheduled` the writeback stage
+    // prices each layer as a command sequence (GST routes, MLC program
+    // trains) against the instance's persistent per-bank state.
     let (sim_lat, sim_mj) = plan.sim_cost();
     let epoch = *lock(&ctx.epoch);
     let now_ms = Millis::from_duration(exec_start.saturating_duration_since(epoch));

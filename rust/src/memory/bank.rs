@@ -130,6 +130,43 @@ mod tests {
         assert!(b.reserve(999).is_err());
     }
 
+    /// The GST reconfiguration penalty is charged exactly once per row
+    /// switch: a burst of same-row accesses after the switch pays it on
+    /// the first access only.
+    #[test]
+    fn gst_penalty_once_per_switch_never_on_bursts() {
+        let mut b = bank();
+        let mut now = Nanos::ZERO;
+        let mut switches = 0u32;
+        let mut expected = Nanos::ZERO;
+        for row in [3usize, 3, 3, 7, 7, 3, 3, 3, 7] {
+            let prev = b.routed_row;
+            let ready = b.route_to(row, now).unwrap();
+            if prev != Some(row) {
+                switches += 1;
+                expected = now.max(b.busy_until_ns) + GST_SWITCH_RECONFIG_NS;
+            } else {
+                expected = now.max(b.busy_until_ns);
+            }
+            assert_eq!(ready, expected, "row {row} at {now}");
+            b.occupy(ready + Nanos::new(5.0));
+            now = ready + Nanos::new(5.0);
+        }
+        assert_eq!(switches, 4, "3→(first)3, 3→7, 7→3, 3→7");
+    }
+
+    /// Same-row bursts never pay the penalty even across idle gaps —
+    /// the GST switch is non-volatile (no refresh to re-route around).
+    #[test]
+    fn same_row_burst_across_idle_gap_is_penalty_free() {
+        let mut b = bank();
+        let t0 = b.route_to(9, Nanos::ZERO).unwrap();
+        b.occupy(t0);
+        let later = t0 + Nanos::new(1e6);
+        let t1 = b.route_to(9, later).unwrap();
+        assert_eq!(t1, later, "idle gap must not re-trigger reconfiguration");
+    }
+
     #[test]
     fn busy_window_serializes() {
         let mut b = bank();

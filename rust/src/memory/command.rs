@@ -20,6 +20,36 @@ pub struct MemCommand {
     pub issued_ns: Nanos,
 }
 
+/// One step of a command-level writeback sequence
+/// ([`crate::memory::writeback`]): a layer's activation writeback
+/// decomposes into GST route reconfigurations, MLC program trains and a
+/// final staging drain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WbCommandKind {
+    /// Reconfigure `bank`'s GST switch column to `row` (charged only
+    /// when the bank was routed elsewhere; may prefetch under the tail
+    /// of the bank's previous train).
+    Route { bank: usize, row: u64 },
+    /// One µs-class MLC program train on `bank`, row `row`. Trains hold
+    /// the bank datapath exclusively — per-bank windows never overlap.
+    Write { bank: usize, row: u64 },
+    /// E-O-E staging drain after the job's last train.
+    Settle,
+}
+
+/// A traced writeback command with its scheduled window (absolute
+/// simulated time). Controllers record these only when built with
+/// tracing enabled; tests assert busy-window and capacity invariants
+/// over the trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WbCommand {
+    /// Id of the [`crate::memory::writeback::WbJob`] this step belongs to.
+    pub job: u64,
+    pub kind: WbCommandKind,
+    pub start_ns: Nanos,
+    pub end_ns: Nanos,
+}
+
 /// Completion record for a command.
 #[derive(Debug, Clone)]
 pub struct Completion {

@@ -213,7 +213,8 @@ impl MemoryController {
         let mut energy = 0.0;
         for (d, cells) in &segments {
             let ready = self.banks[d.bank].route_to(d.subarray_row, cmd.issued_ns)?;
-            let lat = write_latency_ns(&self.cfg.timing, *cells);
+            let lat =
+                write_latency_ns(&self.cfg.timing, *cells, self.cfg.geometry.cols_per_subarray);
             let done = ready + lat;
             self.banks[d.bank].occupy(done);
             finish = finish.max(done);

@@ -12,13 +12,23 @@
 //! per group is lent to the PIM engine while the remaining rows continue
 //! to serve ordinary reads/writes (paper §IV.C.2).
 
+//!
+//! The writeback path of the serving timeline is priced against this
+//! layer's command model when `[memory] writeback_model` selects one of
+//! the [`writeback`] controllers (naive or scheduled); the default flat
+//! model bypasses it (DESIGN.md §2.7).
+
 pub mod address;
 pub mod bank;
 pub mod cell;
 pub mod command;
 pub mod controller;
 pub mod timing;
+pub mod writeback;
 
 pub use address::{AddressMap, DecodedAddr};
-pub use command::{CommandKind, MemCommand};
+pub use command::{CommandKind, MemCommand, WbCommand, WbCommandKind};
 pub use controller::{MemStats, MemoryController};
+pub use writeback::{
+    NaiveWritebackController, ScheduledWritebackController, WbJob, WritebackController,
+};

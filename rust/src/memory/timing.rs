@@ -22,16 +22,23 @@ pub fn read_latency_ns(t: &Timing, cells: usize) -> Nanos {
     t.read_ns + t.cycle_ns() * batches
 }
 
-/// Latency of writing `cells` cells in one row (pulse trains run
-/// concurrently across the row's wavelengths; duration is set by the
-/// worst-case level transition, i.e. the full write_ns figure).
-pub fn write_latency_ns(t: &Timing, cells: usize) -> Nanos {
+/// Cells concurrently programmable in one MLC pulse train: the optical
+/// write power budget sustains a quarter of the row's wavelengths at
+/// programming power (write power ≫ read power), so the budget scales
+/// with the configured row width instead of a fixed lane count.
+pub fn write_quarter_row(row_cells: usize) -> usize {
+    (row_cells / 4).max(1)
+}
+
+/// Latency of writing `cells` cells in one row of `row_cells` columns
+/// (pulse trains run concurrently across the row's wavelengths;
+/// duration is set by the worst-case level transition, i.e. the full
+/// write_ns figure).
+pub fn write_latency_ns(t: &Timing, cells: usize, row_cells: usize) -> Nanos {
     if cells == 0 {
         return Nanos::ZERO;
     }
-    // The optical power budget limits concurrent MLC programming to a
-    // quarter-row per pulse train (write power ≫ read power).
-    let quarter = 64usize;
+    let quarter = write_quarter_row(row_cells);
     let waves = cells.div_ceil(quarter) as f64;
     waves * t.write_ns
 }
@@ -41,10 +48,13 @@ mod tests {
     use super::*;
     use crate::config::Timing;
 
+    /// Paper row width, matching `Geometry::default().cols_per_subarray`.
+    const ROW: usize = 256;
+
     #[test]
     fn read_much_faster_than_write() {
         let t = Timing::default();
-        assert!(read_latency_ns(&t, 256) * 10.0 < write_latency_ns(&t, 256));
+        assert!(read_latency_ns(&t, 256) * 10.0 < write_latency_ns(&t, 256, ROW));
     }
 
     #[test]
@@ -58,14 +68,30 @@ mod tests {
     #[test]
     fn write_zero_cells_is_free() {
         let t = Timing::default();
-        assert_eq!(write_latency_ns(&t, 0), Nanos::ZERO);
+        assert_eq!(write_latency_ns(&t, 0, ROW), Nanos::ZERO);
     }
 
     #[test]
     fn write_scales_with_row_quarters() {
         let t = Timing::default();
-        assert_eq!(write_latency_ns(&t, 64), t.write_ns);
-        assert_eq!(write_latency_ns(&t, 65), 2.0 * t.write_ns);
-        assert_eq!(write_latency_ns(&t, 256), 4.0 * t.write_ns);
+        assert_eq!(write_latency_ns(&t, 64, ROW), t.write_ns);
+        assert_eq!(write_latency_ns(&t, 65, ROW), 2.0 * t.write_ns);
+        assert_eq!(write_latency_ns(&t, 256, ROW), 4.0 * t.write_ns);
+    }
+
+    /// Regression pin: the quarter-row power budget used to be a
+    /// hardcoded `64usize`. For the paper's 256-column rows the derived
+    /// budget must reproduce that value (and every latency above)
+    /// bit-identically; other row widths scale with the geometry.
+    #[test]
+    fn quarter_row_budget_derived_from_geometry() {
+        assert_eq!(write_quarter_row(ROW), 64, "paper row pins the old budget");
+        let t = Timing::default();
+        assert_eq!(write_quarter_row(512), 128);
+        assert_eq!(write_latency_ns(&t, 128, 512), t.write_ns);
+        assert_eq!(write_latency_ns(&t, 129, 512), 2.0 * t.write_ns);
+        // Degenerate narrow rows still admit one cell per train.
+        assert_eq!(write_quarter_row(2), 1);
+        assert_eq!(write_latency_ns(&t, 2, 2), 2.0 * t.write_ns);
     }
 }

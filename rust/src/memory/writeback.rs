@@ -1,0 +1,447 @@
+//! Command-level writeback controllers: the naive/scheduled pair.
+//!
+//! The serving timeline historically priced a layer's activation
+//! writeback as one flat scalar (`LayerCost::writeback_ns`). This module
+//! decomposes that scalar into the command sequence the OPCM controller
+//! actually issues — GST route reconfigurations, µs-class MLC program
+//! trains (one per optical write-power quantum), and a final E-O-E
+//! staging drain — and replays it against per-bank busy windows
+//! (DESIGN.md §2.7).
+//!
+//! Two controllers implement one trait, in the SDRAM-controller idiom of
+//! keeping a trivially-correct reference next to the optimized design:
+//!
+//! * [`NaiveWritebackController`] serializes whole jobs strictly behind
+//!   one another — obviously correct, pessimal under contention.
+//! * [`ScheduledWritebackController`] runs trains bank-parallel across
+//!   the configured writeback channels, coalesces same-row bursts (no
+//!   repeated GST reconfiguration), and hides row switches under other
+//!   banks' tails.
+//!
+//! The differential contract, property-tested in
+//! `rust/tests/memory_command.rs`:
+//!
+//! * On any single-image stream (one writeback in flight at a time,
+//!   one channel) the two controllers produce identical schedules.
+//! * On any stream, naive ≥ scheduled ≥ the bank-bottleneck lower bound.
+//! * Uncontended jobs that run as a gapless serial chain return exactly
+//!   `ready + flat_ns` — the analytical figure, bit-for-bit — so the
+//!   batch-1 limit of the timeline is unchanged by the command model.
+//!
+//! There is no refresh (the optical twist: OPCM cells are non-volatile);
+//! the conflicts that matter are wavelength-group (channel) capacity and
+//! bank/row collisions between co-resident batches.
+//!
+//! Admission is **relative-frame**: `admit(origin, ready, job)` takes
+//! `ready` relative to `origin` and converts every absolute state
+//! constraint with `rel(abs) = max(0, abs − origin)`. A drained
+//! controller therefore prices a stream identically at any origin —
+//! the same trick `analyzer::contention::RelPool` uses to keep
+//! single-batch admission bit-exact.
+
+use crate::memory::command::{WbCommand, WbCommandKind};
+use crate::memory::timing::GST_SWITCH_RECONFIG_NS;
+use crate::util::units::Nanos;
+
+/// Row-route sentinel: "this bank's GST column has never been routed".
+const UNROUTED: u64 = u64::MAX;
+
+/// One layer writeback, decomposed for command-level replay.
+///
+/// Built from a [`crate::pim::scheduler::LayerCost`] by the timeline;
+/// the invariant `flat_ns == trains × train_ns + settle_ns` (same
+/// rounding order as `cost_layer`) is what makes the uncontended limit
+/// recover the analytical figure bit-exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WbJob {
+    /// Monotone id, for traces.
+    pub id: u64,
+    /// Target subarray row. Trains stripe round-robin over banks
+    /// starting at `row % banks`; distinct co-resident batches write
+    /// distinct rows, so their bursts cannot coalesce.
+    pub row: u64,
+    /// Number of MLC program trains.
+    pub trains: u64,
+    /// Duration of one train (bank-exclusive).
+    pub train_ns: Nanos,
+    /// E-O-E staging drain after the last train (not bank-exclusive).
+    pub settle_ns: Nanos,
+    /// The analytical flat figure this job decomposes.
+    pub flat_ns: Nanos,
+}
+
+/// A command-level writeback controller: prices one job at a time,
+/// carrying bank/channel state between admissions.
+pub trait WritebackController {
+    /// Admit one job whose inputs become ready at `ready` (relative to
+    /// `origin`); returns the job's `(start, end)` in the same relative
+    /// frame. `end` is when the written activations are readable.
+    fn admit(&mut self, origin: Nanos, ready: Nanos, job: &WbJob) -> (Nanos, Nanos);
+
+    /// Drain the recorded command trace (empty unless tracing was
+    /// enabled at construction). Times are absolute.
+    fn take_trace(&mut self) -> Vec<WbCommand>;
+}
+
+/// Per-bank state shared by both controllers.
+#[derive(Debug, Clone, Copy)]
+struct WbBank {
+    /// Absolute end of the last train that held this bank.
+    busy_until: Nanos,
+    /// Row the bank's GST switch column currently targets.
+    routed_row: u64,
+}
+
+impl WbBank {
+    fn fresh() -> Self {
+        Self {
+            busy_until: Nanos::ZERO,
+            routed_row: UNROUTED,
+        }
+    }
+}
+
+/// Convert an absolute state timestamp into the `origin`-relative frame.
+fn rel(abs: Nanos, origin: Nanos) -> Nanos {
+    if abs <= origin {
+        Nanos::ZERO
+    } else {
+        abs - origin
+    }
+}
+
+/// Bank targeted by train `i` of a job: round-robin from the job's row.
+fn bank_of(row: u64, i: u64, banks: u64) -> usize {
+    ((row + i) % banks) as usize
+}
+
+fn push_trace(
+    trace: &mut Option<Vec<WbCommand>>,
+    origin: Nanos,
+    job: u64,
+    kind: WbCommandKind,
+    start: Nanos,
+    end: Nanos,
+) {
+    if let Some(t) = trace {
+        t.push(WbCommand {
+            job,
+            kind,
+            start_ns: origin + start,
+            end_ns: origin + end,
+        });
+    }
+}
+
+/// Reference controller: whole jobs run strictly one after another —
+/// every train of job *k+1* waits for job *k*'s settle to drain, on top
+/// of the per-bank busy/route constraints. Obviously correct; the
+/// scheduled controller must never price a stream above it.
+#[derive(Debug, Clone)]
+pub struct NaiveWritebackController {
+    banks: Vec<WbBank>,
+    /// Absolute end (incl. settle) of the last admitted job.
+    last_end: Nanos,
+    trace: Option<Vec<WbCommand>>,
+}
+
+impl NaiveWritebackController {
+    pub fn new(banks: usize) -> Self {
+        Self {
+            banks: vec![WbBank::fresh(); banks.max(1)],
+            last_end: Nanos::ZERO,
+            trace: None,
+        }
+    }
+
+    /// Like [`Self::new`], recording every issued command.
+    pub fn with_trace(banks: usize) -> Self {
+        Self {
+            trace: Some(Vec::new()),
+            ..Self::new(banks)
+        }
+    }
+}
+
+impl WritebackController for NaiveWritebackController {
+    fn admit(&mut self, origin: Nanos, ready: Nanos, job: &WbJob) -> (Nanos, Nanos) {
+        let nb = self.banks.len() as u64;
+        let t0 = ready.max(rel(self.last_end, origin));
+        // A job that runs as a gapless serial chain from `ready` prices
+        // as the analytical flat figure, with its exact rounding order
+        // (chained per-train addition would drift by ulps).
+        let mut serial = t0 == ready;
+        let mut t = t0;
+        let mut first_start = t0;
+        for i in 0..job.trains {
+            let b = bank_of(job.row, i, nb);
+            let switched = self.banks[b].routed_row != job.row;
+            let route_ready = if switched {
+                rel(self.banks[b].busy_until, origin) + GST_SWITCH_RECONFIG_NS
+            } else {
+                Nanos::ZERO
+            };
+            let start = t.max(rel(self.banks[b].busy_until, origin)).max(route_ready);
+            if start != t {
+                serial = false;
+            }
+            if i == 0 {
+                first_start = start;
+            }
+            let end = start + job.train_ns;
+            if switched {
+                push_trace(
+                    &mut self.trace,
+                    origin,
+                    job.id,
+                    WbCommandKind::Route { bank: b, row: job.row },
+                    start - GST_SWITCH_RECONFIG_NS,
+                    start,
+                );
+            }
+            push_trace(
+                &mut self.trace,
+                origin,
+                job.id,
+                WbCommandKind::Write { bank: b, row: job.row },
+                start,
+                end,
+            );
+            self.banks[b].busy_until = origin + end;
+            self.banks[b].routed_row = job.row;
+            t = end;
+        }
+        let (start, end) = if job.trains == 0 {
+            (t0, t0 + job.settle_ns)
+        } else if serial {
+            (first_start, first_start + job.flat_ns)
+        } else {
+            (first_start, t + job.settle_ns)
+        };
+        if job.settle_ns > Nanos::ZERO {
+            push_trace(
+                &mut self.trace,
+                origin,
+                job.id,
+                WbCommandKind::Settle,
+                end - job.settle_ns,
+                end,
+            );
+        }
+        self.last_end = origin + end;
+        (start, end)
+    }
+
+    fn take_trace(&mut self) -> Vec<WbCommand> {
+        self.trace.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+}
+
+/// Scheduled controller: trains from any in-flight job occupy the
+/// earliest-free writeback channel (the optical write-power quanta,
+/// `[pipeline] writeback_channels`) and their target bank concurrently;
+/// same-row bursts keep the GST route (no reconfiguration), row
+/// switches prefetch under the bank's previous tail. Settle drains
+/// off-channel, so back-to-back jobs overlap their tails.
+#[derive(Debug, Clone)]
+pub struct ScheduledWritebackController {
+    banks: Vec<WbBank>,
+    /// Absolute free time per writeback channel.
+    channels: Vec<Nanos>,
+    trace: Option<Vec<WbCommand>>,
+}
+
+impl ScheduledWritebackController {
+    pub fn new(banks: usize, channels: usize) -> Self {
+        Self {
+            banks: vec![WbBank::fresh(); banks.max(1)],
+            channels: vec![Nanos::ZERO; channels.max(1)],
+            trace: None,
+        }
+    }
+
+    /// Like [`Self::new`], recording every issued command.
+    pub fn with_trace(banks: usize, channels: usize) -> Self {
+        Self {
+            trace: Some(Vec::new()),
+            ..Self::new(banks, channels)
+        }
+    }
+}
+
+impl WritebackController for ScheduledWritebackController {
+    fn admit(&mut self, origin: Nanos, ready: Nanos, job: &WbJob) -> (Nanos, Nanos) {
+        let nb = self.banks.len() as u64;
+        let mut serial = true;
+        let mut chain = ready;
+        let mut last_end = ready;
+        let mut first_start = ready;
+        for i in 0..job.trains {
+            let b = bank_of(job.row, i, nb);
+            // Earliest-free channel (argmin scan; the pool is tiny).
+            let mut ch = 0usize;
+            for (k, free) in self.channels.iter().enumerate() {
+                if *free < self.channels[ch] {
+                    ch = k;
+                }
+            }
+            let ch_free = rel(self.channels[ch], origin);
+            let switched = self.banks[b].routed_row != job.row;
+            let route_ready = if switched {
+                rel(self.banks[b].busy_until, origin) + GST_SWITCH_RECONFIG_NS
+            } else {
+                Nanos::ZERO
+            };
+            let start = ready
+                .max(ch_free)
+                .max(rel(self.banks[b].busy_until, origin))
+                .max(route_ready);
+            if start != chain {
+                serial = false;
+            }
+            if i == 0 {
+                first_start = start;
+            }
+            let end = start + job.train_ns;
+            if switched {
+                push_trace(
+                    &mut self.trace,
+                    origin,
+                    job.id,
+                    WbCommandKind::Route { bank: b, row: job.row },
+                    start - GST_SWITCH_RECONFIG_NS,
+                    start,
+                );
+            }
+            push_trace(
+                &mut self.trace,
+                origin,
+                job.id,
+                WbCommandKind::Write { bank: b, row: job.row },
+                start,
+                end,
+            );
+            self.channels[ch] = origin + end;
+            self.banks[b].busy_until = origin + end;
+            self.banks[b].routed_row = job.row;
+            chain = end;
+            last_end = last_end.max(end);
+        }
+        let (start, end) = if job.trains == 0 {
+            (ready, ready + job.settle_ns)
+        } else if serial {
+            (first_start, first_start + job.flat_ns)
+        } else {
+            (first_start, last_end + job.settle_ns)
+        };
+        if job.settle_ns > Nanos::ZERO {
+            push_trace(
+                &mut self.trace,
+                origin,
+                job.id,
+                WbCommandKind::Settle,
+                end - job.settle_ns,
+                end,
+            );
+        }
+        (start, end)
+    }
+
+    fn take_trace(&mut self) -> Vec<WbCommand> {
+        self.trace.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::ns;
+
+    fn job(id: u64, row: u64, trains: u64, train: f64, settle: f64) -> WbJob {
+        WbJob {
+            id,
+            row,
+            trains,
+            train_ns: ns(train),
+            settle_ns: ns(settle),
+            flat_ns: ns(trains as f64 * train + settle),
+        }
+    }
+
+    #[test]
+    fn uncontended_job_prices_flat_exactly() {
+        let j = job(0, 0, 7, 1000.0, 4.5);
+        let mut naive = NaiveWritebackController::new(4);
+        let mut sched = ScheduledWritebackController::new(4, 1);
+        let ready = ns(123.25);
+        assert_eq!(naive.admit(Nanos::ZERO, ready, &j), (ready, ready + j.flat_ns));
+        assert_eq!(sched.admit(Nanos::ZERO, ready, &j), (ready, ready + j.flat_ns));
+    }
+
+    #[test]
+    fn rel_frame_admission_is_origin_invariant() {
+        // A drained controller must price a stream identically at any
+        // origin — the contention timeline's bit-exactness depends on it.
+        let jobs = [job(0, 0, 3, 1000.0, 4.0), job(1, 1, 5, 1000.0, 2.0)];
+        let mut at_zero = ScheduledWritebackController::new(4, 2);
+        let mut shifted = ScheduledWritebackController::new(4, 2);
+        let origin = ns(777_777.5);
+        for (i, j) in jobs.iter().enumerate() {
+            let ready = ns(i as f64 * 1500.0);
+            assert_eq!(
+                at_zero.admit(Nanos::ZERO, ready, j),
+                shifted.admit(origin, ready, j),
+                "job {i} priced differently under a shifted origin"
+            );
+        }
+    }
+
+    #[test]
+    fn naive_serializes_whole_jobs() {
+        let mut naive = NaiveWritebackController::new(4);
+        let a = job(0, 0, 2, 1000.0, 4.0);
+        let b = job(1, 1, 2, 1000.0, 4.0);
+        let (_, a_end) = naive.admit(Nanos::ZERO, Nanos::ZERO, &a);
+        // b is ready immediately but must queue behind a (and pay the
+        // row switch: its banks were last routed to a's row).
+        let (b_start, b_end) = naive.admit(Nanos::ZERO, Nanos::ZERO, &b);
+        assert!(b_start >= a_end);
+        assert!(b_end >= b_start + ns(2.0 * 1000.0));
+    }
+
+    #[test]
+    fn scheduled_overlaps_conflict_free_jobs() {
+        // Two ready-at-zero jobs on disjoint banks, two channels: the
+        // scheduled controller overlaps them; naive cannot.
+        let a = job(0, 0, 2, 1000.0, 0.0); // banks 0, 1
+        let b = job(1, 2, 2, 1000.0, 0.0); // banks 2, 3
+        let mut naive = NaiveWritebackController::new(4);
+        let mut sched = ScheduledWritebackController::new(4, 2);
+        naive.admit(Nanos::ZERO, Nanos::ZERO, &a);
+        sched.admit(Nanos::ZERO, Nanos::ZERO, &a);
+        let (_, n_end) = naive.admit(Nanos::ZERO, Nanos::ZERO, &b);
+        let (_, s_end) = sched.admit(Nanos::ZERO, Nanos::ZERO, &b);
+        assert!(s_end < n_end, "scheduled {s_end} !< naive {n_end}");
+    }
+
+    #[test]
+    fn trace_records_route_once_per_switch() {
+        let mut sched = ScheduledWritebackController::with_trace(4, 1);
+        // 8 trains on 4 banks: each bank is visited twice for the same
+        // row — one Route per bank, not per train.
+        let j = job(0, 0, 8, 1000.0, 0.0);
+        sched.admit(Nanos::ZERO, GST_SWITCH_RECONFIG_NS, &j);
+        let trace = sched.take_trace();
+        let routes = trace
+            .iter()
+            .filter(|c| matches!(c.kind, WbCommandKind::Route { .. }))
+            .count();
+        let writes = trace
+            .iter()
+            .filter(|c| matches!(c.kind, WbCommandKind::Write { .. }))
+            .count();
+        assert_eq!(routes, 4);
+        assert_eq!(writes, 8);
+        assert!(sched.take_trace().is_empty(), "trace drains");
+    }
+}

@@ -7,7 +7,7 @@
 
 use crate::config::OpimaConfig;
 use crate::error::Result;
-use crate::memory::timing::write_latency_ns;
+use crate::memory::timing::{write_latency_ns, write_quarter_row};
 use crate::pim::{aggregation, tdm, wdm};
 use crate::util::units::Nanos;
 
@@ -50,6 +50,16 @@ pub struct LayerCost {
     pub aggregation_ns: Nanos,
     /// Non-linearity application + OPCM write of output maps ("writeback").
     pub writeback_ns: Nanos,
+    /// Command decomposition of `writeback_ns` for the command-level
+    /// controllers ([`crate::memory::writeback`]): number of µs-class MLC
+    /// program trains (the optical write-power budget caps each train at
+    /// a quarter-row of wavelengths).
+    pub wb_trains: u64,
+    /// Duration of one MLC program train.
+    pub wb_train_ns: Nanos,
+    /// E-O-E staging drain appended after the last train. Invariant:
+    /// `writeback_ns == wb_trains × wb_train_ns + wb_settle_ns`.
+    pub wb_settle_ns: Nanos,
     /// OPCM cell read energy (pJ).
     pub read_pj: f64,
     /// MDL laser energy: wall-plug power × lit time + programming DACs (pJ).
@@ -150,9 +160,15 @@ impl PimScheduler {
         let out_cells = out_bits.div_ceil(cfg.geometry.bits_per_cell as u64);
         let lanes_wb = cfg.pim.writeback_lanes as u64;
         let trains = out_cells.div_ceil(lanes_wb);
-        let writeback_ns = trains as f64 * write_latency_ns(&cfg.timing, 64)
-            + cfg.timing.writeback_overhead_ns * work.out_elems as f64
-                / lanes_wb.max(1) as f64;
+        // One train programs a power-budget quantum (a quarter-row of
+        // wavelengths) at the worst-case MLC pulse duration; the E-O-E
+        // staging drain is the tail the commands settle into.
+        let quarter = write_quarter_row(cfg.geometry.cols_per_subarray);
+        let wb_train_ns =
+            write_latency_ns(&cfg.timing, quarter, cfg.geometry.cols_per_subarray);
+        let wb_settle_ns = cfg.timing.writeback_overhead_ns * work.out_elems as f64
+            / lanes_wb.max(1) as f64;
+        let writeback_ns = trains as f64 * wb_train_ns + wb_settle_ns;
         let writeback_pj = out_cells as f64 * cfg.energy.opcm_write_pj;
 
         Ok(LayerCost {
@@ -161,6 +177,9 @@ impl PimScheduler {
             mac_ns,
             aggregation_ns: agg.latency_ns,
             writeback_ns,
+            wb_trains: trains,
+            wb_train_ns,
+            wb_settle_ns,
             read_pj,
             mdl_pj,
             aggregation_pj: agg.total_pj(),
@@ -247,6 +266,24 @@ mod tests {
         assert!((3.9..=4.1).contains(&ratio), "TDM ratio = {ratio}");
         // Writeback also doubles (8-bit activations).
         assert!(c8.writeback_pj > 1.9 * c4.writeback_pj);
+    }
+
+    #[test]
+    fn writeback_decomposition_partitions_flat_figure() {
+        // The command-level controllers replay wb_trains × wb_train_ns
+        // + wb_settle_ns; the sum must reproduce the flat scalar with
+        // the exact rounding order used to compute it.
+        let s = sched();
+        for out_elems in [1_000u64, 10_000, 100_000] {
+            let c = s.cost_layer(&conv_work(1_000_000, 3, out_elems)).unwrap();
+            assert!(c.wb_trains > 0);
+            assert!(c.wb_train_ns > Nanos::ZERO);
+            assert_eq!(
+                c.writeback_ns,
+                c.wb_trains as f64 * c.wb_train_ns + c.wb_settle_ns,
+                "decomposition must be bit-identical for {out_elems} elems"
+            );
+        }
     }
 
     #[test]

@@ -15,7 +15,12 @@ noise, not signal.
 When the current hotpath summary is a full (non-smoke) run, the ISSUE 6
 acceptance bound is also enforced: global-engine dispatch
 (router/dispatch_batch_contended_1k) must land within 2x of the
-occupancy-only router (router/dispatch_for_occupancy_1k).
+occupancy-only router (router/dispatch_for_occupancy_1k). Likewise the
+ISSUE 8 writeback-model ordering: the deterministic simulated makespans
+in the memory/writeback_model_makespan value row must satisfy
+scheduled_ns <= naive_ns (the scheduled controller only relaxes the
+naive reference's constraints, so a violation means a controller bug,
+not machine noise).
 
 Exit status: 0 clean, 1 regression (or malformed/missing summaries).
 """
@@ -31,6 +36,8 @@ MIN_BASELINE_NS = 1000.0
 DISPATCH_BOUND = 2.0
 DISPATCH_CONTENDED = "router/dispatch_batch_contended_1k"
 DISPATCH_OCCUPANCY = "router/dispatch_for_occupancy_1k"
+# ISSUE 8 acceptance: scheduled writeback never prices above naive.
+WRITEBACK_MAKESPAN = "memory/writeback_model_makespan"
 
 
 def load(path):
@@ -93,6 +100,16 @@ def main():
                     failures.append(
                         f"{name}: contended dispatch {ratio:.2f}x occupancy-only "
                         f"(bound {DISPATCH_BOUND:.1f}x)")
+        if name == "BENCH_hotpath.json" and not cur.get("smoke", True):
+            wb = cur_rows.get(WRITEBACK_MAKESPAN, {})
+            naive, sched = wb.get("naive_ns"), wb.get("scheduled_ns")
+            if naive is not None and sched is not None:
+                print(f"bench_gate: writeback makespan naive {naive:.0f} ns, "
+                      f"scheduled {sched:.0f} ns")
+                if sched > naive:
+                    failures.append(
+                        f"{name}: scheduled writeback makespan {sched:.0f} ns "
+                        f"above naive {naive:.0f} ns")
     for f in failures:
         print("bench_gate: FAIL:", f)
     if not failures:

@@ -31,3 +31,12 @@ fn bad_clock() -> Instant {
     // [instant] wall-clock read (fixture is posed under analyzer/).
     Instant::now()
 }
+
+// [nanos-literal] bare duration literals minted outside timing.rs
+// (fixture is also posed under memory/ — device timing constants live
+// in memory/timing.rs only).
+const BAD_SETTLE: Nanos = Nanos::new(42.0);
+
+fn bad_settle_budget() -> Nanos {
+    ns(10.0)
+}

@@ -20,6 +20,11 @@ residual conventions around it:
                 the server.
   instant       No Instant::now() inside rust/src/analyzer/ — simulated
                 time must never read the wall clock.
+  nanos-literal No Nanos built from a bare numeric literal (Nanos::new(3.0)
+                or ns(10.0)) inside rust/src/memory/ outside timing.rs —
+                OPCM device timing constants (GST reconfig, pulse widths)
+                live in timing.rs only, so a device-parameter change is
+                one edit, not a hunt.
 
 Scope and escape hatches:
   * Only rust/src/**/*.rs is scanned (benches, examples, rust/tests and
@@ -55,6 +60,10 @@ def in_analyzer(path: Path) -> bool:
     return "analyzer" in path.parts
 
 
+def in_memory_not_timing(path: Path) -> bool:
+    return "memory" in path.parts and path.name != "timing.rs"
+
+
 def not_units(path: Path) -> bool:
     return path.name != "units.rs" or path.parent.name != "util"
 
@@ -87,6 +96,16 @@ RULES = [
         re.compile(r"\bInstant::now\s*\("),
         in_analyzer,
         "wall-clock read inside analyzer/ — simulated time only",
+    ),
+    (
+        # `\bns(` deliberately misses the `_ns(...)` accessor/helper
+        # convention: only the bare constructor and the `ns()` literal
+        # builder count as minting a duration.
+        "nanos-literal",
+        re.compile(r"(?:\bNanos::new|\bns)\(\s*[0-9]"),
+        in_memory_not_timing,
+        "bare numeric Nanos literal inside memory/ — device timing "
+        "constants belong in memory/timing.rs",
     ),
 ]
 
@@ -158,25 +177,32 @@ def self_test() -> int:
     if not FIXTURE.is_file():
         print(f"self-test: missing fixture {FIXTURE}", file=sys.stderr)
         return 1
-    # The fixture is checked as if it lived at rust/src/analyzer/bad.rs so
-    # every rule (including the analyzer-scoped `instant`) is in force.
-    posed = SRC_ROOT / "analyzer" / "known_bad.rs"
+    # The fixture is checked in two poses — as if it lived under
+    # rust/src/analyzer/ (arming the analyzer-scoped `instant` rule) and
+    # under rust/src/memory/ (arming the memory-scoped `nanos-literal`
+    # rule). Every rule must fire in at least one pose; the known-good
+    # snippet must fire in none.
     lines = FIXTURE.read_text(encoding="utf-8").splitlines()
-    active = [r for r in RULES if r[2](posed)]
-    hits = list(lint_lines(posed, lines, active))
-    fired = {rule for _, _, rule, _ in hits}
+    fired = set()
+    for posed in (
+        SRC_ROOT / "analyzer" / "known_bad.rs",
+        SRC_ROOT / "memory" / "known_bad.rs",
+    ):
+        active = [r for r in RULES if r[2](posed)]
+        hits = list(lint_lines(posed, lines, active))
+        fired |= {rule for _, _, rule, _ in hits}
+        good_hits = list(lint_lines(posed, GOOD_SNIPPET.splitlines(), active))
+        if good_hits:
+            print(f"self-test: false positives on known-good snippet "
+                  f"(posed as {posed.parent.name}/):", file=sys.stderr)
+            for _, lineno, rule, _ in good_hits:
+                print(f"  line {lineno}: [{rule}]", file=sys.stderr)
+            ok = False
     expected = {name for name, _, _, _ in RULES}
     missing = expected - fired
     if missing:
         print(f"self-test: rules never fired on fixture: {sorted(missing)}",
               file=sys.stderr)
-        ok = False
-    good_hits = list(lint_lines(posed, GOOD_SNIPPET.splitlines(), active))
-    if good_hits:
-        print("self-test: false positives on known-good snippet:",
-              file=sys.stderr)
-        for _, lineno, rule, _ in good_hits:
-            print(f"  line {lineno}: [{rule}]", file=sys.stderr)
         ok = False
     print("self-test: ok" if ok else "self-test: FAILED")
     return 0 if ok else 1
