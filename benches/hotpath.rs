@@ -138,6 +138,7 @@ fn main() {
                 image: vec![rng.f64() as f32; 4].into(),
                 variant: Variant::Int4,
                 arrival: Instant::now(),
+                reply: None,
             });
             if id == 7 {
                 assert!(out.is_some());
@@ -256,6 +257,55 @@ fn main() {
         drop(views);
         pool.put(buf);
     }));
+
+    // --- wire protocol frame codec ----------------------------------------
+    // What one end of a connection pays per 1k-element frame: encoding a
+    // header + f32 payload into the writer's reused scratch, and decoding
+    // a SUBMIT frame into a pooled image buffer (the reader's path —
+    // after the pool warms, neither direction allocates).
+    {
+        use opima::coordinator::net::frame::{
+            decode_header, encode_header, extend_f32s, read_pooled_image,
+        };
+        use opima::coordinator::net::protocol::{FrameHeader, FrameKind, HEADER_LEN};
+        use opima::coordinator::request::ImagePool;
+        use std::io::{Cursor, Read};
+
+        let wire_elems = 1024usize;
+        let payload: Vec<f32> = (0..wire_elems).map(|i| (i % 97) as f32 * 0.5).collect();
+        let header = FrameHeader {
+            kind: FrameKind::Submit,
+            model: 0,
+            variant: 2,
+            id: 7,
+            payload_len: (wire_elems * 4) as u32,
+            aux: 0,
+        };
+        let mut scratch: Vec<u8> = Vec::new();
+        report.add_stats(&measure("net/encode_frame_1k", 10, scaled(2000), || {
+            let mut head = [0u8; HEADER_LEN];
+            encode_header(&header, &mut head);
+            scratch.clear();
+            extend_f32s(&mut scratch, &payload);
+            black_box((&head, &scratch));
+        }));
+        let mut wire = Vec::with_capacity(HEADER_LEN + wire_elems * 4);
+        {
+            let mut head = [0u8; HEADER_LEN];
+            encode_header(&header, &mut head);
+            wire.extend_from_slice(&head);
+            extend_f32s(&mut wire, &payload);
+        }
+        let mut pool = ImagePool::new(4);
+        report.add_stats(&measure("net/decode_frame_pooled_1k", 10, scaled(2000), || {
+            let mut r = Cursor::new(&wire[..]);
+            let mut head = [0u8; HEADER_LEN];
+            r.read_exact(&mut head).unwrap();
+            let h = decode_header(&head).unwrap();
+            let img = read_pooled_image(&mut r, &mut pool, h.payload_len as usize / 4).unwrap();
+            black_box(&img);
+        }));
+    }
 
     // --- streaming stats (the engine's observe path) ----------------------
     use opima::util::histogram::Histogram;

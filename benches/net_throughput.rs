@@ -1,0 +1,123 @@
+//! Wire front-end throughput (§Perf): the zero-copy TCP path measured
+//! over loopback with the open-loop load generator, across a grid of
+//! client connections × engine workers.
+//!
+//! Each cell binds a fresh `NetServer` over a fresh sim-backed engine
+//! on an ephemeral loopback port and drives it with `run_load` — the
+//! same generator behind `serve --listen` self-drive — so the numbers
+//! cover the full socket→engine→socket round trip: frame decode into
+//! pooled image buffers, submission, batching, execution, reply-queue
+//! handoff and the vectored response write.
+//!
+//! The sim work factor is kept tiny on purpose: the point is the wire
+//! path's overhead and scaling, not the simulated model's compute.
+//!
+//! Run: cargo bench --bench net_throughput
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use opima::cnn::Model;
+use opima::coordinator::engine::{Engine, EngineConfig};
+use opima::coordinator::net::{run_load, LoadGenConfig, NetServer};
+use opima::coordinator::request::Variant;
+use opima::runtime::{ExecutorSpec, Manifest};
+use opima::util::bench::{smoke, table_header, table_row, JsonReport};
+use opima::util::json::Json;
+
+const BATCH: usize = 8;
+const IMAGE: usize = 12;
+
+fn requests_per_conn() -> usize {
+    if smoke() {
+        32
+    } else {
+        512
+    }
+}
+
+/// One grid cell: a fresh server, `conns` connections driving it open
+/// loop, then a graceful drain. Returns the aggregated client report.
+fn cell(conns: usize, workers: usize) -> opima::coordinator::net::LoadGenReport {
+    let engine = Arc::new(
+        Engine::new(
+            EngineConfig {
+                workers,
+                queue_capacity: 1024,
+                instances: workers,
+                max_wait: Duration::from_millis(2),
+                executor: ExecutorSpec::Sim { work_factor: 2 },
+                ..EngineConfig::default()
+            },
+            Manifest::synthetic(BATCH, IMAGE),
+        )
+        .unwrap(),
+    );
+    let server = NetServer::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let report = run_load(&LoadGenConfig {
+        addr: server.local_addr().to_string(),
+        connections: conns,
+        requests_per_conn: requests_per_conn(),
+        rate_rps: 0.0,
+        mix: vec![(Model::LeNet, 1)],
+        variant: Variant::Int4,
+        window: 32,
+        seed: 4242,
+    })
+    .unwrap();
+    server.shutdown().unwrap();
+    if let Ok(mut e) = Arc::try_unwrap(engine) {
+        e.shutdown().unwrap();
+    }
+    report
+}
+
+fn main() {
+    println!(
+        "net throughput: loopback wire path, {} request(s)/connection, sim work factor 2{}",
+        requests_per_conn(),
+        if smoke() { " (smoke mode)" } else { "" }
+    );
+
+    // The acceptance grid: ≥2 connection counts × ≥2 worker counts.
+    let grid: Vec<(usize, usize)> = vec![(1, 1), (1, 2), (4, 1), (4, 2)];
+    let mut report = JsonReport::new("net_throughput");
+    table_header(
+        "Wire front-end throughput (loopback)",
+        &["conns × workers", "req/s", "p50 ms", "p99 ms", "busy", "failed"],
+    );
+    for (conns, workers) in grid {
+        let r = cell(conns, workers);
+        assert_eq!(
+            r.responses + r.busy + r.failed,
+            r.sent,
+            "every submitted request is answered (response, busy or error)"
+        );
+        assert_eq!(r.failed, 0, "no request fails on the healthy loopback path");
+        table_row(&[
+            format!("{conns} × {workers}"),
+            format!("{:.0}", r.rps),
+            format!("{:.2}", r.p50_ms.raw()),
+            format!("{:.2}", r.p99_ms.raw()),
+            format!("{}", r.busy),
+            format!("{}", r.failed),
+        ]);
+        report.add(
+            &format!("net/throughput_c{conns}_w{workers}"),
+            &[
+                ("req_per_s", Json::Num(r.rps)),
+                ("p50_ms", Json::Num(r.p50_ms.raw())),
+                ("p99_ms", Json::Num(r.p99_ms.raw())),
+                ("requests", Json::Num(r.sent as f64)),
+                ("responses", Json::Num(r.responses as f64)),
+                ("busy", Json::Num(r.busy as f64)),
+                ("connections", Json::Num(conns as f64)),
+                ("workers", Json::Num(workers as f64)),
+            ],
+        );
+    }
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nWARNING: could not write bench JSON: {e}"),
+    }
+}

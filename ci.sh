@@ -35,22 +35,31 @@ cargo bench --no-run
 echo "== bench JSON emitters (smoke mode) =="
 OPIMA_BENCH_SMOKE=1 cargo bench --bench hotpath
 OPIMA_BENCH_SMOKE=1 cargo bench --bench serving_throughput
-for f in BENCH_hotpath.json BENCH_serving_throughput.json; do
+OPIMA_BENCH_SMOKE=1 cargo bench --bench net_throughput
+for f in BENCH_hotpath.json BENCH_serving_throughput.json BENCH_net_throughput.json; do
   test -s "$f" || { echo "missing bench summary $f"; exit 1; }
   grep -q '"results":\[' "$f" || { echo "bad schema in $f"; exit 1; }
 done
 # The zero-copy data-plane rows (copy vs pooled, ISSUE 5), the router
-# dispatch rows (occupancy-only vs global-engine, ISSUE 6) and the
+# dispatch rows (occupancy-only vs global-engine, ISSUE 6), the
 # command-level writeback controller rows (naive vs scheduled, ISSUE 8)
-# must keep landing in the hotpath summary.
+# and the wire frame codec rows (ISSUE 9) must keep landing in the
+# hotpath summary.
 for row in 'serving/pack_batch8_copy' 'serving/pack_batch8_pooled' \
            'serving/respond_batch8_copy' 'serving/respond_batch8_pooled' \
            'router/dispatch_1k' 'router/dispatch_for_occupancy_1k' \
            'router/dispatch_batch_contended_1k' 'router/dispatch_batch_optimistic_1k' \
            'memory/writeback_naive_1k' 'memory/writeback_scheduled_1k' \
            'memory/writeback_model_makespan' \
+           'net/encode_frame_1k' 'net/decode_frame_pooled_1k' \
            'units/overhead_smoke_raw_f64' 'units/overhead_smoke_newtype'; do
   grep -q "$row" BENCH_hotpath.json || { echo "missing $row row in BENCH_hotpath.json"; exit 1; }
+done
+# The wire throughput summary must cover the connection × worker grid
+# (≥2 connection counts × ≥2 worker counts, ISSUE 9 acceptance).
+for row in 'net/throughput_c1_w1' 'net/throughput_c1_w2' \
+           'net/throughput_c4_w1' 'net/throughput_c4_w2'; do
+  grep -q "$row" BENCH_net_throughput.json || { echo "missing $row row in BENCH_net_throughput.json"; exit 1; }
 done
 
 # Bench-regression gate: the smoke-run summaries above vs the committed
@@ -66,7 +75,7 @@ if ls benches/baseline/BENCH_*.json >/dev/null 2>&1; then
   fi
 else
   mkdir -p benches/baseline
-  cp BENCH_hotpath.json BENCH_serving_throughput.json benches/baseline/
+  cp BENCH_hotpath.json BENCH_serving_throughput.json BENCH_net_throughput.json benches/baseline/
   echo "(no committed baselines -- seeded benches/baseline/ from this run;"
   echo " review and commit them to arm the regression gate)"
 fi

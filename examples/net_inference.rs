@@ -1,0 +1,144 @@
+//! Wire front-end demo (ISSUE 9): serving over the TCP socket boundary
+//! instead of the in-process `Engine::submit` call.
+//!
+//! The example binds a `NetServer` on an ephemeral loopback port over a
+//! sim-backed engine, then exercises both client shapes:
+//!
+//!  1. a single `NetClient` doing explicit submit/recv round trips —
+//!     showing the response carries the same logits, predicted class
+//!     and per-request `SimMetering` the in-process path returns, plus
+//!     a STATS request rendering the live `ServerStats` snapshot;
+//!  2. the open-loop load generator (`run_load`) — the same driver the
+//!     `serve --listen` CLI self-drive and the `net_throughput` bench
+//!     use — over several connections.
+//!
+//! Everything runs in one process; the wire is real (loopback TCP),
+//! the protocol is the length-prefixed binary framing of
+//! `coordinator::net::protocol` (DESIGN.md §3.2).
+//!
+//! Run: cargo run --release --example net_inference
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use opima::cnn::Model;
+use opima::coordinator::engine::{Engine, EngineConfig};
+use opima::coordinator::net::{run_load, LoadGenConfig, NetClient, NetReply, NetServer};
+use opima::coordinator::request::Variant;
+use opima::runtime::{ExecutorSpec, Manifest};
+use opima::util::prng::Rng;
+
+/// Synthetic class-patterned image (same generator family as
+/// serve_inference): stripes/checkerboard + noise, with its label.
+fn make_image(rng: &mut Rng, size: usize) -> (Vec<f32>, usize) {
+    let cls = rng.index(4);
+    let phase = rng.index(6);
+    let mut img = Vec::with_capacity(size * size);
+    for r in 0..size {
+        for c in 0..size {
+            let v = match cls {
+                0 => ((r + phase) / 2) % 2,
+                1 => ((c + phase) / 2) % 2,
+                2 => ((r + c + phase) / 3) % 2,
+                _ => (((r + phase) / 3) + ((c + phase) / 3)) % 2,
+            } as f64;
+            img.push((v + 0.45 * rng.normal()) as f32);
+        }
+    }
+    (img, cls)
+}
+
+fn main() -> opima::Result<()> {
+    let manifest = match Manifest::load(&Manifest::default_dir()) {
+        Ok(m) => m,
+        Err(_) => {
+            println!("(artifacts not found — synthetic manifest + sim backend)");
+            Manifest::synthetic(8, 12)
+        }
+    };
+    let image_size = manifest.image_size;
+    let engine = Arc::new(Engine::new(
+        EngineConfig {
+            workers: 2,
+            queue_capacity: 256,
+            instances: 2,
+            max_wait: Duration::from_millis(2),
+            executor: ExecutorSpec::Sim { work_factor: 1 },
+            ..EngineConfig::default()
+        },
+        manifest,
+    )?);
+    let server = NetServer::bind(Arc::clone(&engine), "127.0.0.1:0")?;
+    let addr = server.local_addr().to_string();
+    println!("serving on {addr} (loopback, ephemeral port)\n");
+
+    // --- 1. explicit submit/recv round trips ------------------------------
+    println!("=== single client, explicit round trips ===");
+    let mut client = NetClient::connect(&addr)?;
+    let mut rng = Rng::new(20260807);
+    for id in 0..8u64 {
+        let (image, label) = make_image(&mut rng, image_size);
+        client.submit(id, Model::LeNet, Variant::Int4, &image)?;
+        match client.recv()? {
+            NetReply::Response(r) => {
+                println!(
+                    "  id {:>2}  model {:<8} predicted {} (label {})  logits {:>2} f32  \
+                     hw latency {:.3} ms  energy {:.4} mJ",
+                    r.id,
+                    r.model.name(),
+                    r.predicted,
+                    label,
+                    r.logits.len(),
+                    r.sim.hw_latency_ms.raw(),
+                    r.sim.hw_energy_mj.raw()
+                );
+            }
+            other => println!("  id {id}: unexpected reply {other:?}"),
+        }
+    }
+    client.request_stats()?;
+    match client.recv()? {
+        NetReply::Stats(json) => println!("\nserver stats: {json}"),
+        other => println!("unexpected stats reply {other:?}"),
+    }
+    client.drain()?;
+    loop {
+        match client.recv()? {
+            NetReply::Fin => break,
+            other => println!("  (flushed during drain: {other:?})"),
+        }
+    }
+
+    // --- 2. open-loop load generator --------------------------------------
+    println!("\n=== load generator, 4 connections ===");
+    let report = run_load(&LoadGenConfig {
+        addr: addr.clone(),
+        connections: 4,
+        requests_per_conn: 64,
+        rate_rps: 0.0,
+        mix: vec![(Model::LeNet, 1)],
+        variant: Variant::Int4,
+        window: 32,
+        seed: 11,
+    })?;
+    println!(
+        "  sent {}  responses {}  busy {}  failed {}  wall {:.0} ms  \
+         {:.0} req/s  p50 {:.2} ms  p99 {:.2} ms",
+        report.sent,
+        report.responses,
+        report.busy,
+        report.failed,
+        report.wall_ms.raw(),
+        report.rps,
+        report.p50_ms.raw(),
+        report.p99_ms.raw()
+    );
+    assert_eq!(report.responses + report.busy + report.failed, report.sent);
+
+    server.shutdown()?;
+    if let Ok(mut e) = Arc::try_unwrap(engine) {
+        e.shutdown()?;
+    }
+    println!("\nnet_inference OK — socket path served both client shapes");
+    Ok(())
+}

@@ -116,6 +116,7 @@ fn run_mix(
                             image: image.into(),
                             variant,
                             arrival: Instant::now(),
+                            reply: None,
                         })
                         .expect("submit");
                     }
@@ -255,6 +256,7 @@ fn main() -> opima::Result<()> {
                                 image: image.into(),
                                 variant,
                                 arrival: Instant::now(),
+                                reply: None,
                             })
                             .expect("submit");
                         }

@@ -181,6 +181,7 @@ mod tests {
             image: vec![0.0; 4].into(),
             variant: v,
             arrival: Instant::now(),
+            reply: None,
         }
     }
 
@@ -282,6 +283,7 @@ mod tests {
             image: vec![].into(),
             variant: Variant::Int8,
             arrival: t0,
+            reply: None,
         });
         b.push(InferenceRequest {
             id: 1,
@@ -289,6 +291,7 @@ mod tests {
             image: vec![].into(),
             variant: Variant::Fp32,
             arrival: t0 + Duration::from_millis(5),
+            reply: None,
         });
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
         let _ = b.drain();

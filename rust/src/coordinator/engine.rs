@@ -66,9 +66,11 @@
 //!
 //! **Shutdown** is graceful: [`Engine::drain`] flushes and waits until
 //! every accepted request has an outcome; [`Engine::shutdown`] (also run
-//! on drop) then disconnects the ingress queue, lets the batcher drain
-//! and exit, lets workers finish remaining batches, and joins all
-//! pipeline threads. Stats stay readable afterwards.
+//! on drop) disconnects the ingress queue — the batcher drains every
+//! queued request (the last partial batch included) and exits, workers
+//! finish every formed batch, the collector records every outcome — and
+//! settles its result only after all joins, so the final stats snapshot
+//! is complete by construction. Stats stay readable afterwards.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -752,19 +754,24 @@ impl Engine {
         }
     }
 
-    /// Graceful shutdown: drain in-flight work, disconnect the ingress
-    /// queue, and join every pipeline thread. Idempotent; also run on
-    /// drop. Stats and responses remain readable afterwards.
+    /// Graceful shutdown: disconnect the ingress queue, join every
+    /// pipeline thread, and only then settle the final outcome.
+    /// Idempotent; also run on drop. Stats and responses remain
+    /// readable afterwards.
+    ///
+    /// The ordering is the drain barrier: dropping the ingress sender
+    /// wakes the batcher, which drains every queued request — the last
+    /// partial batch included — into the batch channel and exits;
+    /// workers finish every formed batch and exit; the collector
+    /// records every outcome and exits. A `stats()` snapshot taken
+    /// after `shutdown()` therefore always counts the final partial
+    /// batch. (The previous ordering polled `drain()` first, *before*
+    /// tearing the pipeline down: a submission racing with shutdown
+    /// could land after the drain target was sampled, and a single dead
+    /// worker made `drain()` report outstanding work as lost even while
+    /// the surviving workers were still completing it. Joining first
+    /// makes the final snapshot a deterministic fact, not a poll.)
     pub fn shutdown(&mut self) -> Result<()> {
-        let result = if self.ingress.is_some() {
-            self.drain()
-        } else {
-            Ok(())
-        };
-        // Disconnecting ingress wakes the batcher out of its receive,
-        // which then drains any remainder and exits, closing the batch
-        // channel; workers then exit, closing the results channel; the
-        // collector exits last.
         self.ingress = None;
         if let Some(h) = self.batcher.take() {
             let _ = h.join();
@@ -775,7 +782,20 @@ impl Engine {
         if let Some(h) = self.collector.take() {
             let _ = h.join();
         }
-        result
+        // Settle only after the joins: the sink now holds the complete,
+        // final accounting.
+        let mut st = lock(&self.sink.state);
+        let accepted = self.accepted.load(Ordering::Acquire);
+        match st.first_error.take() {
+            // Report-and-clear, like `drain`: the error belongs to the
+            // work settled here.
+            Some(e) => Err(Error::Serving(format!("batch execution failed: {e}"))),
+            None if st.completed < accepted => Err(Error::Serving(format!(
+                "pipeline exited with {} requests outstanding",
+                accepted - st.completed
+            ))),
+            None => Ok(()),
+        }
     }
 }
 
@@ -907,7 +927,29 @@ mod tests {
             image: (0..144).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect(),
             variant,
             arrival: Instant::now(),
+            reply: None,
         }
+    }
+
+    #[test]
+    fn shutdown_counts_the_last_partial_batch() {
+        // 13 requests at batch 8 with an hour-scale deadline: the last 5
+        // only ever flush through the shutdown path itself. The final
+        // stats snapshot must count them — shutdown's join sequence (not
+        // a poll) is the drain barrier (ISSUE 9 satellite).
+        let mut e = sim_engine(2, 64, Duration::from_secs(3600));
+        const N: u64 = 13;
+        for id in 0..N {
+            e.submit(req(id, Variant::Int4)).unwrap();
+        }
+        e.shutdown().unwrap(); // no drain() first — on purpose
+        assert_eq!(e.completed(), N);
+        let s = e.stats();
+        assert_eq!(s.served, N, "last partial batch missing from final stats");
+        assert_eq!(s.failed, 0);
+        assert_eq!(s.batches, 2, "8 + 5 → one full and one partial batch");
+        let per_model: u64 = s.per_model.iter().map(|m| m.served).sum();
+        assert_eq!(per_model, N);
     }
 
     #[test]

@@ -69,9 +69,14 @@
 //!   per model.
 //! - [`server`] — the synchronous facade preserving the seed call-loop
 //!   API on top of the engine.
+//! - [`net`] — the zero-copy TCP wire front end: length-prefixed binary
+//!   frames over `std::net`, pooled image ingest straight off the
+//!   socket, vectored response writes, explicit `BUSY` backpressure and
+//!   a graceful `DRAIN` → flush → `FIN` state machine (DESIGN.md §3.2).
 
 pub mod batcher;
 pub mod engine;
+pub mod net;
 pub mod registry;
 pub mod request;
 pub mod router;
@@ -79,10 +84,11 @@ pub mod server;
 pub mod worker;
 
 pub use engine::{Engine, EngineConfig};
+pub use net::{LoadGenConfig, LoadGenReport, NetClient, NetReply, NetServer};
 pub use registry::{ModelPlan, PlanRegistry};
-pub use router::Router;
 pub use request::{
-    parse_mix, pick_weighted, ImageBuf, InferenceRequest, InferenceResponse, LogitsPool,
-    LogitsView, Variant,
+    parse_mix, pick_weighted, ImageBuf, ImagePool, InferenceRequest, InferenceResponse,
+    LogitsPool, LogitsView, Reply, ReplyQueue, Variant,
 };
+pub use router::Router;
 pub use server::{LatencyBreakdown, ModelServingStats, Server, ServerConfig, ServerStats};

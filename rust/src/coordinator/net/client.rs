@@ -1,0 +1,482 @@
+//! Wire-protocol client: a reusable per-connection codec plus the
+//! multi-connection open-loop load generator behind `serve --listen`
+//! self-drive, the `net_inference` example and
+//! `benches/net_throughput.rs`.
+//!
+//! [`NetClient`] owns one TCP stream and three reused scratch buffers
+//! (encode bytes, decoded logits, decoded text); after warmup, a
+//! submit/recv cycle performs no allocation — the loopback alloc test
+//! counts the client's side of the wire too, so this matters for the
+//! <1-alloc-per-request proof, not just throughput.
+
+use std::io::Read;
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cnn::models::Model;
+use crate::coordinator::engine::lock;
+use crate::coordinator::net::frame::{
+    decode_header, encode_header, extend_f32s, read_f32_payload, read_full_or_eof, write_frame,
+};
+use crate::coordinator::net::protocol::{
+    model_from_wire, model_to_wire, variant_to_wire, FrameHeader, FrameKind, HEADER_LEN,
+    METERING_LEN,
+};
+use crate::coordinator::request::{pick_weighted, SimMetering, Variant};
+use crate::error::{Error, Result};
+use crate::util::prng::Rng;
+use crate::util::units::{ms, Millijoules, Millis};
+
+/// One reply frame as decoded by [`NetClient::recv`]. Payload-bearing
+/// variants borrow the client's reused scratch buffers — copy out only
+/// what you keep.
+#[derive(Debug)]
+pub enum NetReply<'a> {
+    Response(NetResponse<'a>),
+    /// The server shed the request under backpressure; retry later.
+    Busy { id: u64 },
+    /// A per-request or connection-level failure.
+    Failed { id: u64, message: &'a str },
+    /// A stats snapshot (JSON text).
+    Stats(&'a str),
+    /// End of stream (explicit FIN frame, or a clean close).
+    Fin,
+}
+
+/// One served response, logits borrowed from the client's scratch.
+#[derive(Debug)]
+pub struct NetResponse<'a> {
+    pub id: u64,
+    pub model: Model,
+    pub predicted: usize,
+    /// The batch's simulated hardware metering, bit-exact through the
+    /// wire (f64 LE roundtrip).
+    pub sim: SimMetering,
+    pub logits: &'a [f32],
+}
+
+/// A connected wire-protocol client.
+pub struct NetClient {
+    stream: TcpStream,
+    /// Reused encode scratch for submit payloads.
+    encode: Vec<u8>,
+    /// Reused decode scratch for response logits.
+    logits: Vec<f32>,
+    /// Reused decode scratch for text payloads (error/stats).
+    text: Vec<u8>,
+}
+
+impl NetClient {
+    /// Connect to a server (e.g. `"127.0.0.1:7878"`).
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient {
+            stream,
+            encode: Vec::new(),
+            logits: Vec::new(),
+            text: Vec::new(),
+        })
+    }
+
+    /// A second handle over the same connection with its own scratch
+    /// buffers — one half submits while the other receives.
+    pub fn try_clone(&self) -> Result<NetClient> {
+        Ok(NetClient {
+            stream: self.stream.try_clone()?,
+            encode: Vec::new(),
+            logits: Vec::new(),
+            text: Vec::new(),
+        })
+    }
+
+    /// Submit one inference request (`pixels` must carry the model's
+    /// `input_elems()` values). One vectored write, no allocation after
+    /// the scratch has warmed to the largest submitted image.
+    pub fn submit(&mut self, id: u64, model: Model, variant: Variant, pixels: &[f32]) -> Result<()> {
+        let mut hdr = [0u8; HEADER_LEN];
+        encode_header(
+            &FrameHeader {
+                kind: FrameKind::Submit,
+                model: model_to_wire(model),
+                variant: variant_to_wire(variant),
+                id,
+                payload_len: (pixels.len() * 4) as u32,
+                aux: 0,
+            },
+            &mut hdr,
+        );
+        self.encode.clear();
+        extend_f32s(&mut self.encode, pixels);
+        write_frame(&mut self.stream, &hdr, &self.encode)?;
+        Ok(())
+    }
+
+    /// Ask for a stats snapshot (answered as [`NetReply::Stats`], in
+    /// stream order relative to in-flight responses).
+    pub fn request_stats(&mut self) -> Result<()> {
+        self.control(FrameKind::StatsReq)
+    }
+
+    /// Ask the server to drain: every in-flight request completes, its
+    /// response is flushed, then the stream ends with [`NetReply::Fin`].
+    pub fn drain(&mut self) -> Result<()> {
+        self.control(FrameKind::Drain)
+    }
+
+    fn control(&mut self, kind: FrameKind) -> Result<()> {
+        let mut hdr = [0u8; HEADER_LEN];
+        encode_header(&FrameHeader::control(kind), &mut hdr);
+        write_frame(&mut self.stream, &hdr, &[])?;
+        Ok(())
+    }
+
+    /// Block for the next reply frame. A clean close at a frame boundary
+    /// decodes as [`NetReply::Fin`].
+    pub fn recv(&mut self) -> Result<NetReply<'_>> {
+        let mut hdr = [0u8; HEADER_LEN];
+        if !read_full_or_eof(&mut self.stream, &mut hdr)? {
+            return Ok(NetReply::Fin);
+        }
+        let h = decode_header(&hdr)?;
+        match h.kind {
+            FrameKind::Response => {
+                if (h.payload_len as usize) < METERING_LEN || h.payload_len as usize % 4 != 0 {
+                    return Err(Error::Serving(format!(
+                        "response payload_len {} cannot carry metering + logits",
+                        h.payload_len
+                    )));
+                }
+                let mut metering = [0u8; METERING_LEN];
+                self.stream.read_exact(&mut metering)?;
+                let sim = SimMetering {
+                    hw_latency_ms: Millis::new(f64::from_le_bytes(
+                        metering[0..8].try_into().expect("metering field size"),
+                    )),
+                    hw_contended_ms: Millis::new(f64::from_le_bytes(
+                        metering[8..16].try_into().expect("metering field size"),
+                    )),
+                    hw_energy_mj: Millijoules::new(f64::from_le_bytes(
+                        metering[16..24].try_into().expect("metering field size"),
+                    )),
+                };
+                let n = (h.payload_len as usize - METERING_LEN) / 4;
+                self.logits.resize(n, 0.0);
+                read_f32_payload(&mut self.stream, &mut self.logits)?;
+                let model = model_from_wire(h.model).ok_or_else(|| {
+                    Error::Serving(format!("response names unknown model byte {}", h.model))
+                })?;
+                Ok(NetReply::Response(NetResponse {
+                    id: h.id,
+                    model,
+                    predicted: h.aux as usize,
+                    sim,
+                    logits: &self.logits,
+                }))
+            }
+            FrameKind::Busy => Ok(NetReply::Busy { id: h.id }),
+            FrameKind::Error | FrameKind::Stats => {
+                self.text.resize(h.payload_len as usize, 0);
+                self.stream.read_exact(&mut self.text)?;
+                let text = std::str::from_utf8(&self.text)
+                    .map_err(|_| Error::Serving("non-UTF-8 text payload".into()))?;
+                Ok(if h.kind == FrameKind::Error {
+                    NetReply::Failed {
+                        id: h.id,
+                        message: text,
+                    }
+                } else {
+                    NetReply::Stats(text)
+                })
+            }
+            FrameKind::Fin => Ok(NetReply::Fin),
+            k => Err(Error::Serving(format!(
+                "unexpected server frame kind {k:?}"
+            ))),
+        }
+    }
+
+    /// Close the submit direction (the server keeps flushing replies
+    /// until its side finishes).
+    pub fn close_write(&mut self) -> Result<()> {
+        self.stream.shutdown(Shutdown::Write)?;
+        Ok(())
+    }
+}
+
+/// Open-loop load-generator configuration (shared by the CLI's
+/// `serve --listen` self-drive, the `net_inference` example and the
+/// `net_throughput` bench).
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Server address, e.g. `"127.0.0.1:7878"`.
+    pub addr: String,
+    /// Concurrent client connections.
+    pub connections: usize,
+    /// Requests each connection submits.
+    pub requests_per_conn: usize,
+    /// Aggregate arrival rate in requests/s across all connections;
+    /// `0.0` submits as fast as the window allows.
+    pub rate_rps: f64,
+    /// Weighted model mix (`parse_mix` grammar).
+    pub mix: Vec<(Model, u64)>,
+    pub variant: Variant,
+    /// Max in-flight requests per connection (submission waits above
+    /// it, bounding client-side memory and pool pressure).
+    pub window: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        Self {
+            addr: String::new(),
+            connections: 1,
+            requests_per_conn: 256,
+            rate_rps: 0.0,
+            mix: vec![(Model::LeNet, 1)],
+            variant: Variant::Int8,
+            window: 32,
+            seed: 7,
+        }
+    }
+}
+
+/// What one load-generator run measured, aggregated over connections.
+#[derive(Debug, Clone, Default)]
+pub struct LoadGenReport {
+    pub sent: u64,
+    pub responses: u64,
+    pub busy: u64,
+    pub failed: u64,
+    pub wall_ms: Millis,
+    /// Responses per second of wall time.
+    pub rps: f64,
+    /// Client-observed round-trip percentiles over responses.
+    pub p50_ms: Millis,
+    pub p99_ms: Millis,
+}
+
+/// In-flight window: submission blocks while `window` requests await
+/// replies, so an open-loop burst cannot balloon client memory.
+#[derive(Default)]
+struct Window {
+    in_flight: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl Window {
+    fn acquire(&self, cap: usize) {
+        let mut n = lock(&self.in_flight);
+        while *n >= cap {
+            n = self.freed.wait(n).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        *n += 1;
+    }
+
+    fn release(&self) {
+        let mut n = lock(&self.in_flight);
+        *n = n.saturating_sub(1);
+        self.freed.notify_one();
+    }
+}
+
+/// Run the open-loop load: `connections` parallel client connections,
+/// each submitting `requests_per_conn` requests (windowed, optionally
+/// paced), then draining. Returns the aggregated report.
+pub fn run_load(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
+    if cfg.connections == 0 || cfg.requests_per_conn == 0 {
+        return Err(Error::Config("load generator needs ≥1 connection and ≥1 request".into()));
+    }
+    if cfg.mix.is_empty() {
+        return Err(Error::Config("load generator mix lists no models".into()));
+    }
+    let started = Instant::now();
+    let pace = if cfg.rate_rps > 0.0 {
+        Some(Duration::from_secs_f64(cfg.connections as f64 / cfg.rate_rps))
+    } else {
+        None
+    };
+    let mut totals = LoadGenReport::default();
+    let mut rtts_ms: Vec<f64> = Vec::new();
+    let conn_results: Result<Vec<ConnReport>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.connections)
+            .map(|c| s.spawn(move || run_conn(cfg, c, pace)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| Error::Serving("load connection panicked".into()))?)
+            .collect()
+    });
+    for conn in conn_results? {
+        totals.sent += conn.sent;
+        totals.responses += conn.responses;
+        totals.busy += conn.busy;
+        totals.failed += conn.failed;
+        rtts_ms.extend(conn.rtts_ms);
+    }
+    let wall_s = started.elapsed().as_secs_f64();
+    totals.wall_ms = ms(wall_s * 1e3);
+    totals.rps = totals.responses as f64 / wall_s.max(1e-9);
+    rtts_ms.sort_by(f64::total_cmp);
+    totals.p50_ms = ms(percentile(&rtts_ms, 0.50));
+    totals.p99_ms = ms(percentile(&rtts_ms, 0.99));
+    Ok(totals)
+}
+
+struct ConnReport {
+    sent: u64,
+    responses: u64,
+    busy: u64,
+    failed: u64,
+    rtts_ms: Vec<f64>,
+}
+
+fn run_conn(cfg: &LoadGenConfig, conn_idx: usize, pace: Option<Duration>) -> Result<ConnReport> {
+    let mut tx = NetClient::connect(&cfg.addr)?;
+    let mut rx = tx.try_clone()?;
+    let window = Arc::new(Window::default());
+    let cap = cfg.window.max(1);
+    // Request k on this connection gets id (conn << 32) | k; the start
+    // slab is indexed by k for RTT measurement on the receive side.
+    let starts: Arc<Mutex<Vec<Option<Instant>>>> =
+        Arc::new(Mutex::new(vec![None; cfg.requests_per_conn]));
+    let mut rng = Rng::new(cfg.seed.wrapping_add(conn_idx as u64 * 0x9E37_79B9));
+    // One pre-generated image per mixed model, reused across requests
+    // (the server decodes into pooled buffers either way).
+    let models: Vec<Model> = cfg.mix.iter().map(|(m, _)| *m).collect();
+    let images: Vec<(Model, Vec<f32>)> = models
+        .iter()
+        .map(|m| {
+            let px = (0..m.input_elems()).map(|_| rng.f64() as f32).collect();
+            (*m, px)
+        })
+        .collect();
+
+    std::thread::scope(|s| {
+        let recv_window = Arc::clone(&window);
+        let recv_starts = Arc::clone(&starts);
+        let receiver = s.spawn(move || -> Result<ConnReport> {
+            let mut rep = ConnReport {
+                sent: 0,
+                responses: 0,
+                busy: 0,
+                failed: 0,
+                rtts_ms: Vec::new(),
+            };
+            loop {
+                match rx.recv()? {
+                    NetReply::Response(r) => {
+                        rep.responses += 1;
+                        let k = (r.id & 0xFFFF_FFFF) as usize;
+                        if let Some(t0) = lock(&recv_starts).get(k).copied().flatten() {
+                            rep.rtts_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                        }
+                        recv_window.release();
+                    }
+                    NetReply::Busy { .. } => {
+                        rep.busy += 1;
+                        recv_window.release();
+                    }
+                    NetReply::Failed { .. } => {
+                        rep.failed += 1;
+                        recv_window.release();
+                    }
+                    NetReply::Stats(_) => {}
+                    NetReply::Fin => return Ok(rep),
+                }
+            }
+        });
+
+        let mut sent = 0u64;
+        let mut send_err = None;
+        let anchor = Instant::now();
+        for k in 0..cfg.requests_per_conn {
+            if let Some(interval) = pace {
+                // Open-loop schedule: request k is due at anchor + k·Δ,
+                // independent of how fast the server responds.
+                let due = anchor + interval * k as u32;
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+            }
+            window.acquire(cap);
+            let (model, pixels) = {
+                let pick = pick_weighted(&mut rng, &cfg.mix);
+                let (m, px) = images
+                    .iter()
+                    .find(|(m, _)| *m == pick)
+                    .expect("every mixed model has a pre-generated image");
+                (*m, px.as_slice())
+            };
+            let id = ((conn_idx as u64) << 32) | k as u64;
+            lock(&starts)[k] = Some(Instant::now());
+            if let Err(e) = tx.submit(id, model, cfg.variant, pixels) {
+                send_err = Some(e);
+                break;
+            }
+            sent += 1;
+        }
+        // End of quota: ask for a drain so every in-flight response is
+        // flushed, then the receiver sees Fin and returns.
+        if send_err.is_none() {
+            if let Err(e) = tx.drain() {
+                send_err = Some(e);
+            }
+        }
+        if send_err.is_some() {
+            // Can't drain cleanly — close our write half so the server
+            // EOFs, flushes, and Fins (the receiver must not hang).
+            let _ = tx.close_write();
+        }
+        let mut rep = receiver
+            .join()
+            .map_err(|_| Error::Serving("load receiver panicked".into()))??;
+        rep.sent = sent;
+        if let Some(e) = send_err {
+            return Err(e);
+        }
+        Ok(rep)
+    })
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample (0 when
+/// empty).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let s = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&s, 0.5), 3.0);
+        assert_eq!(percentile(&s, 0.99), 5.0);
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn window_blocks_at_capacity_and_releases() {
+        let w = Arc::new(Window::default());
+        w.acquire(2);
+        w.acquire(2);
+        let blocked = Arc::clone(&w);
+        let t = std::thread::spawn(move || {
+            blocked.acquire(2); // parks until a release
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!t.is_finished(), "third acquire waits at window 2");
+        w.release();
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,294 @@
+//! Frame encode/decode on fixed stack buffers and caller-owned scratch.
+//!
+//! The codec never allocates per frame (the `frame-copy` lint rule in
+//! `scripts/lint_invariants.py` keeps it that way):
+//!
+//! - headers encode into / decode from a `[u8; HEADER_LEN]` stack
+//!   buffer;
+//! - f32 payloads stream through a fixed stack chunk straight into the
+//!   caller's `&mut [f32]` (a pooled image buffer on the server, a
+//!   reused logits scratch on the client) — there is no intermediate
+//!   per-frame `Vec<u8>`;
+//! - outbound payloads encode into a caller-owned `Vec<u8>` that is
+//!   cleared and refilled (capacity reused), then leave in **one
+//!   vectored write** over `[header-prefix, payload]`.
+
+use std::io::{IoSlice, Read, Write};
+use std::sync::Arc;
+
+use crate::coordinator::net::protocol::{FrameHeader, FrameKind, HEADER_LEN, MAGIC, MAX_PAYLOAD};
+use crate::coordinator::request::{ImageBuf, ImagePool};
+use crate::error::{Error, Result};
+
+/// Streaming chunk for f32 payload decode/discard: 1 KiB of pixels per
+/// `read_exact`, decoded in place from the stack.
+const CHUNK: usize = 4096;
+
+/// Serialize a header into its fixed stack buffer.
+pub fn encode_header(h: &FrameHeader, buf: &mut [u8; HEADER_LEN]) {
+    buf[0..4].copy_from_slice(&MAGIC);
+    buf[4] = h.kind as u8;
+    buf[5] = h.model;
+    buf[6] = h.variant;
+    buf[7] = 0;
+    buf[8..16].copy_from_slice(&h.id.to_le_bytes());
+    buf[16..20].copy_from_slice(&h.payload_len.to_le_bytes());
+    buf[20..24].copy_from_slice(&h.aux.to_le_bytes());
+}
+
+/// Parse and validate a header from its fixed stack buffer: magic
+/// (version), kind, the reserved byte, and the payload-length bound
+/// (checked *before* anything is sized from it).
+pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<FrameHeader> {
+    if buf[0..4] != MAGIC {
+        return Err(Error::Serving(format!(
+            "bad frame magic {:02x?} (want {:02x?} — incompatible peer or desynced stream)",
+            &buf[0..4],
+            MAGIC
+        )));
+    }
+    let kind = FrameKind::from_wire(buf[4])
+        .ok_or_else(|| Error::Serving(format!("unknown frame kind {}", buf[4])))?;
+    if buf[7] != 0 {
+        return Err(Error::Serving(format!(
+            "nonzero reserved header byte {}",
+            buf[7]
+        )));
+    }
+    let payload_len = u32::from_le_bytes([buf[16], buf[17], buf[18], buf[19]]);
+    if payload_len > MAX_PAYLOAD {
+        return Err(Error::Serving(format!(
+            "frame payload_len {payload_len} exceeds MAX_PAYLOAD {MAX_PAYLOAD}"
+        )));
+    }
+    Ok(FrameHeader {
+        kind,
+        model: buf[5],
+        variant: buf[6],
+        id: u64::from_le_bytes([
+            buf[8], buf[9], buf[10], buf[11], buf[12], buf[13], buf[14], buf[15],
+        ]),
+        payload_len,
+        aux: u32::from_le_bytes([buf[20], buf[21], buf[22], buf[23]]),
+    })
+}
+
+/// Fill `buf` completely from the stream. `Ok(true)` means filled;
+/// `Ok(false)` means the peer closed cleanly *before the first byte* —
+/// an end of stream at a frame boundary, which is a legal FIN-less
+/// close. EOF mid-buffer is an error (a truncated frame).
+pub fn read_full_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) if got == 0 => return Ok(false),
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "stream closed mid-frame",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read exactly `out.len()` little-endian f32s from the stream into the
+/// caller's buffer, streaming through a stack chunk — no intermediate
+/// heap buffer of any size, ever.
+pub fn read_f32_payload<R: Read>(r: &mut R, out: &mut [f32]) -> std::io::Result<()> {
+    let mut chunk = [0u8; CHUNK];
+    for dst in out.chunks_mut(CHUNK / 4) {
+        let bytes = &mut chunk[..dst.len() * 4];
+        r.read_exact(bytes)?;
+        for (d, b) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+            *d = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+    }
+    Ok(())
+}
+
+/// Read a submit frame's pixels **directly into a pooled image buffer**:
+/// take an exclusively-owned `Arc<[f32]>` from the connection's pool,
+/// fill it in place from the socket, wrap it into the request's
+/// [`ImageBuf`], and hand the pool its recycling clone (free again once
+/// the engine retires the request). The steady-state cost is the decode
+/// itself — zero allocations.
+pub fn read_pooled_image<R: Read>(
+    r: &mut R,
+    pool: &mut ImagePool,
+    elems: usize,
+) -> std::io::Result<ImageBuf> {
+    let mut buf = pool.take(elems);
+    let dst = Arc::get_mut(&mut buf).expect("freshly taken pool buffer is unique");
+    read_f32_payload(r, dst)?;
+    let image = ImageBuf::from(Arc::clone(&buf));
+    pool.put(buf);
+    Ok(image)
+}
+
+/// Append `src` as little-endian f32 bytes to a reused scratch vector
+/// (capacity persists across frames; steady state appends without
+/// allocating).
+pub fn extend_f32s(dst: &mut Vec<u8>, src: &[f32]) {
+    dst.reserve(src.len() * 4);
+    for v in src {
+        dst.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Consume and discard `len` payload bytes through the stack chunk —
+/// keeps the stream framed after a per-request rejection without
+/// buffering the junk.
+pub fn discard_payload<R: Read>(r: &mut R, len: usize) -> std::io::Result<()> {
+    let mut chunk = [0u8; CHUNK];
+    let mut left = len;
+    while left > 0 {
+        let n = left.min(CHUNK);
+        r.read_exact(&mut chunk[..n])?;
+        left -= n;
+    }
+    Ok(())
+}
+
+/// Write a whole frame as **one vectored write** over `[prefix,
+/// payload]` (`prefix` = header, or header + metering for responses).
+/// The common case is a single syscall; a short write falls back to
+/// finishing each piece with `write_all`.
+pub fn write_frame<W: Write>(w: &mut W, prefix: &[u8], payload: &[u8]) -> std::io::Result<()> {
+    let mut written = loop {
+        match w.write_vectored(&[IoSlice::new(prefix), IoSlice::new(payload)]) {
+            Ok(n) => break n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    };
+    for part in [prefix, payload] {
+        if written >= part.len() {
+            written -= part.len();
+            continue;
+        }
+        w.write_all(&part[written..])?;
+        written = 0;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::net::protocol::NONE_BYTE;
+    use std::io::Cursor;
+
+    fn header() -> FrameHeader {
+        FrameHeader {
+            kind: FrameKind::Submit,
+            model: 2,
+            variant: 1,
+            id: 0xDEAD_BEEF_0042,
+            payload_len: 576,
+            aux: 7,
+        }
+    }
+
+    #[test]
+    fn header_roundtrips_bit_exactly() {
+        let h = header();
+        let mut buf = [0u8; HEADER_LEN];
+        encode_header(&h, &mut buf);
+        assert_eq!(decode_header(&buf).unwrap(), h);
+        let c = FrameHeader::control(FrameKind::Fin);
+        encode_header(&c, &mut buf);
+        let back = decode_header(&buf).unwrap();
+        assert_eq!(back.kind, FrameKind::Fin);
+        assert_eq!(back.model, NONE_BYTE);
+        assert_eq!(back.payload_len, 0);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_headers() {
+        let mut buf = [0u8; HEADER_LEN];
+        encode_header(&header(), &mut buf);
+        let mut bad_magic = buf;
+        bad_magic[0] = b'X';
+        assert!(decode_header(&bad_magic).is_err(), "bad magic");
+        let mut bad_kind = buf;
+        bad_kind[4] = 99;
+        assert!(decode_header(&bad_kind).is_err(), "unknown kind");
+        let mut bad_reserved = buf;
+        bad_reserved[7] = 1;
+        assert!(decode_header(&bad_reserved).is_err(), "reserved byte");
+        let mut oversized = buf;
+        oversized[16..20].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(decode_header(&oversized).is_err(), "oversized payload_len");
+        oversized[16..20].copy_from_slice(&MAX_PAYLOAD.to_le_bytes());
+        assert!(decode_header(&oversized).is_ok(), "bound is inclusive");
+    }
+
+    #[test]
+    fn f32_payload_roundtrips_through_the_chunked_codec() {
+        // Longer than one 1024-f32 chunk, and not a multiple of it.
+        let src: Vec<f32> = (0..2500).map(|i| i as f32 * 0.25 - 7.0).collect();
+        let mut wire = Vec::new();
+        extend_f32s(&mut wire, &src);
+        assert_eq!(wire.len(), src.len() * 4);
+        let mut back = vec![0f32; src.len()];
+        read_f32_payload(&mut Cursor::new(&wire), &mut back).unwrap();
+        assert_eq!(back, src);
+        // Truncated stream: the decode reports the missing bytes.
+        let mut short = vec![0f32; src.len() + 1];
+        assert!(read_f32_payload(&mut Cursor::new(&wire), &mut short).is_err());
+    }
+
+    #[test]
+    fn pooled_image_decode_recycles_the_connection_pool() {
+        let mut pool = ImagePool::new(4);
+        let src: Vec<f32> = (0..144).map(|i| i as f32).collect();
+        let mut wire = Vec::new();
+        extend_f32s(&mut wire, &src);
+        let img = read_pooled_image(&mut Cursor::new(&wire), &mut pool, 144).unwrap();
+        assert_eq!(img.as_slice(), &src[..]);
+        let first_ptr = img.as_slice().as_ptr();
+        assert_eq!(pool.pooled(), 1, "the recycling clone is retained");
+        // While the request is alive the buffer is NOT reusable...
+        let img2 = read_pooled_image(&mut Cursor::new(&wire), &mut pool, 144).unwrap();
+        assert_ne!(img2.as_slice().as_ptr(), first_ptr);
+        // ...and once the engine drops it, the next frame reuses it.
+        drop(img);
+        let img3 = read_pooled_image(&mut Cursor::new(&wire), &mut pool, 144).unwrap();
+        assert_eq!(img3.as_slice().as_ptr(), first_ptr, "retired buffer reused");
+    }
+
+    #[test]
+    fn vectored_write_emits_prefix_then_payload() {
+        let mut out = Vec::new();
+        write_frame(&mut out, &[1, 2, 3], &[4, 5]).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+        let mut empty_payload = Vec::new();
+        write_frame(&mut empty_payload, &[9], &[]).unwrap();
+        assert_eq!(empty_payload, vec![9]);
+    }
+
+    #[test]
+    fn full_read_distinguishes_clean_close_from_truncation() {
+        let mut buf = [0u8; 4];
+        // Clean close at the boundary: Ok(false), nothing read.
+        assert!(!read_full_or_eof(&mut Cursor::new(&[][..]), &mut buf).unwrap());
+        // A full frame's worth: Ok(true).
+        assert!(read_full_or_eof(&mut Cursor::new(&[1u8, 2, 3, 4][..]), &mut buf).unwrap());
+        assert_eq!(buf, [1, 2, 3, 4]);
+        // Truncated mid-frame: an error, not a silent partial fill.
+        assert!(read_full_or_eof(&mut Cursor::new(&[1u8, 2][..]), &mut buf).is_err());
+    }
+
+    #[test]
+    fn discard_keeps_the_stream_framed() {
+        let mut c = Cursor::new(vec![0u8; 10_000]);
+        discard_payload(&mut c, 9_000).unwrap();
+        assert_eq!(c.position(), 9_000);
+        assert!(discard_payload(&mut c, 2_000).is_err(), "short stream");
+    }
+}

@@ -1,0 +1,38 @@
+//! Zero-copy TCP wire front end: socket-to-logits with <1 allocation
+//! per request.
+//!
+//! A dependency-free `std::net` binary protocol over length-prefixed
+//! little-endian frames (versioned magic `OPW1`), designed so the
+//! engine's zero-copy data plane (DESIGN.md §3.1) extends all the way
+//! to the socket boundary (§3.2):
+//!
+//! - [`protocol`] — frame kinds, the fixed 24-byte header, the wire
+//!   encodings of models and variants, and the size bounds a hostile
+//!   header is checked against.
+//! - [`frame`] — the codec: stack-buffer header encode/decode, f32
+//!   payloads streamed through a fixed stack chunk straight into
+//!   caller-owned buffers, and single-vectored-write frame emission.
+//! - [`server`] — [`NetServer`]: accept loop + per-connection
+//!   reader/writer threads bridged by a [`ReplyQueue`]
+//!   (workers push responses before the collector sees the outcome, so
+//!   drain implies replies-queued); pooled image ingest; explicit
+//!   `BUSY` under backpressure; graceful `DRAIN` → flush → `FIN`.
+//! - [`client`] — [`NetClient`] (reused-scratch codec peer) and the
+//!   multi-connection open-loop load generator
+//!   ([`run_load`]) behind `serve --listen` self-drive, the
+//!   `net_inference` example and `benches/net_throughput.rs`.
+//!
+//! The <1-allocation and ≤1-image-copy properties are pinned by
+//! `rust/tests/net_roundtrip.rs` with a counting global allocator over
+//! a real loopback socket.
+//!
+//! [`ReplyQueue`]: crate::coordinator::request::ReplyQueue
+
+pub mod client;
+pub mod frame;
+pub mod protocol;
+pub mod server;
+
+pub use client::{run_load, LoadGenConfig, LoadGenReport, NetClient, NetReply, NetResponse};
+pub use protocol::{FrameHeader, FrameKind, HEADER_LEN, MAGIC, MAX_PAYLOAD, METERING_LEN};
+pub use server::NetServer;

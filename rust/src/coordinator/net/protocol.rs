@@ -1,0 +1,208 @@
+//! The OPIMA wire protocol: frame kinds, the fixed header, and the
+//! wire encodings of [`Model`] and [`Variant`].
+//!
+//! Every frame is a fixed 24-byte little-endian header followed by
+//! `payload_len` payload bytes (DESIGN.md §3.2 has the worked layout
+//! table):
+//!
+//! ```text
+//! offset  size  field        notes
+//! 0       4     magic        b"OPW1" — protocol version 1 baked in
+//! 4       1     kind         FrameKind discriminant
+//! 5       1     model        SERVABLE_MODELS index; 0xFF = none
+//! 6       1     variant      0 fp32, 1 int8, 2 int4; 0xFF = none
+//! 7       1     reserved     must be 0
+//! 8       8     id           request id (echoed on replies)
+//! 16      4     payload_len  bytes following the header (≤ MAX_PAYLOAD)
+//! 20      4     aux          kind-specific (RESPONSE: predicted class)
+//! ```
+//!
+//! Payloads by kind:
+//! - `Submit` → `model.input_elems()` pixels as f32 LE (exactly; a
+//!   mismatched length is rejected per request, the connection lives).
+//! - `Response` → 24-byte metering prefix (`hw_latency_ms`,
+//!   `hw_contended_ms`, `hw_energy_mj` as f64 LE — bit-exact through
+//!   the wire) followed by `classes` logits as f32 LE; `aux` carries
+//!   the predicted class.
+//! - `Error` / `Stats` → UTF-8 text.
+//! - `Busy`, `StatsReq`, `Drain`, `Fin` → empty.
+
+use crate::cnn::models::{Model, SERVABLE_MODELS};
+use crate::coordinator::request::Variant;
+use crate::error::{Error, Result};
+
+/// Versioned magic: the protocol revision is baked into the four bytes,
+/// so an incompatible peer fails on the very first frame.
+pub const MAGIC: [u8; 4] = *b"OPW1";
+
+/// Fixed frame-header length — always parsed from a stack buffer.
+pub const HEADER_LEN: usize = 24;
+
+/// `Response` payload prefix: three f64 metering fields.
+pub const METERING_LEN: usize = 24;
+
+/// Upper bound on `payload_len` (16 MiB — an order of magnitude above
+/// the largest legitimate payload, VGG16's 224×224×3 pixels). Anything
+/// larger is a malformed or hostile frame and is rejected at header
+/// parse, before any buffer is sized from it.
+pub const MAX_PAYLOAD: u32 = 1 << 24;
+
+/// Wire value for "no model" / "no variant" header slots.
+pub const NONE_BYTE: u8 = 0xFF;
+
+/// Frame discriminants. `Submit`/`StatsReq`/`Drain` travel client →
+/// server; the rest travel server → client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// One inference request (pixels in the payload).
+    Submit = 1,
+    /// One served response (metering + logits in the payload).
+    Response = 2,
+    /// The engine's bounded ingress was full — explicit shed, never a
+    /// silent drop. Retry later.
+    Busy = 3,
+    /// A per-request or per-connection failure (UTF-8 message payload).
+    Error = 4,
+    /// Ask the server for a stats snapshot.
+    StatsReq = 5,
+    /// A stats snapshot (JSON text payload).
+    Stats = 6,
+    /// Ask the server to drain: every in-flight request completes and
+    /// its response is flushed, then the server answers `Fin` and
+    /// closes the connection.
+    Drain = 7,
+    /// End of stream: no further frames follow.
+    Fin = 8,
+}
+
+impl FrameKind {
+    pub fn from_wire(b: u8) -> Option<FrameKind> {
+        match b {
+            1 => Some(FrameKind::Submit),
+            2 => Some(FrameKind::Response),
+            3 => Some(FrameKind::Busy),
+            4 => Some(FrameKind::Error),
+            5 => Some(FrameKind::StatsReq),
+            6 => Some(FrameKind::Stats),
+            7 => Some(FrameKind::Drain),
+            8 => Some(FrameKind::Fin),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed frame header (the fixed 24 bytes, minus the magic).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    /// Wire model byte ([`model_from_wire`] decodes; [`NONE_BYTE`] when
+    /// the kind carries no model).
+    pub model: u8,
+    /// Wire variant byte ([`variant_from_wire`] decodes).
+    pub variant: u8,
+    pub id: u64,
+    pub payload_len: u32,
+    pub aux: u32,
+}
+
+impl FrameHeader {
+    /// A header with no model/variant/id — control frames.
+    pub fn control(kind: FrameKind) -> FrameHeader {
+        FrameHeader {
+            kind,
+            model: NONE_BYTE,
+            variant: NONE_BYTE,
+            id: 0,
+            payload_len: 0,
+            aux: 0,
+        }
+    }
+}
+
+/// Model → wire byte (index into [`SERVABLE_MODELS`] — declaration
+/// order is the stable wire order).
+pub fn model_to_wire(m: Model) -> u8 {
+    SERVABLE_MODELS
+        .iter()
+        .position(|x| *x == m)
+        .expect("every Model is servable") as u8
+}
+
+pub fn model_from_wire(b: u8) -> Option<Model> {
+    SERVABLE_MODELS.get(b as usize).copied()
+}
+
+pub fn variant_to_wire(v: Variant) -> u8 {
+    match v {
+        Variant::Fp32 => 0,
+        Variant::Int8 => 1,
+        Variant::Int4 => 2,
+    }
+}
+
+pub fn variant_from_wire(b: u8) -> Option<Variant> {
+    match b {
+        0 => Some(Variant::Fp32),
+        1 => Some(Variant::Int8),
+        2 => Some(Variant::Int4),
+        _ => None,
+    }
+}
+
+/// Decode a submit header's model byte, or a per-request protocol error.
+pub fn submit_model(h: &FrameHeader) -> Result<Model> {
+    model_from_wire(h.model)
+        .ok_or_else(|| Error::Serving(format!("submit names unknown model byte {}", h.model)))
+}
+
+/// Decode a submit header's variant byte, or a per-request protocol
+/// error.
+pub fn submit_variant(h: &FrameHeader) -> Result<Variant> {
+    variant_from_wire(h.variant)
+        .ok_or_else(|| Error::Serving(format!("submit names unknown variant byte {}", h.variant)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_wire_mapping_roundtrips() {
+        for m in SERVABLE_MODELS {
+            assert_eq!(model_from_wire(model_to_wire(m)), Some(m));
+        }
+        assert_eq!(model_from_wire(NONE_BYTE), None);
+        // The wire order is the declaration order — pinned so peers
+        // built from different checkouts stay compatible.
+        assert_eq!(model_to_wire(Model::LeNet), 0);
+        assert_eq!(model_to_wire(Model::Vgg16), 5);
+    }
+
+    #[test]
+    fn variant_wire_mapping_roundtrips() {
+        for v in [Variant::Fp32, Variant::Int8, Variant::Int4] {
+            assert_eq!(variant_from_wire(variant_to_wire(v)), Some(v));
+        }
+        assert_eq!(variant_from_wire(3), None);
+        assert_eq!(variant_from_wire(NONE_BYTE), None);
+    }
+
+    #[test]
+    fn frame_kind_roundtrips_and_rejects() {
+        for k in [
+            FrameKind::Submit,
+            FrameKind::Response,
+            FrameKind::Busy,
+            FrameKind::Error,
+            FrameKind::StatsReq,
+            FrameKind::Stats,
+            FrameKind::Drain,
+            FrameKind::Fin,
+        ] {
+            assert_eq!(FrameKind::from_wire(k as u8), Some(k));
+        }
+        assert_eq!(FrameKind::from_wire(0), None);
+        assert_eq!(FrameKind::from_wire(9), None);
+    }
+}

@@ -1,0 +1,419 @@
+//! The TCP front end: socket-to-logits on the engine's zero-copy data
+//! plane.
+//!
+//! [`NetServer::bind`] starts an accept loop over a dependency-free
+//! `std::net` listener. Each connection gets a reader thread and a
+//! writer thread bridged by one [`ReplyQueue`]:
+//!
+//! - the **reader** parses frame headers from a fixed stack buffer and
+//!   decodes submit payloads *directly into pooled image buffers* (a
+//!   per-connection [`ImagePool`], refilled as the engine retires
+//!   requests), then submits with a reply handle — backpressure becomes
+//!   an explicit [`Reply::Busy`], never a silent drop;
+//! - the engine's **workers** push each request's response (or its
+//!   batch's failure) onto the queue before the outcome reaches the
+//!   collector;
+//! - the **writer** pops replies and emits each response as one
+//!   vectored write over `[header + metering, logits bytes]`, reusing
+//!   a single scratch vector for the payload encode.
+//!
+//! Steady state, the whole socket→engine→socket path performs no
+//! per-request allocation and copies request pixels exactly once (into
+//! the worker's packed batch input) — `rust/tests/net_roundtrip.rs`
+//! pins both properties with a counting global allocator.
+//!
+//! **Drain state machine** (DESIGN.md §3.2): a `Drain` frame makes the
+//! reader stop consuming, run [`Engine::drain`] (worker reply pushes
+//! happen *before* collector accounting, so a completed drain implies
+//! every reply is queued), and push [`Reply::Fin`]; the writer flushes
+//! everything queued ahead of the `Fin` — all in-flight responses —
+//! then answers `Fin` and closes. Malformed frames fail loudly: a
+//! per-request rejection (unknown model, wrong payload length) keeps
+//! the connection alive, an unparseable header poisons only that
+//! connection — the accept loop and every other connection keep
+//! serving.
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::engine::{lock, Engine};
+use crate::coordinator::net::frame::{
+    decode_header, discard_payload, encode_header, extend_f32s, read_full_or_eof,
+    read_pooled_image, write_frame,
+};
+use crate::coordinator::net::protocol::{
+    model_to_wire, submit_model, submit_variant, FrameHeader, FrameKind, HEADER_LEN, METERING_LEN,
+    NONE_BYTE,
+};
+use crate::coordinator::request::{ImagePool, InferenceRequest, Reply, ReplyQueue};
+use crate::coordinator::server::ServerStats;
+use crate::error::{Error, Result};
+
+/// Retained free-list capacity of each connection's image pool.
+const POOL_CAP: usize = 64;
+
+/// Pre-reserved reply-queue capacity (pushes within it never allocate).
+const QUEUE_WARM: usize = 256;
+
+/// Accept-loop poll period while idle (the listener is non-blocking so
+/// shutdown can interrupt it).
+const ACCEPT_TICK: Duration = Duration::from_millis(2);
+
+/// One live connection's handles, retained for shutdown.
+struct Conn {
+    queue: Arc<ReplyQueue>,
+    /// A clone of the connection's stream, kept so shutdown can unblock
+    /// a reader parked in `read_exact`.
+    stream: TcpStream,
+    reader: JoinHandle<()>,
+    writer: JoinHandle<()>,
+}
+
+/// A running TCP front end over a shared [`Engine`].
+pub struct NetServer {
+    local: SocketAddr,
+    engine: Arc<Engine>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<Conn>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start accepting
+    /// connections that serve through `engine`.
+    pub fn bind(engine: Arc<Engine>, addr: &str) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let engine = Arc::clone(&engine);
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::spawn(move || accept_loop(listener, engine, stop, conns))
+        };
+        Ok(NetServer {
+            local,
+            engine,
+            stop,
+            accept: Some(accept),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves a `:0` ephemeral-port bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// The shared engine (live counters, stats).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Graceful shutdown: stop accepting, drain the engine (flushing
+    /// every in-flight response to its connection queue), answer `Fin`
+    /// on every connection, and join all connection threads. The engine
+    /// itself stays up — the caller owns its `Arc` and decides when to
+    /// shut it down.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let drained = self.engine.drain();
+        let conns = std::mem::take(&mut *lock(&self.conns));
+        for c in &conns {
+            // Responses are already queued (drain completed), so the Fin
+            // lands behind them; unblocking the reader's parked
+            // `read_exact` ends the ingress side.
+            c.queue.push(Reply::Fin);
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        for c in conns {
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        }
+        drained
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        // Belt-and-braces for early-exit paths: stop the accept loop so
+        // the listener thread never outlives the server handle. (The
+        // graceful path is `shutdown`, which also drains and joins.)
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for c in std::mem::take(&mut *lock(&self.conns)) {
+            c.queue.push(Reply::Fin);
+            let _ = c.stream.shutdown(Shutdown::Both);
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    engine: Arc<Engine>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<Conn>>>,
+) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if let Ok(conn) = spawn_conn(stream, Arc::clone(&engine)) {
+                    lock(&conns).push(conn);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_TICK);
+            }
+            // Transient accept errors (e.g. a connection reset between
+            // queueing and accepting) — keep serving.
+            Err(_) => std::thread::sleep(ACCEPT_TICK),
+        }
+    }
+}
+
+fn spawn_conn(stream: TcpStream, engine: Arc<Engine>) -> std::io::Result<Conn> {
+    // Frames are small relative to socket buffers; Nagle would add
+    // ~40 ms stalls to the request/response pattern.
+    stream.set_nodelay(true)?;
+    let queue = Arc::new(ReplyQueue::with_capacity(QUEUE_WARM));
+    let read_half = stream.try_clone()?;
+    let write_half = stream.try_clone()?;
+    let reader = {
+        let queue = Arc::clone(&queue);
+        std::thread::spawn(move || reader_loop(read_half, engine, queue))
+    };
+    let writer = {
+        let queue = Arc::clone(&queue);
+        std::thread::spawn(move || writer_loop(write_half, queue))
+    };
+    Ok(Conn {
+        queue,
+        stream,
+        reader,
+        writer,
+    })
+}
+
+/// Push a connection-level failure (id 0 when no request is at fault).
+fn push_failed(queue: &ReplyQueue, id: u64, message: String) {
+    queue.push(Reply::Failed {
+        id,
+        error: Arc::from(message.as_str()),
+    });
+}
+
+/// Parse frames off the socket and feed the engine. Every exit path
+/// pushes [`Reply::Fin`] so the writer (and the peer) always observe a
+/// deliberate end of stream.
+fn reader_loop(mut stream: TcpStream, engine: Arc<Engine>, queue: Arc<ReplyQueue>) {
+    let mut pool = ImagePool::new(POOL_CAP);
+    let mut hdr = [0u8; HEADER_LEN];
+    loop {
+        match read_full_or_eof(&mut stream, &mut hdr) {
+            Ok(true) => {}
+            // Clean close at a frame boundary, a truncated header, or
+            // the shutdown path's Shutdown::Read — end of ingress.
+            Ok(false) | Err(_) => break,
+        }
+        let h = match decode_header(&hdr) {
+            Ok(h) => h,
+            Err(e) => {
+                // An unparseable header means the stream is desynced;
+                // only closing resynchronizes it.
+                push_failed(&queue, 0, e.to_string());
+                break;
+            }
+        };
+        match h.kind {
+            FrameKind::Submit => {
+                if !handle_submit(&mut stream, &engine, &queue, &mut pool, &h) {
+                    break;
+                }
+            }
+            FrameKind::StatsReq => queue.push(Reply::Stats(render_stats(&engine.stats()))),
+            FrameKind::Drain => {
+                // Worker reply pushes precede collector accounting, so a
+                // completed drain implies every response is queued ahead
+                // of the Fin pushed below.
+                let _ = engine.drain();
+                break;
+            }
+            // Server-bound streams never carry reply kinds.
+            k => {
+                push_failed(&queue, h.id, format!("unexpected client frame kind {k:?}"));
+                break;
+            }
+        }
+    }
+    queue.push(Reply::Fin);
+}
+
+/// Decode and submit one request. Returns `false` when the connection
+/// is beyond saving (payload-level I/O error); per-request rejections
+/// discard the payload, report, and keep the stream framed.
+fn handle_submit(
+    stream: &mut TcpStream,
+    engine: &Engine,
+    queue: &Arc<ReplyQueue>,
+    pool: &mut ImagePool,
+    h: &FrameHeader,
+) -> bool {
+    let (model, variant) = match submit_model(h).and_then(|m| submit_variant(h).map(|v| (m, v))) {
+        Ok(pair) => pair,
+        Err(e) => {
+            if discard_payload(stream, h.payload_len as usize).is_err() {
+                return false;
+            }
+            push_failed(queue, h.id, e.to_string());
+            return true;
+        }
+    };
+    let elems = engine.image_elems_for(model);
+    if h.payload_len as usize != elems * 4 {
+        if discard_payload(stream, h.payload_len as usize).is_err() {
+            return false;
+        }
+        push_failed(
+            queue,
+            h.id,
+            format!(
+                "submit for {} carries {} payload bytes, want {} ({elems} f32 pixels)",
+                model.name(),
+                h.payload_len,
+                elems * 4
+            ),
+        );
+        return true;
+    }
+    let image = match read_pooled_image(stream, pool, elems) {
+        Ok(img) => img,
+        Err(_) => return false,
+    };
+    let req = InferenceRequest {
+        id: h.id,
+        model,
+        image,
+        variant,
+        arrival: Instant::now(),
+        reply: Some(Arc::clone(queue)),
+    };
+    match engine.submit(req) {
+        Ok(()) => {}
+        Err(Error::Backpressure) => queue.push(Reply::Busy { id: h.id }),
+        Err(e) => push_failed(queue, h.id, e.to_string()),
+    }
+    true
+}
+
+/// Serialize replies onto the socket. Responses leave as one vectored
+/// write over `[header + metering (stack), logits (reused scratch)]`.
+fn writer_loop(mut stream: TcpStream, queue: Arc<ReplyQueue>) {
+    let mut payload: Vec<u8> = Vec::new();
+    loop {
+        let reply = queue.pop();
+        let ok = match &reply {
+            Reply::Response(r) => {
+                let mut prefix = [0u8; HEADER_LEN + METERING_LEN];
+                let logits = r.logits.as_slice();
+                encode_header(
+                    &FrameHeader {
+                        kind: FrameKind::Response,
+                        model: model_to_wire(r.model),
+                        variant: NONE_BYTE,
+                        id: r.id,
+                        payload_len: (METERING_LEN + logits.len() * 4) as u32,
+                        aux: r.predicted as u32,
+                    },
+                    (&mut prefix[..HEADER_LEN]).try_into().expect("header size"),
+                );
+                prefix[HEADER_LEN..HEADER_LEN + 8]
+                    .copy_from_slice(&r.sim.hw_latency_ms.raw().to_le_bytes());
+                prefix[HEADER_LEN + 8..HEADER_LEN + 16]
+                    .copy_from_slice(&r.sim.hw_contended_ms.raw().to_le_bytes());
+                prefix[HEADER_LEN + 16..HEADER_LEN + 24]
+                    .copy_from_slice(&r.sim.hw_energy_mj.raw().to_le_bytes());
+                payload.clear();
+                extend_f32s(&mut payload, logits);
+                write_frame(&mut stream, &prefix, &payload).is_ok()
+            }
+            Reply::Failed { id, error } => {
+                write_text(&mut stream, FrameKind::Error, *id, error.as_bytes())
+            }
+            Reply::Busy { id } => write_control(&mut stream, FrameKind::Busy, *id),
+            Reply::Stats(s) => write_text(&mut stream, FrameKind::Stats, 0, s.as_bytes()),
+            Reply::Fin => {
+                let _ = write_control(&mut stream, FrameKind::Fin, 0);
+                break;
+            }
+        };
+        if !ok {
+            // Peer gone mid-write: drain to the Fin so the reader's
+            // producer side never blocks, then exit.
+            loop {
+                if matches!(queue.pop(), Reply::Fin) {
+                    break;
+                }
+            }
+            break;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+fn write_control(stream: &mut TcpStream, kind: FrameKind, id: u64) -> bool {
+    let mut hdr = [0u8; HEADER_LEN];
+    encode_header(
+        &FrameHeader {
+            id,
+            ..FrameHeader::control(kind)
+        },
+        &mut hdr,
+    );
+    write_frame(stream, &hdr, &[]).is_ok()
+}
+
+fn write_text(stream: &mut TcpStream, kind: FrameKind, id: u64, text: &[u8]) -> bool {
+    let mut hdr = [0u8; HEADER_LEN];
+    encode_header(
+        &FrameHeader {
+            id,
+            payload_len: text.len() as u32,
+            ..FrameHeader::control(kind)
+        },
+        &mut hdr,
+    );
+    write_frame(stream, &hdr, text).is_ok()
+}
+
+/// Render the stats snapshot a `StatsReq` frame answers with (compact
+/// JSON; a control-plane frame, not on the per-request budget).
+fn render_stats(s: &ServerStats) -> String {
+    format!(
+        concat!(
+            "{{\"served\":{},\"batches\":{},\"failed\":{},\"rejected\":{},",
+            "\"throughput_rps\":{:.3},\"p50_total_ms\":{:.6},\"p99_total_ms\":{:.6},",
+            "\"sim_energy_mj\":{:.6},\"sim_makespan_ms\":{:.6}}}"
+        ),
+        s.served,
+        s.batches,
+        s.failed,
+        s.rejected,
+        s.throughput_rps,
+        s.p50_total_ms.raw(),
+        s.p99_total_ms.raw(),
+        s.sim_energy_mj.raw(),
+        s.sim_makespan_ms.raw(),
+    )
+}

@@ -11,12 +11,23 @@
 //! - [`LogitsView`] — a `(buffer, offset, len)` view into a batch's
 //!   shared logits buffer. Every response of a batch views one shared
 //!   `Arc<[f32]>`; nothing calls `row.to_vec()` per response.
-//! - [`LogitsPool`] — a per-worker recycler for those shared buffers: a
-//!   buffer becomes reusable once every response view into it has been
-//!   dropped, so steady-state batches allocate nothing for logits.
+//! - [`LogitsPool`] — a bounded recycler for those shared buffers: a
+//!   buffer becomes reusable once every view into it has been dropped,
+//!   so steady-state batches allocate nothing for logits. The same
+//!   recycler (aliased [`ImagePool`]) backs the wire front end's
+//!   per-connection image free-list: socket payloads decode straight
+//!   into pooled `Arc<[f32]>` buffers that are wrapped into [`ImageBuf`]s
+//!   via `From<Arc<[f32]>>` — no per-frame `Vec` (DESIGN.md §3.2).
+//! - [`ReplyQueue`] — a per-connection FIFO of [`Reply`] items. A request
+//!   submitted with a reply handle gets its response (or its batch's
+//!   failure) pushed here by the worker *before* the outcome reaches the
+//!   collector, so `Engine::drain` returning implies every reply is
+//!   queued. Pops block; pushes within the warmed capacity don't
+//!   allocate, keeping the socket egress path on the <1-alloc budget.
 
+use std::collections::VecDeque;
 use std::ops::Deref;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 use crate::cnn::models::Model;
@@ -48,6 +59,17 @@ impl From<Vec<f32>> for ImageBuf {
 impl From<&[f32]> for ImageBuf {
     fn from(s: &[f32]) -> Self {
         Self(s.into())
+    }
+}
+
+/// Wrap an already-shared buffer without copying — the wire front end's
+/// zero-copy ingest path: a pooled `Arc<[f32]>` is filled in place from
+/// the socket (while uniquely owned), wrapped here, and the reader's
+/// clone goes back to the [`ImagePool`] for recycling once the engine
+/// retires the request.
+impl From<Arc<[f32]>> for ImageBuf {
+    fn from(buf: Arc<[f32]>) -> Self {
+        Self(buf)
     }
 }
 
@@ -195,6 +217,93 @@ impl LogitsPool {
     }
 }
 
+/// The net reader's per-connection `ImageBuf` free-list — the same
+/// bounded `Arc<[f32]>` recycler the workers use for logits, under the
+/// name that matches its other job: request pixels decode from the
+/// socket straight into a taken (uniquely-owned) pool buffer, the
+/// request wraps a clone via `ImageBuf::from`, and the buffer becomes
+/// reusable when the engine drops the batch's requests (response
+/// retirement refills the list; see DESIGN.md §3.2).
+pub type ImagePool = LogitsPool;
+
+/// One item of a reply stream (see [`ReplyQueue`]).
+///
+/// `Response`/`Failed` are pushed by the engine's workers for requests
+/// carrying a reply handle; the rest are pushed by the serving front end
+/// itself (the net reader maps backpressure to `Busy`, stats snapshots
+/// to `Stats`, and end-of-stream to `Fin`).
+#[derive(Debug)]
+pub enum Reply {
+    /// A served response for a request submitted with this handle.
+    Response(InferenceResponse),
+    /// The batch carrying the request failed; no response exists. The
+    /// error is `Arc`-shared across the batch's requests.
+    Failed { id: u64, error: Arc<str> },
+    /// Submission was rejected with backpressure (explicit, never a
+    /// silent drop).
+    Busy { id: u64 },
+    /// A pre-rendered stats snapshot to forward to the peer.
+    Stats(String),
+    /// End of stream: no further replies will follow.
+    Fin,
+}
+
+/// A blocking MPSC FIFO of [`Reply`] items — the bridge between the
+/// engine's workers and a connection's writer thread.
+///
+/// Pushes lock, append and wake; pops block on a condvar until an item
+/// arrives. `VecDeque` capacity established during warmup is reused, so
+/// steady-state pushes perform no allocation (the socket egress path
+/// stays on the <1-alloc-per-request budget). The queue is unbounded by
+/// design: items outstanding are bounded by what the peer has submitted
+/// and not yet read, which the engine's bounded ingress already caps.
+#[derive(Debug, Default)]
+pub struct ReplyQueue {
+    items: Mutex<VecDeque<Reply>>,
+    ready: Condvar,
+}
+
+impl ReplyQueue {
+    /// Queue with pre-reserved capacity (pushes within it never
+    /// allocate).
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            items: Mutex::new(VecDeque::with_capacity(n)),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn guard(&self) -> MutexGuard<'_, VecDeque<Reply>> {
+        self.items.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Append an item and wake one waiting popper.
+    pub fn push(&self, item: Reply) {
+        self.guard().push_back(item);
+        self.ready.notify_one();
+    }
+
+    /// Remove and return the oldest item, blocking until one exists.
+    pub fn pop(&self) -> Reply {
+        let mut q = self.guard();
+        loop {
+            if let Some(item) = q.pop_front() {
+                return item;
+            }
+            q = self.ready.wait(q).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Items currently queued (diagnostic; racy by nature).
+    pub fn len(&self) -> usize {
+        self.guard().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Parse a workload-mix spec like `lenet:4,vgg16:1` into `(model,
 /// weight)` pairs — the grammar behind the CLI's and the serving
 /// example's `--mix` flag. A bare model name means weight 1; weights
@@ -310,6 +419,12 @@ pub struct InferenceRequest {
     pub image: ImageBuf,
     pub variant: Variant,
     pub arrival: Instant,
+    /// Where the worker should additionally push this request's
+    /// [`Reply`] (response, or its batch's failure) — the wire front
+    /// end's per-connection response routing. `None` (every in-process
+    /// caller) keeps the classic flow: responses are observable via the
+    /// sink ring only.
+    pub reply: Option<Arc<ReplyQueue>>,
 }
 
 /// Architectural cost metered by the simulator for the batch that
@@ -533,6 +648,39 @@ mod tests {
             pool.put(b);
         }
         assert!(pool.pooled() <= 2);
+    }
+
+    #[test]
+    fn image_buf_wraps_a_shared_arc_without_copying() {
+        let arc: Arc<[f32]> = vec![1.0f32, 2.0, 3.0].into();
+        let ptr = arc.as_ptr();
+        let img = ImageBuf::from(Arc::clone(&arc));
+        // Same backing allocation — the wire ingest path never copies.
+        assert!(std::ptr::eq(img.as_slice().as_ptr(), ptr));
+        assert_eq!(img.as_slice(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn reply_queue_is_fifo_across_threads() {
+        let q = Arc::new(ReplyQueue::with_capacity(4));
+        let producer = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            for id in 0..3u64 {
+                producer.push(Reply::Busy { id });
+            }
+            producer.push(Reply::Fin);
+        });
+        let mut ids = Vec::new();
+        loop {
+            match q.pop() {
+                Reply::Busy { id } => ids.push(id),
+                Reply::Fin => break,
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        t.join().unwrap();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -276,6 +276,7 @@ mod tests {
             image: (0..elems).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect(),
             variant: v,
             arrival: Instant::now(),
+            reply: None,
         }
     }
 

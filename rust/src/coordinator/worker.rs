@@ -14,7 +14,11 @@
 //! timeline), folds the batch's latency samples into its own per-model
 //! streaming shard (fixed-memory histograms; `Engine::stats` merges the
 //! shards), and reports per-request responses plus the per-batch
-//! simulated cost back over the results channel.
+//! simulated cost back over the results channel. Requests carrying a
+//! reply handle (the wire front end's per-connection
+//! [`ReplyQueue`](crate::coordinator::request::ReplyQueue)s) also get
+//! their response — or their batch's failure — pushed to that queue
+//! first, so a completed drain implies every wire reply is queued.
 //!
 //! **Zero-copy steady state.** The batch data plane reuses memory end to
 //! end: request pixels live in shared
@@ -36,7 +40,9 @@ use crate::cnn::models::Model;
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::engine::{lock, WorkerShard};
 use crate::coordinator::registry::{ModelPlan, PlanRegistry};
-use crate::coordinator::request::{InferenceResponse, LogitsPool, LogitsView, SimMetering, Variant};
+use crate::coordinator::request::{
+    InferenceResponse, LogitsPool, LogitsView, Reply, SimMetering, Variant,
+};
 use crate::coordinator::router::Router;
 use crate::runtime::Executor;
 use crate::util::units::{Millijoules, Millis};
@@ -96,6 +102,19 @@ pub(crate) fn worker_loop(mut ctx: WorkerCtx) {
 }
 
 fn fail(batch: &Batch, error: String) -> BatchOutcome {
+    // Requests submitted over the wire must hear about the failure too
+    // (no silent drops): one Arc-shared error, fanned out per request.
+    if batch.requests.iter().any(|r| r.reply.is_some()) {
+        let shared: Arc<str> = Arc::from(error.as_str());
+        for r in &batch.requests {
+            if let Some(q) = &r.reply {
+                q.push(Reply::Failed {
+                    id: r.id,
+                    error: Arc::clone(&shared),
+                });
+            }
+        }
+    }
     BatchOutcome {
         model: batch.model,
         responses: Vec::new(),
@@ -191,7 +210,7 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
             .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(c, _)| c)
             .unwrap_or(0);
-        responses.push(InferenceResponse {
+        let response = InferenceResponse {
             id: r.id,
             model: batch.model,
             logits: row,
@@ -207,7 +226,17 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
             instance,
             worker: ctx.id,
             batch_seq: batch.seq,
-        });
+        };
+        // Route the reply to its connection *before* the outcome reaches
+        // the collector: once `drain` observes the completion, the reply
+        // is already queued (the net drain state machine relies on this
+        // for its responses-before-FIN ordering). Cloning a response is
+        // refcount bumps only, and a warmed queue's push doesn't
+        // allocate — the wire path stays on the <1-alloc budget.
+        if let Some(q) = &r.reply {
+            q.push(Reply::Response(response.clone()));
+        }
+        responses.push(response);
     }
     // Hand the buffer back for recycling: it becomes reusable the moment
     // the batch's last response view is dropped.

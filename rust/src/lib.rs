@@ -56,6 +56,11 @@
 //!   `ImageBuf` request payloads, pooled batch-input buffers, prepared
 //!   executor programs writing into pooled shared logits buffers, and
 //!   `LogitsView` responses that view (never copy) their batch's row.
+//!   [`coordinator::net`] extends that data plane to a TCP socket
+//!   boundary: a dependency-free length-prefixed binary protocol whose
+//!   request pixels decode straight into pooled buffers and whose
+//!   responses leave as vectored writes — <1 allocation per request
+//!   end to end (DESIGN.md §3.2).
 //! - [`runtime`] — artifact loading/execution: PJRT (`xla` crate,
 //!   feature `pjrt`) or a deterministic sim backend for environments
 //!   without the XLA native library or AOT artifacts.

@@ -15,11 +15,17 @@
 //!   memtest  [--ops N]        memory-mode self-test (read/write sweep)
 //!   serve    [--requests N] [--variant v] [--instances K] [--workers W]
 //!            [--mix lenet:4,vgg16:1]     multi-model serving demo
+//!   serve --listen ADDR  [--connections C] [--rate RPS] [--window W]
+//!            [--requests N] [...]        zero-copy TCP wire front end:
+//!            bind ADDR, then (requests > 0) self-drive it over loopback
+//!            with the open-loop load generator, or (requests = 0) keep
+//!            serving until killed
 //!   config                    print the active TOML configuration
 //!
 //! Global flag: --config <file.toml> loads overrides over paper defaults.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 use opima::analyzer::metrics::{geomean_ratio, workload_bits};
@@ -27,13 +33,17 @@ use opima::analyzer::report;
 use opima::analyzer::{analyze_model, power_breakdown};
 use opima::baselines::evaluate_all;
 use opima::cnn::{build_model, Model, ALL_MODELS};
-use opima::coordinator::{parse_mix, pick_weighted, InferenceRequest, Server, ServerConfig, Variant};
+use opima::config::WritebackModel;
+use opima::coordinator::net::{run_load, LoadGenConfig, NetServer};
+use opima::coordinator::{
+    parse_mix, pick_weighted, Engine, EngineConfig, InferenceRequest, Server, ServerConfig,
+    Variant,
+};
 use opima::error::{Error, Result};
 use opima::phys::{crossing, dse};
 use opima::pim::group;
-use opima::runtime::Manifest;
+use opima::runtime::{ExecutorSpec, Manifest};
 use opima::util::prng::Rng;
-use opima::config::WritebackModel;
 use opima::util::units::Millis;
 use opima::OpimaConfig;
 
@@ -82,6 +92,15 @@ impl Args {
             Some(v) => v
                 .parse()
                 .map_err(|_| Error::Config(format!("--{key} wants an integer, got '{v}'"))),
+        }
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} wants a number, got '{v}'"))),
         }
     }
 }
@@ -470,6 +489,9 @@ fn cmd_memtest(cfg: &OpimaConfig, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
+    if args.get("listen").is_some() {
+        return cmd_serve_listen(cfg, args);
+    }
     let n = args.usize_or("requests", 256)?;
     let instances = args.usize_or("instances", 1)?;
     let workers = args.usize_or("workers", 1)?;
@@ -524,15 +546,23 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
             image,
             variant,
             arrival: Instant::now(),
+            reply: None,
         })?;
     }
     server.flush()?;
-    let s = server.stats();
+    print_serving_report(server.engine());
+    server.shutdown()
+}
+
+/// The shared end-of-run serving report (`serve` in both in-process and
+/// `--listen` modes).
+fn print_serving_report(engine: &Engine) {
+    let s = engine.stats();
     println!(
         "served {} requests in {} batches ({} (model, variant) plan(s), each compiled once)",
         s.served,
         s.batches,
-        server.engine().registry().builds()
+        engine.registry().builds()
     );
     println!(
         "  wall: {:.1} ms   throughput: {:.0} req/s",
@@ -574,8 +604,93 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
     // Over-capacity models still serve but time-share the simulated
     // memory; surface the mapper's structured warning instead of
     // silently mapping.
-    for w in server.engine().capacity_warnings() {
+    for w in engine.capacity_warnings() {
         println!("warning: {w}");
     }
-    server.shutdown()
+}
+
+/// `serve --listen ADDR`: bind the zero-copy TCP wire front end over a
+/// fresh engine. With `--requests N > 0` the process also drives itself
+/// over loopback with the open-loop load generator and reports both
+/// sides; with `--requests 0` it serves until killed.
+fn cmd_serve_listen(cfg: &OpimaConfig, args: &Args) -> Result<()> {
+    let addr = args.get("listen").expect("dispatched on --listen").to_string();
+    let requests = args.usize_or("requests", 256)?;
+    let connections = args.usize_or("connections", 4)?;
+    let rate_rps = args.f64_or("rate", 0.0)?;
+    let window = args.usize_or("window", 32)?;
+    let instances = args.usize_or("instances", 1)?;
+    let workers = args.usize_or("workers", 1)?;
+    let variant = Variant::parse(args.get("variant").unwrap_or("int4"))?;
+    let mix = match args.get("mix") {
+        None => vec![(Model::LeNet, 1)],
+        Some(spec) => parse_mix(spec)?,
+    };
+    let (manifest, no_artifacts) = match Manifest::load(&Manifest::default_dir()) {
+        Ok(m) => (m, false),
+        Err(_) => {
+            println!("(artifacts not found — synthetic manifest + sim executor backend)");
+            (Manifest::synthetic(8, 12), true)
+        }
+    };
+    let engine = Arc::new(Engine::new(
+        EngineConfig {
+            workers,
+            instances,
+            hw: cfg.clone(),
+            executor: if no_artifacts {
+                ExecutorSpec::Sim { work_factor: 1 }
+            } else {
+                ExecutorSpec::Native
+            },
+            ..Default::default()
+        },
+        manifest,
+    )?);
+    let server = NetServer::bind(Arc::clone(&engine), &addr)?;
+    println!("listening on {}", server.local_addr());
+    if requests == 0 {
+        println!("(no self-drive: --requests 0 — serving until killed)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let requests_per_conn = requests.div_ceil(connections.max(1)).max(1);
+    let mix_desc: Vec<String> = mix.iter().map(|(m, w)| format!("{}:{w}", m.name())).collect();
+    println!(
+        "self-driving {} request(s) over {connections} connection(s) (mix {}, variant {variant:?}, rate {}, window {window}) ...",
+        requests_per_conn * connections,
+        mix_desc.join(","),
+        if rate_rps > 0.0 {
+            format!("{rate_rps} req/s")
+        } else {
+            "open".to_string()
+        }
+    );
+    let report = run_load(&LoadGenConfig {
+        addr: server.local_addr().to_string(),
+        connections,
+        requests_per_conn,
+        rate_rps,
+        mix,
+        variant,
+        window,
+        seed: 7,
+    })?;
+    println!(
+        "client: sent {}  responses {}  busy {}  failed {}  ({:.0} req/s, p50 {:.2} ms, p99 {:.2} ms)",
+        report.sent,
+        report.responses,
+        report.busy,
+        report.failed,
+        report.rps,
+        report.p50_ms.raw(),
+        report.p99_ms.raw()
+    );
+    server.shutdown()?;
+    print_serving_report(&engine);
+    match Arc::try_unwrap(engine) {
+        Ok(mut e) => e.shutdown(),
+        Err(_) => Ok(()),
+    }
 }

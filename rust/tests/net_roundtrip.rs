@@ -1,0 +1,389 @@
+//! Wire-front-end acceptance (ISSUE 9): the zero-copy TCP path measured
+//! end to end over a real loopback socket.
+//!
+//! Three tests share this binary:
+//!
+//! 1. the **allocation proof** — a counting `#[global_allocator]` wraps
+//!    the system allocator and a post-warmup wave of 256 requests
+//!    (client *and* server in this process, so both sides of the wire
+//!    are counted) must perform fewer than 1 allocation and fewer than
+//!    1 image of heap bytes per request;
+//! 2. **malformed-frame handling** — bad magic, oversized
+//!    `payload_len`, truncated payloads and wrong-size submits must
+//!    fail loudly without killing the accept loop (and per-request
+//!    rejections must not even kill the connection);
+//! 3. **bit-identical transport** — a single request served over the
+//!    socket must produce exactly the in-process `Engine::submit`
+//!    response: same predicted class, bit-identical logits, and
+//!    bit-identical `SimMetering` f64s.
+//!
+//! The allocator counters are process-global, so the tests serialize on
+//! one mutex; the measured window opens only inside the alloc test's
+//! critical section.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use opima::cnn::Model;
+use opima::coordinator::engine::{Engine, EngineConfig};
+use opima::coordinator::net::frame::encode_header;
+use opima::coordinator::net::protocol::{FrameHeader, FrameKind, HEADER_LEN, MAX_PAYLOAD};
+use opima::coordinator::net::{NetClient, NetReply, NetServer};
+use opima::coordinator::request::{InferenceRequest, Variant};
+use opima::runtime::{ExecutorSpec, Manifest};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator with global alloc/byte counters (dealloc is
+/// uncounted — the assertions are about allocation pressure).
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Serializes the tests: the counters above are process-global.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn snapshot() -> (u64, u64) {
+    (ALLOCS.load(Ordering::SeqCst), BYTES.load(Ordering::SeqCst))
+}
+
+const ELEMS: usize = 144;
+
+/// Sim-backed engine matching the alloc_regression harness (small ring,
+/// views retire fast). The alloc test passes a large `max_wait` so every
+/// batch forms on the size trigger deterministically; the single-request
+/// tests pass a small one so a lone submit flushes on the deadline
+/// instead of stalling.
+fn engine_with(max_wait: Duration) -> Arc<Engine> {
+    Arc::new(
+        Engine::new(
+            EngineConfig {
+                workers: 1,
+                queue_capacity: 1024,
+                instances: 1,
+                max_wait,
+                executor: ExecutorSpec::Sim { work_factor: 1 },
+                history: 8,
+                ..EngineConfig::default()
+            },
+            Manifest::synthetic(8, 12),
+        )
+        .unwrap(),
+    )
+}
+
+fn pixels() -> Vec<f32> {
+    (0..ELEMS).map(|i| (i % 7) as f32 * 0.1).collect()
+}
+
+/// Submit `wave` requests and receive every reply on one connection —
+/// windowed so in-flight images stay bounded and the server's
+/// per-connection pool can recycle. Returns (responses, busy, failed).
+fn drive_wave(client: &mut NetClient, px: &[f32], base_id: u64, wave: u64) -> (u64, u64, u64) {
+    const WINDOW: u64 = 32;
+    let (mut responses, mut busy, mut failed) = (0u64, 0u64, 0u64);
+    let mut sent = 0u64;
+    while sent < wave {
+        let burst = WINDOW.min(wave - sent);
+        for k in 0..burst {
+            client
+                .submit(base_id + sent + k, Model::LeNet, Variant::Int4, px)
+                .unwrap();
+        }
+        sent += burst;
+        for _ in 0..burst {
+            match client.recv().unwrap() {
+                NetReply::Response(_) => responses += 1,
+                NetReply::Busy { .. } => busy += 1,
+                NetReply::Failed { .. } => failed += 1,
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+    }
+    (responses, busy, failed)
+}
+
+#[test]
+fn loopback_serving_does_less_than_one_alloc_per_request() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    const N: u64 = 256;
+    let engine = engine_with(Duration::from_secs(60));
+    let server = NetServer::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = NetClient::connect(&addr).unwrap();
+    let px = pixels();
+
+    // Warmup: plan build, pool growth, queue/scratch warming — on both
+    // sides of the wire.
+    let (r, b, f) = drive_wave(&mut client, &px, 0, N);
+    assert_eq!((r, b, f), (N, 0, 0), "warmup wave fully served");
+
+    let (a0, b0) = snapshot();
+    let (r, bz, f) = drive_wave(&mut client, &px, N, N);
+    let (a1, b1) = snapshot();
+    assert_eq!((r, bz, f), (N, 0, 0), "measured wave fully served");
+
+    let allocs = a1 - a0;
+    let bytes = b1 - b0;
+    eprintln!("loopback wave of {N}: {allocs} allocations, {bytes} bytes");
+    // The whole socket→engine→socket round trip is in the window: frame
+    // decode into pooled images, submit, batch, execute, reply-queue
+    // push, vectored response write, client decode. <1 allocation per
+    // request proves none of those stages allocates per request.
+    assert!(
+        allocs < N,
+        "loopback wave allocated {allocs} times for {N} requests \
+         (≥ 1/request ⇒ a per-request allocation crept into the wire path)"
+    );
+    let image_bytes = (ELEMS * std::mem::size_of::<f32>()) as u64;
+    assert!(
+        bytes < N * image_bytes,
+        "loopback wave allocated {bytes} B for {N} requests \
+         (≥ {image_bytes} B/request ⇒ request payloads are being copied to the heap)"
+    );
+
+    // Graceful drain: every response already flushed, then Fin.
+    client.drain().unwrap();
+    assert!(matches!(client.recv().unwrap(), NetReply::Fin));
+    server.shutdown().unwrap();
+    assert_eq!(engine.completed(), 2 * N);
+    if let Ok(mut e) = Arc::try_unwrap(engine) {
+        e.shutdown().unwrap();
+    }
+}
+
+/// A raw frame header as bytes (for injecting malformed traffic).
+fn raw_header(kind: FrameKind, model: u8, variant: u8, id: u64, payload_len: u32) -> [u8; HEADER_LEN] {
+    let mut buf = [0u8; HEADER_LEN];
+    encode_header(
+        &FrameHeader {
+            kind,
+            model,
+            variant,
+            id,
+            payload_len,
+            aux: 0,
+        },
+        &mut buf,
+    );
+    buf
+}
+
+/// Read one raw reply header off a stream; `None` on EOF.
+fn read_raw_kind(stream: &mut TcpStream) -> Option<u8> {
+    let mut hdr = [0u8; HEADER_LEN];
+    let mut got = 0;
+    while got < HEADER_LEN {
+        match stream.read(&mut hdr[got..]) {
+            Ok(0) => return None,
+            Ok(n) => got += n,
+            Err(_) => return None,
+        }
+    }
+    // Skip the payload so a following header read stays framed.
+    let len = u32::from_le_bytes([hdr[16], hdr[17], hdr[18], hdr[19]]) as usize;
+    let mut junk = vec![0u8; len];
+    if stream.read_exact(&mut junk).is_err() {
+        return None;
+    }
+    Some(hdr[4])
+}
+
+/// One full request/response roundtrip proving the server still serves.
+fn roundtrip_serves(addr: &str, id: u64) {
+    let mut client = NetClient::connect(addr).unwrap();
+    let px = pixels();
+    client.submit(id, Model::LeNet, Variant::Int4, &px).unwrap();
+    match client.recv().unwrap() {
+        NetReply::Response(r) => assert_eq!(r.id, id),
+        other => panic!("expected a response, got {other:?}"),
+    }
+    client.drain().unwrap();
+    assert!(matches!(client.recv().unwrap(), NetReply::Fin));
+}
+
+#[test]
+fn malformed_frames_fail_loudly_without_killing_the_server() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let engine = engine_with(Duration::from_millis(5));
+    let server = NetServer::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    // Bad magic: the connection gets an Error frame (then Fin/close),
+    // and the server survives.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut hdr = raw_header(FrameKind::Submit, 0, 2, 1, 0);
+        hdr[0] = b'X';
+        s.write_all(&hdr).unwrap();
+        let kinds = [read_raw_kind(&mut s), read_raw_kind(&mut s)];
+        assert_eq!(
+            kinds[0],
+            Some(FrameKind::Error as u8),
+            "bad magic answered with an Error frame"
+        );
+        assert!(
+            matches!(kinds[1], Some(k) if k == FrameKind::Fin as u8) || kinds[1].is_none(),
+            "stream ends after a desynced header"
+        );
+    }
+    roundtrip_serves(&addr, 100);
+
+    // Oversized payload_len: rejected at header parse — before any
+    // buffer could be sized from the hostile length.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let hdr = raw_header(FrameKind::Submit, 0, 2, 2, MAX_PAYLOAD + 1);
+        s.write_all(&hdr).unwrap();
+        assert_eq!(read_raw_kind(&mut s), Some(FrameKind::Error as u8));
+    }
+    roundtrip_serves(&addr, 101);
+
+    // Truncated payload: a valid submit header whose pixels never
+    // arrive. The reader EOFs mid-payload and ends the stream; no
+    // request reaches the engine.
+    {
+        let before = engine.accepted();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let hdr = raw_header(FrameKind::Submit, 0, 2, 3, (ELEMS * 4) as u32);
+        s.write_all(&hdr).unwrap();
+        s.write_all(&[0u8; 10]).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        while read_raw_kind(&mut s).is_some() {}
+        assert_eq!(engine.accepted(), before, "truncated submit never accepted");
+    }
+    roundtrip_serves(&addr, 102);
+
+    // Wrong payload size for the model: a per-request rejection — the
+    // SAME connection keeps serving afterwards.
+    {
+        let mut client = NetClient::connect(&addr).unwrap();
+        let short = [0.5f32; 8];
+        client.submit(4, Model::LeNet, Variant::Int4, &short).unwrap();
+        match client.recv().unwrap() {
+            NetReply::Failed { id, message } => {
+                assert_eq!(id, 4);
+                assert!(message.contains("payload"), "got: {message}");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        let px = pixels();
+        client.submit(5, Model::LeNet, Variant::Int4, &px).unwrap();
+        match client.recv().unwrap() {
+            NetReply::Response(r) => assert_eq!(r.id, 5),
+            other => panic!("expected a response, got {other:?}"),
+        }
+        client.drain().unwrap();
+        assert!(matches!(client.recv().unwrap(), NetReply::Fin));
+    }
+
+    // Unknown model byte: also per-request.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let hdr = raw_header(FrameKind::Submit, 250, 2, 6, 0);
+        s.write_all(&hdr).unwrap();
+        assert_eq!(read_raw_kind(&mut s), Some(FrameKind::Error as u8));
+    }
+    roundtrip_serves(&addr, 103);
+
+    server.shutdown().unwrap();
+    if let Ok(mut e) = Arc::try_unwrap(engine) {
+        e.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn wire_responses_are_bit_identical_to_in_process_submission() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let px = pixels();
+
+    // In-process reference: one request through Engine::submit. Both
+    // engines use the same small deadline: each serves the request as a
+    // single-request batch (drain-flushed in-process, deadline-flushed
+    // over the wire), so the sim metering prices the identical batch.
+    let reference = {
+        let engine = engine_with(Duration::from_millis(5));
+        engine
+            .submit(InferenceRequest {
+                id: 42,
+                model: Model::LeNet,
+                image: px.as_slice().into(),
+                variant: Variant::Int4,
+                arrival: Instant::now(),
+                reply: None,
+            })
+            .unwrap();
+        engine.drain().unwrap();
+        let r = engine.responses().pop().unwrap();
+        if let Ok(mut e) = Arc::try_unwrap(engine) {
+            e.shutdown().unwrap();
+        }
+        r
+    };
+
+    // The same request over the socket, against an identical engine.
+    let engine = engine_with(Duration::from_millis(5));
+    let server = NetServer::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let mut client = NetClient::connect(&server.local_addr().to_string()).unwrap();
+    client.submit(42, Model::LeNet, Variant::Int4, &px).unwrap();
+    match client.recv().unwrap() {
+        NetReply::Response(r) => {
+            assert_eq!(r.id, reference.id);
+            assert_eq!(r.model, reference.model);
+            assert_eq!(r.predicted, reference.predicted);
+            let wire_bits: Vec<u32> = r.logits.iter().map(|v| v.to_bits()).collect();
+            let ref_bits: Vec<u32> =
+                reference.logits.as_slice().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wire_bits, ref_bits, "logits must survive the wire bit-exactly");
+            assert_eq!(
+                r.sim.hw_latency_ms.raw().to_bits(),
+                reference.sim.hw_latency_ms.raw().to_bits()
+            );
+            assert_eq!(
+                r.sim.hw_contended_ms.raw().to_bits(),
+                reference.sim.hw_contended_ms.raw().to_bits()
+            );
+            assert_eq!(
+                r.sim.hw_energy_mj.raw().to_bits(),
+                reference.sim.hw_energy_mj.raw().to_bits()
+            );
+        }
+        other => panic!("expected a response, got {other:?}"),
+    }
+    client.drain().unwrap();
+    assert!(matches!(client.recv().unwrap(), NetReply::Fin));
+    server.shutdown().unwrap();
+    if let Ok(mut e) = Arc::try_unwrap(engine) {
+        e.shutdown().unwrap();
+    }
+}

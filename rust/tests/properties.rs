@@ -144,6 +144,7 @@ fn prop_batcher_conservation() {
                 image: vec![].into(),
                 variant,
                 arrival: std::time::Instant::now(),
+                reply: None,
             }) {
                 assert!(batch.requests.len() <= max_batch, "case {case}");
                 assert!(

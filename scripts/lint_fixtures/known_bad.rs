@@ -40,3 +40,13 @@ const BAD_SETTLE: Nanos = Nanos::new(42.0);
 fn bad_settle_budget() -> Nanos {
     ns(10.0)
 }
+
+// [frame-copy] payload copies minted on the wire path (fixture is also
+// posed under coordinator/net/ — decode into pooled buffers instead).
+fn bad_decode(payload: &[u8]) -> Vec<u8> {
+    payload.to_vec()
+}
+
+fn bad_decode_from(payload: &[u8]) -> Vec<u8> {
+    Vec::from(payload)
+}

@@ -25,6 +25,10 @@ residual conventions around it:
                 OPCM device timing constants (GST reconfig, pulse widths)
                 live in timing.rs only, so a device-parameter change is
                 one edit, not a hunt.
+  frame-copy    No .to_vec()/Vec::from inside rust/src/coordinator/net/ —
+                the wire path's <1-allocation-per-request budget (ISSUE 9)
+                forbids copying frame payloads into fresh Vecs; decode
+                into pooled buffers / reused scratch instead.
 
 Scope and escape hatches:
   * Only rust/src/**/*.rs is scanned (benches, examples, rust/tests and
@@ -62,6 +66,10 @@ def in_analyzer(path: Path) -> bool:
 
 def in_memory_not_timing(path: Path) -> bool:
     return "memory" in path.parts and path.name != "timing.rs"
+
+
+def in_coordinator_net(path: Path) -> bool:
+    return "coordinator" in path.parts and "net" in path.parts
 
 
 def not_units(path: Path) -> bool:
@@ -106,6 +114,13 @@ RULES = [
         in_memory_not_timing,
         "bare numeric Nanos literal inside memory/ — device timing "
         "constants belong in memory/timing.rs",
+    ),
+    (
+        "frame-copy",
+        re.compile(r"\.to_vec\(\)|\bVec::from\b"),
+        in_coordinator_net,
+        "payload copy inside coordinator/net/ — the wire path must decode "
+        "into pooled buffers / reused scratch (<1 alloc per request)",
     ),
 ]
 
@@ -177,16 +192,18 @@ def self_test() -> int:
     if not FIXTURE.is_file():
         print(f"self-test: missing fixture {FIXTURE}", file=sys.stderr)
         return 1
-    # The fixture is checked in two poses — as if it lived under
-    # rust/src/analyzer/ (arming the analyzer-scoped `instant` rule) and
+    # The fixture is checked in three poses — as if it lived under
+    # rust/src/analyzer/ (arming the analyzer-scoped `instant` rule),
     # under rust/src/memory/ (arming the memory-scoped `nanos-literal`
-    # rule). Every rule must fire in at least one pose; the known-good
-    # snippet must fire in none.
+    # rule) and under rust/src/coordinator/net/ (arming the wire-scoped
+    # `frame-copy` rule). Every rule must fire in at least one pose; the
+    # known-good snippet must fire in none.
     lines = FIXTURE.read_text(encoding="utf-8").splitlines()
     fired = set()
     for posed in (
         SRC_ROOT / "analyzer" / "known_bad.rs",
         SRC_ROOT / "memory" / "known_bad.rs",
+        SRC_ROOT / "coordinator" / "net" / "known_bad.rs",
     ):
         active = [r for r in RULES if r[2](posed)]
         hits = list(lint_lines(posed, lines, active))
