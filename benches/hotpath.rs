@@ -138,6 +138,7 @@ fn main() {
                 image: vec![rng.f64() as f32; 4].into(),
                 variant: Variant::Int4,
                 arrival: Instant::now(),
+                deadline: None,
                 reply: None,
             });
             if id == 7 {
@@ -257,6 +258,41 @@ fn main() {
         drop(views);
         pool.put(buf);
     }));
+
+    // --- fault-injection plane probe cost ----------------------------------
+    // The plane sits on the submit/execute hot path in every worker, so
+    // its disarmed cost must stay at one predictable branch per probe.
+    // Two adjacent rows (ci.sh pins both names): `_off` is the shipping
+    // disarmed plane, `_armed` is armed with all probabilities zero —
+    // the worst case that still injects nothing. Any spread between
+    // them is the price of arming, and any growth in `_off` is a
+    // regression on the production path.
+    {
+        use opima::config::FaultParams;
+        use opima::util::fault::FaultPlane;
+        let mut off = FaultPlane::disarmed();
+        report.add_stats(&measure("serving/submit_fault_plane_off", 10, scaled(2000), || {
+            for _ in 0..1000 {
+                black_box(off.worker_panic());
+                black_box(off.exec_transient());
+                black_box(off.worker_stall());
+            }
+        }));
+        let mut armed = FaultPlane::new(
+            FaultParams {
+                armed: true,
+                ..FaultParams::default()
+            },
+            0,
+        );
+        report.add_stats(&measure("serving/submit_fault_plane_armed", 10, scaled(2000), || {
+            for _ in 0..1000 {
+                black_box(armed.worker_panic());
+                black_box(armed.exec_transient());
+                black_box(armed.worker_stall());
+            }
+        }));
+    }
 
     // --- wire protocol frame codec ----------------------------------------
     // What one end of a connection pays per 1k-element frame: encoding a

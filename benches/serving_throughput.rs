@@ -59,6 +59,7 @@ fn requests() -> Vec<InferenceRequest> {
                 image: (0..IMAGE * IMAGE).map(|_| rng.f64() as f32).collect(),
                 variant,
                 arrival: Instant::now(),
+                deadline: None,
                 reply: None,
             }
         })

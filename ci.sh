@@ -22,6 +22,12 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# The chaos soak runs bounded (smoke) here: the seeded fault schedule,
+# supervision/respawn, retry/deadline/limiter paths and exactly-once
+# accounting all exercise end to end, just over a smaller request grid.
+echo "== chaos soak (smoke) =="
+OPIMA_CHAOS_SMOKE=1 cargo test -q --test chaos
+
 # Benches and examples are plain binaries that `cargo build`/`test`
 # don't touch — compile them too so drift can't break silently.
 echo "== cargo build --release --examples =="
@@ -42,11 +48,13 @@ for f in BENCH_hotpath.json BENCH_serving_throughput.json BENCH_net_throughput.j
 done
 # The zero-copy data-plane rows (copy vs pooled, ISSUE 5), the router
 # dispatch rows (occupancy-only vs global-engine, ISSUE 6), the
-# command-level writeback controller rows (naive vs scheduled, ISSUE 8)
-# and the wire frame codec rows (ISSUE 9) must keep landing in the
-# hotpath summary.
+# command-level writeback controller rows (naive vs scheduled, ISSUE 8),
+# the wire frame codec rows (ISSUE 9) and the fault-plane probe pair
+# (disarmed vs armed-zero-probability, ISSUE 10) must keep landing in
+# the hotpath summary.
 for row in 'serving/pack_batch8_copy' 'serving/pack_batch8_pooled' \
            'serving/respond_batch8_copy' 'serving/respond_batch8_pooled' \
+           'serving/submit_fault_plane_off' 'serving/submit_fault_plane_armed' \
            'router/dispatch_1k' 'router/dispatch_for_occupancy_1k' \
            'router/dispatch_batch_contended_1k' 'router/dispatch_batch_optimistic_1k' \
            'memory/writeback_naive_1k' 'memory/writeback_scheduled_1k' \

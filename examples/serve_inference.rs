@@ -116,6 +116,7 @@ fn run_mix(
                             image: image.into(),
                             variant,
                             arrival: Instant::now(),
+                            deadline: None,
                             reply: None,
                         })
                         .expect("submit");
@@ -256,6 +257,7 @@ fn main() -> opima::Result<()> {
                                 image: image.into(),
                                 variant,
                                 arrival: Instant::now(),
+                                deadline: None,
                                 reply: None,
                             })
                             .expect("submit");

@@ -10,7 +10,7 @@
 
 use crate::error::{Error, Result};
 use crate::phys::params::{EnergyParams, LossParams};
-use crate::util::units::{Milliwatts, Nanos};
+use crate::util::units::{Millis, Milliwatts, Nanos};
 
 /// Memory/PIM geometry (paper §V first paragraph).
 #[derive(Debug, Clone, PartialEq)]
@@ -349,6 +349,102 @@ pub struct MemoryParams {
     pub writeback_model: WritebackModel,
 }
 
+/// The deterministic fault-injection plane and its chaos-facing serving
+/// defenses (TOML `[fault]`, DESIGN.md §3.3).
+///
+/// Probabilities are per-decision Bernoulli rates in `[0, 1]`; every
+/// injection site derives its schedule from `seed` plus a site salt
+/// ([`crate::util::fault::FaultPlane`]), so a failing chaos run replays
+/// from its seed. `armed = false` (the default) turns every injection
+/// probe into a single branch and leaves serving behavior bit-identical
+/// to a build without the plane.
+///
+/// The token-bucket limiter knobs (`conn_rate_rps`, `conn_burst`) are
+/// *defenses*, not injections: they stay active regardless of `armed`
+/// so one adversarial connection cannot starve the rest in production
+/// either. `conn_rate_rps = 0` disables the limiter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultParams {
+    /// Master switch for fault *injection* (never for the limiter).
+    pub armed: bool,
+    /// Base seed every injection site's schedule derives from.
+    pub seed: u64,
+    /// P(worker panics mid-batch) per executed batch.
+    pub worker_panic: f64,
+    /// P(worker stalls before executing) per batch.
+    pub worker_stall: f64,
+    /// Injected stall duration.
+    pub stall_ms: Millis,
+    /// P(executor reports an injected transient error) per batch — the
+    /// non-panic failure path.
+    pub exec_transient: f64,
+    /// P(a reply frame goes out as a delayed two-part short write) per
+    /// frame.
+    pub writer_delay: f64,
+    /// Gap between the two halves of an injected short write.
+    pub writer_delay_ms: Millis,
+    /// Per-connection token-bucket refill rate (submits/s); 0 = off.
+    pub conn_rate_rps: f64,
+    /// Token-bucket capacity (max burst admitted at line rate).
+    pub conn_burst: usize,
+}
+
+impl Default for FaultParams {
+    fn default() -> Self {
+        Self {
+            armed: false,
+            seed: 0,
+            worker_panic: 0.0,
+            worker_stall: 0.0,
+            stall_ms: Millis::new(2.0),
+            exec_transient: 0.0,
+            writer_delay: 0.0,
+            writer_delay_ms: Millis::new(1.0),
+            conn_rate_rps: 0.0,
+            conn_burst: 32,
+        }
+    }
+}
+
+impl FaultParams {
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("worker_panic", self.worker_panic),
+            ("worker_stall", self.worker_stall),
+            ("exec_transient", self.exec_transient),
+            ("writer_delay", self.writer_delay),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "fault.{name} ({p}) must be a probability in [0, 1]"
+                )));
+            }
+        }
+        if !self.stall_ms.is_finite()
+            || self.stall_ms < Millis::ZERO
+            || !self.writer_delay_ms.is_finite()
+            || self.writer_delay_ms < Millis::ZERO
+        {
+            return Err(Error::Config(
+                "fault.stall_ms and fault.writer_delay_ms must be finite and \
+                 non-negative"
+                    .into(),
+            ));
+        }
+        if !self.conn_rate_rps.is_finite() || self.conn_rate_rps < 0.0 {
+            return Err(Error::Config(
+                "fault.conn_rate_rps must be finite and non-negative (0 = limiter off)".into(),
+            ));
+        }
+        if self.conn_rate_rps > 0.0 && self.conn_burst == 0 {
+            return Err(Error::Config(
+                "fault.conn_burst must be ≥ 1 when the rate limiter is on".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 
@@ -359,6 +455,7 @@ pub struct OpimaConfig {
     pub pim: PimParams,
     pub pipeline: PipelineParams,
     pub memory: MemoryParams,
+    pub fault: FaultParams,
     pub losses: LossParams,
     pub energy: EnergyParams,
 }
@@ -399,6 +496,7 @@ impl OpimaConfig {
                     .into(),
             ));
         }
+        self.fault.validate()?;
         self.losses.validate()?;
         self.energy.validate()?;
         Ok(())
@@ -474,6 +572,23 @@ impl OpimaConfig {
             if let Some(s) = doc.get("memory.writeback_model").and_then(|v| v.as_str()) {
                 m.writeback_model = WritebackModel::parse(s)?;
             }
+        }
+        {
+            let f = &mut cfg.fault;
+            f.armed = doc
+                .get("fault.armed")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(f.armed);
+            f.seed = doc.usize_or("fault.seed", f.seed as usize) as u64;
+            f.worker_panic = doc.f64_or("fault.worker_panic", f.worker_panic);
+            f.worker_stall = doc.f64_or("fault.worker_stall", f.worker_stall);
+            f.stall_ms = Millis::new(doc.f64_or("fault.stall_ms", f.stall_ms.raw()));
+            f.exec_transient = doc.f64_or("fault.exec_transient", f.exec_transient);
+            f.writer_delay = doc.f64_or("fault.writer_delay", f.writer_delay);
+            f.writer_delay_ms =
+                Millis::new(doc.f64_or("fault.writer_delay_ms", f.writer_delay_ms.raw()));
+            f.conn_rate_rps = doc.f64_or("fault.conn_rate_rps", f.conn_rate_rps);
+            f.conn_burst = doc.usize_or("fault.conn_burst", f.conn_burst);
         }
         {
             let l = &mut cfg.losses;
@@ -578,6 +693,22 @@ impl OpimaConfig {
                 "writeback_model".into(),
                 V::Str(m.writeback_model.as_str().into()),
             )]),
+        );
+        let f = &self.fault;
+        sections.insert(
+            "fault".into(),
+            BTreeMap::from([
+                ("armed".into(), V::Bool(f.armed)),
+                ("seed".into(), V::Int(f.seed as i64)),
+                ("worker_panic".into(), V::Float(f.worker_panic)),
+                ("worker_stall".into(), V::Float(f.worker_stall)),
+                ("stall_ms".into(), V::Float(f.stall_ms.raw())),
+                ("exec_transient".into(), V::Float(f.exec_transient)),
+                ("writer_delay".into(), V::Float(f.writer_delay)),
+                ("writer_delay_ms".into(), V::Float(f.writer_delay_ms.raw())),
+                ("conn_rate_rps".into(), V::Float(f.conn_rate_rps)),
+                ("conn_burst".into(), V::Int(f.conn_burst as i64)),
+            ]),
         );
         let l = &self.losses;
         sections.insert(
@@ -701,6 +832,33 @@ mod tests {
         assert!(
             OpimaConfig::from_toml("[memory]\nwriteback_model = \"dram\"\n").is_err(),
             "unknown model names must be rejected, not defaulted"
+        );
+    }
+
+    #[test]
+    fn fault_knobs_parse_validate_and_stay_disarmed_by_default() {
+        let cfg = OpimaConfig::paper();
+        assert!(!cfg.fault.armed, "the paper config must not inject faults");
+        assert_eq!(cfg.fault.conn_rate_rps, 0.0, "limiter off by default");
+        let parsed = OpimaConfig::from_toml(
+            "[fault]\narmed = true\nseed = 99\nworker_panic = 0.25\n\
+             stall_ms = 7.5\nconn_rate_rps = 500.0\nconn_burst = 8\n",
+        )
+        .unwrap();
+        assert!(parsed.fault.armed);
+        assert_eq!(parsed.fault.seed, 99);
+        assert_eq!(parsed.fault.worker_panic, 0.25);
+        assert_eq!(parsed.fault.stall_ms, Millis::new(7.5));
+        assert_eq!(parsed.fault.conn_rate_rps, 500.0);
+        assert_eq!(parsed.fault.conn_burst, 8);
+        assert_eq!(parsed.fault.worker_stall, 0.0, "default kept");
+        assert!(
+            OpimaConfig::from_toml("[fault]\nworker_panic = 1.5\n").is_err(),
+            "out-of-range probabilities must be rejected"
+        );
+        assert!(
+            OpimaConfig::from_toml("[fault]\nconn_rate_rps = 10.0\nconn_burst = 0\n").is_err(),
+            "a rate-limited connection needs a non-empty bucket"
         );
     }
 

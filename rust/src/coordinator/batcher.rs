@@ -106,6 +106,33 @@ impl DynamicBatcher {
         keys.into_iter().filter_map(|k| self.take(k)).collect()
     }
 
+    /// Sweep every request whose deadline has passed out of the queues
+    /// and return them (the caller owes each a terminal
+    /// [`Reply::Expired`](crate::coordinator::request::Reply::Expired)
+    /// — an expired request must never occupy a batch slot, and must
+    /// never be dropped without an outcome).
+    ///
+    /// Early-returns when nothing is pending, like [`Self::poll`]; the
+    /// sweep itself is a full-queue scan (deadlines are per-request, so
+    /// a later request can expire before an earlier one).
+    pub fn expire(&mut self, now: Instant) -> Vec<InferenceRequest> {
+        if self.pending() == 0 {
+            return Vec::new();
+        }
+        let mut expired = Vec::new();
+        for (_, q) in &mut self.queues {
+            let mut i = 0;
+            while i < q.len() {
+                if matches!(q[i].deadline, Some(d) if d <= now) {
+                    expired.extend(q.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        expired
+    }
+
     /// Outstanding (unbatched) requests.
     pub fn pending(&self) -> usize {
         self.queues.iter().map(|(_, q)| q.len()).sum()
@@ -181,6 +208,7 @@ mod tests {
             image: vec![0.0; 4].into(),
             variant: v,
             arrival: Instant::now(),
+            deadline: None,
             reply: None,
         }
     }
@@ -283,6 +311,7 @@ mod tests {
             image: vec![].into(),
             variant: Variant::Int8,
             arrival: t0,
+            deadline: None,
             reply: None,
         });
         b.push(InferenceRequest {
@@ -291,6 +320,7 @@ mod tests {
             image: vec![].into(),
             variant: Variant::Fp32,
             arrival: t0 + Duration::from_millis(5),
+            deadline: None,
             reply: None,
         });
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
@@ -304,6 +334,33 @@ mod tests {
         b.push(req(0, Variant::Fp32));
         assert!(b.poll(Instant::now()).is_empty());
         assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn expire_sweeps_only_past_deadline_requests() {
+        let mut b = DynamicBatcher::new(100, Duration::from_secs(60));
+        let t0 = Instant::now();
+        let mut with_deadline = |id, offset_ms| {
+            let mut r = req(id, Variant::Int4);
+            r.deadline = Some(t0 + Duration::from_millis(offset_ms));
+            r
+        };
+        b.push(with_deadline(0, 5));
+        b.push(req(1, Variant::Int4)); // no deadline: never expires
+        b.push(with_deadline(2, 50));
+        // A *later* arrival with an *earlier* deadline must still be
+        // swept — expiry is per-request, not head-of-queue.
+        b.push(with_deadline(3, 5));
+        assert!(b.expire(t0).is_empty(), "nothing due yet");
+        let expired = b.expire(t0 + Duration::from_millis(10));
+        let mut ids: Vec<u64> = expired.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 3]);
+        assert_eq!(b.pending(), 2, "survivors keep their slots");
+        let batch = b.drain().pop().unwrap();
+        let mut left: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        left.sort_unstable();
+        assert_eq!(left, vec![1, 2]);
     }
 
     #[test]

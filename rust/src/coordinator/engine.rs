@@ -83,12 +83,13 @@ use crate::cnn::models::{Model, SERVABLE_MODELS};
 use crate::config::OpimaConfig;
 use crate::coordinator::batcher::{Batch, DynamicBatcher};
 use crate::coordinator::registry::{augment_manifest, PlanRegistry};
-use crate::coordinator::request::{InferenceRequest, InferenceResponse, LogitsPool, Variant};
+use crate::coordinator::request::{InferenceRequest, InferenceResponse, LogitsPool, Reply, Variant};
 use crate::coordinator::router::Router;
 use crate::coordinator::server::{LatencyBreakdown, ModelServingStats, ServerStats};
 use crate::coordinator::worker::{worker_loop, BatchOutcome, WorkerCtx};
 use crate::error::{Error, Result};
 use crate::runtime::{Executor, ExecutorSpec, Manifest};
+use crate::util::fault::FaultPlane;
 use crate::util::histogram::Histogram;
 use crate::util::ring::Ring;
 use crate::util::units::{Millijoules, Millis};
@@ -102,6 +103,15 @@ const MAX_TICK: Duration = Duration::from_millis(1);
 /// an empty batcher has no deadline or flush work to do, so the long
 /// tick costs no latency — it just stops a 1 kHz idle wakeup loop.
 const IDLE_TICK: Duration = Duration::from_secs(1);
+
+/// Fallback re-check period for [`Engine::drain`] waiters. The collector
+/// notifies the drain condvar on every outcome, so a normal drain wakes
+/// in notify time — the fallback only bounds how long a waiter can sit
+/// on a *dead* pipeline (which will never produce the waking outcome)
+/// and re-arms the flush flag for late-trickling submissions. Pinned
+/// `pub(crate)` so the drain-latency test can assert a drain completes
+/// well inside one tick — i.e. by notification, not by polling.
+pub(crate) const DRAIN_FALLBACK_TICK: Duration = Duration::from_millis(200);
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -154,6 +164,9 @@ pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 pub(crate) struct ModelSink {
     pub batches: u64,
     pub failed: u64,
+    /// Requests swept out of this model's pending queues past their
+    /// deadline (terminal `Expired` replies; never batched or executed).
+    pub expired: u64,
     pub energy_mj: Millijoules,
 }
 
@@ -169,6 +182,10 @@ pub(crate) struct SinkState {
     pub batches: u64,
     /// Requests lost to failed batches.
     pub failed: u64,
+    /// Requests expired past their deadline before batch formation —
+    /// terminal outcomes, counted into `completed` like responses and
+    /// failures (the exactly-once invariant sums all three).
+    pub expired: u64,
     /// Simulated energy summed once per *executed batch* (zero-padded
     /// partial batches pay full-batch energy, responses are not
     /// double-counted).
@@ -196,6 +213,7 @@ impl StatsSink {
                 recent: Ring::new(history),
                 batches: 0,
                 failed: 0,
+                expired: 0,
                 batch_energy_mj: Millijoules::ZERO,
                 models: HashMap::new(),
                 completed: 0,
@@ -288,6 +306,13 @@ pub struct Engine {
     image_elems: usize,
     accepted: AtomicU64,
     rejected: AtomicU64,
+    /// Requests shed before submission by a front-end defense (the wire
+    /// server's per-connection rate limiter) — they never reached the
+    /// ingress queue, so they are neither `accepted` nor `rejected`.
+    shed: AtomicU64,
+    /// Worker executor respawns after mid-batch panics (shared with the
+    /// pool; see `WorkerCtx::respawns`).
+    respawns: Arc<AtomicU64>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     collector: Option<JoinHandle<()>>,
@@ -357,6 +382,7 @@ impl Engine {
         // overlap. Startup failures are reported over the ready channel
         // so `new` still fails fast.
         let spawn_err = |e: std::io::Error| Error::Serving(format!("spawn pipeline thread: {e}"));
+        let respawns = Arc::new(AtomicU64::new(0));
         let mut workers = Vec::with_capacity(cfg.workers);
         for id in 0..cfg.workers {
             let manifest = manifest.clone();
@@ -369,11 +395,15 @@ impl Engine {
             let ready = ready_tx.clone();
             let w_epoch = Arc::clone(&epoch);
             let shard = Arc::clone(&shards[id]);
+            let w_respawns = Arc::clone(&respawns);
+            // Per-worker salt: workers sharing one seed still draw
+            // decorrelated fault schedules.
+            let fault = FaultPlane::new(cfg.hw.fault.clone(), id as u64);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("opima-worker-{id}"))
                     .spawn(move || {
-                        let executor = match Executor::from_spec(spec, manifest) {
+                        let executor = match Executor::from_spec(spec, manifest.clone()) {
                             Ok(mut ex) => {
                                 ex.warmup(&warm);
                                 let _ = ready.send(Ok(()));
@@ -400,12 +430,22 @@ impl Engine {
                             // worker: enough that the ring's eviction
                             // cadence keeps recycling them under load.
                             logits_pool: LogitsPool::new(8),
+                            spec,
+                            manifest,
+                            warm,
+                            respawns: w_respawns,
+                            fault,
                         });
                     })
                     .map_err(spawn_err)?,
             );
         }
-        // Collector exits once the last worker hangs up its sender.
+        // The batcher reports deadline-expiry sweeps straight to the
+        // collector over the same outcome channel the workers use — the
+        // clone must be taken before the engine's copy drops.
+        let expiry_tx = res_tx.clone();
+        // Collector exits once the last worker (and the batcher, which
+        // joins first at shutdown) hangs up its sender.
         drop(res_tx);
         drop(ready_tx);
 
@@ -432,7 +472,9 @@ impl Engine {
         let max_wait = cfg.max_wait;
         let batcher = std::thread::Builder::new()
             .name("opima-batcher".into())
-            .spawn(move || batcher_loop(ingress_rx, batch_tx, b_ctrl, batch_size, max_wait))
+            .spawn(move || {
+                batcher_loop(ingress_rx, batch_tx, expiry_tx, b_ctrl, batch_size, max_wait)
+            })
             .map_err(spawn_err)?;
 
         let c_sink = Arc::clone(&sink);
@@ -454,6 +496,8 @@ impl Engine {
             image_elems,
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            respawns,
             batcher: Some(batcher),
             workers,
             collector: Some(collector),
@@ -566,10 +610,13 @@ impl Engine {
             // Re-arm every lap: the batcher clears the flag after each
             // drain pass, and requests may still be trickling in.
             self.ctrl.flush.store(true, Ordering::Release);
+            // The collector notifies per outcome, so completion wakes
+            // this wait immediately; the timeout is only the fallback
+            // lap for the dead-pipeline check and flush re-arm above.
             let (guard, _timeout) = self
                 .sink
                 .done
-                .wait_timeout(st, Duration::from_millis(5))
+                .wait_timeout(st, DRAIN_FALLBACK_TICK)
                 .unwrap_or_else(PoisonError::into_inner);
             st = guard;
         }
@@ -610,6 +657,23 @@ impl Engine {
     /// Requests rejected with backpressure so far.
     pub fn rejected(&self) -> u64 {
         self.rejected.load(Ordering::Acquire)
+    }
+
+    /// Requests shed by front-end defenses (rate limiting) before they
+    /// reached `submit`.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Acquire)
+    }
+
+    /// Record one front-end shed (the wire server's per-connection rate
+    /// limiter calls this when it answers `BUSY` without submitting).
+    pub fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Worker executor respawns after mid-batch panics so far.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Acquire)
     }
 
     /// Requests with an outcome (response or recorded failure) so far.
@@ -685,7 +749,7 @@ impl Engine {
         for sh in merged.values() {
             agg.merge(sh);
         }
-        let (batches, failed, sim_energy_mj, model_sinks, end) = {
+        let (batches, failed, expired, sim_energy_mj, model_sinks, end) = {
             let st = lock(&self.sink.state);
             // While work is in flight the wall clock runs to "now"; once
             // the pipeline is idle it stops at the last completion, so
@@ -698,6 +762,7 @@ impl Engine {
             (
                 st.batches,
                 st.failed,
+                st.expired,
                 st.batch_energy_mj,
                 st.models.clone(),
                 end,
@@ -722,6 +787,7 @@ impl Engine {
                 served: latb.total.count,
                 batches: s.batches,
                 failed: s.failed,
+                expired: s.expired,
                 sim_energy_mj: s.energy_mj,
                 sim_makespan_ms: model_spans
                     .iter()
@@ -735,7 +801,10 @@ impl Engine {
             served: n,
             batches,
             failed,
+            expired,
             rejected: self.rejected.load(Ordering::Acquire),
+            shed: self.shed.load(Ordering::Acquire),
+            respawns: self.respawns.load(Ordering::Acquire),
             wall_ms,
             mean_queue_ms: Millis::new(latency.queue.mean),
             mean_exec_ms: Millis::new(latency.exec.mean),
@@ -815,6 +884,7 @@ impl Drop for Engine {
 fn batcher_loop(
     rx: Receiver<InferenceRequest>,
     tx: SyncSender<Batch>,
+    expiry_tx: mpsc::Sender<BatchOutcome>,
     ctrl: Arc<Ctrl>,
     max_batch: usize,
     max_wait: Duration,
@@ -840,6 +910,12 @@ fn batcher_loop(
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => disconnected = true,
         }
+        // Deadline-expired requests are swept *before* batch formation:
+        // a request in a formed batch always executes, so expiry and
+        // execution are mutually exclusive terminal outcomes. While
+        // requests are pending the loop ticks at least every MAX_TICK,
+        // bounding expiry lateness the same way flush lateness is.
+        sweep_expired(&mut batcher, &expiry_tx);
         // Deadline flushes fire here on the timer tick — even if no
         // request ever arrives again (the seed's idle-flush bug).
         for b in batcher.poll(Instant::now()) {
@@ -855,6 +931,10 @@ fn batcher_loop(
                     }
                 }
             }
+            // Flush-path sweep: a drain must settle expired stragglers
+            // too, or `drain` would wait on requests no batch will ever
+            // carry.
+            sweep_expired(&mut batcher, &expiry_tx);
             for b in batcher.drain() {
                 if tx.send(b).is_err() {
                     return;
@@ -867,17 +947,55 @@ fn batcher_loop(
     }
 }
 
+/// Sweep past-deadline requests out of the batcher: each gets a terminal
+/// `Reply::Expired` on its connection queue (wire requests) and a
+/// per-model expiry outcome to the collector, so `drain`'s exactly-once
+/// accounting counts it — expired work completes, it is never dropped.
+fn sweep_expired(batcher: &mut DynamicBatcher, expiry_tx: &mpsc::Sender<BatchOutcome>) {
+    let swept = batcher.expire(Instant::now());
+    if swept.is_empty() {
+        return;
+    }
+    let mut per_model: HashMap<Model, u64> = HashMap::new();
+    for r in swept {
+        if let Some(q) = &r.reply {
+            q.push(Reply::Expired { id: r.id });
+        }
+        *per_model.entry(r.model).or_default() += 1;
+    }
+    for (model, expired) in per_model {
+        // A send can only fail once the collector is gone (dead
+        // pipeline); drain's liveness check owns that case.
+        let _ = expiry_tx.send(BatchOutcome {
+            model,
+            responses: Vec::new(),
+            failed: 0,
+            expired,
+            error: None,
+            sim_energy_mj: Millijoules::ZERO,
+        });
+    }
+}
+
 /// The collector thread: folds batch outcomes into the shared sink
 /// (global and per-model) and wakes `drain` waiters.
+///
+/// Outcomes are disjoint by construction: an executed batch carries
+/// responses, a failed batch carries `failed`, an expiry sweep carries
+/// `expired` — never a mix. The three-way split below keeps the batch
+/// and energy counters meaning "executed batches" only (an expiry
+/// outcome is not a batch and must not phantom-increment `batches`).
 fn collector_loop(rx: Receiver<BatchOutcome>, sink: Arc<StatsSink>) {
     while let Ok(out) = rx.recv() {
         let mut st = lock(&sink.state);
-        st.completed += out.responses.len() as u64 + out.failed;
+        st.completed += out.responses.len() as u64 + out.failed + out.expired;
         st.last_done = Some(Instant::now());
         {
             let m = st.models.entry(out.model).or_default();
             if out.failed > 0 {
                 m.failed += out.failed;
+            } else if out.expired > 0 {
+                m.expired += out.expired;
             } else {
                 m.batches += 1;
                 m.energy_mj += out.sim_energy_mj;
@@ -888,6 +1006,8 @@ fn collector_loop(rx: Receiver<BatchOutcome>, sink: Arc<StatsSink>) {
             if st.first_error.is_none() {
                 st.first_error = out.error;
             }
+        } else if out.expired > 0 {
+            st.expired += out.expired;
         } else {
             st.batches += 1;
             st.batch_energy_mj += out.sim_energy_mj;
@@ -927,8 +1047,102 @@ mod tests {
             image: (0..144).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect(),
             variant,
             arrival: Instant::now(),
+            deadline: None,
             reply: None,
         }
+    }
+
+    #[test]
+    fn drain_wakes_on_notify_not_fallback_tick() {
+        // A batch deadline far beyond the fallback tick: the partial
+        // batch only ever forms through drain's flush. If the drain
+        // waiter were tick-bound (the old 5 ms poll generalized to the
+        // 200 ms fallback), this drain would take at least one full
+        // DRAIN_FALLBACK_TICK — the collector's per-outcome notify must
+        // wake it well inside one tick instead.
+        let mut e = sim_engine(1, 64, Duration::from_secs(3600));
+        for id in 0..5 {
+            e.submit(req(id, Variant::Int8)).unwrap();
+        }
+        let t0 = Instant::now();
+        e.drain().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(e.completed(), 5);
+        assert!(
+            waited < DRAIN_FALLBACK_TICK,
+            "drain took {waited:?} — waiter woke by fallback tick, not notify"
+        );
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn past_deadline_requests_expire_with_exact_accounting() {
+        // Deadlines already past at submission and a batch deadline an
+        // hour out: no batch will ever carry these requests, so the
+        // batcher's sweep must settle them (terminal expired outcomes)
+        // or drain would wait forever.
+        let mut e = sim_engine(1, 64, Duration::from_secs(3600));
+        for id in 0..3 {
+            let mut r = req(id, Variant::Int8);
+            r.deadline = Some(Instant::now());
+            e.submit(r).unwrap();
+        }
+        e.drain().unwrap(); // expiry is a terminal outcome, not an engine error
+        assert_eq!(e.completed(), 3);
+        let s = e.stats();
+        assert_eq!(s.expired, 3);
+        assert_eq!(s.served, 0);
+        assert_eq!(s.failed, 0);
+        assert_eq!(s.batches, 0, "an expiry sweep is not an executed batch");
+        assert_eq!(s.per_model.len(), 1);
+        assert_eq!(s.per_model[0].expired, 3);
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn panicked_worker_respawns_and_accounting_holds() {
+        crate::util::fault::silence_injected_panics();
+        let mut hw = OpimaConfig::paper();
+        hw.fault.armed = true;
+        hw.fault.seed = 42;
+        hw.fault.worker_panic = 1.0;
+        let mut e = Engine::new(
+            EngineConfig {
+                workers: 1,
+                queue_capacity: 64,
+                max_wait: Duration::from_millis(1),
+                executor: ExecutorSpec::Sim { work_factor: 1 },
+                hw,
+                ..EngineConfig::default()
+            },
+            Manifest::synthetic(8, 12),
+        )
+        .unwrap();
+        for id in 0..8 {
+            e.submit(req(id, Variant::Int8)).unwrap();
+        }
+        // Every batch panics (p = 1): the batch fails loudly and exactly
+        // once...
+        let err = e.drain().unwrap_err().to_string();
+        assert!(err.contains("panicked mid-batch"), "unexpected drain error: {err}");
+        assert_eq!(e.completed(), 8);
+        assert!(e.respawns() >= 1);
+        // ...and the worker thread survived: a second wave settles (to a
+        // failure again at p = 1) instead of tripping the dead-pipeline
+        // check.
+        for id in 8..16 {
+            e.submit(req(id, Variant::Int8)).unwrap();
+        }
+        let err2 = e.drain().unwrap_err().to_string();
+        assert!(
+            !err2.contains("pipeline thread exited"),
+            "worker thread died instead of respawning: {err2}"
+        );
+        assert_eq!(e.completed(), 16);
+        let s = e.stats();
+        assert_eq!(s.failed, 16);
+        assert!(s.respawns >= 2);
+        e.shutdown().unwrap();
     }
 
     #[test]

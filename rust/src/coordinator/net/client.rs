@@ -36,6 +36,9 @@ pub enum NetReply<'a> {
     Response(NetResponse<'a>),
     /// The server shed the request under backpressure; retry later.
     Busy { id: u64 },
+    /// The request's deadline expired before batch formation — a
+    /// terminal outcome (retrying needs a fresh deadline budget).
+    DeadlineExceeded { id: u64 },
     /// A per-request or connection-level failure.
     Failed { id: u64, message: &'a str },
     /// A stats snapshot (JSON text).
@@ -95,6 +98,23 @@ impl NetClient {
     /// `input_elems()` values). One vectored write, no allocation after
     /// the scratch has warmed to the largest submitted image.
     pub fn submit(&mut self, id: u64, model: Model, variant: Variant, pixels: &[f32]) -> Result<()> {
+        self.submit_with_deadline(id, model, variant, pixels, 0)
+    }
+
+    /// [`NetClient::submit`] with a per-request deadline budget in whole
+    /// milliseconds, carried in the header's `aux` slot (0 = none). The
+    /// budget is measured by the *server* from receipt — client and
+    /// server clocks never meet — and a request still queued past it is
+    /// answered with a terminal `DEADLINE_EXCEEDED` frame instead of a
+    /// response.
+    pub fn submit_with_deadline(
+        &mut self,
+        id: u64,
+        model: Model,
+        variant: Variant,
+        pixels: &[f32],
+        deadline_ms: u32,
+    ) -> Result<()> {
         let mut hdr = [0u8; HEADER_LEN];
         encode_header(
             &FrameHeader {
@@ -103,7 +123,7 @@ impl NetClient {
                 variant: variant_to_wire(variant),
                 id,
                 payload_len: (pixels.len() * 4) as u32,
-                aux: 0,
+                aux: deadline_ms,
             },
             &mut hdr,
         );
@@ -176,6 +196,7 @@ impl NetClient {
                 }))
             }
             FrameKind::Busy => Ok(NetReply::Busy { id: h.id }),
+            FrameKind::DeadlineExceeded => Ok(NetReply::DeadlineExceeded { id: h.id }),
             FrameKind::Error | FrameKind::Stats => {
                 self.text.resize(h.payload_len as usize, 0);
                 self.stream.read_exact(&mut self.text)?;
@@ -226,6 +247,18 @@ pub struct LoadGenConfig {
     /// it, bounding client-side memory and pool pressure).
     pub window: usize,
     pub seed: u64,
+    /// Max automatic re-submissions after a `BUSY` shed (0 — the
+    /// default — reports the shed and moves on, keeping the
+    /// no-retry benches byte-identical in behavior).
+    pub retry_max: u32,
+    /// Base backoff before the first retry; doubles per attempt with
+    /// 50–100% jitter from the connection's seeded RNG.
+    pub retry_backoff: Millis,
+    /// Ceiling on the (pre-jitter, post-doubling) retry backoff.
+    pub retry_backoff_cap: Millis,
+    /// Per-request deadline budget in whole milliseconds carried in the
+    /// SUBMIT header's `aux` slot (0 = no deadline).
+    pub deadline_ms: u32,
 }
 
 impl Default for LoadGenConfig {
@@ -239,6 +272,10 @@ impl Default for LoadGenConfig {
             variant: Variant::Int8,
             window: 32,
             seed: 7,
+            retry_max: 0,
+            retry_backoff: ms(1.0),
+            retry_backoff_cap: ms(50.0),
+            deadline_ms: 0,
         }
     }
 }
@@ -248,8 +285,20 @@ impl Default for LoadGenConfig {
 pub struct LoadGenReport {
     pub sent: u64,
     pub responses: u64,
+    /// Terminal `BUSY` sheds — rate-limit or backpressure rejections
+    /// that exhausted the retry budget (or had none). A separate bucket
+    /// from `failed`: a shed request was never accepted, a failed one
+    /// was accepted and lost.
     pub busy: u64,
     pub failed: u64,
+    /// Terminal `DEADLINE_EXCEEDED` outcomes.
+    pub expired: u64,
+    /// `BUSY` sheds that were re-submitted. Retries are *attempts*, not
+    /// outcomes — each retried request still lands in exactly one of
+    /// `responses`/`busy`/`failed`/`expired`, so
+    /// `sent = responses + busy + failed + expired` holds with or
+    /// without retries.
+    pub retries: u64,
     pub wall_ms: Millis,
     /// Responses per second of wall time.
     pub rps: f64,
@@ -279,6 +328,68 @@ impl Window {
         let mut n = lock(&self.in_flight);
         *n = n.saturating_sub(1);
         self.freed.notify_one();
+    }
+
+    /// Block until the window is empty — every request has a terminal
+    /// reply — or `deadline` passes or `abort` turns true (a finished
+    /// receiver will never release another slot, so waiting on is
+    /// pointless). Short waits, not notify-dependent: a missed wakeup
+    /// costs at most one poll period.
+    fn wait_idle(&self, deadline: Instant, abort: impl Fn() -> bool) -> bool {
+        let mut n = lock(&self.in_flight);
+        while *n > 0 {
+            if Instant::now() >= deadline || abort() {
+                return false;
+            }
+            let (g, _) = self
+                .freed
+                .wait_timeout(n, Duration::from_millis(10))
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            n = g;
+        }
+        true
+    }
+}
+
+/// Pending-retry handoff between the receiver thread (which observes
+/// `BUSY` sheds) and the retrier thread (which re-submits after a
+/// capped, jittered backoff). `close` lets already-queued retries drain
+/// before `pop` starts answering `None`.
+struct RetryQueue {
+    state: Mutex<(std::collections::VecDeque<(usize, u32)>, bool)>,
+    wake: Condvar,
+}
+
+impl RetryQueue {
+    fn new() -> RetryQueue {
+        RetryQueue {
+            state: Mutex::new((std::collections::VecDeque::new(), false)),
+            wake: Condvar::new(),
+        }
+    }
+
+    /// Queue request `k` for its `attempt`-th re-submission.
+    fn push(&self, k: usize, attempt: u32) {
+        lock(&self.state).0.push_back((k, attempt));
+        self.wake.notify_one();
+    }
+
+    fn close(&self) {
+        lock(&self.state).1 = true;
+        self.wake.notify_all();
+    }
+
+    fn pop(&self) -> Option<(usize, u32)> {
+        let mut st = lock(&self.state);
+        loop {
+            if let Some(item) = st.0.pop_front() {
+                return Some(item);
+            }
+            if st.1 {
+                return None;
+            }
+            st = self.wake.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
     }
 }
 
@@ -314,6 +425,8 @@ pub fn run_load(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         totals.responses += conn.responses;
         totals.busy += conn.busy;
         totals.failed += conn.failed;
+        totals.expired += conn.expired;
+        totals.retries += conn.retries;
         rtts_ms.extend(conn.rtts_ms);
     }
     let wall_s = started.elapsed().as_secs_f64();
@@ -330,18 +443,26 @@ struct ConnReport {
     responses: u64,
     busy: u64,
     failed: u64,
+    expired: u64,
+    retries: u64,
     rtts_ms: Vec<f64>,
 }
 
 fn run_conn(cfg: &LoadGenConfig, conn_idx: usize, pace: Option<Duration>) -> Result<ConnReport> {
-    let mut tx = NetClient::connect(&cfg.addr)?;
-    let mut rx = tx.try_clone()?;
+    let tx = Mutex::new(NetClient::connect(&cfg.addr)?);
+    let mut rx = lock(&tx).try_clone()?;
     let window = Arc::new(Window::default());
     let cap = cfg.window.max(1);
+    let retry_max = cfg.retry_max;
     // Request k on this connection gets id (conn << 32) | k; the start
     // slab is indexed by k for RTT measurement on the receive side.
     let starts: Arc<Mutex<Vec<Option<Instant>>>> =
         Arc::new(Mutex::new(vec![None; cfg.requests_per_conn]));
+    // Per-request shed count (how many times k came back BUSY) and the
+    // image index k was submitted with, for faithful re-submission.
+    let attempts: Mutex<Vec<u32>> = Mutex::new(vec![0; cfg.requests_per_conn]);
+    let picks: Mutex<Vec<u8>> = Mutex::new(vec![0; cfg.requests_per_conn]);
+    let retry_q = RetryQueue::new();
     let mut rng = Rng::new(cfg.seed.wrapping_add(conn_idx as u64 * 0x9E37_79B9));
     // One pre-generated image per mixed model, reused across requests
     // (the server decodes into pooled buffers either way).
@@ -357,12 +478,16 @@ fn run_conn(cfg: &LoadGenConfig, conn_idx: usize, pace: Option<Duration>) -> Res
     std::thread::scope(|s| {
         let recv_window = Arc::clone(&window);
         let recv_starts = Arc::clone(&starts);
+        let recv_attempts = &attempts;
+        let recv_q = &retry_q;
         let receiver = s.spawn(move || -> Result<ConnReport> {
             let mut rep = ConnReport {
                 sent: 0,
                 responses: 0,
                 busy: 0,
                 failed: 0,
+                expired: 0,
+                retries: 0,
                 rtts_ms: Vec::new(),
             };
             loop {
@@ -375,8 +500,30 @@ fn run_conn(cfg: &LoadGenConfig, conn_idx: usize, pace: Option<Duration>) -> Res
                         }
                         recv_window.release();
                     }
-                    NetReply::Busy { .. } => {
-                        rep.busy += 1;
+                    NetReply::Busy { id } => {
+                        let k = (id & 0xFFFF_FFFF) as usize;
+                        // Count this shed against k's retry budget; an
+                        // out-of-range k (a connection-level BUSY) gets
+                        // no retries.
+                        let attempt = match lock(recv_attempts).get_mut(k) {
+                            Some(slot) => {
+                                *slot += 1;
+                                *slot
+                            }
+                            None => retry_max.saturating_add(1),
+                        };
+                        if attempt <= retry_max {
+                            // Still in flight: the window slot stays
+                            // held until the retry's terminal reply.
+                            rep.retries += 1;
+                            recv_q.push(k, attempt);
+                        } else {
+                            rep.busy += 1;
+                            recv_window.release();
+                        }
+                    }
+                    NetReply::DeadlineExceeded { .. } => {
+                        rep.expired += 1;
                         recv_window.release();
                     }
                     NetReply::Failed { .. } => {
@@ -387,6 +534,47 @@ fn run_conn(cfg: &LoadGenConfig, conn_idx: usize, pace: Option<Duration>) -> Res
                     NetReply::Fin => return Ok(rep),
                 }
             }
+        });
+
+        // The retrier re-submits BUSY-shed requests after a capped,
+        // jittered exponential backoff. Spawned only when retries are
+        // on, so the default no-retry path keeps its exact thread
+        // structure.
+        let retrier = (retry_max > 0).then(|| {
+            let q = &retry_q;
+            let tx = &tx;
+            let images = &images;
+            let picks = &picks;
+            let base = cfg.retry_backoff.raw().max(0.0);
+            let cap_ms = cfg.retry_backoff_cap.raw().max(base);
+            let variant = cfg.variant;
+            let deadline_ms = cfg.deadline_ms;
+            // Decorrelated from the sender's pick stream.
+            let mut rng = Rng::new(
+                cfg.seed
+                    .wrapping_add(conn_idx as u64 * 0x9E37_79B9)
+                    .wrapping_add(0xC0FF_EE),
+            );
+            s.spawn(move || {
+                while let Some((k, attempt)) = q.pop() {
+                    let doubled = base * 2f64.powi(attempt.saturating_sub(1).min(20) as i32);
+                    // 50–100% jitter decorrelates colliding retriers.
+                    let jitter = 0.5 + rng.f64() * 0.5;
+                    std::thread::sleep(ms((doubled * jitter).min(cap_ms)).to_duration());
+                    let idx = lock(picks)[k] as usize;
+                    let (model, px) = &images[idx];
+                    let id = ((conn_idx as u64) << 32) | k as u64;
+                    if lock(tx)
+                        .submit_with_deadline(id, *model, variant, px, deadline_ms)
+                        .is_err()
+                    {
+                        // Connection dead: the sender's drain/close
+                        // teardown owns the ending; queued retries
+                        // can't land anyway.
+                        return;
+                    }
+                }
+            })
         });
 
         let mut sent = 0u64;
@@ -403,33 +591,52 @@ fn run_conn(cfg: &LoadGenConfig, conn_idx: usize, pace: Option<Duration>) -> Res
                 }
             }
             window.acquire(cap);
-            let (model, pixels) = {
+            let (idx, model, pixels) = {
                 let pick = pick_weighted(&mut rng, &cfg.mix);
-                let (m, px) = images
+                let i = images
                     .iter()
-                    .find(|(m, _)| *m == pick)
+                    .position(|(m, _)| *m == pick)
                     .expect("every mixed model has a pre-generated image");
-                (*m, px.as_slice())
+                (i, images[i].0, images[i].1.as_slice())
             };
             let id = ((conn_idx as u64) << 32) | k as u64;
+            lock(&picks)[k] = idx as u8;
             lock(&starts)[k] = Some(Instant::now());
-            if let Err(e) = tx.submit(id, model, cfg.variant, pixels) {
+            if let Err(e) = lock(&tx).submit_with_deadline(id, model, cfg.variant, pixels, cfg.deadline_ms) {
                 send_err = Some(e);
                 break;
             }
             sent += 1;
         }
-        // End of quota: ask for a drain so every in-flight response is
-        // flushed, then the receiver sees Fin and returns.
+        // End of quota. With retries on, wait for every window slot to
+        // release first: a BUSY observed *after* the retry queue closes
+        // would strand its request without a terminal outcome, and a
+        // retry submitted after the Drain frame would go unanswered.
+        // The wait is bounded and aborts if the receiver is already
+        // gone (a dead connection releases nothing).
+        if send_err.is_none() && retry_max > 0 {
+            window.wait_idle(Instant::now() + Duration::from_secs(5), || {
+                receiver.is_finished()
+            });
+        }
+        retry_q.close();
+        if let Some(h) = retrier {
+            // Joined before Drain: every queued retry is on the wire
+            // ahead of the drain request, so the server answers it
+            // before Fin.
+            let _ = h.join();
+        }
+        // Ask for a drain so every in-flight response is flushed, then
+        // the receiver sees Fin and returns.
         if send_err.is_none() {
-            if let Err(e) = tx.drain() {
+            if let Err(e) = lock(&tx).drain() {
                 send_err = Some(e);
             }
         }
         if send_err.is_some() {
             // Can't drain cleanly — close our write half so the server
             // EOFs, flushes, and Fins (the receiver must not hang).
-            let _ = tx.close_write();
+            let _ = lock(&tx).close_write();
         }
         let mut rep = receiver
             .join()

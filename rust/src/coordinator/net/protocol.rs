@@ -14,7 +14,8 @@
 //! 7       1     reserved     must be 0
 //! 8       8     id           request id (echoed on replies)
 //! 16      4     payload_len  bytes following the header (≤ MAX_PAYLOAD)
-//! 20      4     aux          kind-specific (RESPONSE: predicted class)
+//! 20      4     aux          kind-specific (RESPONSE: predicted class;
+//!                            SUBMIT: deadline budget in ms, 0 = none)
 //! ```
 //!
 //! Payloads by kind:
@@ -25,7 +26,12 @@
 //!   the wire) followed by `classes` logits as f32 LE; `aux` carries
 //!   the predicted class.
 //! - `Error` / `Stats` → UTF-8 text.
-//! - `Busy`, `StatsReq`, `Drain`, `Fin` → empty.
+//! - `Busy`, `StatsReq`, `Drain`, `Fin`, `DeadlineExceeded` → empty.
+//!
+//! `Submit`'s `aux` carries the request's deadline budget in whole
+//! milliseconds from server receipt (0 = no deadline); a request still
+//! queued past its budget is answered with a terminal
+//! `DeadlineExceeded` frame instead of a `Response`.
 
 use crate::cnn::models::{Model, SERVABLE_MODELS};
 use crate::coordinator::request::Variant;
@@ -74,6 +80,10 @@ pub enum FrameKind {
     Drain = 7,
     /// End of stream: no further frames follow.
     Fin = 8,
+    /// The request's deadline expired before it reached a batch slot —
+    /// a terminal per-request outcome, like `Busy` but final (the
+    /// server will never serve this id; retrying needs a new deadline).
+    DeadlineExceeded = 9,
 }
 
 impl FrameKind {
@@ -87,6 +97,7 @@ impl FrameKind {
             6 => Some(FrameKind::Stats),
             7 => Some(FrameKind::Drain),
             8 => Some(FrameKind::Fin),
+            9 => Some(FrameKind::DeadlineExceeded),
             _ => None,
         }
     }
@@ -199,10 +210,11 @@ mod tests {
             FrameKind::Stats,
             FrameKind::Drain,
             FrameKind::Fin,
+            FrameKind::DeadlineExceeded,
         ] {
             assert_eq!(FrameKind::from_wire(k as u8), Some(k));
         }
         assert_eq!(FrameKind::from_wire(0), None);
-        assert_eq!(FrameKind::from_wire(9), None);
+        assert_eq!(FrameKind::from_wire(10), None);
     }
 }

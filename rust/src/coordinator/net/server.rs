@@ -32,13 +32,26 @@
 //! the connection alive, an unparseable header poisons only that
 //! connection — the accept loop and every other connection keep
 //! serving.
+//!
+//! **Degraded modes** (DESIGN.md §3.3): each connection carries two
+//! `[fault]`-driven mechanisms. A per-connection [`TokenBucket`] —
+//! active whenever `conn_rate_rps > 0`, independent of `armed`, because
+//! it is a *defense*, not an injected fault — sheds over-rate submits
+//! with a terminal `BUSY` (payload consumed, stream stays framed,
+//! `Engine::note_shed` counts it). And the writer owns a [`FaultPlane`]
+//! salted by accept order: under `writer_delay` a response leaves as a
+//! deliberately split write (header+metering, a real scheduling gap,
+//! then logits), exercising client mid-frame reassembly without ever
+//! corrupting the stream.
 
+use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::config::FaultParams;
 use crate::coordinator::engine::{lock, Engine};
 use crate::coordinator::net::frame::{
     decode_header, discard_payload, encode_header, extend_f32s, read_full_or_eof,
@@ -51,6 +64,7 @@ use crate::coordinator::net::protocol::{
 use crate::coordinator::request::{ImagePool, InferenceRequest, Reply, ReplyQueue};
 use crate::coordinator::server::ServerStats;
 use crate::error::{Error, Result};
+use crate::util::fault::FaultPlane;
 
 /// Retained free-list capacity of each connection's image pool.
 const POOL_CAP: usize = 64;
@@ -61,6 +75,48 @@ const QUEUE_WARM: usize = 256;
 /// Accept-loop poll period while idle (the listener is non-blocking so
 /// shutdown can interrupt it).
 const ACCEPT_TICK: Duration = Duration::from_millis(2);
+
+/// Monotone accept-order counter: each connection's writer fault site
+/// gets a distinct salt, so a replayed seed replays each connection's
+/// socket-fault schedule by accept order.
+static CONN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Per-connection token-bucket rate limiter. Admission consumes one
+/// token; tokens refill continuously at `conn_rate_rps` up to
+/// `conn_burst`. Over-rate submits are shed with a terminal `BUSY`
+/// before they ever reach the engine's ingress queue.
+struct TokenBucket {
+    /// Refill rate, tokens (requests) per second.
+    rate_rps: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// `None` when `conn_rate_rps` is 0 — the limiter is off and admits
+    /// cost nothing.
+    fn from_params(p: &FaultParams) -> Option<TokenBucket> {
+        (p.conn_rate_rps > 0.0).then(|| TokenBucket {
+            rate_rps: p.conn_rate_rps,
+            burst: p.conn_burst as f64,
+            tokens: p.conn_burst as f64,
+            last: Instant::now(),
+        })
+    }
+
+    fn admit(&mut self, now: Instant) -> bool {
+        let elapsed = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + elapsed * self.rate_rps).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
 
 /// One live connection's handles, retained for shutdown.
 struct Conn {
@@ -94,7 +150,8 @@ impl NetServer {
             let engine = Arc::clone(&engine);
             let stop = Arc::clone(&stop);
             let conns = Arc::clone(&conns);
-            std::thread::spawn(move || accept_loop(listener, engine, stop, conns))
+            // Joined by shutdown/Drop below.
+            std::thread::spawn(move || accept_loop(listener, engine, stop, conns)) // lint: allow(thread-spawn)
         };
         Ok(NetServer {
             local,
@@ -190,13 +247,21 @@ fn spawn_conn(stream: TcpStream, engine: Arc<Engine>) -> std::io::Result<Conn> {
     let queue = Arc::new(ReplyQueue::with_capacity(QUEUE_WARM));
     let read_half = stream.try_clone()?;
     let write_half = stream.try_clone()?;
+    // Writer-side fault site, salted by accept order. The high bit-32
+    // offset keeps connection salts disjoint from the engine's worker
+    // salts (0..workers), so the two site families never share a
+    // schedule even under the same seed.
+    let salt = (1u64 << 32) | CONN_SEQ.fetch_add(1, Ordering::Relaxed);
+    let fault = FaultPlane::new(engine.config().hw.fault.clone(), salt);
     let reader = {
         let queue = Arc::clone(&queue);
-        std::thread::spawn(move || reader_loop(read_half, engine, queue))
+        // Joined by shutdown/Drop (handle kept in Conn).
+        std::thread::spawn(move || reader_loop(read_half, engine, queue)) // lint: allow(thread-spawn)
     };
     let writer = {
         let queue = Arc::clone(&queue);
-        std::thread::spawn(move || writer_loop(write_half, queue))
+        // Joined by shutdown/Drop (handle kept in Conn).
+        std::thread::spawn(move || writer_loop(write_half, queue, fault)) // lint: allow(thread-spawn)
     };
     Ok(Conn {
         queue,
@@ -220,6 +285,7 @@ fn push_failed(queue: &ReplyQueue, id: u64, message: String) {
 fn reader_loop(mut stream: TcpStream, engine: Arc<Engine>, queue: Arc<ReplyQueue>) {
     let mut pool = ImagePool::new(POOL_CAP);
     let mut hdr = [0u8; HEADER_LEN];
+    let mut limiter = TokenBucket::from_params(&engine.config().hw.fault);
     loop {
         match read_full_or_eof(&mut stream, &mut hdr) {
             Ok(true) => {}
@@ -238,6 +304,20 @@ fn reader_loop(mut stream: TcpStream, engine: Arc<Engine>, queue: Arc<ReplyQueue
         };
         match h.kind {
             FrameKind::Submit => {
+                if let Some(b) = limiter.as_mut() {
+                    if !b.admit(Instant::now()) {
+                        // Over the per-connection rate: consume the
+                        // payload so the stream stays framed, answer a
+                        // terminal BUSY, and count the shed — the
+                        // request never reaches the ingress queue.
+                        if discard_payload(&mut stream, h.payload_len as usize).is_err() {
+                            break;
+                        }
+                        queue.push(Reply::Busy { id: h.id });
+                        engine.note_shed();
+                        continue;
+                    }
+                }
                 if !handle_submit(&mut stream, &engine, &queue, &mut pool, &h) {
                     break;
                 }
@@ -307,6 +387,10 @@ fn handle_submit(
         image,
         variant,
         arrival: Instant::now(),
+        // Submit's aux is the deadline budget in whole ms (0 = none),
+        // measured from server receipt — the client's clock never enters
+        // the comparison.
+        deadline: (h.aux > 0).then(|| Instant::now() + Duration::from_millis(h.aux as u64)),
         reply: Some(Arc::clone(queue)),
     };
     match engine.submit(req) {
@@ -318,8 +402,10 @@ fn handle_submit(
 }
 
 /// Serialize replies onto the socket. Responses leave as one vectored
-/// write over `[header + metering (stack), logits (reused scratch)]`.
-fn writer_loop(mut stream: TcpStream, queue: Arc<ReplyQueue>) {
+/// write over `[header + metering (stack), logits (reused scratch)]` —
+/// or, under an injected `writer_delay`, as a deliberately split
+/// prefix/payload pair with a real scheduling gap between them.
+fn writer_loop(mut stream: TcpStream, queue: Arc<ReplyQueue>, mut fault: FaultPlane) {
     let mut payload: Vec<u8> = Vec::new();
     loop {
         let reply = queue.pop();
@@ -346,12 +432,24 @@ fn writer_loop(mut stream: TcpStream, queue: Arc<ReplyQueue>) {
                     .copy_from_slice(&r.sim.hw_energy_mj.raw().to_le_bytes());
                 payload.clear();
                 extend_f32s(&mut payload, logits);
-                write_frame(&mut stream, &prefix, &payload).is_ok()
+                if let Some(gap) = fault.writer_delay() {
+                    // Injected short/delayed write: flush the prefix,
+                    // yield for the configured gap, then the logits —
+                    // the peer sees a mid-frame stall and a split
+                    // delivery, never a corrupted stream.
+                    stream.write_all(&prefix).is_ok() && {
+                        std::thread::sleep(gap);
+                        stream.write_all(&payload).is_ok()
+                    }
+                } else {
+                    write_frame(&mut stream, &prefix, &payload).is_ok()
+                }
             }
             Reply::Failed { id, error } => {
                 write_text(&mut stream, FrameKind::Error, *id, error.as_bytes())
             }
             Reply::Busy { id } => write_control(&mut stream, FrameKind::Busy, *id),
+            Reply::Expired { id } => write_control(&mut stream, FrameKind::DeadlineExceeded, *id),
             Reply::Stats(s) => write_text(&mut stream, FrameKind::Stats, 0, s.as_bytes()),
             Reply::Fin => {
                 let _ = write_control(&mut stream, FrameKind::Fin, 0);
@@ -402,18 +500,50 @@ fn write_text(stream: &mut TcpStream, kind: FrameKind, id: u64, text: &[u8]) -> 
 fn render_stats(s: &ServerStats) -> String {
     format!(
         concat!(
-            "{{\"served\":{},\"batches\":{},\"failed\":{},\"rejected\":{},",
+            "{{\"served\":{},\"batches\":{},\"failed\":{},\"expired\":{},\"rejected\":{},",
+            "\"shed\":{},\"respawns\":{},",
             "\"throughput_rps\":{:.3},\"p50_total_ms\":{:.6},\"p99_total_ms\":{:.6},",
             "\"sim_energy_mj\":{:.6},\"sim_makespan_ms\":{:.6}}}"
         ),
         s.served,
         s.batches,
         s.failed,
+        s.expired,
         s.rejected,
+        s.shed,
+        s.respawns,
         s.throughput_rps,
         s.p50_total_ms.raw(),
         s.p99_total_ms.raw(),
         s.sim_energy_mj.raw(),
         s.sim_makespan_ms.raw(),
     )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_sheds_over_burst_and_refills() {
+        let p = FaultParams {
+            conn_rate_rps: 1000.0,
+            conn_burst: 4,
+            ..FaultParams::default()
+        };
+        let mut b = TokenBucket::from_params(&p).unwrap();
+        let t0 = Instant::now();
+        // The burst admits instantaneously...
+        for i in 0..4 {
+            assert!(b.admit(t0), "admit {i} within burst");
+        }
+        assert!(!b.admit(t0), "fifth instantaneous admit must shed");
+        // ...then one refill interval (1 ms at 1000 rps) restores one
+        // token — and exactly one.
+        let t1 = t0 + Duration::from_millis(1);
+        assert!(b.admit(t1));
+        assert!(!b.admit(t1));
+        // Rate 0 (the default) disables the limiter entirely.
+        assert!(TokenBucket::from_params(&FaultParams::default()).is_none());
+    }
 }

@@ -242,6 +242,11 @@ pub enum Reply {
     /// Submission was rejected with backpressure (explicit, never a
     /// silent drop).
     Busy { id: u64 },
+    /// The request's deadline expired before it reached a batch slot;
+    /// the batcher swept it out and no response will exist. Terminal,
+    /// like `Failed`, but distinguishable so clients can account sheds,
+    /// failures and expiries separately (DESIGN.md §3.3).
+    Expired { id: u64 },
     /// A pre-rendered stats snapshot to forward to the peer.
     Stats(String),
     /// End of stream: no further replies will follow.
@@ -419,6 +424,13 @@ pub struct InferenceRequest {
     pub image: ImageBuf,
     pub variant: Variant,
     pub arrival: Instant,
+    /// Hard completion deadline: a request still queued at the batcher
+    /// past this instant is swept out with a terminal
+    /// [`Reply::Expired`] instead of occupying a batch slot. `None` =
+    /// wait indefinitely. A request already *in* a forming batch at
+    /// expiry executes normally — the deadline bounds queueing, not
+    /// execution.
+    pub deadline: Option<Instant>,
     /// Where the worker should additionally push this request's
     /// [`Reply`] (response, or its batch's failure) — the wire front
     /// end's per-connection response routing. `None` (every in-process

@@ -92,6 +92,9 @@ pub struct ModelServingStats {
     pub batches: u64,
     /// Requests lost to failed batch executions of this model.
     pub failed: u64,
+    /// Requests expired past their deadline before batch formation
+    /// (terminal `DEADLINE_EXCEEDED` outcomes — never executed).
+    pub expired: u64,
     /// Simulated hardware energy of this model's batches.
     pub sim_energy_mj: Millijoules,
     /// Simulated hardware time at which this model's last batch finished
@@ -109,8 +112,21 @@ pub struct ServerStats {
     pub batches: u64,
     /// Requests lost to failed batch executions.
     pub failed: u64,
+    /// Requests expired past their per-request deadline before batch
+    /// formation (terminal `DEADLINE_EXCEEDED` outcomes). With `served`,
+    /// `failed` and the front-end sheds, these partition every submitted
+    /// request into exactly one terminal bucket (DESIGN.md §3.3).
+    pub expired: u64,
     /// Submissions rejected with backpressure.
     pub rejected: u64,
+    /// Requests shed by front-end defenses (the wire server's
+    /// per-connection rate limiter) before they reached the engine —
+    /// disjoint from `rejected`, which counts ingress-queue
+    /// backpressure.
+    pub shed: u64,
+    /// Worker executor respawns after mid-batch panics (self-healing
+    /// events; zero in a healthy run).
+    pub respawns: u64,
     pub wall_ms: Millis,
     /// Mean wall time from arrival to batch-execution start.
     pub mean_queue_ms: Millis,
@@ -276,6 +292,7 @@ mod tests {
             image: (0..elems).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect(),
             variant: v,
             arrival: Instant::now(),
+            deadline: None,
             reply: None,
         }
     }

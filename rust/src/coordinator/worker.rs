@@ -30,8 +30,19 @@
 //! instead of a `row.to_vec()` copy. Per batch, the only heap traffic is
 //! the response vec itself (and a fresh logits buffer only while a
 //! previous batch's views are still alive); per response there is none.
+//!
+//! **Supervision.** Batch execution runs under `catch_unwind`: a panic
+//! mid-batch (a backend bug, or an injected `[fault]` schedule) costs
+//! exactly its own batch — every poisoned request gets a terminal
+//! `Failed` reply, the executor is rebuilt in place with warmed caches,
+//! and the thread keeps pulling batches. Worker threads never exit on a
+//! batch failure: `Engine::drain`'s liveness check treats a finished
+//! pipeline thread as a dead pipeline, so self-healing must happen
+//! *inside* the loop (DESIGN.md §3.3).
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -44,7 +55,8 @@ use crate::coordinator::request::{
     InferenceResponse, LogitsPool, LogitsView, Reply, SimMetering, Variant,
 };
 use crate::coordinator::router::Router;
-use crate::runtime::Executor;
+use crate::runtime::{Executor, ExecutorSpec, Manifest};
+use crate::util::fault::FaultPlane;
 use crate::util::units::{Millijoules, Millis};
 
 /// Everything one worker thread owns or shares.
@@ -74,6 +86,21 @@ pub(crate) struct WorkerCtx {
     /// Recycler for the shared per-batch logits buffers the responses
     /// view into.
     pub logits_pool: LogitsPool,
+    /// How the executor was built — kept so a panicked worker can
+    /// rebuild it in place.
+    pub spec: ExecutorSpec,
+    /// Manifest clone for executor rebuilds (`Executor::from_spec`
+    /// consumes one).
+    pub manifest: Manifest,
+    /// Artifacts to re-warm after a respawn (the same list `Engine::new`
+    /// warmed at startup).
+    pub warm: Vec<String>,
+    /// Pool-wide count of executor respawns after mid-batch panics
+    /// (surfaced as `ServerStats::respawns`).
+    pub respawns: Arc<AtomicU64>,
+    /// This worker's deterministic fault-injection site (disarmed in
+    /// production: one branch per probe, RNG never advanced).
+    pub fault: FaultPlane,
 }
 
 /// What one executed (or failed) batch sends to the stats sink.
@@ -83,22 +110,74 @@ pub(crate) struct BatchOutcome {
     pub responses: Vec<InferenceResponse>,
     /// Requests whose batch failed to execute (no responses for them).
     pub failed: u64,
+    /// Requests whose deadline expired before batch formation (swept by
+    /// the batcher with a terminal `Expired` reply; never mixed with
+    /// `failed` in one outcome).
+    pub expired: u64,
     pub error: Option<String>,
     /// Full-batch simulated energy — counted once per executed batch,
     /// so zero-padded partial batches still pay full-batch cost.
     pub sim_energy_mj: Millijoules,
 }
 
-/// Pull batches until the channel closes (engine shutdown).
+/// Pull batches until the channel closes (engine shutdown), surviving
+/// panics: each batch executes under `catch_unwind`, a poisoned batch
+/// fails loudly (terminal `Failed` replies + a failed outcome) and the
+/// executor is respawned in place before the next pull.
 pub(crate) fn worker_loop(mut ctx: WorkerCtx) {
     loop {
         let msg = lock(&ctx.rx).recv();
         let Ok(batch) = msg else { return };
-        let out = execute_batch(&mut ctx, batch);
+        if let Some(stall) = ctx.fault.worker_stall() {
+            // Injected stall: the batch is late but correct — exercises
+            // drain/deadline behavior, not the failure path.
+            std::thread::sleep(stall);
+        }
+        let out = match catch_unwind(AssertUnwindSafe(|| execute_batch(&mut ctx, &batch))) {
+            Ok(out) => out,
+            Err(payload) => {
+                // Replies first (the drain state machine needs every
+                // reply queued before the collector sees the outcome),
+                // then heal, then account.
+                let out = fail(
+                    &batch,
+                    format!(
+                        "worker {} panicked mid-batch: {} (executor respawned)",
+                        ctx.id,
+                        panic_message(payload.as_ref())
+                    ),
+                );
+                respawn(&mut ctx);
+                out
+            }
+        };
         if ctx.tx.send(out).is_err() {
             return;
         }
     }
+}
+
+/// Best-effort panic payload rendering (`&str` and `String` payloads
+/// cover `panic!`; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
+}
+
+/// Rebuild the panicked worker's executor in place — fresh backend
+/// client, re-warmed compile caches — so the thread keeps serving. If
+/// the rebuild itself fails (e.g. an artifact vanished), the structurally
+/// intact old executor is kept: serving degraded beats a dead worker
+/// thread, which would kill the whole pipeline's liveness check.
+fn respawn(ctx: &mut WorkerCtx) {
+    if let Ok(mut ex) = Executor::from_spec(ctx.spec, ctx.manifest.clone()) {
+        ex.warmup(&ctx.warm);
+        ctx.executor = ex;
+    }
+    ctx.respawns.fetch_add(1, Ordering::Relaxed);
 }
 
 fn fail(batch: &Batch, error: String) -> BatchOutcome {
@@ -119,6 +198,7 @@ fn fail(batch: &Batch, error: String) -> BatchOutcome {
         model: batch.model,
         responses: Vec::new(),
         failed: batch.requests.len() as u64,
+        expired: 0,
         error: Some(error),
         sim_energy_mj: Millijoules::ZERO,
     }
@@ -139,11 +219,23 @@ fn resolve_plan(ctx: &mut WorkerCtx, batch: &Batch) -> crate::error::Result<Arc<
     Ok(plan)
 }
 
-fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
-    let plan = match resolve_plan(ctx, &batch) {
+fn execute_batch(ctx: &mut WorkerCtx, batch: &Batch) -> BatchOutcome {
+    if ctx.fault.worker_panic() {
+        panic!("injected fault: worker panic mid-batch (fault.worker_panic)");
+    }
+    let plan = match resolve_plan(ctx, batch) {
         Ok(p) => p,
-        Err(e) => return fail(&batch, e.to_string()),
+        Err(e) => return fail(batch, e.to_string()),
     };
+    if ctx.fault.exec_transient() {
+        // A transient backend error: the batch fails loudly (terminal
+        // replies, failed outcome) but the executor is healthy — no
+        // respawn, the next batch proceeds normally.
+        return fail(
+            batch,
+            "injected fault: transient executor error (fault.exec_transient)".into(),
+        );
+    }
     let bsz = ctx.batch_size;
     let elems = plan.image_elems();
     // Pack (and zero-pad) the fixed-shape batch input into the worker's
@@ -156,7 +248,7 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
     for (i, r) in batch.requests.iter().enumerate() {
         if r.image.len() != elems {
             return fail(
-                &batch,
+                batch,
                 format!(
                     "request {} carries {} elems, plan wants {elems}",
                     r.id,
@@ -174,7 +266,7 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
     {
         let out = Arc::get_mut(&mut logits).expect("freshly taken pool buffer is unique");
         if let Err(e) = ctx.executor.run_prepared(&plan.program, &[&ctx.input], out) {
-            return fail(&batch, e.to_string());
+            return fail(batch, e.to_string());
         }
     }
     let exec_ms = Millis::from_duration(exec_start.elapsed());
@@ -254,6 +346,7 @@ fn execute_batch(ctx: &mut WorkerCtx, batch: Batch) -> BatchOutcome {
         model: batch.model,
         responses,
         failed: 0,
+        expired: 0,
         error: None,
         sim_energy_mj: sim_mj,
     }

@@ -34,6 +34,11 @@ pub enum Error {
     /// should retry later or shed load.
     Backpressure,
 
+    /// The request's deadline expired before it reached a batch slot;
+    /// it was swept out of the queue with a terminal reply instead of
+    /// occupying capacity (DESIGN.md §3.3).
+    DeadlineExceeded,
+
     /// I/O error (artifact files, config files).
     Io(std::io::Error),
 
@@ -57,6 +62,9 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Serving(m) => write!(f, "serving error: {m}"),
             Error::Backpressure => write!(f, "backpressure: serving ingress queue is full"),
+            Error::DeadlineExceeded => {
+                write!(f, "deadline exceeded: request expired before batch formation")
+            }
             Error::Io(e) => write!(f, "{e}"),
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Toml(m) => write!(f, "config parse error: {m}"),
@@ -102,6 +110,10 @@ mod tests {
         assert_eq!(
             Error::Backpressure.to_string(),
             "backpressure: serving ingress queue is full"
+        );
+        assert_eq!(
+            Error::DeadlineExceeded.to_string(),
+            "deadline exceeded: request expired before batch formation"
         );
     }
 

@@ -16,10 +16,14 @@
 //!   serve    [--requests N] [--variant v] [--instances K] [--workers W]
 //!            [--mix lenet:4,vgg16:1]     multi-model serving demo
 //!   serve --listen ADDR  [--connections C] [--rate RPS] [--window W]
-//!            [--requests N] [...]        zero-copy TCP wire front end:
+//!            [--requests N] [--retries R] [--deadline-ms D]
+//!            [--chaos-seed S] [...]      zero-copy TCP wire front end:
 //!            bind ADDR, then (requests > 0) self-drive it over loopback
 //!            with the open-loop load generator, or (requests = 0) keep
-//!            serving until killed
+//!            serving until killed. --chaos-seed arms the deterministic
+//!            fault plane (a demo schedule when `[fault]` probabilities
+//!            are all zero); --retries caps BUSY re-submissions;
+//!            --deadline-ms tags each request with a deadline budget
 //!   config                    print the active TOML configuration
 //!
 //! Global flag: --config <file.toml> loads overrides over paper defaults.
@@ -546,6 +550,7 @@ fn cmd_serve(cfg: &OpimaConfig, args: &Args) -> Result<()> {
             image,
             variant,
             arrival: Instant::now(),
+            deadline: None,
             reply: None,
         })?;
     }
@@ -564,6 +569,12 @@ fn print_serving_report(engine: &Engine) {
         s.batches,
         engine.registry().builds()
     );
+    if s.failed + s.expired + s.rejected + s.shed + s.respawns > 0 {
+        println!(
+            "  degraded: {} failed, {} expired, {} rejected, {} shed, {} worker respawn(s)",
+            s.failed, s.expired, s.rejected, s.shed, s.respawns
+        );
+    }
     println!(
         "  wall: {:.1} ms   throughput: {:.0} req/s",
         s.wall_ms.raw(),
@@ -584,15 +595,16 @@ fn print_serving_report(engine: &Engine) {
         s.sim_energy_mj.raw()
     );
     println!("\nper-model breakdown:");
-    println!("| model | served | batches | failed | p50 ms | p99 ms | energy mJ | makespan ms |");
-    println!("|---|---|---|---|---|---|---|---|");
+    println!("| model | served | batches | failed | expired | p50 ms | p99 ms | energy mJ | makespan ms |");
+    println!("|---|---|---|---|---|---|---|---|---|");
     for m in &s.per_model {
         println!(
-            "| {} | {} | {} | {} | {:.2} | {:.2} | {:.2} | {:.2} |",
+            "| {} | {} | {} | {} | {} | {:.2} | {:.2} | {:.2} | {:.2} |",
             m.model.name(),
             m.served,
             m.batches,
             m.failed,
+            m.expired,
             m.latency.total.p50,
             m.latency.total.p99,
             m.sim_energy_mj.raw(),
@@ -622,10 +634,38 @@ fn cmd_serve_listen(cfg: &OpimaConfig, args: &Args) -> Result<()> {
     let instances = args.usize_or("instances", 1)?;
     let workers = args.usize_or("workers", 1)?;
     let variant = Variant::parse(args.get("variant").unwrap_or("int4"))?;
+    let retry_max = args.usize_or("retries", 0)? as u32;
+    let deadline_ms = args.usize_or("deadline-ms", 0)? as u32;
     let mix = match args.get("mix") {
         None => vec![(Model::LeNet, 1)],
         Some(spec) => parse_mix(spec)?,
     };
+    let mut hw = cfg.clone();
+    if let Some(seed) = args.get("chaos-seed") {
+        let seed: u64 = seed
+            .parse()
+            .map_err(|_| Error::Config(format!("--chaos-seed wants an integer, got '{seed}'")))?;
+        hw.fault.armed = true;
+        hw.fault.seed = seed;
+        let p = &mut hw.fault;
+        if p.worker_panic == 0.0
+            && p.worker_stall == 0.0
+            && p.exec_transient == 0.0
+            && p.writer_delay == 0.0
+            && p.conn_rate_rps == 0.0
+        {
+            // No `[fault]` probabilities configured: apply the demo
+            // schedule so `--chaos-seed` alone shows every degraded
+            // path without a config file.
+            p.worker_panic = 0.02;
+            p.worker_stall = 0.02;
+            p.writer_delay = 0.05;
+        }
+        println!(
+            "(chaos armed: seed {seed}, worker_panic {} worker_stall {} exec_transient {} writer_delay {} conn_rate_rps {})",
+            p.worker_panic, p.worker_stall, p.exec_transient, p.writer_delay, p.conn_rate_rps
+        );
+    }
     let (manifest, no_artifacts) = match Manifest::load(&Manifest::default_dir()) {
         Ok(m) => (m, false),
         Err(_) => {
@@ -637,7 +677,7 @@ fn cmd_serve_listen(cfg: &OpimaConfig, args: &Args) -> Result<()> {
         EngineConfig {
             workers,
             instances,
-            hw: cfg.clone(),
+            hw,
             executor: if no_artifacts {
                 ExecutorSpec::Sim { work_factor: 1 }
             } else {
@@ -676,13 +716,18 @@ fn cmd_serve_listen(cfg: &OpimaConfig, args: &Args) -> Result<()> {
         variant,
         window,
         seed: 7,
+        retry_max,
+        deadline_ms,
+        ..LoadGenConfig::default()
     })?;
     println!(
-        "client: sent {}  responses {}  busy {}  failed {}  ({:.0} req/s, p50 {:.2} ms, p99 {:.2} ms)",
+        "client: sent {}  responses {}  busy {}  failed {}  expired {}  retries {}  ({:.0} req/s, p50 {:.2} ms, p99 {:.2} ms)",
         report.sent,
         report.responses,
         report.busy,
         report.failed,
+        report.expired,
+        report.retries,
         report.rps,
         report.p50_ms.raw(),
         report.p99_ms.raw()

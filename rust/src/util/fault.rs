@@ -1,0 +1,216 @@
+//! Deterministic, seeded fault-injection plane.
+//!
+//! Chaos testing only pays off when a failing schedule can be replayed:
+//! every injection site in the serving stack owns a [`FaultPlane`]
+//! derived from the one `[fault]` config seed plus a site-specific salt,
+//! so the *sequence of injection decisions at each site* is a pure
+//! function of `(seed, salt)` — independent of thread interleaving at
+//! every other site. The sites (DESIGN.md §3.3):
+//!
+//! - each engine worker (panic mid-batch, stall, transient executor
+//!   error), salted by worker id;
+//! - each connection's writer thread (delayed/short frame writes),
+//!   salted by accept order.
+//!
+//! **Disarmed is free.** Every probe routes through [`FaultPlane::roll`],
+//! whose first check is the `armed` flag — a disarmed plane costs one
+//! predictable branch and never touches its RNG, so the production hot
+//! path stays bit-identical with the plane compiled in
+//! (`benches/hotpath.rs` pins `serving/submit_fault_plane_{off,armed}`).
+
+use std::time::Duration;
+
+use crate::config::FaultParams;
+use crate::util::prng::Rng;
+
+/// One injection site's deterministic fault source. Sites never share a
+/// plane (no locking, no cross-site coupling): clone the params and
+/// derive per-site with a distinct salt.
+#[derive(Debug, Clone)]
+pub struct FaultPlane {
+    params: FaultParams,
+    rng: Rng,
+}
+
+impl FaultPlane {
+    /// Large odd stride decorrelating per-site streams (the SplitMix64
+    /// increment): adjacent salts land in unrelated seed regions.
+    const SALT_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+    /// A plane for one injection site. `salt` identifies the site
+    /// (worker id, connection index, ...) so replaying a seed replays
+    /// every site's decision sequence.
+    pub fn new(params: FaultParams, salt: u64) -> FaultPlane {
+        let seed = params.seed.wrapping_add(salt.wrapping_mul(Self::SALT_STRIDE));
+        FaultPlane {
+            params,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// The no-fault plane (default params are disarmed): every probe
+    /// answers "no" after one branch.
+    pub fn disarmed() -> FaultPlane {
+        FaultPlane::new(FaultParams::default(), 0)
+    }
+
+    /// Whether injection is armed at all (callers may skip whole fault
+    /// blocks — e.g. an injected stall's sleep — on a disarmed plane).
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.params.armed
+    }
+
+    /// One Bernoulli decision. The armed check comes first so a
+    /// disarmed plane never advances its RNG — decisive for both the
+    /// zero-cost bar and bit-identical disarmed behavior.
+    #[inline]
+    fn roll(&mut self, p: f64) -> bool {
+        self.params.armed && p > 0.0 && self.rng.f64() < p
+    }
+
+    /// Should this batch execution panic mid-flight?
+    pub fn worker_panic(&mut self) -> bool {
+        self.roll(self.params.worker_panic)
+    }
+
+    /// Should the executor report an injected transient error for this
+    /// batch (the non-panic failure path)?
+    pub fn exec_transient(&mut self) -> bool {
+        self.roll(self.params.exec_transient)
+    }
+
+    /// Should this worker stall before executing, and for how long?
+    pub fn worker_stall(&mut self) -> Option<Duration> {
+        self.roll(self.params.worker_stall)
+            .then(|| self.params.stall_ms.to_duration())
+    }
+
+    /// Should this reply frame go out as a delayed two-part (short)
+    /// write, and with what gap?
+    pub fn writer_delay(&mut self) -> Option<Duration> {
+        self.roll(self.params.writer_delay)
+            .then(|| self.params.writer_delay_ms.to_duration())
+    }
+}
+
+/// Install (once, process-wide) a panic hook that suppresses the default
+/// backtrace noise for injected-fault panics — recognizable by their
+/// `"injected fault"` payload prefix — while forwarding every real panic
+/// to the previous hook untouched. Chaos tests call this so a soak with
+/// dozens of injected worker panics doesn't flood stderr; injected
+/// panics are *expected* output there, not diagnostics.
+pub fn silence_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected fault"))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<String>()
+                        .map(|s| s.contains("injected fault"))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::ms;
+
+    fn armed_params() -> FaultParams {
+        FaultParams {
+            armed: true,
+            seed: 42,
+            worker_panic: 0.5,
+            worker_stall: 0.5,
+            stall_ms: ms(3.0),
+            exec_transient: 0.5,
+            writer_delay: 0.5,
+            writer_delay_ms: ms(1.5),
+            ..FaultParams::default()
+        }
+    }
+
+    #[test]
+    fn disarmed_never_fires_even_at_probability_one() {
+        let mut p = FaultPlane::new(
+            FaultParams {
+                armed: false,
+                worker_panic: 1.0,
+                worker_stall: 1.0,
+                exec_transient: 1.0,
+                writer_delay: 1.0,
+                ..FaultParams::default()
+            },
+            7,
+        );
+        for _ in 0..64 {
+            assert!(!p.worker_panic());
+            assert!(!p.exec_transient());
+            assert!(p.worker_stall().is_none());
+            assert!(p.writer_delay().is_none());
+        }
+        assert!(!p.armed());
+    }
+
+    #[test]
+    fn armed_zero_probability_never_fires() {
+        let mut p = FaultPlane::new(
+            FaultParams {
+                armed: true,
+                ..FaultParams::default()
+            },
+            3,
+        );
+        for _ in 0..64 {
+            assert!(!p.worker_panic());
+            assert!(p.worker_stall().is_none());
+        }
+    }
+
+    #[test]
+    fn same_seed_and_salt_replay_the_same_schedule() {
+        let mut a = FaultPlane::new(armed_params(), 11);
+        let mut b = FaultPlane::new(armed_params(), 11);
+        for _ in 0..256 {
+            assert_eq!(a.worker_panic(), b.worker_panic());
+            assert_eq!(a.worker_stall(), b.worker_stall());
+        }
+    }
+
+    #[test]
+    fn distinct_salts_decorrelate_sites() {
+        let mut a = FaultPlane::new(armed_params(), 1);
+        let mut b = FaultPlane::new(armed_params(), 2);
+        let seq_a: Vec<bool> = (0..256).map(|_| a.worker_panic()).collect();
+        let seq_b: Vec<bool> = (0..256).map(|_| b.worker_panic()).collect();
+        assert_ne!(seq_a, seq_b, "salted sites must not share a schedule");
+    }
+
+    #[test]
+    fn injected_durations_carry_the_configured_knobs() {
+        let mut p = FaultPlane::new(
+            FaultParams {
+                armed: true,
+                worker_stall: 1.0,
+                stall_ms: ms(2.0),
+                writer_delay: 1.0,
+                writer_delay_ms: ms(0.5),
+                ..FaultParams::default()
+            },
+            0,
+        );
+        assert_eq!(p.worker_stall(), Some(Duration::from_millis(2)));
+        assert_eq!(p.writer_delay(), Some(Duration::from_micros(500)));
+    }
+}

@@ -11,6 +11,9 @@
 //!   scalar values) for experiment configs.
 //! - [`prng`] — SplitMix64/Xoshiro256** deterministic PRNG (workloads,
 //!   property tests) with unbiased Lemire bounded sampling.
+//! - [`fault`] — the deterministic, seeded fault-injection plane behind
+//!   the `[fault]` config section: per-site Bernoulli schedules derived
+//!   from one seed + a site salt, free (one branch) when disarmed.
 //! - [`bench`] — a criterion-style measurement harness for `cargo bench`
 //!   targets (warmup, N samples, mean/median/stddev reporting), plus
 //!   machine-readable `BENCH_<name>.json` summaries and the
@@ -26,6 +29,7 @@
 //!   ns↔ms conversion sites in the crate.
 
 pub mod bench;
+pub mod fault;
 pub mod histogram;
 pub mod json;
 pub mod prng;

@@ -238,6 +238,16 @@ impl Millis {
     pub fn from_duration(d: Duration) -> Millis {
         Millis(d.as_secs_f64() * 1e3)
     }
+
+    /// A milliseconds quantity as a wall-clock `Duration` (negative or
+    /// NaN quantities clamp to zero — `Duration` cannot carry them).
+    pub fn to_duration(self) -> Duration {
+        if self.0.is_finite() && self.0 > 0.0 {
+            Duration::from_secs_f64(self.0 / 1e3)
+        } else {
+            Duration::ZERO
+        }
+    }
 }
 
 impl Millijoules {
@@ -276,6 +286,14 @@ pub fn bytes(v: f64) -> Bytes {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn millis_duration_roundtrip_clamps_at_zero() {
+        assert_eq!(ms(2.5).to_duration(), Duration::from_micros(2500));
+        assert_eq!(Millis::from_duration(ms(2.5).to_duration()), ms(2.5));
+        assert_eq!(ms(-1.0).to_duration(), Duration::ZERO);
+        assert_eq!(ms(f64::NAN).to_duration(), Duration::ZERO);
+    }
 
     #[test]
     fn arithmetic_matches_raw_scalars() {

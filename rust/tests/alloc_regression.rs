@@ -81,6 +81,7 @@ fn wave(images: &[ImageBuf]) -> Vec<InferenceRequest> {
             image: images[id as usize % images.len()].clone(),
             variant: Variant::Int4,
             arrival: Instant::now(),
+            deadline: None,
             reply: None,
         })
         .collect()

@@ -40,6 +40,7 @@ fn req(id: u64) -> InferenceRequest {
         image: (0..144).map(|i| ((id as usize + i) % 11) as f32 * 0.1).collect(),
         variant,
         arrival: Instant::now(),
+        deadline: None,
         reply: None,
     }
 }

@@ -271,6 +271,7 @@ fn served_responses_carry_contended_window_covering_isolated_latency() {
             image: (0..elems).map(|i| ((id as usize + i) % 13) as f32 * 0.1).collect(),
             variant: Variant::Int4,
             arrival: Instant::now(),
+            deadline: None,
             reply: None,
         })
         .unwrap();

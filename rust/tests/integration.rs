@@ -193,6 +193,7 @@ fn serving_path_end_to_end() {
                 image: image.clone().into(),
                 variant: Variant::Fp32,
                 arrival: Instant::now(),
+                deadline: None,
                 reply: None,
             })
             .unwrap();

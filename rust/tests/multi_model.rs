@@ -46,6 +46,7 @@ fn req(id: u64, model: Model, variant: Variant) -> InferenceRequest {
         image: (0..elems).map(|i| ((id as usize + i) % 13) as f32 * 0.1).collect(),
         variant,
         arrival: Instant::now(),
+        deadline: None,
         reply: None,
     }
 }

@@ -1,7 +1,7 @@
 //! Wire-front-end acceptance (ISSUE 9): the zero-copy TCP path measured
 //! end to end over a real loopback socket.
 //!
-//! Three tests share this binary:
+//! Four tests share this binary:
 //!
 //! 1. the **allocation proof** — a counting `#[global_allocator]` wraps
 //!    the system allocator and a post-warmup wave of 256 requests
@@ -12,7 +12,11 @@
 //!    `payload_len`, truncated payloads and wrong-size submits must
 //!    fail loudly without killing the accept loop (and per-request
 //!    rejections must not even kill the connection);
-//! 3. **bit-identical transport** — a single request served over the
+//! 3. **abrupt client death** — a connection dying mid-SUBMIT-payload
+//!    (socket dropped with no shutdown handshake, repeatedly) must
+//!    leave the listener accepting and serving, with no partial
+//!    request reaching the engine;
+//! 4. **bit-identical transport** — a single request served over the
 //!    socket must produce exactly the in-process `Engine::submit`
 //!    response: same predicted class, bit-identical logits, and
 //!    bit-identical `SimMetering` f64s.
@@ -322,6 +326,43 @@ fn malformed_frames_fail_loudly_without_killing_the_server() {
     }
 }
 
+/// A client that dies mid-SUBMIT-payload — header plus a partial image,
+/// then the socket is dropped with no shutdown handshake (the OS tears
+/// the connection down under the reader, as a killed process would) —
+/// must not take the listener with it: the accept loop keeps serving
+/// fresh connections and the partial request never reaches the engine.
+#[test]
+fn client_death_mid_submit_payload_leaves_listener_serving() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let engine = engine_with(Duration::from_millis(5));
+    let server = NetServer::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let before = engine.accepted();
+    // Churn: several abrupt deaths in a row, so a leaked reader or
+    // writer thread from any one of them would surface.
+    for k in 0..8u64 {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let hdr = raw_header(FrameKind::Submit, 0, 2, 1000 + k, (ELEMS * 4) as u32);
+        s.write_all(&hdr).unwrap();
+        // Half the image, then the connection just disappears.
+        s.write_all(&vec![0u8; ELEMS * 2]).unwrap();
+        drop(s);
+    }
+    // The listener must still accept and serve a well-formed request.
+    roundtrip_serves(&addr, 200);
+    assert_eq!(
+        engine.accepted(),
+        before + 1,
+        "partial submits never reached the engine; the follow-up did"
+    );
+
+    server.shutdown().unwrap();
+    if let Ok(mut e) = Arc::try_unwrap(engine) {
+        e.shutdown().unwrap();
+    }
+}
+
 #[test]
 fn wire_responses_are_bit_identical_to_in_process_submission() {
     let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
@@ -340,6 +381,7 @@ fn wire_responses_are_bit_identical_to_in_process_submission() {
                 image: px.as_slice().into(),
                 variant: Variant::Int4,
                 arrival: Instant::now(),
+                deadline: None,
                 reply: None,
             })
             .unwrap();

@@ -144,6 +144,7 @@ fn prop_batcher_conservation() {
                 image: vec![].into(),
                 variant,
                 arrival: std::time::Instant::now(),
+                deadline: None,
                 reply: None,
             }) {
                 assert!(batch.requests.len() <= max_batch, "case {case}");

@@ -50,3 +50,11 @@ fn bad_decode(payload: &[u8]) -> Vec<u8> {
 fn bad_decode_from(payload: &[u8]) -> Vec<u8> {
     Vec::from(payload)
 }
+
+// [thread-spawn] a detached serving thread: nobody joins or supervises
+// the handle (fixture is also posed under coordinator/net/ — use a
+// named Builder thread joined on shutdown, a scoped thread, or a
+// same-line allow naming the supervisor).
+fn bad_detached_worker() {
+    std::thread::spawn(|| loop {});
+}

@@ -29,6 +29,12 @@ residual conventions around it:
                 the wire path's <1-allocation-per-request budget (ISSUE 9)
                 forbids copying frame payloads into fresh Vecs; decode
                 into pooled buffers / reused scratch instead.
+  thread-spawn  No bare std::thread::spawn inside rust/src/coordinator/ —
+                a detached serving thread is an unsupervised failure
+                domain (ISSUE 10). Threads must be owned: named
+                Builder::new().spawn handles joined on shutdown, scoped
+                threads, or a same-line `// lint: allow(thread-spawn)`
+                stating who joins/supervises the handle.
 
 Scope and escape hatches:
   * Only rust/src/**/*.rs is scanned (benches, examples, rust/tests and
@@ -70,6 +76,10 @@ def in_memory_not_timing(path: Path) -> bool:
 
 def in_coordinator_net(path: Path) -> bool:
     return "coordinator" in path.parts and "net" in path.parts
+
+
+def in_coordinator(path: Path) -> bool:
+    return "coordinator" in path.parts
 
 
 def not_units(path: Path) -> bool:
@@ -121,6 +131,17 @@ RULES = [
         in_coordinator_net,
         "payload copy inside coordinator/net/ — the wire path must decode "
         "into pooled buffers / reused scratch (<1 alloc per request)",
+    ),
+    (
+        # `thread::spawn` only: `thread::Builder::new().spawn` (named,
+        # handle-joined) and scoped `s.spawn` don't match and are the
+        # sanctioned idioms.
+        "thread-spawn",
+        re.compile(r"\bthread::spawn\b"),
+        in_coordinator,
+        "detached thread::spawn inside coordinator/ — serving threads "
+        "must be supervised (join the handle on shutdown, use a named "
+        "Builder/scoped thread, or allow with who joins it)",
     ),
 ]
 
